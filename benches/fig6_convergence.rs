@@ -1,0 +1,21 @@
+//! Regenerates the paper's Figure 6: per-location convergence iteration of
+//! fixed-point iteration vs the baseline on a latent-space ARM, averaged
+//! over a batch of 32 samples and all channels (log-scale heatmap PPM).
+//!
+//!     cargo bench --bench fig6_convergence [-- --model latent_cifar --seed 10]
+
+use predsamp::bench::figures;
+use predsamp::runtime::artifact::Manifest;
+use predsamp::substrate::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let model = args.get("model", "latent_cifar");
+    let seed = args.num::<u64>("seed", 10);
+    let man = Manifest::load(predsamp::artifacts_dir())?;
+    let written = figures::fig6(&man, &model, std::path::Path::new("results"), seed)?;
+    for w in written {
+        println!("wrote {w}");
+    }
+    Ok(())
+}

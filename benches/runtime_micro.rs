@@ -1,0 +1,58 @@
+//! Runtime micro-benchmarks: per-pass latency of every model's step
+//! executable at each batch size, plus the Pallas-lowered artifact parity
+//! check (DESIGN.md X2). These are the denominators behind the table
+//! timings — and the numbers the §Perf optimization pass tracks.
+//!
+//!     cargo bench --bench runtime_micro
+
+use predsamp::bench::harness::bench;
+use predsamp::runtime::artifact::Manifest;
+use predsamp::runtime::step::StepExecutable;
+
+fn main() -> anyhow::Result<()> {
+    let man = Manifest::load(predsamp::artifacts_dir())?;
+    println!("step-executable latency per parallel inference pass:");
+    for (name, info) in &man.models {
+        for b in info.step_batch_sizes() {
+            let exe = StepExecutable::load(man.path(info.file(&format!("step_b{b}"))?), info, b)?;
+            let x = vec![0i32; b * info.dim];
+            let mut out = predsamp::runtime::step::StepOutput::default();
+            let r = bench(&format!("{name} b{b} (logp+fore)"), 2, 10, || {
+                exe.run_into(&x, &mut out).unwrap();
+            });
+            println!("  {}", r.report());
+            // The logp-only variant (perf optimization #1, EXPERIMENTS §Perf).
+            if let Ok(lp) = info.file(&format!("steplp_b{b}")) {
+                let exe = StepExecutable::load_variant(man.path(lp), info, b, false)?;
+                let r2 = bench(&format!("{name} b{b} (logp only)"), 2, 10, || {
+                    exe.run_into(&x, &mut out).unwrap();
+                });
+                println!("  {}  ({:.2}x vs full)", r2.report(), r.secs.mean / r2.secs.mean);
+            }
+        }
+    }
+
+    // Pallas-path artifact: parity + latency vs the reference lowering.
+    let info = man.model("mnist_bin")?;
+    if let Ok(pfile) = info.file("step_pallas_b1") {
+        let pexe = StepExecutable::load(man.path(pfile), info, 1)?;
+        let rexe = StepExecutable::load(man.path(info.file("step_b1")?), info, 1)?;
+        let x: Vec<i32> = (0..info.dim as i32).map(|i| i % 2).collect();
+        let po = pexe.run(&x)?;
+        let ro = rexe.run(&x)?;
+        let max_err = po
+            .logp
+            .iter()
+            .zip(&ro.logp)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("\npallas-lowered artifact vs reference lowering: max |Δlogp| = {max_err:.2e}");
+        assert!(max_err < 1e-3, "pallas artifact must match reference numerics");
+        let mut out = predsamp::runtime::step::StepOutput::default();
+        let rp = bench("mnist_bin pallas b1", 1, 5, || {
+            pexe.run_into(&x, &mut out).unwrap();
+        });
+        println!("  {}", rp.report());
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Extension ablation (DESIGN.md X1): continuous batching (slot refill)
+//! vs the paper's synchronous batch semantics, over a queue of jobs.
+//! The paper predicts (§4.1) that a scheduling system "would allow
+//! sampling at an average rate equal to the batch size 1 setting" — this
+//! bench measures how close the refill scheduler gets.
+//!
+//!     cargo bench --bench scheduler_ablation [-- --model latent_cifar --jobs 64]
+
+use predsamp::coordinator::engine::Engine;
+use predsamp::coordinator::scheduler;
+use predsamp::runtime::artifact::Manifest;
+use predsamp::sampler::forecast::FpiReuse;
+use predsamp::sampler::StepModel;
+use predsamp::substrate::cli::Args;
+use predsamp::substrate::timer::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let model = args.get("model", "latent_cifar");
+    let jobs = args.num::<usize>("jobs", 64);
+    let seed = args.num::<u64>("seed", 0);
+    let man = Manifest::load(predsamp::artifacts_dir())?;
+    let engine = Engine::load(&man, &model)?;
+    let bs = *engine.batch_sizes().last().unwrap();
+    let exe = engine.exe_for(bs, false)?;
+    let d = exe.dim();
+
+    // Batch-1 reference rate (the paper's target for a scheduler).
+    let exe1 = engine.exe_for(1, false)?;
+    let mut b1_iters = 0usize;
+    let b1_jobs = jobs.min(8);
+    for id in 0..b1_jobs {
+        let mut ps = predsamp::sampler::predictive::PredictiveSampler::new(exe1, Box::new(FpiReuse));
+        ps.reset_slot(0, predsamp::sampler::noise::JobNoise::new(seed, id as u64, d, exe1.categories()));
+        while !ps.slot_done(0) {
+            ps.step()?;
+        }
+        b1_iters += ps.take_result(0).unwrap().iterations;
+    }
+    let b1_rate = b1_iters as f64 / b1_jobs as f64;
+    println!("batch-1 reference: {b1_rate:.1} ARM calls/job ({:.1}% of d={d})", 100.0 * b1_rate / d as f64);
+
+    let cont = scheduler::run_continuous(exe, Box::new(FpiReuse), jobs, seed)?;
+    let sync = scheduler::run_sync_chunks(exe, || Box::new(FpiReuse), jobs, seed)?;
+    println!("\n{model}, {jobs} jobs, batch {bs}, FPI:");
+    for (tag, r) in [("continuous", &cont), ("sync", &sync)] {
+        println!(
+            "  {tag:<11} passes {:>5}  slot-calls/job {:>6.2} ({:.1}% of d)  occupancy {:>5.1}%  wall {}",
+            r.total_passes,
+            r.calls_per_job,
+            100.0 * r.calls_per_job / d as f64,
+            100.0 * r.occupancy,
+            fmt_duration(r.wall_secs)
+        );
+    }
+    // Scheduling must never change samples.
+    for i in 0..jobs {
+        assert_eq!(cont.results[i].x, sync.results[i].x, "job {i}");
+    }
+    assert!(cont.total_passes <= sync.total_passes, "refill must not lose to sync");
+    println!("  ✓ samples identical under both schedulers; continuous ≤ sync passes");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Serving-load benchmark: Poisson request arrivals against the TCP
+//! server, reporting latency percentiles and throughput for continuous vs
+//! synchronous batching. This is the full production path — client
+//! sockets, protocol parsing, dynamic batching window, engine, PJRT.
+//!
+//!     cargo bench --bench serving_load [-- --model mnist_bin --rate 4 --secs 6]
+
+use predsamp::bench::workload::poisson_stream;
+use predsamp::coordinator::config::ServeConfig;
+use predsamp::coordinator::server::{spawn, Client};
+use predsamp::substrate::rng::Rng;
+use predsamp::substrate::stats::{percentile, Summary};
+use predsamp::substrate::timer::{fmt_duration, Timer};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = predsamp::substrate::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let model = args.get("model", "mnist_bin");
+    let rate = args.num::<f64>("rate", 4.0); // requests/sec
+    let secs = args.num::<f64>("secs", 6.0);
+
+    for continuous in [true, false] {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            max_batch: 32,
+            max_wait: Duration::from_millis(25),
+            continuous,
+            worker_threads: 8,
+        };
+        let server = spawn(predsamp::artifacts_dir(), cfg)?;
+        // Warm up (compile executables) outside the measured window.
+        let mut warm = Client::connect(&server.addr)?;
+        let w = warm.call(&format!(r#"{{"op":"sample","model":"{model}","n":1,"return_samples":false}}"#))?;
+        anyhow::ensure!(w.get("ok").as_bool() == Some(true), "warmup failed: {w}");
+
+        let mut rng = Rng::new(7);
+        let stream = poisson_stream(&mut rng, rate, secs, (1, 4));
+        let n_req = stream.len();
+        let lats = Arc::new(Mutex::new(Vec::<f64>::new()));
+        let t0 = Timer::start();
+        let mut handles = Vec::new();
+        let mut total_samples = 0usize;
+        for item in stream {
+            total_samples += item.n;
+            // Open-loop: wait until the arrival time, then fire from a thread.
+            let wait = (item.at_secs - t0.secs()).max(0.0);
+            std::thread::sleep(Duration::from_secs_f64(wait));
+            let addr = server.addr;
+            let model = model.clone();
+            let lats = Arc::clone(&lats);
+            handles.push(std::thread::spawn(move || {
+                let t = Timer::start();
+                if let Ok(mut c) = Client::connect(&addr) {
+                    let _ = c.call(&format!(
+                        r#"{{"op":"sample","model":"{model}","method":"fpi","n":{},"seed":{},"return_samples":false}}"#,
+                        item.n, item.seed
+                    ));
+                    lats.lock().unwrap().push(t.secs());
+                }
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        let wall = t0.secs();
+        let lats = lats.lock().unwrap().clone();
+        let s = Summary::of(&lats);
+        println!(
+            "{} batching: {n_req} requests / {total_samples} samples over {}  ({:.1} samples/s)",
+            if continuous { "continuous" } else { "sync      " },
+            fmt_duration(wall),
+            total_samples as f64 / wall
+        );
+        println!(
+            "             latency mean {} p50 {} p95 {} max {}",
+            fmt_duration(s.mean),
+            fmt_duration(percentile(&lats, 50.0)),
+            fmt_duration(percentile(&lats, 95.0)),
+            fmt_duration(s.max)
+        );
+        server.stop();
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Regenerates the paper's Table 1 (explicit likelihood modeling):
+//! ARM calls %, wall time, and speedup for baseline / forecast-zeros /
+//! predict-last / FPI / FPI+forecasting, at batch sizes 1 and 32.
+//!
+//!     cargo bench --bench table1 [-- --seeds 10 --batches 1,32 --models mnist_bin,cifar5]
+//!
+//! Default is 3 seeds (the paper uses 10; this substrate has one CPU core
+//! — pass --seeds 10 for the full protocol).
+
+use predsamp::bench::tables;
+use predsamp::runtime::artifact::Manifest;
+use predsamp::substrate::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let seeds: Vec<u64> = (0..args.num::<usize>("seeds", 2) as u64).collect();
+    let batches: Vec<usize> = {
+        let l = args.list("batches");
+        if l.is_empty() { vec![1, 32] } else { l.iter().filter_map(|s| s.parse().ok()).collect() }
+    };
+    let models = args.list("models");
+    let man = Manifest::load(predsamp::artifacts_dir())?;
+    let rows = tables::table1(&man, &seeds, &batches, &models)?;
+
+    // Shape checks mirroring the paper's qualitative claims.
+    let pct = |model: &str, method: &str, b: usize| {
+        rows.iter()
+            .find(|r| r.model == model && r.method == method && r.batch == b)
+            .map(|r| r.calls_pct.mean)
+    };
+    for b in &batches {
+        if let (Some(base), Some(fpi)) = (pct("mnist_bin", "baseline", *b), pct("mnist_bin", "fpi", *b)) {
+            assert!(fpi < 0.5 * base, "FPI should dominate the baseline (b{b}: {fpi:.1}% vs {base:.1}%)");
+        }
+    }
+    println!("\ntable1 done ({} rows)", rows.len());
+    Ok(())
+}

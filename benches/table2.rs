@@ -1,0 +1,34 @@
+//! Regenerates the paper's Table 2 (latent-space ARMs over the discrete
+//! autoencoder): baseline / FPI / FPI+forecasting(T=1) on the svhn, cifar
+//! and imagenet32 latent priors.
+//!
+//!     cargo bench --bench table2 [-- --seeds 10 --batches 1,32 --models latent_cifar]
+
+use predsamp::bench::tables;
+use predsamp::runtime::artifact::Manifest;
+use predsamp::substrate::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let seeds: Vec<u64> = (0..args.num::<usize>("seeds", 2) as u64).collect();
+    let batches: Vec<usize> = {
+        let l = args.list("batches");
+        if l.is_empty() { vec![1, 32] } else { l.iter().filter_map(|s| s.parse().ok()).collect() }
+    };
+    let models = args.list("models");
+    let man = Manifest::load(predsamp::artifacts_dir())?;
+    let rows = tables::table2(&man, &seeds, &batches, &models)?;
+
+    for r in &rows {
+        if r.method == "fpi" {
+            assert!(
+                r.calls_pct.mean < 60.0,
+                "latent FPI should need well under the baseline's calls ({}: {:.1}%)",
+                r.model,
+                r.calls_pct.mean
+            );
+        }
+    }
+    println!("\ntable2 done ({} rows)", rows.len());
+    Ok(())
+}

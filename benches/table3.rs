@@ -1,0 +1,28 @@
+//! Regenerates the paper's Table 3 (ablations, 8-bit CIFAR, batch 32):
+//! the effect of reparametrization (FPI with vs without fixed ε) and of
+//! sharing the ARM representation with the forecasting modules.
+//!
+//!     cargo bench --bench table3 [-- --seeds 10]
+
+use predsamp::bench::tables;
+use predsamp::runtime::artifact::Manifest;
+use predsamp::substrate::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let seeds: Vec<u64> = (0..args.num::<usize>("seeds", 2) as u64).collect();
+    let man = Manifest::load(predsamp::artifacts_dir())?;
+    let rows = tables::table3(&man, &seeds)?;
+
+    let pct = |method: &str| rows.iter().find(|r| r.method == method).map(|r| r.calls_pct.mean).unwrap_or(f64::NAN);
+    // The paper's dominant ablation effect: removing reparametrization
+    // destroys almost all of the saving (97.2% of calls in the paper).
+    assert!(
+        pct("fpi w/o reparam") > 2.0 * pct("fpi"),
+        "reparametrization must be the dominant effect: {:.1}% vs {:.1}%",
+        pct("fpi w/o reparam"),
+        pct("fpi")
+    );
+    println!("\ntable3 done ({} rows)", rows.len());
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Serving demo: spin up the TCP server, fire concurrent client requests,
+//! and report end-to-end latency/throughput — comparing the paper's
+//! synchronous batching against this repo's continuous-batching scheduler
+//! extension (the "scheduling system" the paper leaves to future work).
+//!
+//!     cargo run --release --example serving_demo [-- --model latent_cifar --clients 8 --requests 4]
+
+use predsamp::coordinator::config::ServeConfig;
+use predsamp::coordinator::server::{spawn, Client};
+use predsamp::substrate::cli::Args;
+use predsamp::substrate::stats::{percentile, Summary};
+use predsamp::substrate::timer::{fmt_duration, Timer};
+use std::time::Duration;
+
+fn run_load(addr: std::net::SocketAddr, model: &str, clients: usize, requests: usize) -> anyhow::Result<(Vec<f64>, f64, usize)> {
+    let timer = Timer::start();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let model = model.to_string();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut client = Client::connect(&addr)?;
+            let mut lats = Vec::new();
+            for r in 0..requests {
+                let t = Timer::start();
+                let resp = client.call(&format!(
+                    r#"{{"op":"sample","model":"{model}","method":"fpi","n":2,"seed":{},"return_samples":false}}"#,
+                    c * 1000 + r
+                ))?;
+                anyhow::ensure!(resp.get("ok").as_bool() == Some(true), "request failed: {resp}");
+                lats.push(t.secs());
+            }
+            Ok(lats)
+        }));
+    }
+    let mut lats = Vec::new();
+    for h in handles {
+        lats.extend(h.join().expect("client thread")?);
+    }
+    let wall = timer.secs();
+    let n_samples = clients * requests * 2;
+    Ok((lats, wall, n_samples))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let model = args.get("model", "latent_cifar");
+    let clients = args.num::<usize>("clients", 8);
+    let requests = args.num::<usize>("requests", 4);
+
+    for continuous in [true, false] {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            max_batch: 32,
+            max_wait: Duration::from_millis(25),
+            continuous,
+            worker_threads: clients.min(8),
+        };
+        let server = spawn(predsamp::artifacts_dir(), cfg)?;
+        // Warm the engine (first request compiles executables).
+        let mut c = Client::connect(&server.addr)?;
+        let warm = c.call(&format!(r#"{{"op":"sample","model":"{model}","n":1,"return_samples":false}}"#))?;
+        anyhow::ensure!(warm.get("ok").as_bool() == Some(true), "warmup failed: {warm}");
+
+        let (lats, wall, n) = run_load(server.addr, &model, clients, requests)?;
+        let s = Summary::of(&lats);
+        println!(
+            "{:<11} batching: {n} samples / {clients} clients  wall {}  throughput {:.1} samples/s",
+            if continuous { "continuous" } else { "sync" },
+            fmt_duration(wall),
+            n as f64 / wall
+        );
+        println!(
+            "             request latency mean {} p50 {} p95 {}",
+            fmt_duration(s.mean),
+            fmt_duration(percentile(&lats, 50.0)),
+            fmt_duration(percentile(&lats, 95.0))
+        );
+        let m = c.call(r#"{"op":"metrics"}"#)?;
+        println!("             server metrics: {}", m.get("metrics"));
+        server.stop();
+    }
+    Ok(())
+}

@@ -1,0 +1,255 @@
+"""AOT pipeline: train every model config, lower to HLO text, emit manifest.
+
+This is the ONLY python entrypoint in the build (make artifacts); rust is
+self-contained afterwards. Interchange is HLO *text* — xla_extension 0.5.1
+rejects jax>=0.5 serialized protos (64-bit instruction ids), while the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+Per ARM config and batch size B in {1, 32} we export
+    <cfg>_step_b<B>.hlo.txt : x i32[B,d] -> (logp f32[B,d,K], fore f32[B,P,T,K])
+plus, for the latent configs, the autoencoder
+    ae_<name>_enc_b32.hlo.txt : img f32[32,3,16,16] -> z i32[32,256]
+    ae_<name>_dec_b32.hlo.txt : z i32[32,256] -> img f32[32,3,16,16]
+plus a Pallas-kernel lowering of the smallest model (parity artifact), a
+small test batch per config (<cfg>_test_x.bin, row-major i32 LE) for
+rust-side likelihood eval, and artifacts/manifest.json describing it all.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import autoencoder as ae
+from . import datasets, model, train
+
+# ---------------------------------------------------------------------------
+# Configurations (scaled per DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+ARM_CONFIGS = {
+    # Explicit likelihood modeling (Table 1). Binary digits keep the paper's
+    # smaller-model choice; color sets share one architecture.
+    "mnist_bin": model.ArmConfig("mnist_bin", channels=1, height=16, width=16, categories=2,
+                                 filters=32, n_resnets=2, t_fore=20, fore_filters=32, embed_dim=4),
+    "svhn8": model.ArmConfig("svhn8", channels=3, height=10, width=10, categories=256,
+                             filters=48, n_resnets=2, t_fore=5, fore_filters=48),
+    "cifar5": model.ArmConfig("cifar5", channels=3, height=10, width=10, categories=32,
+                              filters=48, n_resnets=2, t_fore=5, fore_filters=48),
+    "cifar8": model.ArmConfig("cifar8", channels=3, height=10, width=10, categories=256,
+                              filters=48, n_resnets=2, t_fore=5, fore_filters=48),
+    # Table-3 ablation: learned forecasting without representation sharing.
+    "cifar8_noshare": model.ArmConfig("cifar8_noshare", channels=3, height=10, width=10, categories=256,
+                                      filters=48, n_resnets=2, t_fore=5, fore_filters=48, share_repr=False),
+    # Latent-space ARMs (Table 2): 4x8x8, K=64.
+    "latent_svhn": model.ArmConfig("latent_svhn", channels=4, height=8, width=8, categories=64,
+                                   filters=48, n_resnets=2, t_fore=5, fore_filters=48),
+    "latent_cifar": model.ArmConfig("latent_cifar", channels=4, height=8, width=8, categories=64,
+                                    filters=48, n_resnets=2, t_fore=5, fore_filters=48),
+    "latent_in32": model.ArmConfig("latent_in32", channels=4, height=8, width=8, categories=64,
+                                   filters=48, n_resnets=2, t_fore=5, fore_filters=48),
+}
+
+AE_CONFIGS = {
+    "svhn": ae.AeConfig("svhn"),
+    "cifar": ae.AeConfig("cifar"),
+    "in32": ae.AeConfig("in32"),
+}
+
+# dataset name, generator kwargs per explicit config
+DATA_FOR = {
+    "mnist_bin": ("binary_digits", {"size": 16}),
+    "svhn8": ("svhn", {"size": 10, "bits": 8}),
+    "cifar5": ("cifar", {"size": 10, "bits": 5}),
+    "cifar8": ("cifar", {"size": 10, "bits": 8}),
+    "cifar8_noshare": ("cifar", {"size": 10, "bits": 8}),
+}
+AE_DATA_FOR = {"svhn": ("svhn", {"size": 16, "bits": 8}),
+               "cifar": ("cifar", {"size": 16, "bits": 8}),
+               "in32": ("imagenet", {"size": 16, "bits": 8})}
+LATENT_OF = {"latent_svhn": "svhn", "latent_cifar": "cifar", "latent_in32": "in32"}
+
+BATCH_SIZES = (1, 32)
+N_TRAIN = 512
+N_TEST = 64
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    `as_hlo_text(True)` == print_large_constants: the trained weights are
+    baked into the graph as constants, and the default printer elides
+    anything big as `constant({...})` — which the consumer-side parser
+    silently turns into garbage. Full printing is essential.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def export_fn(fn, example_args, path: str) -> int:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def export_arm(params, cfg: model.ArmConfig, out_dir: str, batch_sizes=BATCH_SIZES, use_pallas=False, suffix=""):
+    files = {}
+    for b in batch_sizes:
+        spec = jax.ShapeDtypeStruct((b, cfg.dim), jnp.int32)
+        name = f"{cfg.name}_step{suffix}_b{b}.hlo.txt"
+        n = export_fn(lambda x: model.step(params, x, cfg, use_pallas=use_pallas), (spec,),
+                      os.path.join(out_dir, name))
+        print(f"  wrote {name} ({n} chars)", flush=True)
+        files[f"step{suffix}_b{b}"] = name
+        if not use_pallas:
+            # logp-only variant: methods that never read the forecast heads
+            # (baseline / zeros / last / FPI / no-reparam) skip both the
+            # fore-head compute and its device->host transfer — the
+            # dominant per-pass cost at B=32 (see EXPERIMENTS.md §Perf).
+            name_lp = f"{cfg.name}_steplp{suffix}_b{b}.hlo.txt"
+            n = export_fn(lambda x: (model.step(params, x, cfg)[0],), (spec,),
+                          os.path.join(out_dir, name_lp))
+            print(f"  wrote {name_lp} ({n} chars)", flush=True)
+            files[f"steplp{suffix}_b{b}"] = name_lp
+    return files
+
+
+def export_ae(params, cfg: ae.AeConfig, out_dir: str, b: int = 32):
+    s = cfg.img_size
+    img_spec = jax.ShapeDtypeStruct((b, 3, s, s), jnp.float32)
+    z_spec = jax.ShapeDtypeStruct((b, cfg.latent_dim), jnp.int32)
+    files = {}
+    n = export_fn(lambda x: (ae.encode_flat(params, x, cfg),), (img_spec,),
+                  os.path.join(out_dir, f"ae_{cfg.name}_enc_b{b}.hlo.txt"))
+    print(f"  wrote ae_{cfg.name}_enc_b{b}.hlo.txt ({n} chars)", flush=True)
+    files[f"enc_b{b}"] = f"ae_{cfg.name}_enc_b{b}.hlo.txt"
+    n = export_fn(lambda z: (ae.decode_flat(params, z, cfg),), (z_spec,),
+                  os.path.join(out_dir, f"ae_{cfg.name}_dec_b{b}.hlo.txt"))
+    print(f"  wrote ae_{cfg.name}_dec_b{b}.hlo.txt ({n} chars)", flush=True)
+    files[f"dec_b{b}"] = f"ae_{cfg.name}_dec_b{b}.hlo.txt"
+    return files
+
+
+def save_test_batch(x_flat: np.ndarray, path: str):
+    """Row-major little-endian i32 dump of a [N, d] test batch."""
+    x_flat.astype("<i4").tofile(path)
+
+
+# ---------------------------------------------------------------------------
+# Main pipeline
+# ---------------------------------------------------------------------------
+
+
+def run(out_dir: str, quick: bool = False, only=None):
+    os.makedirs(out_dir, exist_ok=True)
+    t_start = time.time()
+    manifest = {"version": 1, "quick": quick, "models": {}, "autoencoders": {}}
+    # --only reruns a subset: merge into the existing manifest.
+    man_path = os.path.join(out_dir, "manifest.json")
+    if only and os.path.exists(man_path):
+        with open(man_path) as f:
+            manifest = json.load(f)
+        manifest["quick"] = quick
+
+    arm_steps = 60 if quick else 700
+    # 8-bit models need much longer to get the K=256 conditionals away
+    # from uniform (otherwise FPI converges trivially and the paper's
+    # categories-vs-difficulty ordering inverts).
+    arm_steps_8bit = 60 if quick else 2200
+    mnist_steps = 60 if quick else 300
+    latent_steps = 60 if quick else 400
+    ae_steps = 50 if quick else 250
+    n_train = 128 if quick else N_TRAIN
+
+    # ---- explicit-likelihood ARMs -------------------------------------
+    for name, (dset, kw) in DATA_FOR.items():
+        if only and name not in only:
+            continue
+        cfg = ARM_CONFIGS[name]
+        print(f"[{name}] generating data + training...", flush=True)
+        data = datasets.dataset_by_name(dset, n_train + N_TEST, seed=0, **kw).astype(np.int32)
+        tr, te = data[:n_train], data[n_train:]
+        steps = mnist_steps if name == "mnist_bin" else (arm_steps_8bit if cfg.categories >= 256 else arm_steps)
+        params, losses = train.train_arm(cfg, tr, steps=steps, batch_size=16, seed=0)
+        bpd = train.eval_bpd(params, cfg, te)
+        print(f"[{name}] test bpd {bpd:.4f}", flush=True)
+        files = export_arm(params, cfg, out_dir,
+                           batch_sizes=(32,) if name == "cifar8_noshare" else BATCH_SIZES)
+        if name == "mnist_bin":
+            files.update(export_arm(params, cfg, out_dir, batch_sizes=(1,), use_pallas=True, suffix="_pallas"))
+        np.savez(os.path.join(out_dir, f"{name}_params.npz"), **{k: np.asarray(v) for k, v in params.items()})
+        test_flat = np.asarray(model.img_to_flat(jnp.asarray(te[:32])))
+        save_test_batch(test_flat, os.path.join(out_dir, f"{name}_test_x.bin"))
+        files["test_x"] = f"{name}_test_x.bin"
+        manifest["models"][name] = {
+            **cfg.to_manifest(), "files": files, "bpd": bpd,
+            "final_loss": float(np.mean(losses[-20:])), "train_steps": steps,
+            "kind": "explicit", "dataset": dset, "dataset_kw": kw,
+            "test_n": int(test_flat.shape[0]),
+        }
+
+    # ---- autoencoders + latent ARMs ------------------------------------
+    for ae_name, (dset, kw) in AE_DATA_FOR.items():
+        latent_name = {v: k for k, v in LATENT_OF.items()}[ae_name]
+        if only and latent_name not in only:
+            continue
+        acfg = AE_CONFIGS[ae_name]
+        cfg = ARM_CONFIGS[latent_name]
+        print(f"[ae:{ae_name}] generating data + training AE...", flush=True)
+        imgs = datasets.dataset_by_name(dset, n_train + N_TEST, seed=1, **kw)
+        ae_params, _ = train.train_autoencoder(acfg, imgs[:n_train], steps=ae_steps, batch_size=16, seed=0)
+        mse = float(np.mean((np.asarray(ae.autoencode(ae_params, jnp.asarray(ae.normalize_img(imgs[n_train:n_train+32])), acfg)[0])
+                             - ae.normalize_img(imgs[n_train:n_train+32])) ** 2))
+        print(f"[ae:{ae_name}] test mse {mse:.5f}; encoding latents...", flush=True)
+        latents = train.encode_dataset(ae_params, acfg, imgs)  # [N, 256]
+        lat_imgs = np.asarray(model.flat_to_img(jnp.asarray(latents), cfg))
+        print(f"[{latent_name}] training latent ARM...", flush=True)
+        params, losses = train.train_arm(cfg, lat_imgs[:n_train], steps=latent_steps, batch_size=16, seed=0)
+        bpd = train.eval_bpd(params, cfg, lat_imgs[n_train:])
+        print(f"[{latent_name}] test bpd(latent) {bpd:.4f}", flush=True)
+        files = export_arm(params, cfg, out_dir)
+        files.update(export_ae(ae_params, acfg, out_dir))
+        save_test_batch(latents[n_train : n_train + 32], os.path.join(out_dir, f"{latent_name}_test_x.bin"))
+        files["test_x"] = f"{latent_name}_test_x.bin"
+        manifest["models"][latent_name] = {
+            **cfg.to_manifest(), "files": files, "bpd": bpd,
+            "final_loss": float(np.mean(losses[-20:])), "train_steps": arm_steps,
+            "kind": "latent", "dataset": dset, "dataset_kw": kw, "autoencoder": ae_name,
+            "test_n": 32,
+        }
+        manifest["autoencoders"][ae_name] = {**acfg.to_manifest(), "mse": mse}
+
+    manifest["build_seconds"] = round(time.time() - t_start, 1)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"manifest.json written; total {manifest['build_seconds']}s", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true", help="tiny training run (CI smoke)")
+    ap.add_argument("--only", nargs="*", default=None, help="subset of model names")
+    args = ap.parse_args()
+    run(os.path.abspath(args.out), quick=args.quick, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Discrete-latent autoencoder (paper §4.2 / Appendix A.3).
+
+Encoder: two 3×3 convs (half width), one strided 4×4 conv (full width),
+two residual blocks, 1×1 to Cz·K logits; quantization by argmax-of-softmax
+with a straight-through gradient. Decoder mirrors it. Substituted scale
+(DESIGN.md §3): 16×16 RGB images → 4×8×8 latents with K=64 categories.
+
+The latent ARM (model.py with C=4, H=W=8) is trained on frozen-encoder
+latents, following the paper's separate-training schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class AeConfig:
+    name: str
+    img_size: int = 16
+    width: int = 64
+    latent_channels: int = 4
+    latent_hw: int = 8
+    categories: int = 64
+
+    @property
+    def latent_dim(self) -> int:
+        return self.latent_channels * self.latent_hw * self.latent_hw
+
+    def to_manifest(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "img_size": self.img_size,
+            "width": self.width,
+            "latent_channels": self.latent_channels,
+            "latent_hw": self.latent_hw,
+            "categories": self.categories,
+            "latent_dim": self.latent_dim,
+        }
+
+
+def _winit(rng: np.random.Generator, shape, fan_in: int) -> jnp.ndarray:
+    return jnp.asarray(rng.normal(0.0, 1.0 / np.sqrt(fan_in), size=shape), jnp.float32)
+
+
+def init_params(cfg: AeConfig, seed: int = 0) -> Params:
+    rng = np.random.default_rng(np.random.SeedSequence(entropy=0xAE, spawn_key=(seed,)))
+    w, hw = cfg.width, cfg.width // 2
+    cz, k = cfg.latent_channels, cfg.categories
+    p: Params = {}
+    # Encoder.
+    p["e0_w"], p["e0_b"] = _winit(rng, (hw, 3, 3, 3), 27), jnp.zeros((hw,), jnp.float32)
+    p["e1_w"], p["e1_b"] = _winit(rng, (hw, hw, 3, 3), hw * 9), jnp.zeros((hw,), jnp.float32)
+    p["e2_w"], p["e2_b"] = _winit(rng, (w, hw, 4, 4), hw * 16), jnp.zeros((w,), jnp.float32)
+    for i in range(2):
+        p[f"er{i}a_w"], p[f"er{i}a_b"] = _winit(rng, (w, w, 3, 3), w * 9), jnp.zeros((w,), jnp.float32)
+        p[f"er{i}b_w"], p[f"er{i}b_b"] = _winit(rng, (w, w, 3, 3), w * 9), jnp.zeros((w,), jnp.float32)
+    p["eo_w"], p["eo_b"] = _winit(rng, (cz * k, w, 1, 1), w), jnp.zeros((cz * k,), jnp.float32)
+    # Decoder.
+    p["di_w"], p["di_b"] = _winit(rng, (w, cz * k, 1, 1), cz * k), jnp.zeros((w,), jnp.float32)
+    for i in range(2):
+        p[f"dr{i}a_w"], p[f"dr{i}a_b"] = _winit(rng, (w, w, 3, 3), w * 9), jnp.zeros((w,), jnp.float32)
+        p[f"dr{i}b_w"], p[f"dr{i}b_b"] = _winit(rng, (w, w, 3, 3), w * 9), jnp.zeros((w,), jnp.float32)
+    p["dt_w"], p["dt_b"] = _winit(rng, (w, hw, 4, 4), w * 16), jnp.zeros((hw,), jnp.float32)
+    p["d1_w"], p["d1_b"] = _winit(rng, (hw, hw, 3, 3), hw * 9), jnp.zeros((hw,), jnp.float32)
+    p["d2_w"], p["d2_b"] = _winit(rng, (3, hw, 3, 3), hw * 9), jnp.zeros((3,), jnp.float32)
+    return p
+
+
+def _conv(x, w, b, stride=1, padding="SAME"):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def _deconv(x, w, b, stride=2):
+    # Transposed conv: [In, Out, kh, kw] with IOHW numbers.
+    out = jax.lax.conv_transpose(
+        x, w, strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NCHW", "IOHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def _resblock(x, wa, ba, wb, bb):
+    y = jax.nn.relu(_conv(x, wa, ba))
+    y = _conv(y, wb, bb)
+    return jax.nn.relu(x + y)
+
+
+def encode_logits(params: Params, img: jnp.ndarray, cfg: AeConfig) -> jnp.ndarray:
+    """img f32 [B,3,S,S] in [-1,1] -> latent logits [B, Cz, Hz, Wz, K]."""
+    h = jax.nn.relu(_conv(img, params["e0_w"], params["e0_b"]))
+    h = jax.nn.relu(_conv(h, params["e1_w"], params["e1_b"]))
+    h = jax.nn.relu(_conv(h, params["e2_w"], params["e2_b"], stride=2))
+    for i in range(2):
+        h = _resblock(h, params[f"er{i}a_w"], params[f"er{i}a_b"], params[f"er{i}b_w"], params[f"er{i}b_b"])
+    lo = _conv(h, params["eo_w"], params["eo_b"])  # [B, Cz*K, Hz, Wz]
+    b = img.shape[0]
+    lo = lo.reshape(b, cfg.latent_channels, cfg.categories, cfg.latent_hw, cfg.latent_hw)
+    return lo.transpose(0, 1, 3, 4, 2)  # [B, Cz, Hz, Wz, K]
+
+
+def quantize_st(logits: jnp.ndarray) -> jnp.ndarray:
+    """argmax-of-softmax one-hot with straight-through softmax gradient."""
+    sm = jax.nn.softmax(logits, axis=-1)
+    hard = jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1], dtype=sm.dtype)
+    return hard + sm - jax.lax.stop_gradient(sm)
+
+
+def decode(params: Params, z_onehot: jnp.ndarray, cfg: AeConfig) -> jnp.ndarray:
+    """z_onehot f32 [B, Cz, Hz, Wz, K] -> reconstruction [B, 3, S, S]."""
+    b = z_onehot.shape[0]
+    z = z_onehot.transpose(0, 1, 4, 2, 3).reshape(b, cfg.latent_channels * cfg.categories, cfg.latent_hw, cfg.latent_hw)
+    h = _conv(z, params["di_w"], params["di_b"])
+    for i in range(2):
+        h = _resblock(h, params[f"dr{i}a_w"], params[f"dr{i}a_b"], params[f"dr{i}b_w"], params[f"dr{i}b_b"])
+    h = jax.nn.relu(_deconv(h, params["dt_w"], params["dt_b"], stride=2))
+    h = jax.nn.relu(_conv(h, params["d1_w"], params["d1_b"]))
+    return _conv(h, params["d2_w"], params["d2_b"])
+
+
+def autoencode(params: Params, img: jnp.ndarray, cfg: AeConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    logits = encode_logits(params, img, cfg)
+    zq = quantize_st(logits)
+    return decode(params, zq, cfg), logits
+
+
+def mse_loss(params: Params, img: jnp.ndarray, cfg: AeConfig) -> jnp.ndarray:
+    recon, _ = autoencode(params, img, cfg)
+    return jnp.mean((recon - img) ** 2)
+
+
+def encode_flat(params: Params, img: jnp.ndarray, cfg: AeConfig) -> jnp.ndarray:
+    """Deterministic encoder to flat int latents [B, latent_dim].
+
+    Flat order matches the latent ARM: (y·Wz + x)·Cz + c.
+    """
+    z = jnp.argmax(encode_logits(params, img, cfg), axis=-1)  # [B, Cz, Hz, Wz]
+    return z.transpose(0, 2, 3, 1).reshape(img.shape[0], cfg.latent_dim).astype(jnp.int32)
+
+
+def decode_flat(params: Params, z_flat: jnp.ndarray, cfg: AeConfig) -> jnp.ndarray:
+    """Flat int latents [B, latent_dim] -> images f32 [B, 3, S, S]."""
+    b = z_flat.shape[0]
+    z = z_flat.reshape(b, cfg.latent_hw, cfg.latent_hw, cfg.latent_channels).transpose(0, 3, 1, 2)
+    onehot = jax.nn.one_hot(z, cfg.categories, dtype=jnp.float32)
+    return decode(params, onehot, cfg)
+
+
+def normalize_img(img_u8: np.ndarray) -> np.ndarray:
+    """uint8 [N,3,S,S] in [0,255] -> f32 in [-1, 1]."""
+    return (img_u8.astype(np.float32) / 255.0) * 2.0 - 1.0

@@ -1,0 +1,184 @@
+"""Deterministic synthetic dataset generators.
+
+The paper evaluates on Binary MNIST, SVHN, CIFAR10 and ImageNet32. This box
+is offline and CPU-only, so we substitute procedurally generated datasets
+that preserve the two axes predictive sampling is sensitive to (paper §4.1):
+
+  * the number of categories K (binary vs 5-bit vs 8-bit), and
+  * local spatial predictability with occasional structure transitions
+    (the locus of forecasting mistakes in Figs. 3-4).
+
+All generators are deterministic in (seed, n) and return uint-valued
+numpy arrays shaped [N, C, H, W] with values in [0, K).
+See DESIGN.md §3 for the substitution rationale.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "binary_digits",
+    "svhn_synth",
+    "cifar_synth",
+    "imagenet_synth",
+    "dataset_by_name",
+]
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(np.random.SeedSequence(entropy=0xC0FFEE, spawn_key=(seed,)))
+
+
+def _raster_line(img: np.ndarray, x0: float, y0: float, x1: float, y1: float, width: float) -> None:
+    """Rasterize a thick anti-alias-free line segment into a 2D binary image."""
+    h, w = img.shape
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float64)
+    dx, dy = x1 - x0, y1 - y0
+    norm2 = dx * dx + dy * dy + 1e-9
+    t = np.clip(((xx - x0) * dx + (yy - y0) * dy) / norm2, 0.0, 1.0)
+    px, py = x0 + t * dx, y0 + t * dy
+    dist = np.sqrt((xx - px) ** 2 + (yy - py) ** 2)
+    img[dist <= width] = 1
+
+
+def _raster_arc(img: np.ndarray, cx: float, cy: float, r: float, a0: float, a1: float, width: float) -> None:
+    h, w = img.shape
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float64)
+    dist = np.abs(np.sqrt((xx - cx) ** 2 + (yy - cy) ** 2) - r)
+    ang = np.arctan2(yy - cy, xx - cx)
+    lo, hi = min(a0, a1), max(a0, a1)
+    mask = (dist <= width) & (ang >= lo) & (ang <= hi)
+    img[mask] = 1
+
+
+def binary_digits(n: int, size: int = 16, seed: int = 0) -> np.ndarray:
+    """Binary-MNIST stand-in: procedural digit-like stroke images.
+
+    Each image is 1-4 strokes (lines and arcs) on black background,
+    binarized. Returns uint8 [n, 1, size, size] with values in {0, 1}.
+    """
+    rng = _rng(seed)
+    out = np.zeros((n, 1, size, size), dtype=np.uint8)
+    for i in range(n):
+        img = np.zeros((size, size), dtype=np.uint8)
+        n_strokes = int(rng.integers(1, 5))
+        for _ in range(n_strokes):
+            if rng.random() < 0.5 or size < 10:
+                x0, y0, x1, y1 = rng.uniform(1, max(size - 2, 2), size=4)
+                _raster_line(img, x0, y0, x1, y1, width=rng.uniform(0.7, 1.4))
+            else:
+                cx, cy = rng.uniform(4, size - 5, size=2)
+                r = rng.uniform(2.0, size / 3)
+                a0 = rng.uniform(-np.pi, np.pi)
+                a1 = a0 + rng.uniform(np.pi / 2, 2 * np.pi)
+                _raster_arc(img, cx, cy, r, a0, min(a1, np.pi), width=rng.uniform(0.7, 1.2))
+        out[i, 0] = img
+    return out
+
+
+def _smooth_field(rng: np.random.Generator, c: int, h: int, w: int, n_waves: int = 4) -> np.ndarray:
+    """Sum of low-frequency cosines -> smooth field in [0, 1], [c, h, w]."""
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float64)
+    field = np.zeros((c, h, w))
+    for ch in range(c):
+        for _ in range(n_waves):
+            fx, fy = rng.uniform(-1.5, 1.5, size=2) * np.pi / max(h, w)
+            phase = rng.uniform(0, 2 * np.pi)
+            amp = rng.uniform(0.2, 1.0)
+            field[ch] += amp * np.cos(fx * xx + fy * yy + phase)
+    mn, mx = field.min(), field.max()
+    return (field - mn) / (mx - mn + 1e-9)
+
+
+def svhn_synth(n: int, size: int = 12, bits: int = 8, seed: int = 0) -> np.ndarray:
+    """SVHN stand-in: digit-like rectangles over smooth color gradients.
+
+    Returns uint8 [n, 3, size, size] with values in [0, 2**bits).
+    """
+    rng = _rng(seed + 101)
+    k = 1 << bits
+    out = np.zeros((n, 3, size, size), dtype=np.int64)
+    for i in range(n):
+        bg = _smooth_field(rng, 3, size, size, n_waves=3)
+        # 1-2 "digit" blocks: solid rectangles with contrasting color
+        img = bg.copy()
+        for _ in range(int(rng.integers(1, 3))):
+            x0 = int(rng.integers(0, size - 3))
+            y0 = int(rng.integers(0, size - 4))
+            bw = int(rng.integers(2, max(3, size // 3)))
+            bh = int(rng.integers(3, max(4, size // 2)))
+            color = rng.uniform(0, 1, size=3)
+            img[:, y0 : y0 + bh, x0 : x0 + bw] = color[:, None, None]
+        img = img + rng.normal(0, 0.015, size=img.shape)
+        out[i] = np.clip(np.round(img * (k - 1)), 0, k - 1)
+    return out.astype(np.uint8 if bits <= 8 else np.int64)
+
+
+def cifar_synth(n: int, size: int = 12, bits: int = 8, seed: int = 0) -> np.ndarray:
+    """CIFAR10 stand-in: smooth textures plus one or two colored shapes.
+
+    Returns uint8 [n, 3, size, size] with values in [0, 2**bits).
+    """
+    rng = _rng(seed + 202)
+    k = 1 << bits
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float64)
+    out = np.zeros((n, 3, size, size), dtype=np.int64)
+    for i in range(n):
+        img = _smooth_field(rng, 3, size, size, n_waves=5)
+        for _ in range(int(rng.integers(1, 3))):
+            cx, cy = rng.uniform(2, size - 2, size=2)
+            r = rng.uniform(1.5, size / 3)
+            mask = (xx - cx) ** 2 + (yy - cy) ** 2 <= r * r
+            color = rng.uniform(0, 1, size=3)
+            alpha = rng.uniform(0.6, 1.0)
+            for ch in range(3):
+                img[ch][mask] = alpha * color[ch] + (1 - alpha) * img[ch][mask]
+        img = img + rng.normal(0, 0.01, size=img.shape)
+        out[i] = np.clip(np.round(img * (k - 1)), 0, k - 1)
+    return out.astype(np.uint8 if bits <= 8 else np.int64)
+
+
+def imagenet_synth(n: int, size: int = 16, bits: int = 8, seed: int = 0) -> np.ndarray:
+    """ImageNet32 stand-in: higher-variance mixture of texture families.
+
+    Returns uint8 [n, 3, size, size].
+    """
+    rng = _rng(seed + 303)
+    k = 1 << bits
+    out = np.zeros((n, 3, size, size), dtype=np.int64)
+    yy, xx = np.mgrid[0:size, 0:size].astype(np.float64)
+    for i in range(n):
+        family = int(rng.integers(0, 3))
+        if family == 0:  # smooth
+            img = _smooth_field(rng, 3, size, size, n_waves=4)
+        elif family == 1:  # stripes
+            fx, fy = rng.uniform(-2.5, 2.5, size=2) * np.pi / size
+            base = 0.5 + 0.5 * np.sign(np.cos(fx * xx * 4 + fy * yy * 4 + rng.uniform(0, 6)))
+            tint = rng.uniform(0.2, 1.0, size=3)
+            img = base[None] * tint[:, None, None]
+        else:  # blocks
+            img = np.zeros((3, size, size))
+            cells = int(rng.integers(2, 5))
+            step = max(1, size // cells)
+            for by in range(0, size, step):
+                for bx in range(0, size, step):
+                    img[:, by : by + step, bx : bx + step] = rng.uniform(0, 1, size=3)[:, None, None]
+        img = np.clip(img + rng.normal(0, 0.02, size=img.shape), 0, 1)
+        out[i] = np.clip(np.round(img * (k - 1)), 0, k - 1)
+    return out.astype(np.uint8)
+
+
+_REGISTRY = {
+    "binary_digits": binary_digits,
+    "svhn": svhn_synth,
+    "cifar": cifar_synth,
+    "imagenet": imagenet_synth,
+}
+
+
+def dataset_by_name(name: str, n: int, seed: int = 0, **kw) -> np.ndarray:
+    """Look up a generator by registry name and produce n examples."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown dataset {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](n, seed=seed, **kw)

@@ -1,0 +1,61 @@
+"""Gumbel-max reparametrization utilities (paper §2.2 and Appendix B).
+
+The sampling step `x_i ~ Cat(softmax(μ_i))` is reparametrized as
+`x_i = argmax_c(μ_i,c + ε_i,c)` with ε standard Gumbel — isolating all
+stochasticity into ε so predictive sampling becomes a deterministic
+fixed-point problem. The *posterior* sampler p(ε | x) (Appendix B) draws
+noise consistent with a given sample x, enabling forecast-module training
+on data samples without running the slow autoregressive inverse.
+
+The rust coordinator re-implements these (substrate/gumbel.rs); the pytest
+suite checks both the argmax-consistency and the marginal statistics here.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["sample_gumbel", "gumbel_argmax", "posterior_gumbel"]
+
+
+def sample_gumbel(rng: np.random.Generator, shape) -> np.ndarray:
+    """Standard Gumbel(0, 1) noise."""
+    u = rng.uniform(low=np.finfo(np.float64).tiny, high=1.0, size=shape)
+    return -np.log(-np.log(u))
+
+
+def gumbel_argmax(logp: np.ndarray, eps: np.ndarray) -> np.ndarray:
+    """argmax over the last axis of logp + eps (the reparametrized sample)."""
+    return np.argmax(logp + eps, axis=-1)
+
+
+def _trunc_gumbel(rng: np.random.Generator, mu: np.ndarray, bound: np.ndarray) -> np.ndarray:
+    """Sample Gumbel(mu) truncated to (-inf, bound].
+
+    Uses the max-coupling identity TG = -log(exp(-bound) + exp(-G)) with
+    G ~ Gumbel(mu) (Maddison et al. 2014; Kool et al. 2019), evaluated with
+    logaddexp for stability.
+    """
+    g = mu + sample_gumbel(rng, mu.shape)
+    return -np.logaddexp(-bound, -g)
+
+
+def posterior_gumbel(rng: np.random.Generator, logp: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Sample ε ~ p(ε | x) for categorical log-probs.
+
+    logp: [..., K] model log-probabilities μ; x: [...] integer samples.
+    Returns ε with the guarantees:
+      * argmax(μ + ε) == x exactly, and
+      * each ε component is marginally standard Gumbel.
+    """
+    k = logp.shape[-1]
+    x_onehot = np.eye(k, dtype=bool)[x]  # [..., K]
+    mu_x = np.take_along_axis(logp, x[..., None], axis=-1)  # [..., 1]
+    # Max-trick decomposition: M = max_c(mu_c + eps_c) ~ Gumbel(lse(mu)) and
+    # is independent of the argmax. Sample M, pin the winner's value to it.
+    lse = np.log(np.exp(logp).sum(axis=-1, keepdims=True))  # ~0 if normalized
+    max_val = lse + sample_gumbel(rng, mu_x.shape)  # [..., 1]
+    eps_win = max_val - mu_x
+    # Losing coordinates: truncated below the maximum.
+    eps_rest = _trunc_gumbel(rng, logp, np.broadcast_to(max_val, logp.shape)) - logp
+    return np.where(x_onehot, eps_win, eps_rest)

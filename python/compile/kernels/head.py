@@ -1,0 +1,55 @@
+"""Pallas kernel for the categorical head's log-softmax normalizer.
+
+The ARM emits `d` independent K-way categorical distributions per image;
+normalizing them is a bandwidth-bound rowwise reduction. The kernel tiles
+rows of the [N, K] logit matrix through VMEM, computes the max-shifted
+log-sum-exp in one pass over the VMEM-resident tile, and writes normalized
+log-probs. K is zero-padded to the 128-lane boundary by the wrapper with
+-inf so padding never wins the max or contributes to the sum.
+
+interpret=True (CPU validation); oracle: `ref.log_softmax_ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["log_softmax_pallas"]
+
+_ROWS = 64  # rows per program
+
+
+def _lse_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    s = x - m
+    o_ref[...] = s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))
+
+
+@jax.jit
+def log_softmax_pallas(logits):
+    """Log-softmax over the last axis of [..., K] via the Pallas kernel."""
+    shape = logits.shape
+    k = shape[-1]
+    x = logits.reshape(-1, k).astype(jnp.float32)
+    n = x.shape[0]
+    kpad = (-k) % 128
+    rpad = (-n) % _ROWS
+    # -inf pad on K: never the max, exp() contributes exactly 0 to the sum.
+    x = jnp.pad(x, ((0, rpad), (0, kpad)), constant_values=-jnp.inf)
+    # Rows added by rpad are all -inf; replace with zeros to avoid nan rows
+    # (their outputs are sliced away anyway).
+    if rpad:
+        x = x.at[n:, :].set(0.0)
+    m, kk = x.shape
+    out = pl.pallas_call(
+        _lse_kernel,
+        grid=(m // _ROWS,),
+        in_specs=[pl.BlockSpec((_ROWS, kk), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((_ROWS, kk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, kk), jnp.float32),
+        interpret=True,
+    )(x)
+    return out[:n, :k].reshape(shape)

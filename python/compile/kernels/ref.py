@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels (interpret=True) match these
+implementations to float tolerance. They are also the *fast path* used
+during training and for the default (non-`_pallas`) HLO artifacts, since
+interpret-mode Pallas is slow on the CPU backend; both paths lower to the
+same mathematical function (verified by `python/tests/test_kernels.py` and
+the rust `pallas_parity` integration test).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "spatial_causal_mask",
+    "masked_conv2d_ref",
+    "gated_ref",
+    "log_softmax_ref",
+]
+
+
+def spatial_causal_mask(kh: int, kw: int, include_center: bool) -> np.ndarray:
+    """Raster-order causal mask over a (kh, kw) kernel window.
+
+    Taps strictly above the center row, or in the center row strictly left
+    of center, are allowed. The center tap is allowed iff `include_center`
+    (PixelCNN mask "B" spatially; mask "A" excludes it). Taps below/right
+    are always disallowed.
+    """
+    m = np.zeros((kh, kw), dtype=np.float32)
+    cy, cx = kh // 2, kw // 2
+    m[:cy, :] = 1.0
+    m[cy, :cx] = 1.0
+    if include_center:
+        m[cy, cx] = 1.0
+    return m
+
+
+def masked_conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Causally-masked SAME conv. x: [B,Cin,H,W], w: [Cout,Cin,kh,kw],
+    b: [Cout], mask: [kh,kw]. Returns [B,Cout,H,W].
+
+    The mask is folded into the weights (dense conv afterwards) — the same
+    trick the Pallas kernel uses to keep the MXU inner loop dense.
+    """
+    wm = w * mask[None, None, :, :]
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        wm.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out + b[None, :, None, None]
+
+
+def gated_ref(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Gated activation tanh(a) * sigmoid(g) (PixelCNN gate)."""
+    return jnp.tanh(a) * jax.nn.sigmoid(g)
+
+
+def log_softmax_ref(logits: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable log-softmax over the last axis."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    s = logits - m
+    return s - jnp.log(jnp.sum(jnp.exp(s), axis=-1, keepdims=True))

@@ -1,0 +1,286 @@
+"""L2: the autoregressive model (PixelCNN-family) in JAX.
+
+Architecture (paper §4.1 / Appendix A, adapted to this substrate — see
+DESIGN.md §3):
+
+* **Spatially-causal trunk** — an embedding lookup of the discrete input
+  (mathematically a one-hot × linear layer, implemented as a gather), a
+  5×5 mask-"A" convolution (center tap excluded), then `n_resnets` gated
+  residual blocks with 3×3 center-inclusive causal convs. By induction the
+  trunk output `u(p)` depends only on pixels strictly before `p` in raster
+  order — exactly the `h` the paper shares with the forecasting modules.
+* **Channel-autoregressive head** — per-pixel logits are
+  `base(u(p)) + Σ_{c'<c} W[c'→c][x_{p,c'}]`, i.e. the categorical output
+  of channel `c` conditions on all preceding channels of the same pixel
+  via K×K lookup tables (a gather; equivalent to the paper's masked 1×1
+  convolutions over one-hot inputs, but O(C²) gathers instead of a
+  (CK)² matmul).
+* **Forecasting modules** (paper §2.4) — a causal 3×3 conv + gate over the
+  shared representation `u`, then a 1×1 conv to T·K logits. Module output
+  `fore[b, p, t, :]` is log P_F^{(t)} of flat variable `p·C + t`
+  conditioned on pixels `< p` only. The `share_repr=False` ablation
+  (Table 3) replaces `u` with features computed directly from the input
+  embedding through a mask-"A" conv, i.e. conditioned on x_{<i} without
+  the shared representation.
+
+Flattening order everywhere (the L2↔L3 contract): channel innermost,
+`flat(y, x, c) = (y·W + x)·C + c`.
+
+All convolutions route through the Pallas kernels (`use_pallas=True`) or
+their jnp oracles (`use_pallas=False`, the default fast path); both lower
+into the same step HLO signature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.gated import gated_pallas
+from .kernels.head import log_softmax_pallas
+from .kernels.masked_conv import masked_conv2d_pallas
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArmConfig:
+    """Static configuration of one ARM (image-space or latent-space)."""
+
+    name: str
+    channels: int  # C: data channels per pixel
+    height: int
+    width: int
+    categories: int  # K
+    filters: int  # F: trunk width
+    n_resnets: int
+    t_fore: int  # T: forecast window, counted in flat variables
+    fore_filters: int
+    embed_dim: int = 16
+    share_repr: bool = True  # False => Table-3 "no representation sharing"
+
+    @property
+    def pixels(self) -> int:
+        return self.height * self.width
+
+    @property
+    def dim(self) -> int:
+        return self.channels * self.pixels
+
+    def to_manifest(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "channels": self.channels,
+            "height": self.height,
+            "width": self.width,
+            "categories": self.categories,
+            "filters": self.filters,
+            "n_resnets": self.n_resnets,
+            "t_fore": self.t_fore,
+            "fore_filters": self.fore_filters,
+            "share_repr": self.share_repr,
+            "dim": self.dim,
+            "pixels": self.pixels,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _winit(rng: np.random.Generator, shape, fan_in: int) -> jnp.ndarray:
+    return jnp.asarray(rng.normal(0.0, 1.0 / np.sqrt(fan_in), size=shape), jnp.float32)
+
+
+def init_params(cfg: ArmConfig, seed: int = 0) -> Params:
+    """Initialize all ARM parameters (numpy-seeded, deterministic)."""
+    rng = np.random.default_rng(np.random.SeedSequence(entropy=0xA12, spawn_key=(seed,)))
+    c, k, f, e = cfg.channels, cfg.categories, cfg.filters, cfg.embed_dim
+    ff, t = cfg.fore_filters, cfg.t_fore
+    p: Params = {}
+    p["embed"] = _winit(rng, (c, k, e), e)
+    p["conv_in_w"] = _winit(rng, (f, c * e, 5, 5), c * e * 24)
+    p["conv_in_b"] = jnp.zeros((f,), jnp.float32)
+    for i in range(cfg.n_resnets):
+        p[f"res{i}_w"] = _winit(rng, (2 * f, f, 3, 3), f * 9)
+        p[f"res{i}_b"] = jnp.zeros((2 * f,), jnp.float32)
+    p["head_h_w"] = _winit(rng, (f, f, 1, 1), f)
+    p["head_h_b"] = jnp.zeros((f,), jnp.float32)
+    p["head_o_w"] = _winit(rng, (c * k, f, 1, 1), f)
+    p["head_o_b"] = jnp.zeros((c * k,), jnp.float32)
+    # Channel-AR lookup tables: chan[c_src][c_dst] used when c_src < c_dst.
+    # Stored dense [C, C, K, K]; the strictly-lower mask is applied in fwd.
+    if c > 1:
+        p["chan"] = _winit(rng, (c, c, k, k), k) * 0.1
+    # Forecasting modules.
+    fore_in = f if cfg.share_repr else c * e
+    p["fore_c_w"] = _winit(rng, (2 * ff, fore_in, 3, 3), fore_in * 9)
+    p["fore_c_b"] = jnp.zeros((2 * ff,), jnp.float32)
+    p["fore_o_w"] = _winit(rng, (t * k, ff, 1, 1), ff)
+    p["fore_o_b"] = jnp.zeros((t * k,), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, b, mask, use_pallas: bool):
+    if use_pallas:
+        return masked_conv2d_pallas(x, w, b, jnp.asarray(mask))
+    return ref.masked_conv2d_ref(x, w, b, jnp.asarray(mask))
+
+
+def _gate(a, g, use_pallas: bool):
+    return gated_pallas(a, g) if use_pallas else ref.gated_ref(a, g)
+
+
+def _logsoftmax(x, use_pallas: bool):
+    return log_softmax_pallas(x) if use_pallas else ref.log_softmax_ref(x)
+
+
+def _embed(params: Params, x_img: jnp.ndarray, cfg: ArmConfig) -> jnp.ndarray:
+    """x_img i32 [B,C,H,W] -> embedded [B, C*E, H, W] via gather."""
+    # emb[c] is [K, E]; take along K with x values.
+    parts = []
+    for c in range(cfg.channels):
+        e = jnp.take(params["embed"][c], x_img[:, c], axis=0)  # [B,H,W,E]
+        parts.append(e)
+    emb = jnp.concatenate(parts, axis=-1)  # [B,H,W,C*E]
+    return emb.transpose(0, 3, 1, 2)
+
+
+def trunk(params: Params, x_img: jnp.ndarray, cfg: ArmConfig, use_pallas: bool = False) -> jnp.ndarray:
+    """Spatially-causal trunk: u[b,:,y,x] depends on pixels strictly < (y,x)."""
+    mask_a = ref.spatial_causal_mask(5, 5, include_center=False)
+    mask_b = ref.spatial_causal_mask(3, 3, include_center=True)
+    h = _embed(params, x_img, cfg)
+    u = _conv(h, params["conv_in_w"], params["conv_in_b"], mask_a, use_pallas)
+    for i in range(cfg.n_resnets):
+        y = _conv(u, params[f"res{i}_w"], params[f"res{i}_b"], mask_b, use_pallas)
+        a, g = jnp.split(y, 2, axis=1)
+        u = u + _gate(a, g, use_pallas)
+    return u
+
+
+def _head_logits(params: Params, u: jnp.ndarray, x_img: jnp.ndarray, cfg: ArmConfig) -> jnp.ndarray:
+    """Per-variable logits [B, d, K] (flat order: (y*W+x)*C + c)."""
+    b = x_img.shape[0]
+    c, k = cfg.channels, cfg.categories
+    hh = jax.nn.relu(ref.masked_conv2d_ref(u, params["head_h_w"], params["head_h_b"], jnp.ones((1, 1))))
+    base = ref.masked_conv2d_ref(hh, params["head_o_w"], params["head_o_b"], jnp.ones((1, 1)))
+    # [B, C*K, H, W] -> [B, H, W, C, K]
+    base = base.reshape(b, c, k, cfg.height, cfg.width).transpose(0, 3, 4, 1, 2)
+    if c > 1:
+        # Channel conditioning: for c_dst, add chan[c_src, c_dst][x_{p,c_src}]
+        # for every c_src < c_dst (gathers, not matmuls).
+        add = jnp.zeros_like(base)
+        for cd in range(1, c):
+            acc = 0.0
+            for cs in range(cd):
+                tbl = params["chan"][cs, cd]  # [K, K]
+                acc = acc + jnp.take(tbl, x_img[:, cs], axis=0)  # [B,H,W,K]
+            add = add.at[:, :, :, cd, :].set(acc)
+        base = base + add
+    return base.reshape(b, cfg.dim, k)
+
+
+def _fore_logits(params: Params, u: jnp.ndarray, x_img: jnp.ndarray, cfg: ArmConfig, use_pallas: bool = False) -> jnp.ndarray:
+    """Forecast-head logits [B, P, T, K]; entry (p, t) is the forecast of
+    flat variable p*C + t, conditioned on pixels < p only."""
+    b = x_img.shape[0]
+    if cfg.share_repr:
+        src = u
+        mask = ref.spatial_causal_mask(3, 3, include_center=True)  # u already strictly past
+    else:
+        src = _embed(params, x_img, cfg)
+        mask = ref.spatial_causal_mask(3, 3, include_center=False)  # x needs mask A
+    y = _conv(src, params["fore_c_w"], params["fore_c_b"], mask, use_pallas)
+    a, g = jnp.split(y, 2, axis=1)
+    fh = _gate(a, g, use_pallas)
+    fo = ref.masked_conv2d_ref(fh, params["fore_o_w"], params["fore_o_b"], jnp.ones((1, 1)))
+    fo = fo.reshape(b, cfg.t_fore, cfg.categories, cfg.height, cfg.width)
+    return fo.transpose(0, 3, 4, 1, 2).reshape(b, cfg.pixels, cfg.t_fore, cfg.categories)
+
+
+def forward(params: Params, x_img: jnp.ndarray, cfg: ArmConfig, use_pallas: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full parallel inference pass.
+
+    x_img: i32 [B, C, H, W]. Returns (logp [B,d,K], fore_logp [B,P,T,K]),
+    both log-softmax normalized over K.
+    """
+    u = trunk(params, x_img, cfg, use_pallas)
+    logits = _head_logits(params, u, x_img, cfg)
+    fore = _fore_logits(params, u, x_img, cfg, use_pallas)
+    return _logsoftmax(logits, use_pallas), _logsoftmax(fore, use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Flat <-> image layout
+# ---------------------------------------------------------------------------
+
+
+def flat_to_img(x_flat: jnp.ndarray, cfg: ArmConfig) -> jnp.ndarray:
+    """[B, d] -> [B, C, H, W] with flat order (y*W + x)*C + c."""
+    b = x_flat.shape[0]
+    return x_flat.reshape(b, cfg.height, cfg.width, cfg.channels).transpose(0, 3, 1, 2)
+
+
+def img_to_flat(x_img: jnp.ndarray) -> jnp.ndarray:
+    """[B, C, H, W] -> [B, d] with flat order (y*W + x)*C + c."""
+    b, c, h, w = x_img.shape
+    return x_img.transpose(0, 2, 3, 1).reshape(b, c * h * w)
+
+
+def step(params: Params, x_flat: jnp.ndarray, cfg: ArmConfig, use_pallas: bool = False):
+    """The AOT-exported signature: x i32 [B,d] -> (logp [B,d,K], fore [B,P,T,K])."""
+    return forward(params, flat_to_img(x_flat.astype(jnp.int32), cfg), cfg, use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def nll_bpd(params: Params, x_img: jnp.ndarray, cfg: ArmConfig) -> jnp.ndarray:
+    """Mean negative log-likelihood in bits per dimension."""
+    logp, _ = forward(params, x_img, cfg)
+    x_flat = img_to_flat(x_img)
+    ll = jnp.take_along_axis(logp, x_flat[:, :, None].astype(jnp.int32), axis=2)[:, :, 0]
+    return -jnp.mean(ll) / jnp.log(2.0)
+
+
+def loss_fn(params: Params, x_img: jnp.ndarray, cfg: ArmConfig, fore_weight: float = 0.01) -> jnp.ndarray:
+    """NLL + fore_weight · KL(ARM ‖ forecast) (paper Eq. 9, ARM detached)."""
+    logp, fore = forward(params, x_img, cfg)
+    x_flat = img_to_flat(x_img)
+    ll = jnp.take_along_axis(logp, x_flat[:, :, None].astype(jnp.int32), axis=2)[:, :, 0]
+    nll = -jnp.mean(ll)
+
+    arm = jax.lax.stop_gradient(logp)  # [B, d, K]
+    arm_p = jnp.exp(arm)
+    kls = []
+    c = cfg.channels
+    for t in range(cfg.t_fore):
+        # Forecast (p, t) targets flat variable j = p*C + t, valid while the
+        # target pixel p + t//C stays inside the image.
+        n_valid = cfg.pixels - (t // c)
+        if n_valid <= 0:
+            continue
+        p_idx = jnp.arange(n_valid)
+        j_idx = p_idx * c + t
+        kl = jnp.sum(arm_p[:, j_idx, :] * (arm[:, j_idx, :] - fore[:, p_idx, t, :]), axis=-1)
+        kls.append(jnp.mean(kl))
+    fore_kl = jnp.mean(jnp.stack(kls)) if kls else 0.0
+    return nll + fore_weight * fore_kl
+
+
+def param_count(params: Params) -> int:
+    return int(sum(np.prod(v.shape) for v in jax.tree_util.tree_leaves(params)))

@@ -1,0 +1,143 @@
+"""Build-time training: from-scratch Adam + training loops.
+
+optax is unavailable in this offline image, so Adam is implemented directly
+over jax pytrees. Training recipes follow the paper's Appendix A (Adam,
+lr 2e-4 with exponential decay, weight decay 1e-6, forecast-KL weight
+0.01; separate AE-then-ARM schedule for the latent experiments), scaled
+down per DESIGN.md §3 for a single CPU core.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import autoencoder as ae
+from . import model
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Adam (from scratch)
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: Params) -> Dict[str, Any]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    state: Dict[str, Any],
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 1e-6,
+) -> Tuple[Params, Dict[str, Any]]:
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    corr1 = 1.0 - b1**tf
+    corr2 = 1.0 - b2**tf
+
+    def upd(p, m_, v_):
+        mhat = m_ / corr1
+        vhat = v_ / corr2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Generic training loop
+# ---------------------------------------------------------------------------
+
+
+def train_loop(
+    params: Params,
+    loss: Callable[[Params, jnp.ndarray], jnp.ndarray],
+    data: np.ndarray,
+    steps: int,
+    batch_size: int,
+    lr: float = 2e-4,
+    lr_decay: float = 0.999995,
+    seed: int = 0,
+    log_every: int = 50,
+    tag: str = "",
+) -> Tuple[Params, List[float]]:
+    """Minimizes `loss(params, batch)` with Adam over random minibatches."""
+    state = adam_init(params)
+    rng = np.random.default_rng(seed)
+    losses: List[float] = []
+
+    @jax.jit
+    def update(p, s, batch, lr_now):
+        l, g = jax.value_and_grad(loss)(p, batch)
+        p2, s2 = adam_update(p, g, s, lr_now)
+        return p2, s2, l
+
+    t0 = time.time()
+    for it in range(steps):
+        idx = rng.integers(0, data.shape[0], size=batch_size)
+        batch = jnp.asarray(data[idx])
+        lr_now = lr * (lr_decay**it)
+        params, state, l = update(params, state, batch, lr_now)
+        losses.append(float(l))
+        if log_every and (it % log_every == 0 or it == steps - 1):
+            print(f"  [{tag}] step {it:5d} loss {float(l):.4f} ({time.time()-t0:.1f}s)", flush=True)
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Recipes
+# ---------------------------------------------------------------------------
+
+
+def train_arm(cfg: model.ArmConfig, data_imgs: np.ndarray, steps: int, batch_size: int, seed: int = 0):
+    """Train an ARM (with forecast heads) on int images [N, C, H, W]."""
+    params = model.init_params(cfg, seed=seed)
+
+    def loss(p, batch):
+        return model.loss_fn(p, batch, cfg)
+
+    params, losses = train_loop(
+        params, loss, data_imgs.astype(np.int32), steps, batch_size, seed=seed, tag=f"arm:{cfg.name}"
+    )
+    return params, losses
+
+
+def train_autoencoder(cfg: ae.AeConfig, imgs_u8: np.ndarray, steps: int, batch_size: int, seed: int = 0):
+    """Train the discrete AE on uint8 images [N, 3, S, S]."""
+    params = ae.init_params(cfg, seed=seed)
+    data = ae.normalize_img(imgs_u8)
+
+    def loss(p, batch):
+        return ae.mse_loss(p, batch, cfg)
+
+    params, losses = train_loop(params, loss, data, steps, batch_size, seed=seed, tag=f"ae:{cfg.name}")
+    return params, losses
+
+
+def encode_dataset(ae_params: Params, cfg: ae.AeConfig, imgs_u8: np.ndarray, batch: int = 64) -> np.ndarray:
+    """Frozen-encoder latents for the whole dataset, flat [N, latent_dim]."""
+    data = ae.normalize_img(imgs_u8)
+    enc = jax.jit(lambda b: ae.encode_flat(ae_params, b, cfg))
+    outs = [np.asarray(enc(jnp.asarray(data[i : i + batch]))) for i in range(0, data.shape[0], batch)]
+    return np.concatenate(outs, axis=0)
+
+
+def eval_bpd(params: Params, cfg: model.ArmConfig, data_imgs: np.ndarray, batch: int = 32) -> float:
+    """Test-set bits/dim of the ARM."""
+    f = jax.jit(lambda b: model.nll_bpd(params, b, cfg))
+    vals = [float(f(jnp.asarray(data_imgs[i : i + batch].astype(np.int32)))) for i in range(0, min(len(data_imgs), 256), batch)]
+    return float(np.mean(vals))

@@ -1,0 +1,40 @@
+"""Shared fixtures: tiny model configs that train/evaluate in milliseconds."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from compile import model  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """3-channel micro ARM: 4x4 pixels, K=5, d=48."""
+    return model.ArmConfig("tiny", channels=3, height=4, width=4, categories=5,
+                           filters=8, n_resnets=2, t_fore=4, fore_filters=8, embed_dim=3)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    return model.init_params(tiny_cfg, seed=0)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg_1ch():
+    """1-channel micro ARM: 5x5 binary, d=25."""
+    return model.ArmConfig("tiny1", channels=1, height=5, width=5, categories=2,
+                           filters=8, n_resnets=1, t_fore=6, fore_filters=8, embed_dim=2)
+
+
+@pytest.fixture(scope="session")
+def tiny_params_1ch(tiny_cfg_1ch):
+    return model.init_params(tiny_cfg_1ch, seed=1)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,63 @@
+"""AOT export: HLO text is produced, parseable-looking, and shape-correct."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_structure(tiny_cfg_1ch, tiny_params_1ch):
+    spec = jax.ShapeDtypeStruct((1, tiny_cfg_1ch.dim), jnp.int32)
+    lowered = jax.jit(lambda x: model.step(tiny_params_1ch, x, tiny_cfg_1ch)).lower(spec)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # tuple-return of two f32 arrays with the right shapes
+    assert f"f32[1,{tiny_cfg_1ch.dim},2]" in text
+    assert f"f32[1,{tiny_cfg_1ch.pixels},{tiny_cfg_1ch.t_fore},2]" in text
+    assert f"s32[1,{tiny_cfg_1ch.dim}]" in text
+
+
+def test_export_fn_writes_file(tmp_path, tiny_cfg_1ch, tiny_params_1ch):
+    spec = jax.ShapeDtypeStruct((1, tiny_cfg_1ch.dim), jnp.int32)
+    path = str(tmp_path / "t.hlo.txt")
+    n = aot.export_fn(lambda x: model.step(tiny_params_1ch, x, tiny_cfg_1ch), (spec,), path)
+    assert n > 100
+    assert os.path.getsize(path) == n
+
+
+def test_save_test_batch_roundtrip(tmp_path):
+    x = np.arange(12, dtype=np.int32).reshape(3, 4)
+    p = str(tmp_path / "x.bin")
+    aot.save_test_batch(x, p)
+    back = np.fromfile(p, dtype="<i4").reshape(3, 4)
+    np.testing.assert_array_equal(back, x)
+
+
+def test_configs_consistent():
+    """Every ARM config's derived quantities line up; manifest keys stable."""
+    for name, cfg in aot.ARM_CONFIGS.items():
+        assert cfg.name == name
+        assert cfg.dim == cfg.channels * cfg.height * cfg.width
+        m = cfg.to_manifest()
+        for key in ("dim", "pixels", "categories", "t_fore", "share_repr"):
+            assert key in m
+    for name in aot.LATENT_OF.values():
+        assert name in aot.AE_CONFIGS
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+                    reason="full artifacts not built")
+def test_built_manifest_is_complete():
+    with open(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")) as f:
+        man = json.load(f)
+    for name, entry in man["models"].items():
+        adir = os.path.join(os.path.dirname(__file__), "../../artifacts")
+        for key, fn in entry["files"].items():
+            assert os.path.exists(os.path.join(adir, fn)), f"{name}/{key} missing: {fn}"
+        assert entry["dim"] == entry["channels"] * entry["height"] * entry["width"]

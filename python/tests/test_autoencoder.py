@@ -1,0 +1,71 @@
+"""Discrete autoencoder: shapes, straight-through quantization, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import autoencoder as ae
+from compile import datasets, train
+
+
+@pytest.fixture(scope="module")
+def acfg():
+    return ae.AeConfig("t", img_size=8, width=16, latent_channels=2, latent_hw=4, categories=8)
+
+
+@pytest.fixture(scope="module")
+def aparams(acfg):
+    return ae.init_params(acfg, seed=0)
+
+
+def test_shapes(acfg, aparams, rng):
+    img = rng.normal(size=(2, 3, 8, 8)).astype(np.float32)
+    logits = ae.encode_logits(aparams, jnp.asarray(img), acfg)
+    assert logits.shape == (2, 2, 4, 4, 8)
+    recon, _ = ae.autoencode(aparams, jnp.asarray(img), acfg)
+    assert recon.shape == (2, 3, 8, 8)
+
+
+def test_encode_decode_flat_layout(acfg, aparams, rng):
+    img = rng.normal(size=(2, 3, 8, 8)).astype(np.float32)
+    z = ae.encode_flat(aparams, jnp.asarray(img), acfg)
+    assert z.shape == (2, acfg.latent_dim)
+    assert z.dtype == jnp.int32
+    assert int(jnp.min(z)) >= 0 and int(jnp.max(z)) < acfg.categories
+    out = ae.decode_flat(aparams, z, acfg)
+    assert out.shape == (2, 3, 8, 8)
+
+
+def test_quantize_is_onehot_and_st_gradient(acfg):
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(2, 2, 4, 4, 8)).astype(np.float32))
+    q = ae.quantize_st(logits)
+    np.testing.assert_allclose(np.asarray(q).sum(-1), 1.0, rtol=1e-5)
+    hard = np.asarray(q).round()
+    np.testing.assert_allclose(np.asarray(q), hard, atol=1e-5)
+
+    # Straight-through: gradient flows to the logits.
+    def f(lo):
+        return jnp.sum(ae.quantize_st(lo) ** 2 * jnp.arange(8.0))
+
+    g = jax.grad(f)(logits)
+    assert float(jnp.abs(g).max()) > 0
+
+
+def test_ae_training_reduces_mse(acfg, rng):
+    imgs = datasets.cifar_synth(48, size=8, bits=8, seed=3)
+    params, losses = train.train_autoencoder(acfg, imgs, steps=40, batch_size=8, seed=0)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_normalize_img_range():
+    x = np.array([[[[0, 255]]]], dtype=np.uint8)
+    n = ae.normalize_img(x)
+    assert n.min() == -1.0 and n.max() == 1.0
+
+
+def test_encode_deterministic(acfg, aparams, rng):
+    img = jnp.asarray(rng.normal(size=(1, 3, 8, 8)).astype(np.float32))
+    z1 = ae.encode_flat(aparams, img, acfg)
+    z2 = ae.encode_flat(aparams, img, acfg)
+    np.testing.assert_array_equal(np.asarray(z1), np.asarray(z2))

@@ -1,0 +1,65 @@
+"""Synthetic dataset generators: determinism, ranges, shapes, diversity."""
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+@pytest.mark.parametrize(
+    "name,kw,c,k",
+    [
+        ("binary_digits", {"size": 16}, 1, 2),
+        ("svhn", {"size": 10, "bits": 8}, 3, 256),
+        ("cifar", {"size": 10, "bits": 5}, 3, 32),
+        ("cifar", {"size": 10, "bits": 8}, 3, 256),
+        ("imagenet", {"size": 16, "bits": 8}, 3, 256),
+    ],
+)
+def test_shapes_and_ranges(name, kw, c, k):
+    x = datasets.dataset_by_name(name, 8, seed=0, **kw)
+    s = kw["size"]
+    assert x.shape == (8, c, s, s)
+    assert x.min() >= 0 and x.max() < k
+    # some signal, not constant
+    assert x.std() > 0
+
+
+def test_deterministic():
+    a = datasets.cifar_synth(4, size=8, bits=8, seed=5)
+    b = datasets.cifar_synth(4, size=8, bits=8, seed=5)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_seed_changes_data():
+    a = datasets.cifar_synth(4, size=8, bits=8, seed=5)
+    b = datasets.cifar_synth(4, size=8, bits=8, seed=6)
+    assert not np.array_equal(a, b)
+
+
+def test_images_differ_within_batch():
+    x = datasets.svhn_synth(6, size=10, bits=8, seed=0)
+    flat = x.reshape(6, -1)
+    for i in range(5):
+        assert not np.array_equal(flat[i], flat[i + 1])
+
+
+def test_binary_digits_are_binary_and_sparse():
+    x = datasets.binary_digits(16, size=16, seed=0)
+    assert set(np.unique(x)) <= {0, 1}
+    frac_on = x.mean()
+    assert 0.02 < frac_on < 0.6  # stroke images: mostly background
+
+
+def test_smoothness_vs_bits():
+    """Lower bit-depth data has fewer distinct values (the K axis the paper
+    links to predictive-sampling difficulty)."""
+    x5 = datasets.cifar_synth(4, size=10, bits=5, seed=1)
+    x8 = datasets.cifar_synth(4, size=10, bits=8, seed=1)
+    assert len(np.unique(x5)) <= 32
+    assert len(np.unique(x8)) > 32
+
+
+def test_unknown_name_raises():
+    with pytest.raises(KeyError):
+        datasets.dataset_by_name("nope", 1)

@@ -1,0 +1,62 @@
+"""Gumbel-max reparametrization + posterior noise (paper §2.2, Appendix B)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.gumbel import gumbel_argmax, posterior_gumbel, sample_gumbel
+
+EULER = 0.5772156649015329
+
+
+def test_gumbel_marginal_moments(rng):
+    g = sample_gumbel(rng, (200_000,))
+    assert abs(g.mean() - EULER) < 0.02
+    assert abs(g.var() - np.pi**2 / 6) < 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(2, 50), seed=st.integers(0, 2**31 - 1))
+def test_posterior_argmax_consistency(k, seed):
+    """argmax(mu + eps) == x exactly for posterior eps — the property that
+    makes forecast-module training on data samples valid."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(30, k))
+    logp = logits - np.log(np.exp(logits).sum(-1, keepdims=True))
+    x = rng.integers(0, k, size=(30,))
+    eps = posterior_gumbel(rng, logp, x)
+    np.testing.assert_array_equal(gumbel_argmax(logp, eps), x)
+
+
+def test_posterior_marginal_is_standard_gumbel(rng):
+    """When x ~ Cat(softmax(mu)), eps ~ p(eps|x) must be marginally G(0,1)."""
+    k = 5
+    n = 60_000
+    logits = rng.normal(size=(k,))
+    logp = logits - np.log(np.exp(logits).sum())
+    # Sample x from the model, then posterior noise.
+    eps_prior = sample_gumbel(rng, (n, k))
+    x = np.argmax(logp[None, :] + eps_prior, axis=-1)
+    eps_post = posterior_gumbel(rng, np.broadcast_to(logp, (n, k)), x)
+    for c in range(k):
+        col = eps_post[:, c]
+        assert abs(col.mean() - EULER) < 0.03, f"col {c} mean {col.mean()}"
+        assert abs(col.var() - np.pi**2 / 6) < 0.1, f"col {c} var {col.var()}"
+
+
+def test_gumbel_argmax_matches_categorical_frequencies(rng):
+    """Gumbel-max sampling reproduces the categorical distribution."""
+    probs = np.array([0.5, 0.3, 0.15, 0.05])
+    logp = np.log(probs)
+    n = 100_000
+    eps = sample_gumbel(rng, (n, 4))
+    x = gumbel_argmax(np.broadcast_to(logp, (n, 4)), eps)
+    freq = np.bincount(x, minlength=4) / n
+    np.testing.assert_allclose(freq, probs, atol=0.01)
+
+
+def test_posterior_deterministic_under_seed():
+    rng1 = np.random.default_rng(42)
+    rng2 = np.random.default_rng(42)
+    logp = np.log(np.full((10, 3), 1 / 3))
+    x = np.arange(10) % 3
+    np.testing.assert_array_equal(posterior_gumbel(rng1, logp, x), posterior_gumbel(rng2, logp, x))

@@ -1,0 +1,130 @@
+//! Regenerators for the paper's Figures 3-6 (samples, forecast-mistake
+//! overlays, convergence heatmaps). Output: PPM files under `results/`
+//! plus coarse ASCII previews on stdout.
+
+use crate::coordinator::config::Method;
+use crate::coordinator::engine::Engine;
+use crate::runtime::artifact::Manifest;
+use crate::sampler::trace;
+use crate::substrate::image::Image;
+use anyhow::Result;
+use std::path::Path;
+
+/// Figures 3/4 (and appendix 7-10): samples from an explicit-likelihood
+/// ARM with mistake overlays for both learned forecasting and FPI.
+/// Returns the written file paths.
+pub fn fig_samples(manifest: &Manifest, model: &str, out_dir: &Path, seed: u64, t_use: usize) -> Result<Vec<String>> {
+    let engine = Engine::load(manifest, model)?;
+    let info = &engine.info;
+    let batch = *engine.batch_sizes().last().unwrap();
+    let n_show = batch.min(16);
+    let mut written = Vec::new();
+
+    for (tag, method) in [
+        ("forecast", Method::Forecast { t_use }),
+        ("fpi", Method::Fpi),
+    ] {
+        let res = engine.sample_batch(method, batch, seed)?;
+        let tiles: Vec<Image> = res.jobs[..n_show]
+            .iter()
+            .map(|j| trace::render_with_mistakes(j, info.width, info.height, info.channels, info.categories).upscale(4))
+            .collect();
+        let grid = Image::grid(&tiles, 4);
+        let path = out_dir.join(format!("{model}_{tag}_mistakes.ppm"));
+        grid.write_ppm(&path)?;
+        written.push(path.display().to_string());
+        // Pure samples (panel a) only need one method — they're identical
+        // by the exactness guarantee.
+        if tag == "fpi" {
+            let tiles: Vec<Image> = res.jobs[..n_show]
+                .iter()
+                .map(|j| {
+                    let im = if info.channels >= 3 {
+                        trace::render_rgb(j, info.width, info.height, info.channels, info.categories)
+                    } else {
+                        trace::render_gray(j, info.width, info.height, info.categories)
+                    };
+                    im.upscale(4)
+                })
+                .collect();
+            let path = out_dir.join(format!("{model}_samples.ppm"));
+            Image::grid(&tiles, 4).write_ppm(&path)?;
+            written.push(path.display().to_string());
+            println!("{model} sample 0 (ascii):");
+            print!("{}", trace::render_with_mistakes(&res.jobs[0], info.width, info.height, info.channels, info.categories).to_ascii());
+        }
+        let total_mistakes: usize = res.jobs[..n_show].iter().flat_map(|j| j.mistakes.iter().map(|&m| m as usize)).sum();
+        println!("{model} {tag}: {} ARM calls ({:.1}%), {} mistakes / {} vars shown", res.arm_calls, res.calls_pct(info.dim), total_mistakes, n_show * info.dim);
+    }
+    Ok(written)
+}
+
+/// Figure 5: VAE samples — latents sampled by FPI/forecast, decoded to
+/// images, with latent-space mistake maps upscaled alongside.
+pub fn fig5(manifest: &Manifest, model: &str, out_dir: &Path, seed: u64) -> Result<Vec<String>> {
+    let engine = Engine::load(manifest, model)?;
+    let info = &engine.info;
+    let batch = *engine.batch_sizes().last().unwrap();
+    let n_show = batch.min(16);
+    let img_size = engine.img_size().expect("latent model");
+    let mut written = Vec::new();
+
+    for (tag, method) in [("forecast", Method::Forecast { t_use: 1 }), ("fpi", Method::Fpi)] {
+        let res = engine.sample_batch(method, batch, seed)?;
+        let zs: Vec<Vec<i32>> = res.jobs[..n_show].iter().map(|j| j.x.clone()).collect();
+        let imgs = engine.decode(&zs)?;
+        // Decoded samples.
+        let tiles: Vec<Image> = imgs
+            .iter()
+            .map(|im| {
+                let rgb01: Vec<f32> = im.iter().map(|v| (v + 1.0) / 2.0).collect();
+                Image::from_rgb_chw(img_size, img_size, &rgb01).upscale(3)
+            })
+            .collect();
+        let path = out_dir.join(format!("{model}_{tag}_decoded.ppm"));
+        Image::grid(&tiles, 4).write_ppm(&path)?;
+        written.push(path.display().to_string());
+        // Latent mistake maps (8x8, upscaled to image size like the paper).
+        let tiles: Vec<Image> = res.jobs[..n_show]
+            .iter()
+            .map(|j| {
+                let frac = trace::mistake_fractions(j, info.channels);
+                let mut im = Image::new(info.width, info.height);
+                im.overlay_mistakes(&frac);
+                im.upscale(6)
+            })
+            .collect();
+        let path = out_dir.join(format!("{model}_{tag}_latent_mistakes.ppm"));
+        Image::grid(&tiles, 4).write_ppm(&path)?;
+        written.push(path.display().to_string());
+        println!("{model} {tag}: {} ARM calls ({:.1}%)", res.arm_calls, res.calls_pct(info.dim));
+    }
+    Ok(written)
+}
+
+/// Figure 6: convergence-iteration heatmaps (log colormap), FPI vs
+/// baseline, averaged over a batch of 32 samples and all channels.
+pub fn fig6(manifest: &Manifest, model: &str, out_dir: &Path, seed: u64) -> Result<Vec<String>> {
+    let engine = Engine::load(manifest, model)?;
+    let info = &engine.info;
+    let batch = *engine.batch_sizes().last().unwrap();
+    let mut written = Vec::new();
+
+    let fpi = engine.sample_batch(Method::Fpi, batch, seed)?;
+    let base = engine.sample_batch(Method::Baseline, batch, seed)?;
+    let vmax = info.dim as f32;
+    for (tag, res) in [("fpi", &fpi), ("baseline", &base)] {
+        let map = trace::mean_convergence_map(&res.jobs, info.channels);
+        let im = Image::from_heat_log(info.width, info.height, &map, vmax).upscale(8);
+        let path = out_dir.join(format!("{model}_converge_{tag}.ppm"));
+        im.write_ppm(&path)?;
+        written.push(path.display().to_string());
+        let mean_iter: f32 = map.iter().sum::<f32>() / map.len() as f32;
+        println!("fig6 {tag}: mean convergence iteration {mean_iter:.1} (of d={})", info.dim);
+    }
+    println!(
+        "fig6: fpi finished in {} passes vs baseline {} (batch of {batch})",
+        fpi.arm_calls, base.arm_calls
+    );
+    Ok(written)
+}

@@ -1,0 +1,75 @@
+//! Criterion-lite: warmup + N timed iterations + Bessel-corrected summary.
+//! (criterion is unavailable offline; cargo-bench targets use
+//! `harness = false` and call this.)
+
+use crate::substrate::stats::Summary;
+use crate::substrate::timer::{fmt_duration, Timer};
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub secs: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} ±{:>9}  (n={})",
+            self.name,
+            fmt_duration(self.secs.mean),
+            fmt_duration(self.secs.std),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` `warmup` + `iters` times, timing the `iters` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        times.push(t.secs());
+    }
+    BenchResult { name: name.to_string(), secs: Summary::of(&times), iters }
+}
+
+/// Run a fallible closure once per seed, collecting a metric per run.
+pub fn per_seed<F>(seeds: &[u64], mut f: F) -> Vec<f64>
+where
+    F: FnMut(u64) -> f64,
+{
+    seeds.iter().map(|&s| f(s)).collect()
+}
+
+/// The seed protocol of the paper's tables ({0..n-1}).
+pub fn seed_range(n: usize) -> Vec<u64> {
+    (0..n as u64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0;
+        let r = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.secs.mean >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn seed_protocol() {
+        assert_eq!(seed_range(3), vec![0, 1, 2]);
+        let vals = per_seed(&seed_range(4), |s| s as f64 * 2.0);
+        assert_eq!(vals, vec![0.0, 2.0, 4.0, 6.0]);
+    }
+}

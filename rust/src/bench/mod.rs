@@ -1,0 +1,12 @@
+//! Benchmark infrastructure: a criterion-lite [`harness`], the paper
+//! table/figure regenerators ([`tables`], [`figures`]), and serving
+//! workload generators ([`workload`]).
+//!
+//! Every table and figure of the paper's evaluation (§4) maps to a
+//! function here; `cargo bench` and the `predsamp table1|table2|table3|
+//! fig3..fig6` subcommands call the same code (see DESIGN.md §6).
+
+pub mod figures;
+pub mod harness;
+pub mod tables;
+pub mod workload;

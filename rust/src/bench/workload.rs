@@ -1,0 +1,66 @@
+//! Serving workload generation: request streams with Poisson arrivals for
+//! the scheduler ablation and the serving demo.
+
+use crate::substrate::rng::Rng;
+
+/// One synthetic sample request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkItem {
+    /// Arrival offset from stream start, seconds.
+    pub at_secs: f64,
+    pub n: usize,
+    pub seed: u64,
+}
+
+/// Poisson arrival stream: `rate` requests/second, each asking for
+/// `n_range` samples.
+pub fn poisson_stream(rng: &mut Rng, rate: f64, duration_secs: f64, n_range: (usize, usize)) -> Vec<WorkItem> {
+    assert!(rate > 0.0);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    loop {
+        // exponential inter-arrival
+        t += -rng.uniform_open0().ln() / rate;
+        if t >= duration_secs {
+            break;
+        }
+        let n = if n_range.1 > n_range.0 {
+            n_range.0 + rng.below((n_range.1 - n_range.0) as u64 + 1) as usize
+        } else {
+            n_range.0
+        };
+        out.push(WorkItem { at_secs: t, n, seed: id });
+        id += 1;
+    }
+    out
+}
+
+/// Deterministic closed-loop stream: `count` back-to-back requests.
+pub fn closed_loop(count: usize, n: usize) -> Vec<WorkItem> {
+    (0..count)
+        .map(|i| WorkItem { at_secs: 0.0, n, seed: i as u64 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let mut rng = Rng::new(0);
+        let items = poisson_stream(&mut rng, 50.0, 10.0, (1, 4));
+        let rate = items.len() as f64 / 10.0;
+        assert!((rate - 50.0).abs() < 10.0, "rate {rate}");
+        assert!(items.windows(2).all(|w| w[0].at_secs <= w[1].at_secs));
+        assert!(items.iter().all(|i| (1..=4).contains(&i.n)));
+    }
+
+    #[test]
+    fn closed_loop_items() {
+        let items = closed_loop(5, 2);
+        assert_eq!(items.len(), 5);
+        assert!(items.iter().enumerate().all(|(i, it)| it.seed == i as u64 && it.n == 2));
+    }
+}

@@ -1,0 +1,22 @@
+// Debug tool: run an HLO-text artifact with i32 input from a .bin file,
+// dump the tuple outputs as f32 .bin files for python comparison.
+use anyhow::Result;
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let (hlo, xbin, b, d) = (&args[1], &args[2], args[3].parse::<i64>()?, args[4].parse::<i64>()?);
+    let exe = predsamp::runtime::client::compile_hlo_text(hlo)?;
+    let bytes = std::fs::read(xbin)?;
+    let x: Vec<i32> = bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0],c[1],c[2],c[3]])).collect();
+    let lit = xla::Literal::vec1(&x).reshape(&[b, d])?;
+    let res = exe.execute::<xla::Literal>(&[lit])?;
+    let tup = res[0][0].to_literal_sync()?;
+    let parts = tup.to_tuple()?;
+    for (i, p) in parts.iter().enumerate() {
+        let v: Vec<f32> = p.to_vec()?;
+        let mut out = Vec::with_capacity(v.len()*4);
+        for f in &v { out.extend_from_slice(&f.to_le_bytes()); }
+        std::fs::write(format!("{}.out{}.bin", xbin, i), out)?;
+        println!("out{} len {}", i, v.len());
+    }
+    Ok(())
+}

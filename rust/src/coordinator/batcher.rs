@@ -1,0 +1,128 @@
+//! Dynamic batching queue: flush on size or deadline.
+//!
+//! Pure data structure (callers supply the clock), so the policy is unit-
+//! testable without threads. The server pushes incoming jobs grouped by
+//! (model, method) and drains a batch when either `max_batch` jobs are
+//! waiting or the oldest job has waited `max_wait`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+pub struct Batcher<T> {
+    max_batch: usize,
+    max_wait: Duration,
+    queue: VecDeque<(T, Instant)>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Batcher<T> {
+        assert!(max_batch >= 1);
+        Batcher { max_batch, max_wait, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, item: T, now: Instant) {
+        self.queue.push_back((item, now));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether a batch should be flushed at `now`.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some((_, t)) => now.duration_since(*t) >= self.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the deadline would force a flush (None if empty).
+    pub fn deadline_in(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|(_, t)| {
+            let waited = now.duration_since(*t);
+            self.max_wait.saturating_sub(waited)
+        })
+    }
+
+    /// Drain up to `max_batch` items (oldest first) if ready; `force`
+    /// drains regardless (used at shutdown).
+    pub fn pop_batch(&mut self, now: Instant, force: bool) -> Option<Vec<T>> {
+        if self.queue.is_empty() || (!force && !self.ready(now)) {
+            return None;
+        }
+        let n = self.queue.len().min(self.max_batch);
+        Some(self.queue.drain(..n).map(|(x, _)| x).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = Batcher::new(3, Duration::from_secs(10));
+        let now = t0();
+        b.push(1, now);
+        b.push(2, now);
+        assert!(!b.ready(now));
+        b.push(3, now);
+        assert!(b.ready(now));
+        assert_eq!(b.pop_batch(now, false), Some(vec![1, 2, 3]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(100, Duration::from_millis(5));
+        let now = t0();
+        b.push("a", now);
+        assert!(!b.ready(now));
+        let later = now + Duration::from_millis(6);
+        assert!(b.ready(later));
+        assert_eq!(b.pop_batch(later, false), Some(vec!["a"]));
+    }
+
+    #[test]
+    fn preserves_fifo_and_caps_batch() {
+        let mut b = Batcher::new(2, Duration::from_secs(0));
+        let now = t0();
+        for i in 0..5 {
+            b.push(i, now);
+        }
+        assert_eq!(b.pop_batch(now, false), Some(vec![0, 1]));
+        assert_eq!(b.pop_batch(now, false), Some(vec![2, 3]));
+        assert_eq!(b.pop_batch(now, false), Some(vec![4]));
+        assert_eq!(b.pop_batch(now, false), None);
+    }
+
+    #[test]
+    fn force_drains_early() {
+        let mut b = Batcher::new(10, Duration::from_secs(10));
+        let now = t0();
+        b.push(7, now);
+        assert_eq!(b.pop_batch(now, false), None);
+        assert_eq!(b.pop_batch(now, true), Some(vec![7]));
+    }
+
+    #[test]
+    fn deadline_countdown() {
+        let mut b = Batcher::new(10, Duration::from_millis(20));
+        let now = t0();
+        assert_eq!(b.deadline_in(now), None);
+        b.push(1, now);
+        let d = b.deadline_in(now + Duration::from_millis(5)).unwrap();
+        assert!(d <= Duration::from_millis(15));
+    }
+}

@@ -1,0 +1,92 @@
+//! Serving configuration (CLI- and env-tunable).
+
+use std::time::Duration;
+
+/// Sampling method selector (maps 1:1 to the paper's table rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Naive ancestral sampling: d ARM calls (the paper's baseline).
+    Baseline,
+    /// Forecast zeros (Table-1 baseline).
+    Zeros,
+    /// Repeat last observed value (Table-1 baseline).
+    PredictLast,
+    /// ARM fixed-point iteration (paper §2.3).
+    Fpi,
+    /// FPI + learned forecasting modules with a T window (paper §2.4).
+    Forecast { t_use: usize },
+    /// Table-3 ablation: FPI without reparametrization.
+    NoReparam,
+}
+
+impl Method {
+    pub fn parse(name: &str, t_use: usize) -> Option<Method> {
+        Some(match name {
+            "baseline" | "ancestral" => Method::Baseline,
+            "zeros" => Method::Zeros,
+            "last" | "predict_last" => Method::PredictLast,
+            "fpi" => Method::Fpi,
+            "forecast" | "learned" => Method::Forecast { t_use: t_use.max(1) },
+            "noreparam" | "fpi_noreparam" => Method::NoReparam,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Method::Baseline => "baseline".into(),
+            Method::Zeros => "zeros".into(),
+            Method::PredictLast => "predict_last".into(),
+            Method::Fpi => "fpi".into(),
+            Method::Forecast { t_use } => format!("forecast(T={t_use})"),
+            Method::NoReparam => "fpi_noreparam".into(),
+        }
+    }
+}
+
+/// Server/engine configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub addr: String,
+    /// Dynamic batcher: flush when this many jobs are queued...
+    pub max_batch: usize,
+    /// ...or when the oldest request has waited this long.
+    pub max_wait: Duration,
+    /// Use continuous batching (slot refill) rather than synchronous
+    /// batch-at-a-time execution.
+    pub continuous: bool,
+    pub worker_threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7199".into(),
+            max_batch: 32,
+            max_wait: Duration::from_millis(20),
+            continuous: true,
+            worker_threads: 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("baseline", 1), Some(Method::Baseline));
+        assert_eq!(Method::parse("fpi", 1), Some(Method::Fpi));
+        assert_eq!(Method::parse("forecast", 5), Some(Method::Forecast { t_use: 5 }));
+        assert_eq!(Method::parse("forecast", 0), Some(Method::Forecast { t_use: 1 }));
+        assert_eq!(Method::parse("noreparam", 1), Some(Method::NoReparam));
+        assert_eq!(Method::parse("wat", 1), None);
+    }
+
+    #[test]
+    fn labels_stable() {
+        assert_eq!(Method::Forecast { t_use: 5 }.label(), "forecast(T=5)");
+        assert_eq!(Method::Fpi.label(), "fpi");
+    }
+}

@@ -1,0 +1,199 @@
+//! Engine: one model's compiled executables + the sampling methods.
+//!
+//! An `Engine` owns the step executables for each exported batch size (and
+//! the paired decoder for latent models), and exposes the paper's methods
+//! uniformly. PJRT handles are thread-affine, so an `Engine` never leaves
+//! the thread that created it.
+
+use crate::coordinator::config::Method;
+use crate::runtime::artifact::{Manifest, ModelInfo, ModelKind};
+use crate::runtime::autoenc::DecoderExe;
+use crate::runtime::step::{bpd_of, StepExecutable, StepOutput};
+use crate::sampler::ancestral::ancestral_batch;
+use crate::sampler::forecast::{self, Forecaster};
+use crate::sampler::noise::JobNoise;
+use crate::sampler::predictive::PredictiveSampler;
+use crate::sampler::BatchResult;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+pub struct Engine {
+    pub manifest: Manifest,
+    pub info: ModelInfo,
+    /// Keyed by (batch size, with-forecast-heads).
+    exes: BTreeMap<(usize, bool), StepExecutable>,
+    decoder: Option<DecoderExe>,
+}
+
+impl Engine {
+    /// Load the engine for `model`, compiling the step executables (full
+    /// and, when exported, logp-only) for every batch size.
+    pub fn load(manifest: &Manifest, model: &str) -> Result<Engine> {
+        let info = manifest.model(model)?.clone();
+        let mut exes = BTreeMap::new();
+        for b in info.step_batch_sizes() {
+            let file = info.file(&format!("step_b{b}"))?;
+            exes.insert((b, true), StepExecutable::load(manifest.path(file), &info, b)?);
+            if let Ok(lp) = info.file(&format!("steplp_b{b}")) {
+                exes.insert((b, false), StepExecutable::load_variant(manifest.path(lp), &info, b, false)?);
+            }
+        }
+        if exes.is_empty() {
+            bail!("model {model} exports no step executables");
+        }
+        let decoder = if info.kind == ModelKind::Latent {
+            let ae_name = info.autoencoder.as_deref().ok_or_else(|| anyhow!("latent model without AE"))?;
+            let ae = manifest.ae(ae_name)?;
+            let path = manifest.path(&format!("ae_{ae_name}_dec_b32.hlo.txt"));
+            Some(DecoderExe::load(path, ae, 32)?)
+        } else {
+            None
+        };
+        Ok(Engine { manifest: manifest.clone(), info, exes, decoder })
+    }
+
+    /// The full (logp + fore) step executable for an exact batch size.
+    pub fn exe(&self, batch: usize) -> Result<&StepExecutable> {
+        self.exe_for(batch, true)
+    }
+
+    /// Pick the cheapest executable that satisfies `need_fore` (the
+    /// logp-only variant when the method never reads forecast heads).
+    pub fn exe_for(&self, batch: usize, need_fore: bool) -> Result<&StepExecutable> {
+        if !need_fore {
+            if let Some(e) = self.exes.get(&(batch, false)) {
+                return Ok(e);
+            }
+        }
+        self.exes
+            .get(&(batch, true))
+            .ok_or_else(|| anyhow!("model {} has no b{batch} executable (have {:?})", self.info.name, self.exes.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.exes.keys().filter(|(_, fore)| *fore).map(|(b, _)| *b).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Whether `method` reads the forecast-head outputs.
+    pub fn needs_fore(method: Method) -> bool {
+        matches!(method, Method::Forecast { .. })
+    }
+
+    fn forecaster_for(&self, method: Method) -> Result<Box<dyn Forecaster>> {
+        Ok(match method {
+            Method::Baseline => bail!("baseline has no forecaster"),
+            Method::Zeros => Box::new(forecast::Zeros),
+            Method::PredictLast => Box::new(forecast::PredictLast),
+            Method::Fpi => Box::new(forecast::FpiReuse),
+            Method::Forecast { t_use } => Box::new(forecast::Learned { t_use }),
+            Method::NoReparam => Box::new(forecast::NoReparam),
+        })
+    }
+
+    /// Sample a full batch at `batch_size` with the given method and seed
+    /// (synchronous batched semantics: the paper's Tables 1/2 protocol).
+    pub fn sample_batch(&self, method: Method, batch_size: usize, seed: u64) -> Result<BatchResult> {
+        let exe = self.exe_for(batch_size, Self::needs_fore(method))?;
+        if method == Method::Baseline {
+            let noises: Vec<JobNoise> = (0..batch_size)
+                .map(|s| JobNoise::new(seed, s as u64, self.info.dim, self.info.categories))
+                .collect();
+            return ancestral_batch(exe, &noises);
+        }
+        let mut ps = PredictiveSampler::new(exe, self.forecaster_for(method)?);
+        ps.run_sync(seed)
+    }
+
+    /// Test-set bits/dim through the compiled artifact (paper's bpd).
+    pub fn eval_bpd(&self) -> Result<f64> {
+        let test = self.manifest.load_test_batch(&self.info.name)?;
+        let b = *self.batch_sizes().last().unwrap();
+        let exe = self.exe(b)?;
+        let n = b.min(test.len());
+        let mut x = vec![0i32; b * self.info.dim];
+        for (i, row) in test.iter().take(n).enumerate() {
+            x[i * self.info.dim..(i + 1) * self.info.dim].copy_from_slice(row);
+        }
+        let mut out = StepOutput::default();
+        exe.run_into(&x, &mut out)?;
+        let bpds = bpd_of(&x, &out, n, self.info.dim, self.info.categories);
+        Ok(bpds.iter().sum::<f64>() / n as f64)
+    }
+
+    /// Decode flat latents to images (latent models only). Input shorter
+    /// than the decoder batch is padded and truncated transparently.
+    pub fn decode(&self, z: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        let dec = self.decoder.as_ref().ok_or_else(|| anyhow!("model {} is not latent", self.info.name))?;
+        let s = dec.img_size;
+        let mut out = Vec::with_capacity(z.len());
+        for chunk in z.chunks(dec.batch) {
+            let mut flat = vec![0i32; dec.batch * dec.latent_dim];
+            for (i, row) in chunk.iter().enumerate() {
+                flat[i * dec.latent_dim..(i + 1) * dec.latent_dim].copy_from_slice(row);
+            }
+            let imgs = dec.decode(&flat)?;
+            for i in 0..chunk.len() {
+                out.push(imgs[i * 3 * s * s..(i + 1) * 3 * s * s].to_vec());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn img_size(&self) -> Option<usize> {
+        self.decoder.as_ref().map(|d| d.img_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = crate::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Manifest::load(&dir).ok()
+        } else {
+            eprintln!("skipping: artifacts not built");
+            None
+        }
+    }
+
+    #[test]
+    fn engine_loads_and_samples_exactly() {
+        let Some(man) = manifest() else { return };
+        let eng = Engine::load(&man, "mnist_bin").unwrap();
+        let d = eng.info.dim;
+        // Exactness through the real artifact: FPI == baseline, same seed.
+        let base = eng.sample_batch(Method::Baseline, 1, 5).unwrap();
+        let fpi = eng.sample_batch(Method::Fpi, 1, 5).unwrap();
+        assert_eq!(fpi.jobs[0].x, base.jobs[0].x, "FPI must equal ancestral");
+        assert_eq!(base.arm_calls, d);
+        assert!(fpi.arm_calls < d, "FPI should save calls: {}", fpi.arm_calls);
+        // Learned forecasting is exact too.
+        let fc = eng.sample_batch(Method::Forecast { t_use: 5 }, 1, 5).unwrap();
+        assert_eq!(fc.jobs[0].x, base.jobs[0].x, "forecast must equal ancestral");
+    }
+
+    #[test]
+    fn engine_bpd_close_to_build() {
+        let Some(man) = manifest() else { return };
+        let eng = Engine::load(&man, "mnist_bin").unwrap();
+        let bpd = eng.eval_bpd().unwrap();
+        let expect = eng.info.bpd;
+        assert!((bpd - expect).abs() < 0.15, "bpd {bpd} vs {expect}");
+    }
+
+    #[test]
+    fn latent_engine_decodes() {
+        let Some(man) = manifest() else { return };
+        let eng = Engine::load(&man, "latent_cifar").unwrap();
+        let res = eng.sample_batch(Method::Fpi, 1, 0).unwrap();
+        let imgs = eng.decode(&[res.jobs[0].x.clone()]).unwrap();
+        let s = eng.img_size().unwrap();
+        assert_eq!(imgs[0].len(), 3 * s * s);
+        assert!(imgs[0].iter().all(|v| v.is_finite()));
+    }
+}

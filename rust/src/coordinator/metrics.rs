@@ -1,0 +1,82 @@
+//! Serving metrics: counters + latency reservoir, snapshot as JSON.
+//!
+//! Owned by the engine thread (no locks on the hot path); the `metrics`
+//! protocol op returns a snapshot.
+
+use crate::substrate::json::Value;
+use crate::substrate::stats;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub samples: u64,
+    pub arm_calls: u64,
+    pub errors: u64,
+    pub batches: u64,
+    /// Per-request wall latencies (seconds), bounded reservoir.
+    latencies: Vec<f64>,
+    /// Per-batch ARM-call percentages of baseline.
+    calls_pct: Vec<f64>,
+}
+
+const RESERVOIR: usize = 4096;
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&mut self, n_jobs: usize, arm_calls: usize, dim: usize, wall_secs: f64) {
+        self.batches += 1;
+        self.samples += n_jobs as u64;
+        self.arm_calls += arm_calls as u64;
+        if self.calls_pct.len() < RESERVOIR {
+            self.calls_pct.push(100.0 * arm_calls as f64 / dim as f64);
+        }
+        if self.latencies.len() < RESERVOIR {
+            self.latencies.push(wall_secs);
+        }
+    }
+
+    pub fn record_request(&mut self) {
+        self.requests += 1;
+    }
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn snapshot(&self) -> Value {
+        Value::obj(vec![
+            ("requests", Value::num(self.requests as f64)),
+            ("samples", Value::num(self.samples as f64)),
+            ("arm_calls", Value::num(self.arm_calls as f64)),
+            ("errors", Value::num(self.errors as f64)),
+            ("batches", Value::num(self.batches as f64)),
+            ("latency_p50_s", Value::num(stats::percentile(&self.latencies, 50.0))),
+            ("latency_p95_s", Value::num(stats::percentile(&self.latencies, 95.0))),
+            ("calls_pct_mean", Value::num(stats::mean(&self.calls_pct))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let mut m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_batch(4, 50, 100, 0.5);
+        m.record_batch(4, 100, 100, 1.5);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.get("requests").as_i64(), Some(2));
+        assert_eq!(s.get("samples").as_i64(), Some(8));
+        assert_eq!(s.get("arm_calls").as_i64(), Some(150));
+        assert_eq!(s.get("errors").as_i64(), Some(1));
+        assert!((s.get("calls_pct_mean").as_f64().unwrap() - 75.0).abs() < 1e-9);
+        assert!(s.get("latency_p95_s").as_f64().unwrap() >= 0.5);
+    }
+}

@@ -1,0 +1,24 @@
+//! The serving layer (L3): everything between a sample request and the
+//! predictive-sampling engine.
+//!
+//! * [`engine`] — owns the compiled executables for one model and runs
+//!   the sampling methods against them.
+//! * [`batcher`] — dynamic batching queue (size/deadline policy).
+//! * [`scheduler`] — continuous batching: converged batch slots are
+//!   refilled from the queue mid-flight. This is the "scheduling system"
+//!   the paper explicitly leaves to future work (§4.1), which lets batched
+//!   serving approach the batch-size-1 ARM-call rate.
+//! * [`router`] — model-name → engine dispatch.
+//! * [`protocol`] + [`server`] — line-delimited-JSON TCP serving; PJRT
+//!   handles are not `Send`, so a single engine thread owns all models
+//!   and connection threads talk to it over channels.
+//! * [`metrics`] — request/latency/ARM-call accounting.
+
+pub mod batcher;
+pub mod config;
+pub mod engine;
+pub mod metrics;
+pub mod protocol;
+pub mod router;
+pub mod scheduler;
+pub mod server;

@@ -1,0 +1,145 @@
+//! Line-delimited JSON serving protocol.
+//!
+//! Requests (one JSON object per line):
+//!   {"op":"ping"}
+//!   {"op":"info"}
+//!   {"op":"metrics"}
+//!   {"op":"eval","model":"cifar8"}
+//!   {"op":"sample","model":"cifar8","method":"fpi","n":4,"seed":0,
+//!    "t_use":1,"return_samples":true,"decode":false}
+//!
+//! Responses: {"ok":true, ...} or {"ok":false,"error":"..."}.
+
+use crate::coordinator::config::Method;
+use crate::substrate::json::{self, Value};
+
+/// Parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Info,
+    Metrics,
+    Eval { model: String },
+    Sample {
+        model: String,
+        method: Method,
+        n: usize,
+        seed: u64,
+        return_samples: bool,
+        decode: bool,
+    },
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
+        let op = v.get("op").as_str().ok_or("missing op")?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "info" => Ok(Request::Info),
+            "metrics" => Ok(Request::Metrics),
+            "eval" => Ok(Request::Eval {
+                model: v.get("model").as_str().ok_or("eval: missing model")?.to_string(),
+            }),
+            "sample" => {
+                let model = v.get("model").as_str().ok_or("sample: missing model")?.to_string();
+                let method_name = v.get("method").as_str().unwrap_or("fpi");
+                let t_use = v.get("t_use").as_usize().unwrap_or(1);
+                let method = Method::parse(method_name, t_use).ok_or_else(|| format!("unknown method {method_name}"))?;
+                Ok(Request::Sample {
+                    model,
+                    method,
+                    n: v.get("n").as_usize().unwrap_or(1).max(1),
+                    seed: v.get("seed").as_i64().unwrap_or(0) as u64,
+                    return_samples: v.get("return_samples").as_bool().unwrap_or(true),
+                    decode: v.get("decode").as_bool().unwrap_or(false),
+                })
+            }
+            other => Err(format!("unknown op {other}")),
+        }
+    }
+}
+
+/// Build the wire form of a response value.
+pub fn ok(fields: Vec<(&str, Value)>) -> String {
+    let mut all = vec![("ok", Value::Bool(true))];
+    all.extend(fields);
+    Value::obj(all).to_string()
+}
+
+pub fn err(msg: &str) -> String {
+    Value::obj(vec![("ok", Value::Bool(false)), ("error", Value::str(msg))]).to_string()
+}
+
+/// Encode a batch of integer samples.
+pub fn samples_value(samples: &[Vec<i32>]) -> Value {
+    Value::Arr(
+        samples
+            .iter()
+            .map(|row| Value::Arr(row.iter().map(|&v| Value::num(v as f64)).collect()))
+            .collect(),
+    )
+}
+
+/// Decode a samples array from a response.
+pub fn parse_samples(v: &Value) -> Option<Vec<Vec<i32>>> {
+    v.as_arr().map(|rows| {
+        rows.iter()
+            .map(|r| r.as_arr().unwrap_or(&[]).iter().filter_map(|x| x.as_i64()).map(|x| x as i32).collect())
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sample_request() {
+        let r = Request::parse(r#"{"op":"sample","model":"cifar8","method":"forecast","t_use":5,"n":3,"seed":9}"#).unwrap();
+        assert_eq!(
+            r,
+            Request::Sample {
+                model: "cifar8".into(),
+                method: Method::Forecast { t_use: 5 },
+                n: 3,
+                seed: 9,
+                return_samples: true,
+                decode: false,
+            }
+        );
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let r = Request::parse(r#"{"op":"sample","model":"m"}"#).unwrap();
+        match r {
+            Request::Sample { method, n, seed, .. } => {
+                assert_eq!(method, Method::Fpi);
+                assert_eq!(n, 1);
+                assert_eq!(seed, 0);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse(r#"{"op":"sample"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"frobnicate"}"#).is_err());
+        assert!(Request::parse(r#"{"op":"sample","model":"m","method":"nope"}"#).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let line = ok(vec![("arm_calls", Value::num(42.0)), ("samples", samples_value(&[vec![1, 2], vec![3, 4]]))]);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(parse_samples(v.get("samples")).unwrap(), vec![vec![1, 2], vec![3, 4]]);
+        let e = err("boom");
+        let v = json::parse(&e).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert_eq!(v.get("error").as_str(), Some("boom"));
+    }
+}

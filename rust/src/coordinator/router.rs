@@ -1,0 +1,67 @@
+//! Model-name → engine routing with lazy loading.
+//!
+//! Engines are expensive (compiling every batch-size executable), so they
+//! are created on first request and cached. Thread-affine like everything
+//! PJRT: a `Router` lives on the engine thread.
+
+use crate::coordinator::engine::Engine;
+use crate::runtime::artifact::Manifest;
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+pub struct Router {
+    manifest: Manifest,
+    engines: BTreeMap<String, Engine>,
+}
+
+impl Router {
+    pub fn new(manifest: Manifest) -> Router {
+        Router { manifest, engines: BTreeMap::new() }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Models available for routing.
+    pub fn model_names(&self) -> Vec<String> {
+        self.manifest.models.keys().cloned().collect()
+    }
+
+    /// Engine for `model`, loading it on first use.
+    pub fn engine(&mut self, model: &str) -> Result<&Engine> {
+        if !self.engines.contains_key(model) {
+            let eng = Engine::load(&self.manifest, model)?;
+            self.engines.insert(model.to_string(), eng);
+        }
+        Ok(self.engines.get(model).expect("just inserted"))
+    }
+
+    /// Number of currently-loaded engines.
+    pub fn loaded(&self) -> usize {
+        self.engines.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lazy_loading_and_caching() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let mut r = Router::new(man);
+        assert_eq!(r.loaded(), 0);
+        assert!(r.model_names().contains(&"mnist_bin".to_string()));
+        r.engine("mnist_bin").unwrap();
+        assert_eq!(r.loaded(), 1);
+        r.engine("mnist_bin").unwrap(); // cached
+        assert_eq!(r.loaded(), 1);
+        assert!(r.engine("not_a_model").is_err());
+    }
+}

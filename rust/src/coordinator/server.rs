@@ -1,0 +1,422 @@
+//! TCP serving: line-delimited JSON over a thread pool, with a single
+//! engine thread owning all PJRT state.
+//!
+//! Topology:
+//!
+//! ```text
+//! clients ──TCP──▶ connection workers (ThreadPool)
+//!                      │ (Request, reply Sender) over mpsc
+//!                      ▼
+//!                engine thread: Router + Metrics + dynamic batching
+//! ```
+//!
+//! Compatible `sample` requests arriving within the batching window are
+//! merged into one continuous-batching schedule (the per-job noise keyed
+//! by (seed, index-within-request) keeps results independent of merging).
+
+use crate::coordinator::config::{Method, ServeConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::protocol::{self, Request};
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler;
+use crate::runtime::artifact::Manifest;
+use crate::sampler::noise::JobNoise;
+use crate::substrate::json::Value;
+use crate::substrate::threadpool::ThreadPool;
+use crate::substrate::timer::Timer;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+type Reply = mpsc::Sender<String>;
+
+enum Msg {
+    Req(Request, Reply),
+    Shutdown,
+}
+
+/// Handle to a running server (for tests and the serving demo).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    tx: mpsc::Sender<Msg>,
+    stop: Arc<AtomicBool>,
+    engine_join: Option<std::thread::JoinHandle<()>>,
+    accept_join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.engine_join.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+/// Bind `cfg.addr` (use port 0 for ephemeral) and serve in background
+/// threads. The returned handle reports the bound address.
+pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<Msg>();
+
+    // Engine thread: owns Router (PJRT state) + Metrics.
+    let cfg2 = cfg.clone();
+    let engine_join = std::thread::Builder::new()
+        .name("predsamp-engine".into())
+        .spawn(move || {
+            let manifest = match Manifest::load(&manifest_dir) {
+                Ok(m) => m,
+                Err(e) => {
+                    log::error!("manifest load failed: {e:#}");
+                    return;
+                }
+            };
+            engine_loop(Router::new(manifest), cfg2, rx);
+        })?;
+
+    // Acceptor + connection workers.
+    let pool = ThreadPool::new(cfg.worker_threads);
+    let stop2 = Arc::clone(&stop);
+    let tx2 = tx.clone();
+    let accept_join = std::thread::Builder::new()
+        .name("predsamp-accept".into())
+        .spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx3 = tx2.clone();
+                        let stop3 = Arc::clone(&stop2);
+                        pool.execute(move || handle_conn(stream, tx3, stop3));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        log::warn!("accept error: {e}");
+                        break;
+                    }
+                }
+            }
+            drop(pool); // join workers
+        })?;
+
+    Ok(ServerHandle { addr, tx, stop, engine_join: Some(engine_join), accept_join: Some(accept_join) })
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Msg>, stop: Arc<AtomicBool>) {
+    let peer = stream.peer_addr().ok();
+    // Read with a timeout so connection workers can observe shutdown even
+    // while a client holds the socket open (otherwise ServerHandle::stop
+    // would deadlock joining the pool).
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let mut partial = String::new();
+        let n = loop {
+            match reader.read_line(&mut partial) {
+                Ok(n) => break n,
+                Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    // partial keeps whatever was read; retry for the rest
+                    if partial.ends_with('\n') {
+                        break partial.len();
+                    }
+                }
+                Err(_) => return,
+            }
+        };
+        if n == 0 && partial.is_empty() {
+            break; // EOF
+        }
+        line.push_str(&partial);
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(&line) {
+            Ok(req) => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(Msg::Req(req, rtx)).is_err() {
+                    break;
+                }
+                match rrx.recv_timeout(Duration::from_secs(600)) {
+                    Ok(r) => r,
+                    Err(_) => protocol::err("engine timeout"),
+                }
+            }
+            Err(e) => protocol::err(&e),
+        };
+        if writer.write_all(response.as_bytes()).and_then(|_| writer.write_all(b"\n")).is_err() {
+            break;
+        }
+    }
+    log::debug!("connection closed: {peer:?}");
+}
+
+/// A sample request admitted to the batching window.
+struct PendingSample {
+    model: String,
+    method: Method,
+    n: usize,
+    seed: u64,
+    return_samples: bool,
+    decode: bool,
+    reply: Reply,
+}
+
+fn engine_loop(mut router: Router, cfg: ServeConfig, rx: mpsc::Receiver<Msg>) {
+    let mut metrics = Metrics::new();
+    let mut stash: Vec<PendingSample> = Vec::new();
+    loop {
+        let msg = if stash.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            }
+        } else {
+            None
+        };
+        match msg {
+            Some(Msg::Shutdown) => break,
+            Some(Msg::Req(req, reply)) => {
+                metrics.record_request();
+                match req {
+                    Request::Sample { model, method, n, seed, return_samples, decode } => {
+                        stash.push(PendingSample { model, method, n, seed, return_samples, decode, reply });
+                    }
+                    other => {
+                        let resp = handle_simple(&mut router, &metrics, &other);
+                        let _ = reply.send(resp);
+                    }
+                }
+            }
+            None => {}
+        }
+        if stash.is_empty() {
+            continue;
+        }
+        // Batching window: gather more requests compatible with the head.
+        let window_end = Instant::now() + cfg.max_wait;
+        let head_key = (stash[0].model.clone(), stash[0].method);
+        let mut group_jobs: usize = stash.iter().filter(|p| (p.model.clone(), p.method) == head_key).map(|p| p.n).sum();
+        while group_jobs < cfg.max_batch {
+            let now = Instant::now();
+            if now >= window_end {
+                break;
+            }
+            match rx.recv_timeout(window_end - now) {
+                Ok(Msg::Req(req, reply)) => {
+                    metrics.record_request();
+                    match req {
+                        Request::Sample { model, method, n, seed, return_samples, decode } => {
+                            if (model.clone(), method) == head_key {
+                                group_jobs += n;
+                            }
+                            stash.push(PendingSample { model, method, n, seed, return_samples, decode, reply });
+                        }
+                        other => {
+                            let resp = handle_simple(&mut router, &metrics, &other);
+                            let _ = reply.send(resp);
+                        }
+                    }
+                }
+                Ok(Msg::Shutdown) => return,
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        // Execute the head group; keep the rest stashed for the next turn.
+        let (group, rest): (Vec<_>, Vec<_>) = stash.drain(..).partition(|p| (p.model.clone(), p.method) == head_key);
+        stash = rest;
+        execute_group(&mut router, &cfg, &mut metrics, group);
+    }
+}
+
+fn handle_simple(router: &mut Router, metrics: &Metrics, req: &Request) -> String {
+    match req {
+        Request::Ping => protocol::ok(vec![("pong", Value::Bool(true))]),
+        Request::Metrics => protocol::ok(vec![("metrics", metrics.snapshot())]),
+        Request::Info => {
+            let models: Vec<Value> = router
+                .manifest()
+                .models
+                .values()
+                .map(|m| {
+                    Value::obj(vec![
+                        ("name", Value::str(m.name.clone())),
+                        ("dim", Value::num(m.dim as f64)),
+                        ("categories", Value::num(m.categories as f64)),
+                        ("kind", Value::str(format!("{:?}", m.kind))),
+                        ("bpd", Value::num(m.bpd)),
+                    ])
+                })
+                .collect();
+            protocol::ok(vec![("models", Value::Arr(models))])
+        }
+        Request::Eval { model } => match router.engine(model).and_then(|e| e.eval_bpd()) {
+            Ok(bpd) => protocol::ok(vec![("model", Value::str(model.clone())), ("bpd", Value::num(bpd))]),
+            Err(e) => protocol::err(&format!("{e:#}")),
+        },
+        Request::Sample { .. } => unreachable!("sample handled by batching path"),
+    }
+}
+
+fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &mut Metrics, group: Vec<PendingSample>) {
+    if group.is_empty() {
+        return;
+    }
+    let model = group[0].model.clone();
+    let method = group[0].method;
+    let total_jobs: usize = group.iter().map(|p| p.n).sum();
+    let timer = Timer::start();
+
+    let mut run = || -> Result<(Vec<crate::sampler::JobResult>, usize)> {
+        let engine = router.engine(&model)?;
+        let info = &engine.info;
+        if method == Method::Baseline || !cfg.continuous {
+            // Synchronous path: per request, pick the smallest exe >= n.
+            let mut all = Vec::with_capacity(total_jobs);
+            let mut calls = 0usize;
+            for p in &group {
+                let bs = engine
+                    .batch_sizes()
+                    .into_iter()
+                    .find(|&b| b >= p.n)
+                    .unwrap_or_else(|| *engine.batch_sizes().last().unwrap());
+                let mut done = 0;
+                while done < p.n {
+                    let res = engine.sample_batch(method, bs, p.seed)?;
+                    calls += res.arm_calls;
+                    let take = (p.n - done).min(bs);
+                    all.extend(res.jobs.into_iter().take(take));
+                    done += take;
+                }
+            }
+            Ok((all, calls))
+        } else {
+            // Continuous batching over the merged job queue.
+            let bs = *engine.batch_sizes().last().unwrap();
+            let exe = engine.exe_for(bs, crate::coordinator::engine::Engine::needs_fore(method))?;
+            let mut noises = Vec::with_capacity(total_jobs);
+            for p in &group {
+                for j in 0..p.n {
+                    noises.push(JobNoise::new(p.seed, j as u64, info.dim, info.categories));
+                }
+            }
+            let fc = crate::sampler::forecast::by_name(
+                match method {
+                    Method::Zeros => "zeros",
+                    Method::PredictLast => "last",
+                    Method::Fpi => "fpi",
+                    Method::Forecast { .. } => "learned",
+                    Method::NoReparam => "noreparam",
+                    Method::Baseline => unreachable!(),
+                },
+                if let Method::Forecast { t_use } = method { t_use } else { 1 },
+            )
+            .expect("known method");
+            let rep = scheduler::run_continuous_noises(exe, fc, noises)?;
+            Ok((rep.results, rep.total_passes))
+        }
+    };
+
+    match run() {
+        Ok((results, calls)) => {
+            let wall = timer.secs();
+            let dim = results.first().map(|r| r.x.len()).unwrap_or(1);
+            metrics.record_batch(total_jobs, calls, dim, wall);
+            let mut offset = 0usize;
+            for p in group {
+                let mine = &results[offset..offset + p.n];
+                offset += p.n;
+                let mut fields = vec![
+                    ("model", Value::str(model.clone())),
+                    ("method", Value::str(method.label())),
+                    ("arm_calls", Value::num(calls as f64)),
+                    ("calls_pct", Value::num(100.0 * calls as f64 / dim as f64)),
+                    ("wall_secs", Value::num(wall)),
+                    ("n", Value::num(p.n as f64)),
+                ];
+                if p.return_samples {
+                    let xs: Vec<Vec<i32>> = mine.iter().map(|r| r.x.clone()).collect();
+                    fields.push(("samples", protocol::samples_value(&xs)));
+                }
+                if p.decode {
+                    let xs: Vec<Vec<i32>> = mine.iter().map(|r| r.x.clone()).collect();
+                    match router.engine(&model).and_then(|e| e.decode(&xs)) {
+                        Ok(imgs) => {
+                            let arr = Value::Arr(
+                                imgs.iter()
+                                    .map(|im| Value::Arr(im.iter().map(|&f| Value::num(f as f64)).collect()))
+                                    .collect(),
+                            );
+                            fields.push(("images", arr));
+                        }
+                        Err(e) => {
+                            let _ = p.reply.send(protocol::err(&format!("decode: {e:#}")));
+                            continue;
+                        }
+                    }
+                }
+                let _ = p.reply.send(protocol::ok(fields));
+            }
+        }
+        Err(e) => {
+            metrics.record_error();
+            for p in group {
+                let _ = p.reply.send(protocol::err(&format!("{e:#}")));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Minimal blocking client for examples, benches and tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request line, wait for the response.
+    pub fn call(&mut self, line: &str) -> Result<Value> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        Ok(crate::substrate::json::parse(resp.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?)
+    }
+}

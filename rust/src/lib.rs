@@ -1,0 +1,51 @@
+//! # predsamp — Predictive Sampling with Forecasting Autoregressive Models
+//!
+//! A rust serving stack reproducing Wiggers & Hoogeboom, *Predictive
+//! Sampling with Forecasting Autoregressive Models*, ICML 2020.
+//!
+//! Architecture (see `DESIGN.md`):
+//!
+//! * [`runtime`] — loads the AOT-compiled JAX/Pallas model artifacts
+//!   (`artifacts/*.hlo.txt`) onto the PJRT CPU client and exposes typed
+//!   executables. Python never runs on the request path.
+//! * [`sampler`] — the paper's contribution: predictive sampling
+//!   (Algorithm 1), ARM fixed-point iteration (Algorithm 2), forecaster
+//!   policies (zeros / predict-last / FPI / learned modules / ablations),
+//!   and the Gumbel-max reparametrization that makes sampling a
+//!   deterministic fixed-point problem.
+//! * [`coordinator`] — the serving layer: engine, dynamic batcher,
+//!   continuous-batching scheduler (the paper's deferred "scheduling
+//!   system" future work), TCP server, metrics.
+//! * [`substrate`] — offline-friendly building blocks (PRNG, Gumbel noise,
+//!   JSON, stats, images, CLI, thread pool, property-test harness); this
+//!   environment has no crates.io access beyond the `xla` closure.
+//! * [`bench`] — criterion-lite harness + printers that regenerate every
+//!   table and figure of the paper's evaluation section.
+
+pub mod bench;
+pub mod coordinator;
+pub mod runtime;
+pub mod sampler;
+pub mod substrate;
+
+pub use coordinator::engine::Engine;
+pub use runtime::artifact::Manifest;
+
+/// Default artifacts directory, overridable via `PREDSAMP_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("PREDSAMP_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from cwd looking for artifacts/manifest.json (so examples,
+    // tests and benches work from any directory inside the repo).
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

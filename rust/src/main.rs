@@ -1,0 +1,256 @@
+//! predsamp CLI — the L3 entrypoint.
+//!
+//! Subcommands:
+//!   info                          list models from the artifact manifest
+//!   eval    --model M             test-set bits/dim through the artifact
+//!   sample  --model M --method X  sample a batch, print stats (+ppm)
+//!   serve   --addr HOST:PORT      TCP serving (line-delimited JSON)
+//!   client  --addr --json '...'   one-shot request against a server
+//!   table1|table2|table3          regenerate the paper's tables
+//!   fig3|fig4|fig5|fig6           regenerate the paper's figures
+//!   schedule-ablation             continuous vs synchronous batching
+
+use anyhow::{anyhow, bail, Result};
+use predsamp::bench::{figures, tables};
+use predsamp::coordinator::config::{Method, ServeConfig};
+use predsamp::coordinator::engine::Engine;
+use predsamp::coordinator::scheduler;
+use predsamp::coordinator::server;
+use predsamp::runtime::artifact::Manifest;
+use predsamp::sampler::forecast;
+use predsamp::substrate::cli::Args;
+use predsamp::substrate::timer::fmt_duration;
+
+const USAGE: &str = "predsamp — Predictive Sampling with Forecasting Autoregressive Models (ICML 2020)
+
+USAGE: predsamp <command> [flags]
+
+COMMANDS
+  info                               list models in the artifact manifest
+  eval     --model M                 bits/dim of M's test batch via the compiled artifact
+  sample   --model M [--method fpi|baseline|zeros|last|forecast|noreparam]
+           [--batch N] [--seed S] [--t-use T] [--ppm out.ppm]
+  serve    [--addr 127.0.0.1:7199] [--max-batch 32] [--max-wait-ms 20] [--sync]
+  client   [--addr ...] --json '{\"op\":\"ping\"}'
+  table1 | table2 | table3           [--seeds K] [--batches 1,32] [--models a,b]
+  fig3 | fig4 | fig5 | fig6          [--seed 10] [--out results/]
+  schedule-ablation                  [--model M] [--jobs N] [--seed S]
+
+Artifacts are found via ./artifacts or $PREDSAMP_ARTIFACTS (run `make artifacts`).";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        println!("{USAGE}");
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(argv.into_iter().skip(1));
+    if let Err(e) = run(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn manifest() -> Result<Manifest> {
+    Manifest::load(predsamp::artifacts_dir())
+}
+
+fn seeds_of(args: &Args) -> Vec<u64> {
+    let n = args.num::<usize>("seeds", 3);
+    (0..n as u64).collect()
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => {
+            let man = manifest()?;
+            println!("artifacts: {} (quick={})", man.dir.display(), man.quick);
+            println!("{:<16} {:>6} {:>6} {:>5} {:>8} {:<9} {:>7}", "model", "dim", "K", "T", "bpd", "kind", "batches");
+            for m in man.models.values() {
+                println!(
+                    "{:<16} {:>6} {:>6} {:>5} {:>8.3} {:<9} {:?}",
+                    m.name,
+                    m.dim,
+                    m.categories,
+                    m.t_fore,
+                    m.bpd,
+                    format!("{:?}", m.kind),
+                    m.step_batch_sizes()
+                );
+            }
+            for a in man.autoencoders.values() {
+                println!("ae:{:<14} img {}x{}  latent {}x{}x{} K={} mse={:.5}", a.name, a.img_size, a.img_size, a.latent_channels, a.latent_hw, a.latent_hw, a.categories, a.mse);
+            }
+            args.finish().map_err(|e| anyhow!(e))
+        }
+        "eval" => {
+            let man = manifest()?;
+            let model = args.get("model", "mnist_bin");
+            let engine = Engine::load(&man, &model)?;
+            let bpd = engine.eval_bpd()?;
+            println!("{model}: {bpd:.4} bits/dim (build-time python: {:.4})", engine.info.bpd);
+            args.finish().map_err(|e| anyhow!(e))
+        }
+        "sample" => {
+            let man = manifest()?;
+            let model = args.get("model", "mnist_bin");
+            let method = Method::parse(&args.get("method", "fpi"), args.num::<usize>("t-use", 1))
+                .ok_or_else(|| anyhow!("unknown method"))?;
+            let batch = args.num::<usize>("batch", 1);
+            let seed = args.num::<u64>("seed", 0);
+            let engine = Engine::load(&man, &model)?;
+            let res = engine.sample_batch(method, batch, seed)?;
+            println!(
+                "{model} {} b{batch} seed {seed}: {} ARM calls ({:.1}% of d={}), {}",
+                method.label(),
+                res.arm_calls,
+                res.calls_pct(engine.info.dim),
+                engine.info.dim,
+                fmt_duration(res.wall_secs)
+            );
+            if let Some(path) = args.opt("ppm") {
+                let info = &engine.info;
+                let tiles: Vec<_> = res
+                    .jobs
+                    .iter()
+                    .map(|j| predsamp::sampler::trace::render_with_mistakes(j, info.width, info.height, info.channels, info.categories).upscale(4))
+                    .collect();
+                predsamp::substrate::image::Image::grid(&tiles, 4).write_ppm(&path)?;
+                println!("wrote {path}");
+            }
+            args.finish().map_err(|e| anyhow!(e))
+        }
+        "serve" => {
+            let mut cfg = ServeConfig::default();
+            cfg.addr = args.get("addr", &cfg.addr.clone());
+            cfg.max_batch = args.num::<usize>("max-batch", cfg.max_batch);
+            cfg.max_wait = std::time::Duration::from_millis(args.num::<u64>("max-wait-ms", 20));
+            cfg.continuous = !args.flag("sync");
+            args.finish().map_err(|e| anyhow!(e))?;
+            let handle = server::spawn(predsamp::artifacts_dir(), cfg)?;
+            println!("predsamp serving on {} (continuous batching; ctrl-c to stop)", handle.addr);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "client" => {
+            let addr: std::net::SocketAddr = args.get("addr", "127.0.0.1:7199").parse()?;
+            let json = args.opt("json").ok_or_else(|| anyhow!("--json required"))?;
+            args.finish().map_err(|e| anyhow!(e))?;
+            let mut c = server::Client::connect(&addr)?;
+            println!("{}", c.call(&json)?);
+            Ok(())
+        }
+        "table1" | "table2" | "table3" => {
+            let man = manifest()?;
+            let seeds = seeds_of(args);
+            let batches: Vec<usize> = {
+                let l = args.list("batches");
+                if l.is_empty() { vec![1, 32] } else { l.iter().filter_map(|s| s.parse().ok()).collect() }
+            };
+            let models = args.list("models");
+            args.finish().map_err(|e| anyhow!(e))?;
+            match cmd {
+                "table1" => tables::table1(&man, &seeds, &batches, &models)?,
+                "table2" => tables::table2(&man, &seeds, &batches, &models)?,
+                _ => tables::table3(&man, &seeds)?,
+            };
+            Ok(())
+        }
+        "fig3" | "fig4" | "fig5" | "fig6" => {
+            let man = manifest()?;
+            let seed = args.num::<u64>("seed", 10); // the paper's figure seed
+            let out = std::path::PathBuf::from(args.get("out", "results"));
+            args.finish().map_err(|e| anyhow!(e))?;
+            let written = match cmd {
+                "fig3" => figures::fig_samples(&man, "mnist_bin", &out, seed, 20)?,
+                "fig4" => figures::fig_samples(&man, "cifar5", &out, seed, 1)?,
+                "fig5" => figures::fig5(&man, "latent_cifar", &out, seed)?,
+                _ => figures::fig6(&man, "latent_cifar", &out, seed)?,
+            };
+            for w in written {
+                println!("wrote {w}");
+            }
+            Ok(())
+        }
+        "verify" => {
+            // Release gate: the exactness guarantee across every model and
+            // method, through the compiled artifacts.
+            let man = manifest()?;
+            let seed = args.num::<u64>("seed", 0);
+            args.finish().map_err(|e| anyhow!(e))?;
+            let mut checked = 0;
+            for name in man.models.keys().cloned().collect::<Vec<_>>() {
+                let engine = Engine::load(&man, &name)?;
+                let Some(&b) = engine.batch_sizes().first() else { continue };
+                let base = engine.sample_batch(Method::Baseline, b, seed)?;
+                for method in [
+                    Method::Zeros,
+                    Method::PredictLast,
+                    Method::Fpi,
+                    Method::Forecast { t_use: 1 },
+                ] {
+                    let res = engine.sample_batch(method, b, seed)?;
+                    for (j, job) in res.jobs.iter().enumerate() {
+                        if job.x != base.jobs[j].x {
+                            bail!("{name}/{}: slot {j} diverged from ancestral", method.label());
+                        }
+                    }
+                    checked += 1;
+                    println!("  ✓ {name:<16} {:<16} b{b}: exact ({} calls vs {})", method.label(), res.arm_calls, base.arm_calls);
+                }
+            }
+            println!("verify: {checked} (model, method) pairs exact");
+            Ok(())
+        }
+        "figs-appendix" => {
+            // Appendix C (Figs. 7-13): the same sample/mistake galleries
+            // for every remaining model.
+            let man = manifest()?;
+            let seed = args.num::<u64>("seed", 10);
+            let out = std::path::PathBuf::from(args.get("out", "results"));
+            args.finish().map_err(|e| anyhow!(e))?;
+            for (model, t) in [("svhn8", 1usize), ("cifar8", 1)] {
+                for w in figures::fig_samples(&man, model, &out, seed, t)? {
+                    println!("wrote {w}");
+                }
+            }
+            for model in ["latent_svhn", "latent_in32"] {
+                for w in figures::fig5(&man, model, &out, seed)? {
+                    println!("wrote {w}");
+                }
+            }
+            Ok(())
+        }
+        "schedule-ablation" => {
+            let man = manifest()?;
+            let model = args.get("model", "latent_cifar");
+            let jobs = args.num::<usize>("jobs", 64);
+            let seed = args.num::<u64>("seed", 0);
+            args.finish().map_err(|e| anyhow!(e))?;
+            let engine = Engine::load(&man, &model)?;
+            let bs = *engine.batch_sizes().last().unwrap();
+            let exe = engine.exe_for(bs, false)?;
+            let cont = scheduler::run_continuous(exe, Box::new(forecast::FpiReuse), jobs, seed)?;
+            let sync = scheduler::run_sync_chunks(exe, || Box::new(forecast::FpiReuse), jobs, seed)?;
+            println!("scheduler ablation: {model}, {jobs} jobs, batch {bs} (FPI)");
+            for (tag, r) in [("continuous", &cont), ("sync", &sync)] {
+                println!(
+                    "  {tag:<11} passes {:>5}  calls/job {:>7.1}  occupancy {:>5.1}%  wall {}  jobs/s {:.2}",
+                    r.total_passes,
+                    r.calls_per_job,
+                    100.0 * r.occupancy,
+                    fmt_duration(r.wall_secs),
+                    jobs as f64 / r.wall_secs
+                );
+            }
+            for i in 0..jobs {
+                assert_eq!(cont.results[i].x, sync.results[i].x, "job {i} sample must not depend on scheduling");
+            }
+            println!("  ✓ all {jobs} samples identical under both schedulers");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}

@@ -1,0 +1,272 @@
+//! Artifact manifest: metadata for every trained model + file registry.
+//!
+//! `artifacts/manifest.json` is emitted by `python/compile/aot.py`. This
+//! module parses it into typed structs and resolves artifact paths.
+
+use crate::substrate::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Which task a model belongs to (paper §4.1 vs §4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    /// Explicit likelihood modeling on images (Table 1).
+    Explicit,
+    /// ARM over the discrete latent space of an autoencoder (Table 2).
+    Latent,
+}
+
+/// Static description of one ARM, mirrored from `ArmConfig.to_manifest()`.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: ModelKind,
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    pub categories: usize,
+    pub t_fore: usize,
+    pub share_repr: bool,
+    pub dim: usize,
+    pub pixels: usize,
+    /// Test-set bits/dim achieved at build time.
+    pub bpd: f64,
+    /// Artifact files keyed by role ("step_b1", "step_b32", "test_x", ...).
+    pub files: BTreeMap<String, String>,
+    /// For latent models: the paired autoencoder name.
+    pub autoencoder: Option<String>,
+    pub test_n: usize,
+}
+
+impl ModelInfo {
+    /// Batch sizes for which a step executable exists.
+    pub fn step_batch_sizes(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = self
+            .files
+            .keys()
+            .filter_map(|k| k.strip_prefix("step_b").and_then(|b| b.parse().ok()))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    pub fn file(&self, role: &str) -> Result<&str> {
+        self.files
+            .get(role)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("model {} has no artifact role {role:?}", self.name))
+    }
+}
+
+/// Autoencoder metadata (latent experiments).
+#[derive(Clone, Debug)]
+pub struct AeInfo {
+    pub name: String,
+    pub img_size: usize,
+    pub latent_channels: usize,
+    pub latent_hw: usize,
+    pub categories: usize,
+    pub latent_dim: usize,
+    pub mse: f64,
+}
+
+/// Parsed manifest + artifact directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub autoencoders: BTreeMap<String, AeInfo>,
+    pub quick: bool,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_value(dir, &v)
+    }
+
+    fn from_value(dir: PathBuf, v: &Value) -> Result<Manifest> {
+        let mut models = BTreeMap::new();
+        let model_obj = v.get("models").as_obj().ok_or_else(|| anyhow!("manifest: missing models"))?;
+        for (name, m) in model_obj {
+            let kind = match m.get("kind").as_str() {
+                Some("explicit") => ModelKind::Explicit,
+                Some("latent") => ModelKind::Latent,
+                other => bail!("model {name}: bad kind {other:?}"),
+            };
+            let files = m
+                .get("files")
+                .as_obj()
+                .ok_or_else(|| anyhow!("model {name}: missing files"))?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_str().ok_or_else(|| anyhow!("bad file entry {k}"))?.to_string())))
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            let req = |key: &str| -> Result<usize> {
+                m.get(key).as_usize().ok_or_else(|| anyhow!("model {name}: missing {key}"))
+            };
+            let info = ModelInfo {
+                name: name.clone(),
+                kind,
+                channels: req("channels")?,
+                height: req("height")?,
+                width: req("width")?,
+                categories: req("categories")?,
+                t_fore: req("t_fore")?,
+                share_repr: m.get("share_repr").as_bool().unwrap_or(true),
+                dim: req("dim")?,
+                pixels: req("pixels")?,
+                bpd: m.get("bpd").as_f64().unwrap_or(f64::NAN),
+                files,
+                autoencoder: m.get("autoencoder").as_str().map(String::from),
+                test_n: m.get("test_n").as_usize().unwrap_or(0),
+            };
+            if info.dim != info.channels * info.pixels {
+                bail!("model {name}: inconsistent dim");
+            }
+            models.insert(name.clone(), info);
+        }
+
+        let mut autoencoders = BTreeMap::new();
+        if let Some(obj) = v.get("autoencoders").as_obj() {
+            for (name, a) in obj {
+                autoencoders.insert(
+                    name.clone(),
+                    AeInfo {
+                        name: name.clone(),
+                        img_size: a.get("img_size").as_usize().unwrap_or(0),
+                        latent_channels: a.get("latent_channels").as_usize().unwrap_or(0),
+                        latent_hw: a.get("latent_hw").as_usize().unwrap_or(0),
+                        categories: a.get("categories").as_usize().unwrap_or(0),
+                        latent_dim: a.get("latent_dim").as_usize().unwrap_or(0),
+                        mse: a.get("mse").as_f64().unwrap_or(f64::NAN),
+                    },
+                );
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            models,
+            autoencoders,
+            quick: v.get("quick").as_bool().unwrap_or(false),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?}; have {:?}", self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn ae(&self, name: &str) -> Result<&AeInfo> {
+        self.autoencoders
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown autoencoder {name:?}"))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load a `<cfg>_test_x.bin` test batch (row-major i32 LE, [n, dim]).
+    pub fn load_test_batch(&self, model: &str) -> Result<Vec<Vec<i32>>> {
+        let info = self.model(model)?;
+        let path = self.path(info.file("test_x")?);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() % (4 * info.dim) != 0 {
+            bail!("test batch size {} not a multiple of dim {}", bytes.len(), info.dim);
+        }
+        let n = bytes.len() / (4 * info.dim);
+        let mut out = Vec::with_capacity(n);
+        for r in 0..n {
+            let row = (0..info.dim)
+                .map(|j| {
+                    let o = (r * info.dim + j) * 4;
+                    i32::from_le_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]])
+                })
+                .collect();
+            out.push(row);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Value {
+        json::parse(
+            r#"{
+              "quick": true,
+              "models": {
+                "m1": {"kind": "explicit", "channels": 3, "height": 4, "width": 5,
+                        "categories": 8, "t_fore": 2, "share_repr": true,
+                        "dim": 60, "pixels": 20, "bpd": 2.5, "test_n": 4,
+                        "files": {"step_b1": "m1_step_b1.hlo.txt", "step_b32": "m1_step_b32.hlo.txt"}},
+                "m2": {"kind": "latent", "channels": 4, "height": 8, "width": 8,
+                        "categories": 64, "t_fore": 5, "share_repr": true,
+                        "dim": 256, "pixels": 64, "bpd": 1.1, "autoencoder": "ae1", "test_n": 32,
+                        "files": {"step_b1": "x.hlo.txt"}}
+              },
+              "autoencoders": {"ae1": {"img_size": 16, "latent_channels": 4, "latent_hw": 8,
+                               "categories": 64, "latent_dim": 256, "mse": 0.01}}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_models_and_aes() {
+        let m = Manifest::from_value("/tmp".into(), &sample_manifest()).unwrap();
+        let m1 = m.model("m1").unwrap();
+        assert_eq!(m1.kind, ModelKind::Explicit);
+        assert_eq!(m1.dim, 60);
+        assert_eq!(m1.step_batch_sizes(), vec![1, 32]);
+        let m2 = m.model("m2").unwrap();
+        assert_eq!(m2.autoencoder.as_deref(), Some("ae1"));
+        assert_eq!(m.ae("ae1").unwrap().latent_dim, 256);
+        assert!(m.quick);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let m = Manifest::from_value("/tmp".into(), &sample_manifest()).unwrap();
+        assert!(m.model("nope").is_err());
+        assert!(m.model("m1").unwrap().file("step_b64").is_err());
+    }
+
+    #[test]
+    fn inconsistent_dim_rejected() {
+        let mut v = sample_manifest();
+        if let Value::Obj(o) = &mut v {
+            if let Some(Value::Obj(models)) = o.get_mut("models") {
+                if let Some(Value::Obj(m1)) = models.get_mut("m1") {
+                    m1.insert("dim".into(), Value::Num(61.0));
+                }
+            }
+        }
+        assert!(Manifest::from_value("/tmp".into(), &v).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        let dir = crate::artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("cifar8"));
+            let info = m.model("cifar8").unwrap();
+            assert_eq!(info.dim, info.channels * info.height * info.width);
+            let tb = m.load_test_batch("cifar8").unwrap();
+            assert_eq!(tb[0].len(), info.dim);
+            assert!(tb.iter().all(|r| r.iter().all(|&v| v >= 0 && (v as usize) < info.categories)));
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Typed wrappers over the autoencoder executables (latent experiments).
+//!
+//! ```text
+//! encoder: img f32[B, 3, S, S] -> (z i32[B, latent_dim],)
+//! decoder: z   i32[B, latent_dim] -> (img f32[B, 3, S, S],)
+//! ```
+
+use super::{artifact::AeInfo, client};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+pub struct EncoderExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub img_size: usize,
+    pub latent_dim: usize,
+}
+
+impl EncoderExe {
+    pub fn load<P: AsRef<Path>>(path: P, info: &AeInfo, batch: usize) -> Result<EncoderExe> {
+        let exe = client::compile_hlo_text(&path).with_context(|| format!("encoder {}", info.name))?;
+        Ok(EncoderExe { exe, batch, img_size: info.img_size, latent_dim: info.latent_dim })
+    }
+
+    /// `img` is `[B, 3, S, S]` row-major f32 in [-1, 1]; returns flat int
+    /// latents `[B, latent_dim]`.
+    pub fn encode(&self, img: &[f32]) -> Result<Vec<i32>> {
+        let s = self.img_size;
+        if img.len() != self.batch * 3 * s * s {
+            bail!("encoder input len {}", img.len());
+        }
+        let lit = xla::Literal::vec1(img).reshape(&[self.batch as i64, 3, s as i64, s as i64])?;
+        let res = self.exe.execute::<xla::Literal>(&[lit])?;
+        let z = res[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(z.to_vec::<i32>()?)
+    }
+}
+
+pub struct DecoderExe {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub img_size: usize,
+    pub latent_dim: usize,
+}
+
+impl DecoderExe {
+    pub fn load<P: AsRef<Path>>(path: P, info: &AeInfo, batch: usize) -> Result<DecoderExe> {
+        let exe = client::compile_hlo_text(&path).with_context(|| format!("decoder {}", info.name))?;
+        Ok(DecoderExe { exe, batch, img_size: info.img_size, latent_dim: info.latent_dim })
+    }
+
+    /// Flat int latents `[B, latent_dim]` -> images f32 `[B, 3, S, S]` in
+    /// roughly [-1, 1] (the AE was trained on normalized images).
+    pub fn decode(&self, z: &[i32]) -> Result<Vec<f32>> {
+        if z.len() != self.batch * self.latent_dim {
+            bail!("decoder input len {}", z.len());
+        }
+        let lit = xla::Literal::vec1(z).reshape(&[self.batch as i64, self.latent_dim as i64])?;
+        let res = self.exe.execute::<xla::Literal>(&[lit])?;
+        let img = res[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(img.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    #[test]
+    fn encoder_decoder_roundtrip_shapes() {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let Some(info) = man.autoencoders.get("cifar") else { return };
+        let enc = EncoderExe::load(man.path(&format!("ae_{}_enc_b32.hlo.txt", info.name)), info, 32).unwrap();
+        let dec = DecoderExe::load(man.path(&format!("ae_{}_dec_b32.hlo.txt", info.name)), info, 32).unwrap();
+        let s = info.img_size;
+        let img = vec![0.1f32; 32 * 3 * s * s];
+        let z = enc.encode(&img).unwrap();
+        assert_eq!(z.len(), 32 * info.latent_dim);
+        assert!(z.iter().all(|&v| v >= 0 && (v as usize) < info.categories));
+        let out = dec.decode(&z).unwrap();
+        assert_eq!(out.len(), 32 * 3 * s * s);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,58 @@
+//! PJRT CPU client + HLO-text compilation.
+//!
+//! The `xla` crate's client/executable handles are `Rc`-based (not
+//! `Send`/`Sync`), so all PJRT objects live on the thread that created
+//! them. The client is cached **per thread**; the serving architecture
+//! keeps every executable on a single engine thread and talks to it over
+//! channels (see `coordinator::server`).
+
+use anyhow::{Context, Result};
+use once_cell::unsync::OnceCell;
+use std::path::Path;
+
+thread_local! {
+    static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+}
+
+/// The calling thread's PJRT CPU client (created on first use).
+pub fn client() -> Result<xla::PjRtClient> {
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let c = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let _ = cell.set(c);
+        }
+        Ok(cell.get().expect("client initialized").clone())
+    })
+}
+
+/// Load an HLO-text artifact and compile it on this thread's client.
+///
+/// HLO text (not serialized proto) is the interchange format: jax >= 0.5
+/// emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+/// the text parser reassigns ids cleanly.
+pub fn compile_hlo_text<P: AsRef<Path>>(path: P) -> Result<xla::PjRtLoadedExecutable> {
+    let path = path.as_ref();
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client()?
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_cpu() {
+        let c = client().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        assert!(c.device_count() >= 1);
+    }
+
+    #[test]
+    fn compile_missing_file_errors() {
+        assert!(compile_hlo_text("/nonexistent/x.hlo.txt").is_err());
+    }
+}

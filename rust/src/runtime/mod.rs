@@ -1,0 +1,12 @@
+//! Runtime: AOT artifact loading + execution on the PJRT CPU client.
+//!
+//! The contract with the python build path (see DESIGN.md §2):
+//! `artifacts/*.hlo.txt` (HLO **text**, the xla_extension-0.5.1-safe
+//! interchange) are compiled once at startup and executed from the
+//! coordinator's hot loop; `artifacts/manifest.json` describes shapes and
+//! model metadata. Python never runs here.
+
+pub mod artifact;
+pub mod autoenc;
+pub mod client;
+pub mod step;

@@ -1,0 +1,205 @@
+//! Typed wrapper over an ARM step executable.
+//!
+//! Signature (the L2↔L3 contract, DESIGN.md §2):
+//!
+//! ```text
+//! x i32[B, d]  ->  (logp f32[B, d, K],  fore f32[B, P, T, K])
+//! ```
+//!
+//! The executable is pure — all sampling (Gumbel-max over `logp + ε`)
+//! happens in the coordinator, which is what lets one artifact serve every
+//! forecaster policy and ablation with ε held fixed across iterations.
+
+use super::{artifact::ModelInfo, client};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Output buffers of one step call. Reused across iterations (the hot loop
+/// does not allocate; see `StepExecutable::run_into`).
+#[derive(Clone, Debug, Default)]
+pub struct StepOutput {
+    /// `[B, d, K]` ARM log-probs.
+    pub logp: Vec<f32>,
+    /// `[B, P, T, K]` forecast-head log-probs.
+    pub fore: Vec<f32>,
+}
+
+/// A compiled ARM step executable for one fixed batch size.
+///
+/// Two flavors exist per model (DESIGN.md §8): the full step
+/// `(logp, fore)` and a logp-only variant (`has_fore = false`) that skips
+/// the forecast-head compute *and* its device→host transfer — the
+/// dominant per-pass cost at B=32 for the K=256 models.
+pub struct StepExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub dim: usize,
+    pub categories: usize,
+    pub pixels: usize,
+    pub t_fore: usize,
+    pub has_fore: bool,
+    /// Number of step invocations since load (telemetry).
+    calls: std::cell::Cell<u64>,
+}
+
+impl StepExecutable {
+    /// Compile `path` for a model with `info` metadata at batch size `batch`.
+    pub fn load<P: AsRef<Path>>(path: P, info: &ModelInfo, batch: usize) -> Result<StepExecutable> {
+        Self::load_variant(path, info, batch, true)
+    }
+
+    /// Compile either flavor; `has_fore = false` for logp-only artifacts.
+    pub fn load_variant<P: AsRef<Path>>(path: P, info: &ModelInfo, batch: usize, has_fore: bool) -> Result<StepExecutable> {
+        let exe = client::compile_hlo_text(&path)
+            .with_context(|| format!("loading step executable for {}", info.name))?;
+        Ok(StepExecutable {
+            exe,
+            batch,
+            dim: info.dim,
+            categories: info.categories,
+            pixels: info.pixels,
+            t_fore: if has_fore { info.t_fore } else { 0 },
+            has_fore,
+            calls: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn logp_len(&self) -> usize {
+        self.batch * self.dim * self.categories
+    }
+    pub fn fore_len(&self) -> usize {
+        self.batch * self.pixels * self.t_fore * self.categories
+    }
+    pub fn calls(&self) -> u64 {
+        self.calls.get()
+    }
+
+    /// One parallel inference pass, writing into reusable output buffers.
+    /// `x` is `[B, d]` row-major i32 with values in `[0, K)`.
+    pub fn run_into(&self, x: &[i32], out: &mut StepOutput) -> Result<()> {
+        if x.len() != self.batch * self.dim {
+            bail!("step input len {} != {}x{}", x.len(), self.batch, self.dim);
+        }
+        let lit = xla::Literal::vec1(x).reshape(&[self.batch as i64, self.dim as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?;
+        let tuple = result[0][0].to_literal_sync()?;
+        out.logp.resize(self.logp_len(), 0.0);
+        if self.has_fore {
+            let (lp, fo) = tuple.to_tuple2()?;
+            out.fore.resize(self.fore_len(), 0.0);
+            lp.copy_raw_to(&mut out.logp)?;
+            fo.copy_raw_to(&mut out.fore)?;
+        } else {
+            let lp = tuple.to_tuple1()?;
+            out.fore.clear();
+            lp.copy_raw_to(&mut out.logp)?;
+        }
+        self.calls.set(self.calls.get() + 1);
+        Ok(())
+    }
+
+    /// Convenience allocating variant.
+    pub fn run(&self, x: &[i32]) -> Result<StepOutput> {
+        let mut out = StepOutput::default();
+        self.run_into(x, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// Log-likelihood of a batch in bits/dim, computed from a step output.
+/// (The rust-side mirror of the paper's bpd metric; used by `predsamp eval`.)
+pub fn bpd_of(x: &[i32], out: &StepOutput, batch: usize, dim: usize, k: usize) -> Vec<f64> {
+    let mut res = Vec::with_capacity(batch);
+    for b in 0..batch {
+        let mut ll = 0.0f64;
+        for j in 0..dim {
+            let cat = x[b * dim + j] as usize;
+            ll += out.logp[(b * dim + j) * k + cat] as f64;
+        }
+        res.push(-ll / dim as f64 / std::f64::consts::LN_2);
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::Manifest;
+
+    fn with_model<F: FnOnce(&Manifest, &StepExecutable)>(name: &str, b: usize, f: F) {
+        let dir = crate::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        let info = man.model(name).unwrap();
+        let file = info.file(&format!("step_b{b}")).unwrap();
+        let exe = StepExecutable::load(man.path(file), info, b).unwrap();
+        f(&man, &exe);
+    }
+
+    #[test]
+    fn step_shapes_and_normalization() {
+        with_model("mnist_bin", 1, |_, exe| {
+            let x = vec![0i32; exe.dim];
+            let out = exe.run(&x).unwrap();
+            assert_eq!(out.logp.len(), exe.dim * exe.categories);
+            assert_eq!(out.fore.len(), exe.pixels * exe.t_fore * exe.categories);
+            // log-probs normalized
+            for j in 0..exe.dim {
+                let row = &out.logp[j * exe.categories..(j + 1) * exe.categories];
+                let s: f64 = row.iter().map(|&l| (l as f64).exp()).sum();
+                assert!((s - 1.0).abs() < 1e-4, "pos {j}: sum {s}");
+            }
+            assert_eq!(exe.calls(), 1);
+        });
+    }
+
+    #[test]
+    fn step_is_autoregressive_through_runtime() {
+        // Changing x at position j must not change logp at positions <= j —
+        // the same property pytest checks on the jax side, verified here
+        // through the compiled artifact.
+        with_model("mnist_bin", 1, |_, exe| {
+            let x0 = vec![0i32; exe.dim];
+            let mut x1 = x0.clone();
+            let j = exe.dim / 2;
+            x1[j] = 1;
+            let o0 = exe.run(&x0).unwrap();
+            let o1 = exe.run(&x1).unwrap();
+            let k = exe.categories;
+            assert_eq!(&o0.logp[..(j + 1) * k], &o1.logp[..(j + 1) * k]);
+            assert_ne!(&o0.logp[(j + 1) * k..], &o1.logp[(j + 1) * k..]);
+        });
+    }
+
+    #[test]
+    fn bpd_matches_python_build_number() {
+        // The build recorded test-set bpd in the manifest; recompute the
+        // same quantity through the artifact and require agreement.
+        with_model("mnist_bin", 32, |man, exe| {
+            let test = man.load_test_batch("mnist_bin").unwrap();
+            let n = exe.batch.min(test.len());
+            let mut x = vec![0i32; exe.batch * exe.dim];
+            for (b, row) in test.iter().take(n).enumerate() {
+                x[b * exe.dim..(b + 1) * exe.dim].copy_from_slice(row);
+            }
+            let out = exe.run(&x).unwrap();
+            let bpds = bpd_of(&x, &out, n, exe.dim, exe.categories);
+            let mean = bpds.iter().sum::<f64>() / n as f64;
+            let expected = man.model("mnist_bin").unwrap().bpd;
+            assert!(
+                (mean - expected).abs() < 0.15,
+                "rust bpd {mean:.4} vs python {expected:.4}"
+            );
+        });
+    }
+
+    #[test]
+    fn wrong_input_len_rejected() {
+        with_model("mnist_bin", 1, |_, exe| {
+            assert!(exe.run(&[0i32; 3]).is_err());
+        });
+    }
+}

@@ -1,0 +1,98 @@
+//! Naive ancestral sampling (paper Eq. 2) — the baseline every table row
+//! is normalized against: exactly `d` sequential ARM passes, one variable
+//! finalized per pass.
+
+use super::noise::JobNoise;
+use super::{BatchResult, JobResult, StepModel};
+use crate::runtime::step::StepOutput;
+use crate::substrate::gumbel::gumbel_argmax;
+use crate::substrate::timer::Timer;
+use anyhow::Result;
+
+/// Sample one image with the d-call baseline (batch-1 view of the model;
+/// for batched models only slot 0 is used).
+pub fn ancestral_sample<M: StepModel>(model: &M, noise: &JobNoise) -> Result<JobResult> {
+    let d = model.dim();
+    let k = model.categories();
+    let b = model.batch();
+    let mut x = vec![0i32; b * d];
+    let mut out = StepOutput::default();
+    for j in 0..d {
+        model.run_into(&x, &mut out)?;
+        let lp = &out.logp[j * k..(j + 1) * k];
+        x[j] = gumbel_argmax(lp, noise.row(j)) as i32;
+    }
+    Ok(JobResult {
+        x: x[..d].to_vec(),
+        iterations: d,
+        mistakes: vec![1; d], // every variable needed its own pass
+        converge_iter: (1..=d as u32).collect(),
+    })
+}
+
+/// Baseline over a full batch: d passes, each finalizing position j for
+/// every slot (the batch shares the pass, as on GPU).
+pub fn ancestral_batch<M: StepModel>(model: &M, noises: &[JobNoise]) -> Result<BatchResult> {
+    let d = model.dim();
+    let k = model.categories();
+    let b = model.batch();
+    assert_eq!(noises.len(), b, "one noise block per slot");
+    let mut x = vec![0i32; b * d];
+    let mut out = StepOutput::default();
+    let timer = Timer::start();
+    for j in 0..d {
+        model.run_into(&x, &mut out)?;
+        for (s, noise) in noises.iter().enumerate() {
+            let lp = &out.logp[(s * d + j) * k..(s * d + j + 1) * k];
+            x[s * d + j] = gumbel_argmax(lp, noise.row(j)) as i32;
+        }
+    }
+    let wall = timer.secs();
+    let jobs = (0..b)
+        .map(|s| JobResult {
+            x: x[s * d..(s + 1) * d].to_vec(),
+            iterations: d,
+            mistakes: vec![1; d],
+            converge_iter: (1..=d as u32).collect(),
+        })
+        .collect();
+    Ok(BatchResult { jobs, arm_calls: d, wall_secs: wall })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::mock::MockArm;
+
+    #[test]
+    fn baseline_uses_exactly_d_calls() {
+        let model = MockArm::new(1, 2, 4, 3, 1, 2.0, 1);
+        let noise = JobNoise::new(0, 0, model.dim(), 3);
+        let r = ancestral_sample(&model, &noise).unwrap();
+        assert_eq!(r.iterations, model.dim());
+        assert!(r.x.iter().all(|&v| (0..3).contains(&v)));
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let m1 = MockArm::new(1, 2, 4, 3, 1, 2.0, 2);
+        let m3 = MockArm::new(3, 2, 4, 3, 1, 2.0, 2);
+        let d = m1.dim();
+        let noises: Vec<JobNoise> = (0..3).map(|id| JobNoise::new(5, id, d, 3)).collect();
+        let batch = ancestral_batch(&m3, &noises).unwrap();
+        for (id, noise) in noises.iter().enumerate() {
+            let single = ancestral_sample(&m1, noise).unwrap();
+            assert_eq!(batch.jobs[id].x, single.x, "slot {id}");
+        }
+        assert_eq!(batch.arm_calls, d);
+    }
+
+    #[test]
+    fn deterministic_given_noise() {
+        let model = MockArm::new(1, 3, 4, 4, 1, 3.0, 3);
+        let noise = JobNoise::new(9, 0, model.dim(), 4);
+        let a = ancestral_sample(&model, &noise).unwrap();
+        let b = ancestral_sample(&model, &noise).unwrap();
+        assert_eq!(a.x, b.x);
+    }
+}

@@ -1,0 +1,258 @@
+//! Forecaster policies (paper §2.2-2.4 + Table 1 baselines + Table 3
+//! ablation). A policy fills the suffix `x[i..d]` of the next ARM input
+//! with forecasts, given everything valid so far.
+
+use super::noise::JobNoise;
+use crate::substrate::gumbel::{argmax, gumbel_argmax};
+
+/// Everything a policy may condition on when forecasting for one job.
+pub struct ForecastCtx<'a> {
+    /// Frontier: variables `< i` of `x` are valid samples.
+    pub i: usize,
+    pub dim: usize,
+    pub channels: usize,
+    pub k: usize,
+    pub t_fore: usize,
+    pub pixels: usize,
+    /// Reparametrized ARM outputs of the *previous* pass, full `[d]`
+    /// (zeros before the first pass).
+    pub out_prev: &'a [i32],
+    /// Greedy (no-noise) ARM outputs of the previous pass `[d]`.
+    pub greedy_prev: &'a [i32],
+    /// Forecast-head log-probs of the previous pass `[P, T, K]`
+    /// (empty before the first pass).
+    pub fore_prev: &'a [f32],
+    /// The job's reparametrization noise.
+    pub noise: &'a JobNoise,
+    /// True on the first pass (no previous outputs exist).
+    pub first: bool,
+}
+
+/// A forecasting function F_i (paper Eq. 3/6).
+pub trait Forecaster: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Fill `x[ctx.i..]` with forecasts. `x` is the full `[d]` input row;
+    /// the valid prefix must not be touched.
+    fn forecast(&self, ctx: &ForecastCtx<'_>, x: &mut [i32]);
+    /// False for the no-reparametrization ablation (Table 3): noise is
+    /// redrawn every pass, so forecast agreement is not exact-valued.
+    fn reparametrized(&self) -> bool {
+        true
+    }
+}
+
+/// Baseline: forecast zeros (paper §4.1, binary MNIST baseline).
+pub struct Zeros;
+
+impl Forecaster for Zeros {
+    fn name(&self) -> &'static str {
+        "zeros"
+    }
+    fn forecast(&self, ctx: &ForecastCtx<'_>, x: &mut [i32]) {
+        for v in x[ctx.i..].iter_mut() {
+            *v = 0;
+        }
+    }
+}
+
+/// Baseline: repeat the last observed value (paper §4.1 "predict last").
+pub struct PredictLast;
+
+impl Forecaster for PredictLast {
+    fn name(&self) -> &'static str {
+        "predict_last"
+    }
+    fn forecast(&self, ctx: &ForecastCtx<'_>, x: &mut [i32]) {
+        let last = if ctx.i > 0 { x[ctx.i - 1] } else { 0 };
+        for v in x[ctx.i..].iter_mut() {
+            *v = last;
+        }
+    }
+}
+
+/// ARM fixed-point iteration (paper §2.3): reuse the previous pass's
+/// reparametrized outputs as forecasts. Algorithm 1 with this policy is
+/// equivalent to Algorithm 2.
+pub struct FpiReuse;
+
+impl Forecaster for FpiReuse {
+    fn name(&self) -> &'static str {
+        "fpi"
+    }
+    fn forecast(&self, ctx: &ForecastCtx<'_>, x: &mut [i32]) {
+        if ctx.first {
+            for v in x[ctx.i..].iter_mut() {
+                *v = 0;
+            }
+        } else {
+            x[ctx.i..].copy_from_slice(&ctx.out_prev[ctx.i..]);
+        }
+    }
+}
+
+/// Learned forecasting modules (paper §2.4) on top of FPI: the first
+/// `t_use` future variables come from the forecast heads (trained to match
+/// the ARM's conditionals given only valid information), the rest from the
+/// previous ARM outputs ("forecasts for all remaining future timesteps are
+/// taken from the ARM output").
+pub struct Learned {
+    /// How many of the trained T modules to use (paper reports T=1/5/20).
+    pub t_use: usize,
+}
+
+impl Forecaster for Learned {
+    fn name(&self) -> &'static str {
+        "learned"
+    }
+    fn forecast(&self, ctx: &ForecastCtx<'_>, x: &mut [i32]) {
+        if ctx.first {
+            for v in x[ctx.i..].iter_mut() {
+                *v = 0;
+            }
+            return;
+        }
+        // Query pixel q: the last pixel whose representation h(q) is
+        // guaranteed valid. The previous pass's input was valid up to
+        // i-1, and h(q) depends on pixels < q, i.e. variables < q*C; so
+        // the largest safe q has q*C <= i-1.
+        let c = ctx.channels;
+        let q = (ctx.i - 1) / c; // ctx.i >= 1 when !first
+        let t_use = self.t_use.min(ctx.t_fore);
+        for j in ctx.i..ctx.dim {
+            let t = j - q * c;
+            x[j] = if t < t_use {
+                let row = &ctx.fore_prev[(q * ctx.t_fore + t) * ctx.k..(q * ctx.t_fore + t + 1) * ctx.k];
+                gumbel_argmax(row, ctx.noise.row(j)) as i32
+            } else {
+                ctx.out_prev[j]
+            };
+        }
+    }
+}
+
+/// Table-3 ablation: fixed-point iteration *without* reparametrization.
+/// Forecasts are the greedy argmax of the previous pass's distributions
+/// (no ε term), and the engine redraws sampling noise every pass.
+pub struct NoReparam;
+
+impl Forecaster for NoReparam {
+    fn name(&self) -> &'static str {
+        "fpi_noreparam"
+    }
+    fn forecast(&self, ctx: &ForecastCtx<'_>, x: &mut [i32]) {
+        if ctx.first {
+            for v in x[ctx.i..].iter_mut() {
+                *v = 0;
+            }
+        } else {
+            x[ctx.i..].copy_from_slice(&ctx.greedy_prev[ctx.i..]);
+        }
+    }
+    fn reparametrized(&self) -> bool {
+        false
+    }
+}
+
+/// Parse a policy by CLI name.
+pub fn by_name(name: &str, t_use: usize) -> Option<Box<dyn Forecaster>> {
+    match name {
+        "zeros" => Some(Box::new(Zeros)),
+        "last" | "predict_last" => Some(Box::new(PredictLast)),
+        "fpi" => Some(Box::new(FpiReuse)),
+        "forecast" | "learned" => Some(Box::new(Learned { t_use: t_use.max(1) })),
+        "noreparam" | "fpi_noreparam" => Some(Box::new(NoReparam)),
+        _ => None,
+    }
+}
+
+/// Greedy argmax over a logp row — helper shared with the engine.
+pub fn greedy_of(logp_row: &[f32]) -> i32 {
+    argmax(logp_row) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx<'a>(i: usize, out_prev: &'a [i32], greedy: &'a [i32], fore: &'a [f32], noise: &'a JobNoise, first: bool) -> ForecastCtx<'a> {
+        ForecastCtx {
+            i,
+            dim: 12,
+            channels: 3,
+            k: 4,
+            t_fore: 2,
+            pixels: 4,
+            out_prev,
+            greedy_prev: greedy,
+            fore_prev: fore,
+            noise,
+            first,
+        }
+    }
+
+    #[test]
+    fn zeros_and_last() {
+        let noise = JobNoise::new(0, 0, 12, 4);
+        let out = vec![1i32; 12];
+        let mut x = vec![3i32; 12];
+        Zeros.forecast(&ctx(4, &out, &out, &[], &noise, false), &mut x);
+        assert_eq!(&x[..4], &[3, 3, 3, 3]);
+        assert!(x[4..].iter().all(|&v| v == 0));
+
+        let mut x = vec![7i32; 12];
+        PredictLast.forecast(&ctx(4, &out, &out, &[], &noise, false), &mut x);
+        assert!(x[4..].iter().all(|&v| v == 7));
+        let mut x = vec![7i32; 12];
+        PredictLast.forecast(&ctx(0, &out, &out, &[], &noise, true), &mut x);
+        assert!(x.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn fpi_reuses_prev_outputs() {
+        let noise = JobNoise::new(0, 0, 12, 4);
+        let out: Vec<i32> = (0..12).collect();
+        let mut x = vec![9i32; 12];
+        FpiReuse.forecast(&ctx(5, &out, &out, &[], &noise, false), &mut x);
+        assert_eq!(&x[..5], &[9; 5]);
+        assert_eq!(&x[5..], &out[5..]);
+    }
+
+    #[test]
+    fn learned_uses_heads_then_arm() {
+        let noise = JobNoise::new(1, 0, 12, 4);
+        let out: Vec<i32> = (0..12).map(|j| (j % 4) as i32).collect();
+        // fore logp [P=4, T=2, K=4]: strongly peak category 2 everywhere
+        let mut fore = vec![-10.0f32; 4 * 2 * 4];
+        for p in 0..4 {
+            for t in 0..2 {
+                fore[(p * 2 + t) * 4 + 2] = 10.0;
+            }
+        }
+        let f = Learned { t_use: 2 };
+        let mut x = vec![0i32; 12];
+        // frontier i=4 -> q=(4-1)/3=1; t offsets j-3: j=4 -> t=1 (<2, head), j=5 -> t=2 (ARM)
+        f.forecast(&ctx(4, &out, &out, &fore, &noise, false), &mut x);
+        assert_eq!(x[4], 2, "head forecast should win (strong peak)");
+        assert_eq!(x[5], out[5]);
+        assert_eq!(&x[6..], &out[6..]);
+    }
+
+    #[test]
+    fn noreparam_uses_greedy() {
+        let noise = JobNoise::new(0, 0, 12, 4);
+        let out = vec![1i32; 12];
+        let greedy = vec![2i32; 12];
+        let mut x = vec![0i32; 12];
+        NoReparam.forecast(&ctx(3, &out, &greedy, &[], &noise, false), &mut x);
+        assert!(x[3..].iter().all(|&v| v == 2));
+        assert!(!NoReparam.reparametrized());
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["zeros", "last", "fpi", "learned", "noreparam"] {
+            assert!(by_name(n, 1).is_some(), "{n}");
+        }
+        assert!(by_name("bogus", 1).is_none());
+    }
+}

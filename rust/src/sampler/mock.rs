@@ -1,0 +1,164 @@
+//! Deterministic pure-rust mock ARM for fast sampler/coordinator tests.
+//!
+//! Strictly autoregressive by construction: the logits of flat variable
+//! `j` depend only on `x[j-1]` and `x[j-C]` (hash-table lookups), and the
+//! forecast head at pixel `p` depends only on the last variable of pixel
+//! `p-1`. A `strength` knob interpolates between near-uniform conditionals
+//! (fast FPI convergence) and strongly-coupled ones (slow convergence), so
+//! property tests cover both regimes without touching PJRT.
+
+use super::StepModel;
+use crate::runtime::step::StepOutput;
+use crate::substrate::rng::splitmix64;
+use anyhow::{ensure, Result};
+
+#[derive(Clone, Debug)]
+pub struct MockArm {
+    pub batch: usize,
+    pub channels: usize,
+    pub pixels: usize,
+    pub k: usize,
+    pub t_fore: usize,
+    /// Conditional coupling strength (0 = iid uniform-ish).
+    pub strength: f32,
+    /// Table seed — different seeds give different "models".
+    pub seed: u64,
+}
+
+impl MockArm {
+    pub fn new(batch: usize, channels: usize, pixels: usize, k: usize, t_fore: usize, strength: f32, seed: u64) -> MockArm {
+        MockArm { batch, channels, pixels, k, t_fore, strength, seed }
+    }
+
+    #[inline]
+    fn raw_logit(&self, key: u64, c: usize) -> f32 {
+        let mut s = self.seed ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (c as u64).wrapping_mul(0xABCD_EF12_3456_789B);
+        let h = splitmix64(&mut s);
+        // map to [-1, 1]
+        ((h >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32
+    }
+
+    /// Normalized logp row for variable `j` given the input row `x`.
+    fn logp_row(&self, x: &[i32], j: usize, out: &mut [f32]) {
+        let prev1 = if j > 0 { x[j - 1] } else { -1 };
+        let prevc = if j >= self.channels { x[j - self.channels] } else { -1 };
+        let key = (j as u64) << 32 ^ ((prev1 as u64) & 0xFFFF) << 16 ^ ((prevc as u64) & 0xFFFF);
+        let mut m = f32::NEG_INFINITY;
+        for (c, o) in out.iter_mut().enumerate() {
+            *o = self.strength * self.raw_logit(key, c);
+            m = m.max(*o);
+        }
+        let z: f32 = out.iter().map(|&l| (l - m).exp()).sum::<f32>().ln() + m;
+        for o in out.iter_mut() {
+            *o -= z;
+        }
+    }
+
+    /// Forecast-head row for (pixel p, module t): depends only on the last
+    /// variable of pixel p-1 (i.e. pixels < p), imitating the real model's
+    /// validity contract. Roughly matches the ARM conditional when the
+    /// relevant context coincides.
+    fn fore_row(&self, x: &[i32], p: usize, t: usize, out: &mut [f32]) {
+        let j = p * self.channels + t;
+        let ctxv = if p > 0 { x[p * self.channels - 1] } else { -1 };
+        let key = (j as u64) << 32 ^ ((ctxv as u64) & 0xFFFF) << 16 ^ ((ctxv as u64) & 0xFFFF);
+        let mut m = f32::NEG_INFINITY;
+        for (c, o) in out.iter_mut().enumerate() {
+            *o = self.strength * self.raw_logit(key, c);
+            m = m.max(*o);
+        }
+        let z: f32 = out.iter().map(|&l| (l - m).exp()).sum::<f32>().ln() + m;
+        for o in out.iter_mut() {
+            *o -= z;
+        }
+    }
+
+    /// Allocating convenience used by tests.
+    pub fn run_into_owned(&self, x: &[i32]) -> StepOutput {
+        let mut o = StepOutput::default();
+        self.run_into(x, &mut o).expect("mock run");
+        o
+    }
+}
+
+impl StepModel for MockArm {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn dim(&self) -> usize {
+        self.channels * self.pixels
+    }
+    fn categories(&self) -> usize {
+        self.k
+    }
+    fn pixels(&self) -> usize {
+        self.pixels
+    }
+    fn t_fore(&self) -> usize {
+        self.t_fore
+    }
+    fn run_into(&self, x: &[i32], out: &mut StepOutput) -> Result<()> {
+        let d = self.dim();
+        ensure!(x.len() == self.batch * d, "mock input len");
+        out.logp.resize(self.batch * d * self.k, 0.0);
+        out.fore.resize(self.batch * self.pixels * self.t_fore * self.k, 0.0);
+        for b in 0..self.batch {
+            let row = &x[b * d..(b + 1) * d];
+            for j in 0..d {
+                let o = (b * d + j) * self.k;
+                self.logp_row(row, j, &mut out.logp[o..o + self.k]);
+            }
+            for p in 0..self.pixels {
+                for t in 0..self.t_fore {
+                    let o = ((b * self.pixels + p) * self.t_fore + t) * self.k;
+                    self.fore_row(row, p, t, &mut out.fore[o..o + self.k]);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strictly_autoregressive() {
+        let m = MockArm::new(1, 3, 4, 5, 2, 2.0, 0);
+        let d = m.dim();
+        let x0 = vec![0i32; d];
+        for j in 0..d {
+            let mut x1 = x0.clone();
+            x1[j] = 3;
+            let o0 = m.run_into_owned(&x0);
+            let o1 = m.run_into_owned(&x1);
+            let k = m.k;
+            assert_eq!(&o0.logp[..(j + 1) * k], &o1.logp[..(j + 1) * k], "leak at {j}");
+        }
+    }
+
+    #[test]
+    fn fore_depends_only_on_past_pixels() {
+        let m = MockArm::new(1, 3, 4, 5, 2, 2.0, 0);
+        let d = m.dim();
+        let x0 = vec![1i32; d];
+        let mut x1 = x0.clone();
+        // perturb pixel 2 (vars 6..9): fore rows for pixels <= 2 unchanged
+        x1[6] = 4;
+        let o0 = m.run_into_owned(&x0);
+        let o1 = m.run_into_owned(&x1);
+        let row = m.t_fore * m.k;
+        assert_eq!(&o0.fore[..3 * row], &o1.fore[..3 * row]);
+    }
+
+    #[test]
+    fn logp_normalized() {
+        let m = MockArm::new(2, 2, 3, 4, 1, 1.5, 7);
+        let out = m.run_into_owned(&vec![1i32; 2 * m.dim()]);
+        for j in 0..2 * m.dim() {
+            let s: f32 = out.logp[j * 4..(j + 1) * 4].iter().map(|l| l.exp()).sum();
+            assert!((s - 1.0).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! The paper's contribution: predictive sampling for ARMs.
+//!
+//! * [`predictive`] — Algorithm 1, batched, generic over a forecaster
+//!   policy and over [`StepModel`] (so invariants are property-tested
+//!   against a pure-rust mock ARM as well as the compiled artifacts).
+//! * [`fpi`] — Algorithm 2 (ARM fixed-point iteration), plus its
+//!   equivalence to Algorithm 1 with the FPI-reuse policy.
+//! * [`forecast`] — forecaster policies: zeros / predict-last / FPI /
+//!   learned modules / no-reparametrization ablation.
+//! * [`ancestral`] — the d-call baseline.
+//! * [`noise`] — per-job reparametrization noise (ε lifecycle).
+//! * [`trace`] — mistake maps and convergence maps (paper Figs. 3-6).
+//! * [`mock`] — deterministic pure-rust ARM for fast tests.
+
+pub mod ancestral;
+pub mod forecast;
+pub mod fpi;
+pub mod mock;
+pub mod noise;
+pub mod predictive;
+pub mod trace;
+
+use crate::runtime::step::{StepExecutable, StepOutput};
+use anyhow::Result;
+
+/// Abstraction over the ARM's parallel-inference pass. Implemented by the
+/// compiled PJRT executable and by [`mock::MockArm`] for tests.
+pub trait StepModel {
+    fn batch(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn categories(&self) -> usize;
+    fn pixels(&self) -> usize;
+    fn t_fore(&self) -> usize;
+    /// Data channels per pixel (flat layout is channel-innermost).
+    fn channels(&self) -> usize {
+        self.dim() / self.pixels()
+    }
+    /// One parallel pass: x i32[B,d] -> logp [B,d,K], fore [B,P,T,K].
+    fn run_into(&self, x: &[i32], out: &mut StepOutput) -> Result<()>;
+}
+
+impl StepModel for StepExecutable {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn categories(&self) -> usize {
+        self.categories
+    }
+    fn pixels(&self) -> usize {
+        self.pixels
+    }
+    fn t_fore(&self) -> usize {
+        self.t_fore
+    }
+    fn run_into(&self, x: &[i32], out: &mut StepOutput) -> Result<()> {
+        StepExecutable::run_into(self, x, out)
+    }
+}
+
+/// Result of sampling one image/latent.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// The sample, flat `[d]`.
+    pub x: Vec<i32>,
+    /// ARM passes until *this* job converged.
+    pub iterations: usize,
+    /// Per-variable: 1 if the forecast for that variable was wrong when it
+    /// was finalized (the red pixels of Figs. 3-5).
+    pub mistakes: Vec<u8>,
+    /// Per-variable: the pass index (1-based) at which the variable's
+    /// final value was determined (Fig. 6).
+    pub converge_iter: Vec<u32>,
+}
+
+/// Result of sampling a batch.
+#[derive(Clone, Debug)]
+pub struct BatchResult {
+    pub jobs: Vec<JobResult>,
+    /// ARM passes for the whole batch — the slowest job determines this
+    /// (paper §4.1's batched semantics).
+    pub arm_calls: usize,
+    pub wall_secs: f64,
+}
+
+impl BatchResult {
+    /// ARM calls as a percentage of the baseline's d calls.
+    pub fn calls_pct(&self, d: usize) -> f64 {
+        100.0 * self.arm_calls as f64 / d as f64
+    }
+}

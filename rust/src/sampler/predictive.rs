@@ -1,0 +1,419 @@
+//! Predictive sampling — the paper's Algorithm 1, batched.
+//!
+//! One `PredictiveSampler` owns B slots tied to a fixed-batch step
+//! executable. Each ARM pass: (1) every active slot's input row is the
+//! valid prefix `x_{<i}` plus policy forecasts for `[i, d)`; (2) a single
+//! parallel inference pass produces log-probs for every position of every
+//! slot; (3) per slot, the reparametrized outputs
+//! `x'_j = argmax(logp_j + ε_j)` are scanned from the frontier — while the
+//! forecast agrees with `x'_j` the frontier advances for free, and on the
+//! first disagreement the (still valid) output is written and the pass
+//! ends for that slot.
+//!
+//! Because ε is fixed per job, every policy produces *bitwise* the sample
+//! ancestral sampling would produce with the same ε (tested below against
+//! the mock ARM and, in `tests/integration.rs`, against the compiled
+//! artifacts). Slots can be individually reset with a new job, which is
+//! what the continuous-batching scheduler builds on.
+
+use super::forecast::{ForecastCtx, Forecaster};
+use super::noise::JobNoise;
+use super::{BatchResult, JobResult, StepModel};
+use crate::runtime::step::StepOutput;
+use crate::substrate::gumbel::{argmax, gumbel_argmax};
+use crate::substrate::timer::Timer;
+use anyhow::{ensure, Result};
+
+struct Slot {
+    noise: JobNoise,
+    frontier: usize,
+    /// Reparametrized outputs of the previous pass (valid prefix + proposals).
+    out_prev: Vec<i32>,
+    /// Greedy outputs of the previous pass (no-reparametrization ablation).
+    greedy_prev: Vec<i32>,
+    first: bool,
+    done: bool,
+    /// Passes this slot participated in while active.
+    iterations: usize,
+    mistakes: Vec<u8>,
+    converge_iter: Vec<u32>,
+    occupied: bool,
+}
+
+impl Slot {
+    fn fresh(noise: JobNoise, d: usize) -> Slot {
+        Slot {
+            noise,
+            frontier: 0,
+            out_prev: vec![0; d],
+            greedy_prev: vec![0; d],
+            first: true,
+            done: false,
+            iterations: 0,
+            mistakes: vec![0; d],
+            converge_iter: vec![0; d],
+            occupied: true,
+        }
+    }
+}
+
+pub struct PredictiveSampler<'m, M: StepModel> {
+    model: &'m M,
+    forecaster: Box<dyn Forecaster>,
+    slots: Vec<Option<Slot>>,
+    /// `[B, d]` input rows; valid prefixes persist across passes.
+    x: Vec<i32>,
+    out: StepOutput,
+    /// Total ARM passes run by this sampler.
+    pub passes: usize,
+}
+
+impl<'m, M: StepModel> PredictiveSampler<'m, M> {
+    pub fn new(model: &'m M, forecaster: Box<dyn Forecaster>) -> Self {
+        let b = model.batch();
+        let d = model.dim();
+        PredictiveSampler {
+            model,
+            forecaster,
+            slots: (0..b).map(|_| None).collect(),
+            x: vec![0; b * d],
+            out: StepOutput::default(),
+            passes: 0,
+        }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.model.batch()
+    }
+
+    /// Install a new job in `slot` (replacing any previous job).
+    pub fn reset_slot(&mut self, slot: usize, noise: JobNoise) {
+        let d = self.model.dim();
+        assert_eq!(noise.dim, d, "noise dim");
+        assert_eq!(noise.k, self.model.categories(), "noise k");
+        self.slots[slot] = Some(Slot::fresh(noise, d));
+        self.x[slot * d..(slot + 1) * d].fill(0);
+    }
+
+    /// Number of slots with an unconverged job.
+    pub fn active_slots(&self) -> usize {
+        self.slots.iter().flatten().filter(|s| s.occupied && !s.done).count()
+    }
+
+    pub fn slot_done(&self, slot: usize) -> bool {
+        self.slots[slot].as_ref().map(|s| s.done).unwrap_or(true)
+    }
+
+    /// Extract the finished job from `slot`, freeing it.
+    pub fn take_result(&mut self, slot: usize) -> Option<JobResult> {
+        let d = self.model.dim();
+        let s = self.slots[slot].take()?;
+        if !s.done {
+            self.slots[slot] = Some(s);
+            return None;
+        }
+        Some(JobResult {
+            x: self.x[slot * d..(slot + 1) * d].to_vec(),
+            iterations: s.iterations,
+            mistakes: s.mistakes,
+            converge_iter: s.converge_iter,
+        })
+    }
+
+    /// One ARM pass over the whole batch (Algorithm 1's loop body).
+    pub fn step(&mut self) -> Result<()> {
+        let d = self.model.dim();
+        let k = self.model.categories();
+        let c = self.model.channels();
+        let t_fore = self.model.t_fore();
+        let pixels = self.model.pixels();
+        ensure!(self.active_slots() > 0, "no active jobs");
+
+        // (1) Build inputs: valid prefix + forecasts. Reads the *previous*
+        // pass's outputs (self.out), so this must precede run_into.
+        for (si, slot) in self.slots.iter_mut().enumerate() {
+            let Some(s) = slot else { continue };
+            if s.done {
+                continue;
+            }
+            let row = &mut self.x[si * d..(si + 1) * d];
+            let fore_prev: &[f32] = if s.first || self.out.fore.is_empty() {
+                &[]
+            } else {
+                let len = pixels * t_fore * k;
+                &self.out.fore[si * len..(si + 1) * len]
+            };
+            let ctx = ForecastCtx {
+                i: s.frontier,
+                dim: d,
+                channels: c,
+                k,
+                t_fore,
+                pixels,
+                out_prev: &s.out_prev,
+                greedy_prev: &s.greedy_prev,
+                fore_prev,
+                noise: &s.noise,
+                first: s.first,
+            };
+            self.forecaster.forecast(&ctx, row);
+        }
+
+        // (2) One parallel inference pass.
+        self.model.run_into(&self.x, &mut self.out)?;
+        self.passes += 1;
+
+        // (3) Scan outputs per slot.
+        let reparam = self.forecaster.reparametrized();
+        for (si, slot) in self.slots.iter_mut().enumerate() {
+            let Some(s) = slot else { continue };
+            if s.done {
+                continue;
+            }
+            s.iterations += 1;
+            s.first = false;
+            if !reparam {
+                // Ablation: fresh noise every pass.
+                s.noise.redraw();
+            }
+            let row = &mut self.x[si * d..(si + 1) * d];
+            let mut j = s.frontier;
+            // Valid prefix of out_prev mirrors x.
+            s.out_prev[..j].copy_from_slice(&row[..j]);
+            s.greedy_prev[..j].copy_from_slice(&row[..j]);
+            let mut advancing = true;
+            while j < d {
+                let lp = &self.out.logp[(si * d + j) * k..(si * d + j + 1) * k];
+                let out_j = gumbel_argmax(lp, s.noise.row(j)) as i32;
+                s.out_prev[j] = out_j;
+                s.greedy_prev[j] = argmax(lp) as i32;
+                if advancing {
+                    if row[j] == out_j {
+                        // Correct forecast: position finalized for free.
+                        s.converge_iter[j] = s.iterations as u32;
+                        j += 1;
+                        s.frontier = j;
+                    } else {
+                        // First disagreement: out_j is still a valid sample
+                        // (its conditioning is the valid prefix). Write it,
+                        // mark the mistake, and stop advancing.
+                        row[j] = out_j;
+                        s.out_prev[j] = out_j;
+                        s.mistakes[j] = 1;
+                        s.converge_iter[j] = s.iterations as u32;
+                        j += 1;
+                        s.frontier = j;
+                        advancing = false;
+                    }
+                } else {
+                    j += 1;
+                }
+            }
+            if s.frontier >= d {
+                s.done = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Fill every slot with jobs `(seed, job_id = slot index)`, run to
+    /// convergence of the whole batch, and report the paper's batched
+    /// metrics (slowest job determines `arm_calls`).
+    pub fn run_sync(&mut self, seed: u64) -> Result<BatchResult> {
+        let b = self.model.batch();
+        let d = self.model.dim();
+        let k = self.model.categories();
+        for slot in 0..b {
+            self.reset_slot(slot, JobNoise::new(seed, slot as u64, d, k));
+        }
+        self.passes = 0;
+        let timer = Timer::start();
+        // Strict triangular dependence guarantees convergence in <= d
+        // passes; the +1 margin covers the all-correct final verification
+        // pass of degenerate policies.
+        for _ in 0..=d {
+            self.step()?;
+            if (0..b).all(|s| self.slot_done(s)) {
+                break;
+            }
+        }
+        let wall = timer.secs();
+        let jobs: Vec<JobResult> = (0..b)
+            .map(|s| self.take_result(s).expect("job converged"))
+            .collect();
+        ensure!(jobs.iter().all(|j| j.x.len() == d), "incomplete jobs");
+        Ok(BatchResult { jobs, arm_calls: self.passes, wall_secs: wall })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampler::ancestral::ancestral_sample;
+    use crate::sampler::forecast;
+    use crate::sampler::mock::MockArm;
+    use crate::substrate::proptest_lite::check;
+    use crate::{prop_assert, prop_assert_eq};
+
+    fn policies() -> Vec<Box<dyn Forecaster>> {
+        vec![
+            Box::new(forecast::Zeros),
+            Box::new(forecast::PredictLast),
+            Box::new(forecast::FpiReuse),
+            Box::new(forecast::Learned { t_use: 2 }),
+        ]
+    }
+
+    #[test]
+    fn exactness_property_all_policies() {
+        // THE paper guarantee: same ε ⇒ every predictive policy returns
+        // bitwise the ancestral sample.
+        check("predictive-exactness", 12, |g| {
+            let c = g.usize_in(1, 4);
+            let pixels = g.usize_in(2, 7);
+            let k = g.usize_in(2, 7);
+            let strength = g.f64_in(0.0, 4.0) as f32;
+            let model = MockArm::new(1, c, pixels, k, 2, strength, g.rng.next_u64());
+            let seed = g.rng.next_u64();
+            let d = model.dim();
+            let reference = ancestral_sample(&model, &JobNoise::new(seed, 0, d, k)).unwrap();
+            for fc in policies() {
+                let name = fc.name();
+                let mut ps = PredictiveSampler::new(&model, fc);
+                ps.reset_slot(0, JobNoise::new(seed, 0, d, k));
+                for _ in 0..=d {
+                    ps.step().map_err(|e| e.to_string())?;
+                    if ps.slot_done(0) {
+                        break;
+                    }
+                }
+                let r = ps.take_result(0).ok_or("did not converge")?;
+                prop_assert_eq!(&r.x, &reference.x, "policy {} diverged from ancestral", name);
+                prop_assert!(r.iterations <= d, "policy {}: {} > d={}", name, r.iterations, d);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batched_equals_single() {
+        // Job noise is keyed by job id, so the same job sampled in any
+        // batch slot yields the same sample.
+        let model1 = MockArm::new(1, 3, 5, 4, 2, 2.0, 9);
+        let model4 = MockArm::new(4, 3, 5, 4, 2, 2.0, 9);
+        let d = model1.dim();
+        let mut singles = Vec::new();
+        for id in 0..4u64 {
+            let mut ps = PredictiveSampler::new(&model1, Box::new(forecast::FpiReuse));
+            ps.reset_slot(0, JobNoise::new(42, id, d, 4));
+            while !ps.slot_done(0) {
+                ps.step().unwrap();
+            }
+            singles.push(ps.take_result(0).unwrap().x);
+        }
+        let mut ps = PredictiveSampler::new(&model4, Box::new(forecast::FpiReuse));
+        let batch = ps.run_sync(42).unwrap();
+        for (id, job) in batch.jobs.iter().enumerate() {
+            assert_eq!(job.x, singles[id], "slot {id}");
+        }
+    }
+
+    #[test]
+    fn converge_iter_and_mistakes_consistent() {
+        check("trace-consistency", 10, |g| {
+            let model = MockArm::new(1, 2, g.usize_in(2, 6), g.usize_in(2, 5), 2, 2.5, g.rng.next_u64());
+            let d = model.dim();
+            let mut ps = PredictiveSampler::new(&model, Box::new(forecast::FpiReuse));
+            ps.reset_slot(0, JobNoise::new(g.rng.next_u64(), 0, d, model.categories()));
+            while !ps.slot_done(0) {
+                ps.step().map_err(|e| e.to_string())?;
+            }
+            let r = ps.take_result(0).unwrap();
+            // every variable finalized at some pass in [1, iterations]
+            prop_assert!(
+                r.converge_iter.iter().all(|&it| it >= 1 && it as usize <= r.iterations),
+                "converge_iter out of range"
+            );
+            // converge passes are non-decreasing along the sequence
+            prop_assert!(
+                r.converge_iter.windows(2).all(|w| w[0] <= w[1]),
+                "convergence must be monotone in raster order: {:?}",
+                r.converge_iter
+            );
+            // number of mistakes equals iterations-adjacent rejections and
+            // is bounded by iterations (at most one mistake per pass).
+            let n_mist: usize = r.mistakes.iter().map(|&m| m as usize).sum();
+            prop_assert!(n_mist <= r.iterations, "mistakes {} > iters {}", n_mist, r.iterations);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weak_model_converges_fast_strong_model_slow() {
+        let weak = MockArm::new(1, 3, 8, 4, 1, 0.1, 5);
+        let strong = MockArm::new(1, 3, 8, 4, 1, 8.0, 5);
+        let d = weak.dim();
+        let iters = |m: &MockArm| {
+            let mut ps = PredictiveSampler::new(m, Box::new(forecast::FpiReuse));
+            ps.reset_slot(0, JobNoise::new(3, 0, d, 4));
+            while !ps.slot_done(0) {
+                ps.step().unwrap();
+            }
+            ps.take_result(0).unwrap().iterations
+        };
+        assert!(iters(&weak) <= iters(&strong), "coupling should slow FPI");
+        assert!(iters(&weak) < d / 2, "near-iid model should converge quickly");
+    }
+
+    #[test]
+    fn noreparam_still_valid_but_slow() {
+        // The ablation must still produce a valid model sample (all values
+        // in range, convergence <= d) even though noise is redrawn.
+        let model = MockArm::new(1, 3, 6, 5, 1, 3.0, 11);
+        let d = model.dim();
+        let mut ps = PredictiveSampler::new(&model, Box::new(forecast::NoReparam));
+        ps.reset_slot(0, JobNoise::new(8, 0, d, 5));
+        for _ in 0..=d {
+            ps.step().unwrap();
+            if ps.slot_done(0) {
+                break;
+            }
+        }
+        let r = ps.take_result(0).unwrap();
+        assert!(r.x.iter().all(|&v| v >= 0 && v < 5));
+        assert!(r.iterations <= d);
+    }
+
+    #[test]
+    fn slot_refill_mid_batch() {
+        // Finishing one slot and installing a new job must not disturb the
+        // other slots' samples (scheduler invariant).
+        let model = MockArm::new(2, 2, 5, 4, 1, 2.0, 13);
+        let d = model.dim();
+        let k = 4;
+        // Reference: job 7 sampled alone.
+        let model1 = MockArm::new(1, 2, 5, 4, 1, 2.0, 13);
+        let mut ps1 = PredictiveSampler::new(&model1, Box::new(forecast::FpiReuse));
+        ps1.reset_slot(0, JobNoise::new(1, 7, d, k));
+        while !ps1.slot_done(0) {
+            ps1.step().unwrap();
+        }
+        let ref7 = ps1.take_result(0).unwrap().x;
+
+        let mut ps = PredictiveSampler::new(&model, Box::new(forecast::FpiReuse));
+        ps.reset_slot(0, JobNoise::new(1, 0, d, k));
+        ps.reset_slot(1, JobNoise::new(1, 7, d, k));
+        // step until slot 1 finishes; then refill slot 1 with job 9.
+        while !ps.slot_done(1) {
+            ps.step().unwrap();
+        }
+        let got7 = ps.take_result(1).unwrap().x;
+        assert_eq!(got7, ref7, "slot placement must not change the sample");
+        ps.reset_slot(1, JobNoise::new(1, 9, d, k));
+        while !ps.slot_done(0) || !ps.slot_done(1) {
+            ps.step().unwrap();
+        }
+        assert!(ps.take_result(0).is_some());
+        assert!(ps.take_result(1).is_some());
+    }
+}

@@ -1,0 +1,127 @@
+//! Figure-building from sampling traces: forecast-mistake maps (Figs. 3-5)
+//! and convergence-iteration maps (Fig. 6).
+
+use super::JobResult;
+use crate::substrate::image::Image;
+
+/// Per-pixel fraction of mispredicted channels, `[P]` in [0, 1]
+/// (paper Figs. 3-4: 1/3, 2/3, 3/3 red for color images).
+pub fn mistake_fractions(job: &JobResult, channels: usize) -> Vec<f32> {
+    let pixels = job.mistakes.len() / channels;
+    (0..pixels)
+        .map(|p| {
+            let wrong: u32 = (0..channels).map(|c| job.mistakes[p * channels + c] as u32).sum();
+            wrong as f32 / channels as f32
+        })
+        .collect()
+}
+
+/// Per-pixel convergence iteration averaged over channels, `[P]`
+/// (paper Fig. 6 input, before batch averaging).
+pub fn convergence_map(job: &JobResult, channels: usize) -> Vec<f32> {
+    let pixels = job.converge_iter.len() / channels;
+    (0..pixels)
+        .map(|p| {
+            let s: u32 = (0..channels).map(|c| job.converge_iter[p * channels + c]).sum();
+            s as f32 / channels as f32
+        })
+        .collect()
+}
+
+/// Average convergence maps over a batch of jobs (Fig. 6 averages over 32
+/// samples and all channels).
+pub fn mean_convergence_map(jobs: &[JobResult], channels: usize) -> Vec<f32> {
+    assert!(!jobs.is_empty());
+    let m0 = convergence_map(&jobs[0], channels);
+    let mut acc = vec![0f32; m0.len()];
+    for job in jobs {
+        for (a, v) in acc.iter_mut().zip(convergence_map(job, channels)) {
+            *a += v;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a /= jobs.len() as f32;
+    }
+    acc
+}
+
+/// Render a grayscale sample (1-channel models, values in [0, K)).
+pub fn render_gray(job: &JobResult, w: usize, h: usize, k: usize) -> Image {
+    let vals: Vec<f32> = job.x.iter().map(|&v| v as f32 / (k - 1).max(1) as f32).collect();
+    Image::from_gray(w, h, &vals)
+}
+
+/// Render an RGB sample from the channel-innermost flat layout.
+pub fn render_rgb(job: &JobResult, w: usize, h: usize, channels: usize, k: usize) -> Image {
+    assert!(channels >= 3);
+    let mut im = Image::new(w, h);
+    for y in 0..h {
+        for x in 0..w {
+            let p = y * w + x;
+            let px = [
+                (job.x[p * channels] as f32 / (k - 1) as f32 * 255.0) as u8,
+                (job.x[p * channels + 1] as f32 / (k - 1) as f32 * 255.0) as u8,
+                (job.x[p * channels + 2] as f32 / (k - 1) as f32 * 255.0) as u8,
+            ];
+            im.set(x, y, px);
+        }
+    }
+    im
+}
+
+/// Sample + red mistake overlay (the paper's figure panels).
+pub fn render_with_mistakes(job: &JobResult, w: usize, h: usize, channels: usize, k: usize) -> Image {
+    let mut im = if channels >= 3 {
+        render_rgb(job, w, h, channels, k)
+    } else {
+        render_gray(job, w, h, k)
+    };
+    im.overlay_mistakes(&mistake_fractions(job, channels));
+    im
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(mistakes: Vec<u8>, converge: Vec<u32>, x: Vec<i32>) -> JobResult {
+        JobResult { x, iterations: 5, mistakes, converge_iter: converge }
+    }
+
+    #[test]
+    fn fractions_per_pixel() {
+        // 2 pixels x 3 channels
+        let j = job(vec![1, 1, 1, 0, 1, 0], vec![1; 6], vec![0; 6]);
+        assert_eq!(mistake_fractions(&j, 3), vec![1.0, 1.0 / 3.0]);
+    }
+
+    #[test]
+    fn convergence_average() {
+        let j1 = job(vec![0; 4], vec![1, 1, 3, 3], vec![0; 4]);
+        let j2 = job(vec![0; 4], vec![1, 1, 5, 5], vec![0; 4]);
+        let m = mean_convergence_map(&[j1, j2], 2);
+        assert_eq!(m, vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn gray_and_rgb_render() {
+        let j = job(vec![0; 4], vec![1; 4], vec![0, 1, 1, 0]);
+        let im = render_gray(&j, 2, 2, 2);
+        assert_eq!(im.get(1, 0), [255, 255, 255]);
+
+        let j3 = job(vec![0; 12], vec![1; 12], vec![255, 0, 0, 0, 255, 0, 0, 0, 255, 255, 255, 255]);
+        let im = render_rgb(&j3, 2, 2, 3, 256);
+        assert_eq!(im.get(0, 0), [255, 0, 0]);
+        assert_eq!(im.get(1, 0), [0, 255, 0]);
+        assert_eq!(im.get(0, 1), [0, 0, 255]);
+        assert_eq!(im.get(1, 1), [255, 255, 255]);
+    }
+
+    #[test]
+    fn mistake_overlay_reddens() {
+        let j = job(vec![1, 0, 0, 0], vec![1; 4], vec![1, 1, 1, 1]);
+        let im = render_with_mistakes(&j, 2, 2, 1, 2);
+        assert_eq!(im.get(0, 0), [255, 0, 0]); // mistaken pixel fully red
+        assert_eq!(im.get(1, 0), [255, 255, 255]);
+    }
+}

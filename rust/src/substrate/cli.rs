@@ -1,0 +1,150 @@
+//! Tiny argv parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Unknown-flag detection is the caller's job via `finish()`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (usually `std::env::args().skip(n)`).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let val = if let Some(v) = inline_val {
+                    Some(v)
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    it.next()
+                } else {
+                    None
+                };
+                out.flags.entry(key).or_default().push(val.unwrap_or_default());
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    /// Present-or-not boolean flag (`--verbose`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains_key(key)
+    }
+
+    /// String value with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .filter(|s| !s.is_empty())
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string value.
+    pub fn opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).and_then(|v| v.last()).filter(|s| !s.is_empty()).cloned()
+    }
+
+    /// Parsed numeric value with default.
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list, e.g. `--models cifar8,svhn8`.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Error on flags that were provided but never queried.
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> = self.flags.keys().filter(|k| !seen.contains(k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flags: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        // Note: a non-flag token directly after `--verbose` would be
+        // consumed as its value (documented ambiguity) — positionals come
+        // first, or use `--key=value`.
+        let a = args("sample out.ppm --model cifar8 --batch 32 --verbose");
+        assert_eq!(a.positional, vec!["sample", "out.ppm"]);
+        assert_eq!(a.get("model", "x"), "cifar8");
+        assert_eq!(a.num::<usize>("batch", 1), 32);
+        assert!(a.flag("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn eq_syntax_and_defaults() {
+        let a = args("--seeds=5");
+        assert_eq!(a.num::<u64>("seeds", 1), 5);
+        assert_eq!(a.get("missing", "dflt"), "dflt");
+        assert_eq!(a.opt("missing"), None);
+    }
+
+    #[test]
+    fn lists() {
+        let a = args("--models cifar8,svhn8, mnist_bin");
+        // note: space after comma splits the token; only the attached ones count
+        assert_eq!(a.list("models"), vec!["cifar8", "svhn8"]);
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = args("--oops 1 --fine 2");
+        let _ = a.get("fine", "");
+        let err = a.finish().unwrap_err();
+        assert!(err.contains("oops"));
+    }
+
+    #[test]
+    fn flag_without_value_before_flag() {
+        let a = args("--dry-run --n 3");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.num::<u32>("n", 0), 3);
+    }
+}

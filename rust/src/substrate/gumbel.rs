@@ -1,0 +1,179 @@
+//! Gumbel-max reparametrization noise (paper §2.2, Appendix B).
+//!
+//! The coordinator owns the reparametrization: it samples ε ~ G^{d×K}
+//! once per job and computes `x_i = argmax_c(logp_i,c + ε_i,c)` against the
+//! ARM's log-probs. Because ε is fixed across fixed-point iterations, the
+//! sampling pass is a deterministic function — the insight that lets
+//! predictive sampling verify forecasts by exact value equality.
+//!
+//! `posterior_gumbel` mirrors Appendix B (used by tests and by tooling
+//! that needs noise consistent with a given sample); the python twin lives
+//! in `python/compile/gumbel.py`.
+
+use super::rng::Rng;
+
+/// One standard Gumbel(0,1) draw.
+#[inline]
+pub fn sample_gumbel(rng: &mut Rng) -> f64 {
+    -(-rng.uniform_open0().ln()).ln()
+}
+
+/// Fill a buffer with standard Gumbel noise (f32 storage, f64 math).
+pub fn fill_gumbel(rng: &mut Rng, out: &mut [f32]) {
+    for v in out.iter_mut() {
+        *v = sample_gumbel(rng) as f32;
+    }
+}
+
+/// `argmax_c(logp[c] + eps[c])` — the reparametrized categorical sample.
+#[inline]
+pub fn gumbel_argmax(logp: &[f32], eps: &[f32]) -> usize {
+    debug_assert_eq!(logp.len(), eps.len());
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (c, (&lp, &e)) in logp.iter().zip(eps.iter()).enumerate() {
+        let v = lp + e;
+        if v > best_v {
+            best_v = v;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Plain argmax over logp (the "without reparametrization" ablation's
+/// greedy forecast, Table 3).
+#[inline]
+pub fn argmax(logp: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (c, &lp) in logp.iter().enumerate() {
+        if lp > best_v {
+            best_v = lp;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Sample Gumbel(mu) truncated to (-inf, bound] via the max-coupling
+/// identity `TG = -log(exp(-bound) + exp(-G))` (Maddison et al. 2014).
+#[inline]
+fn trunc_gumbel(rng: &mut Rng, mu: f64, bound: f64) -> f64 {
+    let g = mu + sample_gumbel(rng);
+    // -logaddexp(-bound, -g), computed stably.
+    let (hi, lo) = if -bound > -g { (-bound, -g) } else { (-g, -bound) };
+    -(hi + (1.0 + (lo - hi).exp()).ln())
+}
+
+/// Posterior noise p(ε | x) for one categorical: given log-probs `logp`
+/// and the observed sample `x`, returns ε such that
+/// `gumbel_argmax(logp, ε) == x` and every component is marginally G(0,1).
+///
+/// Uses the max-trick decomposition (Maddison et al. 2014; Kool et al.
+/// 2019): the maximum `M = max_c(μ_c + ε_c)` is Gumbel(logsumexp μ) and
+/// independent of the argmax, so sample M first, pin the winning
+/// coordinate's value to it, and truncate the losers below it.
+pub fn posterior_gumbel(rng: &mut Rng, logp: &[f32], x: usize, out: &mut [f32]) {
+    let mu_x = logp[x] as f64;
+    // logsumexp(μ); 0 for normalized log-probs, computed for robustness.
+    let mx = logp.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = mx + logp.iter().map(|&l| ((l as f64) - mx).exp()).sum::<f64>().ln();
+    let max_val = lse + sample_gumbel(rng);
+    for (c, (&lp, o)) in logp.iter().zip(out.iter_mut()).enumerate() {
+        if c == x {
+            *o = (max_val - mu_x) as f32;
+        } else {
+            *o = (trunc_gumbel(rng, lp as f64, max_val) - lp as f64) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    const EULER: f64 = 0.577_215_664_901_532_9;
+
+    #[test]
+    fn gumbel_moments() {
+        let mut rng = Rng::new(0);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = sample_gumbel(&mut rng);
+            s += g;
+            s2 += g * g;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - EULER).abs() < 0.02, "mean {mean}");
+        assert!((var - std::f64::consts::PI.powi(2) / 6.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn argmax_matches_frequencies() {
+        // Gumbel-max over log [0.5, 0.3, 0.2] reproduces the categorical.
+        let logp: Vec<f32> = [0.5f32, 0.3, 0.2].iter().map(|p| p.ln()).collect();
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 3];
+        let n = 50_000;
+        let mut eps = [0f32; 3];
+        for _ in 0..n {
+            fill_gumbel(&mut rng, &mut eps);
+            counts[gumbel_argmax(&logp, &eps)] += 1;
+        }
+        for (c, &p) in [0.5f64, 0.3, 0.2].iter().enumerate() {
+            let f = counts[c] as f64 / n as f64;
+            assert!((f - p).abs() < 0.01, "cat {c}: {f} vs {p}");
+        }
+    }
+
+    #[test]
+    fn posterior_is_argmax_consistent() {
+        let mut rng = Rng::new(2);
+        for k in [2usize, 5, 64, 256] {
+            let mut logits: Vec<f32> = (0..k).map(|_| rng.uniform() as f32 * 4.0 - 2.0).collect();
+            // log-softmax normalize
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = logits.iter().map(|&l| (l - m).exp()).sum::<f32>().ln() + m;
+            for l in logits.iter_mut() {
+                *l -= z;
+            }
+            let mut eps = vec![0f32; k];
+            for x in 0..k.min(8) {
+                posterior_gumbel(&mut rng, &logits, x, &mut eps);
+                assert_eq!(gumbel_argmax(&logits, &eps), x, "k={k} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn posterior_marginal_is_gumbel() {
+        // x ~ model, then ε|x: marginals must be standard Gumbel.
+        let probs = [0.4f64, 0.35, 0.25];
+        let logp: Vec<f32> = probs.iter().map(|p| p.ln() as f32).collect();
+        let mut rng = Rng::new(3);
+        let n = 60_000;
+        let mut sums = [0.0f64; 3];
+        let mut eps = [0f32; 3];
+        let mut post = [0f32; 3];
+        for _ in 0..n {
+            fill_gumbel(&mut rng, &mut eps);
+            let x = gumbel_argmax(&logp, &eps);
+            posterior_gumbel(&mut rng, &logp, x, &mut post);
+            for c in 0..3 {
+                sums[c] += post[c] as f64;
+            }
+        }
+        for c in 0..3 {
+            let mean = sums[c] / n as f64;
+            assert!((mean - EULER).abs() < 0.03, "cat {c} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn plain_argmax() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), 1);
+        assert_eq!(argmax(&[-1.0, -2.0]), 0);
+    }
+}

@@ -1,0 +1,230 @@
+//! PPM/PGM figure output: samples, red forecast-mistake overlays (paper
+//! Figs. 3-5), and log-scale convergence heatmaps (Fig. 6).
+//!
+//! Binary PPM (P6) needs no external codecs and is readable by every image
+//! tool; figures are written under `results/`.
+
+use std::io::Write;
+use std::path::Path;
+
+/// 8-bit RGB raster.
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub w: usize,
+    pub h: usize,
+    pub data: Vec<[u8; 3]>, // row-major
+}
+
+impl Image {
+    pub fn new(w: usize, h: usize) -> Image {
+        Image { w, h, data: vec![[0, 0, 0]; w * h] }
+    }
+
+    pub fn set(&mut self, x: usize, y: usize, px: [u8; 3]) {
+        self.data[y * self.w + x] = px;
+    }
+    pub fn get(&self, x: usize, y: usize) -> [u8; 3] {
+        self.data[y * self.w + x]
+    }
+
+    /// From per-pixel grayscale values in [0, 1].
+    pub fn from_gray(w: usize, h: usize, vals: &[f32]) -> Image {
+        assert_eq!(vals.len(), w * h);
+        let mut im = Image::new(w, h);
+        for (i, &v) in vals.iter().enumerate() {
+            let g = (v.clamp(0.0, 1.0) * 255.0) as u8;
+            im.data[i] = [g, g, g];
+        }
+        im
+    }
+
+    /// From per-pixel RGB values in [0, 1], channel-major [3, h, w].
+    pub fn from_rgb_chw(w: usize, h: usize, vals: &[f32]) -> Image {
+        assert_eq!(vals.len(), 3 * w * h);
+        let mut im = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                let px = [
+                    (vals[y * w + x].clamp(0.0, 1.0) * 255.0) as u8,
+                    (vals[h * w + y * w + x].clamp(0.0, 1.0) * 255.0) as u8,
+                    (vals[2 * h * w + y * w + x].clamp(0.0, 1.0) * 255.0) as u8,
+                ];
+                im.set(x, y, px);
+            }
+        }
+        im
+    }
+
+    /// Red-shaded mistake overlay (paper Figs. 3-4): `frac` in [0,1] is the
+    /// fraction of channels mispredicted at each pixel; 0 keeps the base
+    /// pixel, 1 is fully red.
+    pub fn overlay_mistakes(&mut self, frac: &[f32]) {
+        assert_eq!(frac.len(), self.w * self.h);
+        for (px, &f) in self.data.iter_mut().zip(frac.iter()) {
+            let f = f.clamp(0.0, 1.0);
+            if f > 0.0 {
+                px[0] = (px[0] as f32 * (1.0 - f) + 255.0 * f) as u8;
+                px[1] = (px[1] as f32 * (1.0 - f)) as u8;
+                px[2] = (px[2] as f32 * (1.0 - f)) as u8;
+            }
+        }
+    }
+
+    /// Log-scale heat colormap (black → red → yellow → white), as used for
+    /// the Fig. 6 convergence comparison. `vals` are positive iteration
+    /// counts; `vmax` the color scale maximum.
+    pub fn from_heat_log(w: usize, h: usize, vals: &[f32], vmax: f32) -> Image {
+        assert_eq!(vals.len(), w * h);
+        let lmax = (1.0 + vmax.max(1.0)).ln();
+        let mut im = Image::new(w, h);
+        for (i, &v) in vals.iter().enumerate() {
+            let t = ((1.0 + v.max(0.0)).ln() / lmax).clamp(0.0, 1.0);
+            im.data[i] = heat_color(t);
+        }
+        im
+    }
+
+    /// Nearest-neighbour upscale (for 8×8 latent maps shown at 32×32).
+    pub fn upscale(&self, factor: usize) -> Image {
+        let mut out = Image::new(self.w * factor, self.h * factor);
+        for y in 0..out.h {
+            for x in 0..out.w {
+                out.set(x, y, self.get(x / factor, y / factor));
+            }
+        }
+        out
+    }
+
+    /// Tile a gallery of images into a grid with 1px separators.
+    pub fn grid(tiles: &[Image], cols: usize) -> Image {
+        assert!(!tiles.is_empty());
+        let (tw, th) = (tiles[0].w, tiles[0].h);
+        let rows = tiles.len().div_ceil(cols);
+        let mut out = Image::new(cols * (tw + 1) + 1, rows * (th + 1) + 1);
+        for px in out.data.iter_mut() {
+            *px = [40, 40, 40];
+        }
+        for (i, t) in tiles.iter().enumerate() {
+            let (r, c) = (i / cols, i % cols);
+            for y in 0..th {
+                for x in 0..tw {
+                    out.set(c * (tw + 1) + 1 + x, r * (th + 1) + 1 + y, t.get(x, y));
+                }
+            }
+        }
+        out
+    }
+
+    /// Write binary PPM (P6).
+    pub fn write_ppm<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        write!(f, "P6\n{} {}\n255\n", self.w, self.h)?;
+        for px in &self.data {
+            f.write_all(px)?;
+        }
+        Ok(())
+    }
+
+    /// Coarse ASCII rendering for terminal output (benches print these).
+    pub fn to_ascii(&self) -> String {
+        const RAMP: &[u8] = b" .:-=+*#%@";
+        let mut s = String::new();
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let [r, g, b] = self.get(x, y);
+                let lum = (0.3 * r as f32 + 0.6 * g as f32 + 0.1 * b as f32) / 255.0;
+                let idx = ((lum * (RAMP.len() - 1) as f32) as usize).min(RAMP.len() - 1);
+                s.push(RAMP[idx] as char);
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+fn heat_color(t: f32) -> [u8; 3] {
+    // piecewise black -> red -> yellow -> white
+    let t = t.clamp(0.0, 1.0);
+    if t < 1.0 / 3.0 {
+        let u = t * 3.0;
+        [(u * 255.0) as u8, 0, 0]
+    } else if t < 2.0 / 3.0 {
+        let u = (t - 1.0 / 3.0) * 3.0;
+        [255, (u * 255.0) as u8, 0]
+    } else {
+        let u = (t - 2.0 / 3.0) * 3.0;
+        [255, 255, (u * 255.0) as u8]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gray_roundtrip() {
+        let im = Image::from_gray(2, 2, &[0.0, 0.5, 1.0, 0.25]);
+        assert_eq!(im.get(0, 0), [0, 0, 0]);
+        assert_eq!(im.get(1, 1), [63, 63, 63]);
+        assert_eq!(im.get(0, 1), [255, 255, 255]);
+    }
+
+    #[test]
+    fn rgb_chw_layout() {
+        // r=1 at (0,0), g=1 at (1,0), b=1 at (0,1)
+        let mut vals = vec![0.0f32; 12];
+        vals[0] = 1.0; // r channel, pixel (0,0)
+        vals[4 + 1] = 1.0; // g channel, pixel (1,0)
+        vals[8 + 2] = 1.0; // b channel, pixel (0,1)
+        let im = Image::from_rgb_chw(2, 2, &vals);
+        assert_eq!(im.get(0, 0), [255, 0, 0]);
+        assert_eq!(im.get(1, 0), [0, 255, 0]);
+        assert_eq!(im.get(0, 1), [0, 0, 255]);
+    }
+
+    #[test]
+    fn mistakes_shading() {
+        let mut im = Image::from_gray(2, 1, &[1.0, 1.0]);
+        im.overlay_mistakes(&[0.0, 1.0]);
+        assert_eq!(im.get(0, 0), [255, 255, 255]);
+        assert_eq!(im.get(1, 0), [255, 0, 0]);
+    }
+
+    #[test]
+    fn heatmap_monotone() {
+        let im = Image::from_heat_log(3, 1, &[0.0, 10.0, 100.0], 100.0);
+        let lum = |p: [u8; 3]| p[0] as u32 + p[1] as u32 + p[2] as u32;
+        assert!(lum(im.get(0, 0)) < lum(im.get(1, 0)));
+        assert!(lum(im.get(1, 0)) < lum(im.get(2, 0)));
+    }
+
+    #[test]
+    fn upscale_and_grid() {
+        let im = Image::from_gray(2, 2, &[0.0, 1.0, 1.0, 0.0]).upscale(3);
+        assert_eq!((im.w, im.h), (6, 6));
+        assert_eq!(im.get(4, 0), [255, 255, 255]);
+        let g = Image::grid(&[im.clone(), im.clone(), im], 2);
+        assert_eq!(g.w, 2 * 7 + 1);
+        assert_eq!(g.h, 2 * 7 + 1);
+    }
+
+    #[test]
+    fn ppm_write(
+    ) {
+        let dir = std::env::temp_dir().join("predsamp_img_test");
+        let p = dir.join("t.ppm");
+        Image::from_gray(4, 4, &[0.5; 16]).write_ppm(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n4 4\n255\n"));
+        assert_eq!(bytes.len(), 11 + 48);
+    }
+
+    #[test]
+    fn ascii_render() {
+        let s = Image::from_gray(2, 1, &[0.0, 1.0]).to_ascii();
+        assert_eq!(s, " @\n");
+    }
+}

@@ -1,0 +1,20 @@
+//! Offline-friendly substrates.
+//!
+//! This build environment has no crates.io access beyond the `xla` crate's
+//! vendored closure, so the usual ecosystem crates are re-implemented here
+//! at the scale this project needs: [`rng`] (rand), [`json`] (serde_json),
+//! [`cli`] (clap), [`stats`]/[`timer`] (criterion internals),
+//! [`threadpool`] (tokio's blocking pool), [`proptest_lite`] (proptest),
+//! plus domain substrates [`gumbel`] (reparametrization noise) and
+//! [`image`] (PPM figure output).
+
+pub mod cli;
+pub mod gumbel;
+pub mod image;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+pub mod tensor;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,119 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |gen| ...)` runs a property over `cases` seeded
+//! random inputs. On failure it reports the failing case's seed so the
+//! case can be replayed with `check_seed`. No shrinking — cases here are
+//! small enough to debug directly from the seed.
+
+use super::rng::Rng;
+
+/// Random-input generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo as i64, hi as i64) as usize
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f64_in(lo as f64, hi as f64) as f32).collect()
+    }
+    pub fn vec_i32_in(&mut self, n: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..n).map(|_| self.rng.range(lo as i64, hi as i64) as i32).collect()
+    }
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0, xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` seeded random generators; panics with the
+/// failing seed on the first property violation.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = 0x5EED_0000u64;
+    for case in 0..cases {
+        let seed = base_seed + case as u64;
+        let mut g = Gen { rng: Rng::for_stream(seed, 0), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at case {case} (replay seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Replay a single case by seed (for debugging a reported failure).
+pub fn check_seed<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen { rng: Rng::for_stream(seed, 0), case: 0 };
+    if let Err(msg) = prop(&mut g) {
+        panic!("property '{name}' failed (seed {seed}): {msg}");
+    }
+}
+
+/// Assertion helpers returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)*) => {
+        if $a != $b {
+            return Err(format!("{:?} != {:?}: {}", $a, $b, format!($($fmt)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        check("sum-commutes", 25, |g| {
+            **counter.borrow_mut() += 1;
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            prop_assert!((a + b - (b + a)).abs() < 1e-12, "{a} {b}");
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("gen-bounds", 50, |g| {
+            let n = g.usize_in(1, 10);
+            prop_assert!((1..10).contains(&n), "usize_in out of range: {n}");
+            let v = g.vec_i32_in(n, -3, 7);
+            prop_assert!(v.iter().all(|&x| (-3..7).contains(&x)), "vec_i32_in out of range");
+            let f = g.vec_f32(n, 0.0, 1.0);
+            prop_assert!(f.iter().all(|&x| (0.0..=1.0).contains(&x)), "vec_f32 out of range");
+            Ok(())
+        });
+    }
+}

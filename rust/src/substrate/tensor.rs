@@ -1,0 +1,92 @@
+//! Small dense-tensor helpers for the hot path: flat buffers + explicit
+//! strides, no generic ndarray machinery. The sampler's inner loops index
+//! `[B, d, K]` log-prob blocks and `[B, P, T, K]` forecast blocks; these
+//! helpers keep that indexing readable and bounds-checked in debug builds.
+
+/// Row-major view over `[B, d, K]` f32 data.
+#[derive(Clone, Copy, Debug)]
+pub struct View3<'a> {
+    pub data: &'a [f32],
+    pub d1: usize,
+    pub d2: usize,
+}
+
+impl<'a> View3<'a> {
+    pub fn new(data: &'a [f32], d0: usize, d1: usize, d2: usize) -> View3<'a> {
+        debug_assert_eq!(data.len(), d0 * d1 * d2);
+        View3 { data, d1, d2 }
+    }
+    /// Row `[i0, i1, :]`.
+    #[inline]
+    pub fn row(&self, i0: usize, i1: usize) -> &'a [f32] {
+        let off = (i0 * self.d1 + i1) * self.d2;
+        &self.data[off..off + self.d2]
+    }
+}
+
+/// Row-major view over `[B, P, T, K]` f32 data.
+#[derive(Clone, Copy, Debug)]
+pub struct View4<'a> {
+    pub data: &'a [f32],
+    pub d1: usize,
+    pub d2: usize,
+    pub d3: usize,
+}
+
+impl<'a> View4<'a> {
+    pub fn new(data: &'a [f32], d0: usize, d1: usize, d2: usize, d3: usize) -> View4<'a> {
+        debug_assert_eq!(data.len(), d0 * d1 * d2 * d3);
+        View4 { data, d1, d2, d3 }
+    }
+    /// Row `[i0, i1, i2, :]`.
+    #[inline]
+    pub fn row(&self, i0: usize, i1: usize, i2: usize) -> &'a [f32] {
+        let off = ((i0 * self.d1 + i1) * self.d2 + i2) * self.d3;
+        &self.data[off..off + self.d3]
+    }
+}
+
+/// Flat index for `(pixel, channel)` in the raster-scan,
+/// channel-innermost layout shared with the python side.
+#[inline]
+pub fn flat_index(pixel: usize, channel: usize, channels: usize) -> usize {
+    pixel * channels + channel
+}
+
+/// Inverse of `flat_index`: (pixel, channel).
+#[inline]
+pub fn pixel_channel(flat: usize, channels: usize) -> (usize, usize) {
+    (flat / channels, flat % channels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view3_rows() {
+        let data: Vec<f32> = (0..24).map(|x| x as f32).collect();
+        let v = View3::new(&data, 2, 3, 4);
+        assert_eq!(v.row(0, 0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(v.row(1, 2), &[20.0, 21.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    fn view4_rows() {
+        let data: Vec<f32> = (0..48).map(|x| x as f32).collect();
+        let v = View4::new(&data, 2, 3, 2, 4);
+        assert_eq!(v.row(0, 0, 0), &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(v.row(1, 2, 1), &[44.0, 45.0, 46.0, 47.0]);
+    }
+
+    #[test]
+    fn flat_layout_roundtrip() {
+        for p in 0..10 {
+            for c in 0..3 {
+                let f = flat_index(p, c, 3);
+                assert_eq!(pixel_channel(f, 3), (p, c));
+            }
+        }
+        assert_eq!(flat_index(5, 2, 3), 17);
+    }
+}

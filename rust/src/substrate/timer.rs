@@ -1,0 +1,68 @@
+//! Wall-clock timing helpers for the bench harness and metrics.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Human-friendly duration: "1.23s", "45.6ms", "789µs".
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 100.0 {
+        format!("{secs:.0}s")
+    } else if secs >= 1.0 {
+        format!("{secs:.2}s")
+    } else if secs >= 1e-3 {
+        format!("{:.1}ms", secs * 1e3)
+    } else {
+        format!("{:.0}µs", secs * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.secs() >= 0.002);
+    }
+
+    #[test]
+    fn restart_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let e = t.restart();
+        assert!(e.as_secs_f64() >= 0.002);
+        assert!(t.secs() < e.as_secs_f64());
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(123.4), "123s");
+        assert_eq!(fmt_duration(1.234), "1.23s");
+        assert_eq!(fmt_duration(0.0456), "45.6ms");
+        assert_eq!(fmt_duration(0.000789), "789µs");
+    }
+}

@@ -1,0 +1,186 @@
+//! Integration tests over the compiled artifacts: the full L3→runtime→HLO
+//! path, cross-checking the paper's correctness guarantees end to end.
+//! All tests no-op (with a note) if `make artifacts` hasn't run.
+
+use predsamp::coordinator::config::Method;
+use predsamp::coordinator::engine::Engine;
+use predsamp::coordinator::scheduler;
+use predsamp::runtime::artifact::Manifest;
+use predsamp::sampler::forecast;
+use predsamp::sampler::noise::JobNoise;
+use predsamp::sampler::predictive::PredictiveSampler;
+
+fn manifest() -> Option<Manifest> {
+    let dir = predsamp::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(Manifest::load(&dir).expect("manifest parses"))
+    } else {
+        eprintln!("skipping integration test: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn exactness_across_methods_and_models() {
+    // The central guarantee (paper §2.2): identical ε ⇒ identical sample,
+    // for every forecasting policy, through the real compiled artifacts.
+    let Some(man) = manifest() else { return };
+    for model in ["mnist_bin", "cifar5", "latent_cifar"] {
+        let eng = Engine::load(&man, model).unwrap();
+        let base = eng.sample_batch(Method::Baseline, 1, 3).unwrap();
+        for method in [
+            Method::Zeros,
+            Method::PredictLast,
+            Method::Fpi,
+            Method::Forecast { t_use: 1 },
+            Method::Forecast { t_use: 5 },
+        ] {
+            let res = eng.sample_batch(method, 1, 3).unwrap();
+            assert_eq!(res.jobs[0].x, base.jobs[0].x, "{model}/{}", method.label());
+            assert!(res.arm_calls <= eng.info.dim + 1, "{model}/{}", method.label());
+        }
+    }
+}
+
+#[test]
+fn batch32_matches_batch1_samples() {
+    // Job noise is keyed by (seed, job id): the b32 artifact must produce
+    // the same samples as 32 independent b1 runs.
+    let Some(man) = manifest() else { return };
+    let eng = Engine::load(&man, "mnist_bin").unwrap();
+    let b32 = eng.sample_batch(Method::Fpi, 32, 7).unwrap();
+    for id in [0usize, 13, 31] {
+        let exe1 = eng.exe(1).unwrap();
+        let mut ps = PredictiveSampler::new(exe1, Box::new(forecast::FpiReuse));
+        ps.reset_slot(0, JobNoise::new(7, id as u64, eng.info.dim, eng.info.categories));
+        while !ps.slot_done(0) {
+            ps.step().unwrap();
+        }
+        let single = ps.take_result(0).unwrap();
+        assert_eq!(b32.jobs[id].x, single.x, "job {id}");
+    }
+}
+
+#[test]
+fn fpi_saves_calls_on_every_model() {
+    let Some(man) = manifest() else { return };
+    for (model, info) in &man.models {
+        if !info.step_batch_sizes().contains(&1) {
+            continue;
+        }
+        let eng = Engine::load(&man, model).unwrap();
+        let res = eng.sample_batch(Method::Fpi, 1, 0).unwrap();
+        assert!(
+            (res.arm_calls as f64) < 0.8 * info.dim as f64,
+            "{model}: FPI used {}/{} calls",
+            res.arm_calls,
+            info.dim
+        );
+    }
+}
+
+#[test]
+fn noreparam_ablation_collapses_savings() {
+    // Table 3's dominant effect, verified through the artifact: without
+    // reparametrization the forecast agreement is near-chance for K=256.
+    let Some(man) = manifest() else { return };
+    let eng = Engine::load(&man, "cifar8").unwrap();
+    let fpi = eng.sample_batch(Method::Fpi, 1, 1).unwrap();
+    let norep = eng.sample_batch(Method::NoReparam, 1, 1).unwrap();
+    assert!(
+        norep.arm_calls > 2 * fpi.arm_calls,
+        "no-reparam {} should be far worse than fpi {}",
+        norep.arm_calls,
+        fpi.arm_calls
+    );
+}
+
+#[test]
+fn continuous_scheduler_on_artifact() {
+    let Some(man) = manifest() else { return };
+    let eng = Engine::load(&man, "latent_cifar").unwrap();
+    let exe = eng.exe(32).unwrap();
+    let n = 48;
+    let cont = scheduler::run_continuous(exe, Box::new(forecast::FpiReuse), n, 5).unwrap();
+    let sync = scheduler::run_sync_chunks(exe, || Box::new(forecast::FpiReuse), n, 5).unwrap();
+    assert_eq!(cont.results.len(), n);
+    for i in 0..n {
+        assert_eq!(cont.results[i].x, sync.results[i].x, "job {i}");
+    }
+    assert!(cont.total_passes <= sync.total_passes);
+    assert!(cont.occupancy >= sync.occupancy - 1e-9);
+}
+
+#[test]
+fn decoded_latents_are_plausible_images() {
+    let Some(man) = manifest() else { return };
+    let eng = Engine::load(&man, "latent_svhn").unwrap();
+    let res = eng.sample_batch(Method::Fpi, 1, 9).unwrap();
+    let imgs = eng.decode(&[res.jobs[0].x.clone()]).unwrap();
+    let img = &imgs[0];
+    assert!(img.iter().all(|v| v.is_finite()));
+    // trained on [-1,1] images; decodes should stay in a sane envelope
+    assert!(img.iter().all(|&v| (-3.0..=3.0).contains(&v)));
+    let mean = img.iter().sum::<f32>() / img.len() as f32;
+    assert!((-1.0..=1.0).contains(&mean));
+}
+
+#[test]
+fn mistake_and_convergence_traces_consistent() {
+    let Some(man) = manifest() else { return };
+    let eng = Engine::load(&man, "mnist_bin").unwrap();
+    let res = eng.sample_batch(Method::Fpi, 1, 11).unwrap();
+    let job = &res.jobs[0];
+    let d = eng.info.dim;
+    assert_eq!(job.mistakes.len(), d);
+    assert_eq!(job.converge_iter.len(), d);
+    assert!(job.converge_iter.iter().all(|&c| c >= 1 && c as usize <= job.iterations));
+    assert!(job.converge_iter.windows(2).all(|w| w[0] <= w[1]));
+    let n_mistakes: usize = job.mistakes.iter().map(|&m| m as usize).sum();
+    assert!(n_mistakes <= job.iterations);
+    // first variable's value is decided on pass 1
+    assert_eq!(job.converge_iter[0], 1);
+}
+
+#[test]
+fn pallas_artifact_parity() {
+    // DESIGN.md X2: the Pallas-kernel lowering and the reference lowering
+    // of the same trained model must agree through the rust runtime.
+    let Some(man) = manifest() else { return };
+    let info = man.model("mnist_bin").unwrap();
+    let Ok(pfile) = info.file("step_pallas_b1") else { return };
+    let pexe = predsamp::runtime::step::StepExecutable::load(man.path(pfile), info, 1).unwrap();
+    let rexe = predsamp::runtime::step::StepExecutable::load(man.path(info.file("step_b1").unwrap()), info, 1).unwrap();
+    for seed in 0..3u64 {
+        let x: Vec<i32> = (0..info.dim).map(|i| ((i as u64 * 2654435761 + seed * 97) % 2) as i32).collect();
+        let po = pexe.run(&x).unwrap();
+        let ro = rexe.run(&x).unwrap();
+        let max_err = po.logp.iter().zip(&ro.logp).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "seed {seed}: pallas vs ref max err {max_err}");
+    }
+}
+
+#[test]
+fn bpd_through_runtime_matches_manifest() {
+    let Some(man) = manifest() else { return };
+    for model in ["mnist_bin", "cifar5", "latent_cifar"] {
+        let eng = Engine::load(&man, model).unwrap();
+        let bpd = eng.eval_bpd().unwrap();
+        assert!(
+            (bpd - eng.info.bpd).abs() < 0.2,
+            "{model}: rust bpd {bpd:.3} vs python {:.3}",
+            eng.info.bpd
+        );
+    }
+}
+
+#[test]
+fn exe_call_counting() {
+    let Some(man) = manifest() else { return };
+    let eng = Engine::load(&man, "mnist_bin").unwrap();
+    // FPI never reads the forecast heads, so it runs on the logp-only exe.
+    let exe = eng.exe_for(1, false).unwrap();
+    let before = exe.calls();
+    let _ = eng.sample_batch(Method::Fpi, 1, 2).unwrap();
+    assert!(exe.calls() > before, "telemetry must count passes");
+}

@@ -1,0 +1,168 @@
+//! Extended property tests on the sampler/scheduler over the mock ARM —
+//! no artifacts required, so these run everywhere.
+
+use predsamp::coordinator::scheduler;
+use predsamp::sampler::ancestral::ancestral_sample;
+use predsamp::sampler::forecast::{FpiReuse, Learned, NoReparam, PredictLast, Zeros};
+use predsamp::sampler::mock::MockArm;
+use predsamp::sampler::noise::JobNoise;
+use predsamp::sampler::predictive::PredictiveSampler;
+use predsamp::sampler::StepModel;
+use predsamp::substrate::proptest_lite::check;
+use predsamp::{prop_assert, prop_assert_eq};
+
+#[test]
+fn learned_policy_exact_for_any_t_use() {
+    // t_use beyond the trained window must clamp, t_use=0 must behave;
+    // exactness holds regardless of the window size.
+    check("learned-t-use", 8, |g| {
+        let model = MockArm::new(1, g.usize_in(1, 4), g.usize_in(2, 6), g.usize_in(2, 6), 3, 2.0, g.rng.next_u64());
+        let d = model.dim();
+        let k = model.categories();
+        let seed = g.rng.next_u64();
+        let reference = ancestral_sample(&model, &JobNoise::new(seed, 0, d, k)).map_err(|e| e.to_string())?;
+        for t_use in [1usize, 2, 3, 7, 100] {
+            let mut ps = PredictiveSampler::new(&model, Box::new(Learned { t_use }));
+            ps.reset_slot(0, JobNoise::new(seed, 0, d, k));
+            for _ in 0..=d {
+                ps.step().map_err(|e| e.to_string())?;
+                if ps.slot_done(0) {
+                    break;
+                }
+            }
+            let r = ps.take_result(0).ok_or("did not converge")?;
+            prop_assert_eq!(&r.x, &reference.x, "t_use={} diverged", t_use);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn noreparam_samples_remain_model_samples() {
+    // Even though no-reparam redraws noise, each finalized variable is a
+    // valid conditional sample; over many runs the per-variable marginals
+    // must match the ancestral sampler's marginals.
+    let model = MockArm::new(1, 1, 4, 3, 1, 1.5, 77);
+    let d = model.dim();
+    let runs = 400;
+    let mut anc_counts = vec![[0u32; 3]; d];
+    let mut nor_counts = vec![[0u32; 3]; d];
+    for s in 0..runs {
+        let anc = ancestral_sample(&model, &JobNoise::new(1000 + s, 0, d, 3)).unwrap();
+        for (j, &v) in anc.x.iter().enumerate() {
+            anc_counts[j][v as usize] += 1;
+        }
+        let mut ps = PredictiveSampler::new(&model, Box::new(NoReparam));
+        ps.reset_slot(0, JobNoise::new(2000 + s, 0, d, 3));
+        for _ in 0..=d {
+            ps.step().unwrap();
+            if ps.slot_done(0) {
+                break;
+            }
+        }
+        let r = ps.take_result(0).unwrap();
+        for (j, &v) in r.x.iter().enumerate() {
+            nor_counts[j][v as usize] += 1;
+        }
+    }
+    for j in 0..d {
+        for c in 0..3 {
+            let pa = anc_counts[j][c] as f64 / runs as f64;
+            let pn = nor_counts[j][c] as f64 / runs as f64;
+            assert!(
+                (pa - pn).abs() < 0.13,
+                "marginal mismatch at var {j} cat {c}: ancestral {pa:.2} vs noreparam {pn:.2}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mistakes_bound_iterations_tightly() {
+    // iterations <= mistakes + 2: every pass except possibly the first
+    // (cold zeros forecast can also be wholly correct) and the last must
+    // finalize exactly one mistaken position.
+    check("mistake-iteration-bound", 12, |g| {
+        let model = MockArm::new(1, g.usize_in(1, 3), g.usize_in(2, 7), g.usize_in(2, 6), 1, g.f64_in(0.0, 5.0) as f32, g.rng.next_u64());
+        let d = model.dim();
+        let mut ps = PredictiveSampler::new(&model, Box::new(FpiReuse));
+        ps.reset_slot(0, JobNoise::new(g.rng.next_u64(), 0, d, model.categories()));
+        for _ in 0..=d {
+            ps.step().map_err(|e| e.to_string())?;
+            if ps.slot_done(0) {
+                break;
+            }
+        }
+        let r = ps.take_result(0).unwrap();
+        let n_mist: usize = r.mistakes.iter().map(|&m| m as usize).sum();
+        prop_assert!(
+            r.iterations <= n_mist + 2 && n_mist <= r.iterations,
+            "iters {} vs mistakes {}",
+            r.iterations,
+            n_mist
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn all_policies_beat_or_match_baseline_calls() {
+    check("policy-call-bound", 8, |g| {
+        let model = MockArm::new(1, 2, g.usize_in(2, 6), g.usize_in(2, 5), 2, g.f64_in(0.0, 3.0) as f32, g.rng.next_u64());
+        let d = model.dim();
+        let seed = g.rng.next_u64();
+        let policies: Vec<Box<dyn predsamp::sampler::forecast::Forecaster>> = vec![
+            Box::new(Zeros),
+            Box::new(PredictLast),
+            Box::new(FpiReuse),
+            Box::new(Learned { t_use: 2 }),
+        ];
+        for fc in policies {
+            let name = fc.name();
+            let mut ps = PredictiveSampler::new(&model, fc);
+            ps.reset_slot(0, JobNoise::new(seed, 0, d, model.categories()));
+            for _ in 0..=d {
+                ps.step().map_err(|e| e.to_string())?;
+                if ps.slot_done(0) {
+                    break;
+                }
+            }
+            let r = ps.take_result(0).unwrap();
+            prop_assert!(r.iterations <= d, "{}: {} > d={}", name, r.iterations, d);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduler_empty_and_tiny_queues() {
+    let model = MockArm::new(3, 2, 4, 3, 1, 2.0, 9);
+    let rep = scheduler::run_continuous(&model, Box::new(FpiReuse), 0, 0).unwrap();
+    assert!(rep.results.is_empty());
+    assert_eq!(rep.total_passes, 0);
+    let rep = scheduler::run_continuous(&model, Box::new(FpiReuse), 1, 0).unwrap();
+    assert_eq!(rep.results.len(), 1);
+    assert_eq!(rep.results[0].x.len(), model.dim());
+}
+
+#[test]
+fn convergence_map_covers_all_iterations() {
+    // The max convergence iteration must equal the job's iteration count
+    // (the last pass always finalizes at least one variable).
+    check("converge-map-max", 10, |g| {
+        let model = MockArm::new(1, 2, g.usize_in(3, 7), 4, 1, 3.0, g.rng.next_u64());
+        let d = model.dim();
+        let mut ps = PredictiveSampler::new(&model, Box::new(FpiReuse));
+        ps.reset_slot(0, JobNoise::new(g.rng.next_u64(), 0, d, 4));
+        for _ in 0..=d {
+            ps.step().map_err(|e| e.to_string())?;
+            if ps.slot_done(0) {
+                break;
+            }
+        }
+        let r = ps.take_result(0).unwrap();
+        let max_it = *r.converge_iter.iter().max().unwrap() as usize;
+        prop_assert_eq!(max_it, r.iterations, "max converge iter vs iterations");
+        Ok(())
+    });
+}

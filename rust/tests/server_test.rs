@@ -1,0 +1,137 @@
+//! End-to-end serving tests: spawn the TCP server against the real
+//! artifacts and exercise the protocol, batching and exactness.
+
+use predsamp::coordinator::config::ServeConfig;
+use predsamp::coordinator::server::{spawn, Client};
+use predsamp::substrate::json::Value;
+use std::time::Duration;
+
+fn server() -> Option<predsamp::coordinator::server::ServerHandle> {
+    let dir = predsamp::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping server test: run `make artifacts`");
+        return None;
+    }
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(10),
+        continuous: true,
+        worker_threads: 4,
+    };
+    Some(spawn(dir, cfg).expect("server spawns"))
+}
+
+#[test]
+fn ping_info_metrics_eval() {
+    let Some(server) = server() else { return };
+    let mut c = Client::connect(&server.addr).unwrap();
+    let pong = c.call(r#"{"op":"ping"}"#).unwrap();
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    assert_eq!(pong.get("pong").as_bool(), Some(true));
+
+    let info = c.call(r#"{"op":"info"}"#).unwrap();
+    let models = info.get("models").as_arr().unwrap();
+    assert!(models.iter().any(|m| m.get("name").as_str() == Some("mnist_bin")));
+
+    let ev = c.call(r#"{"op":"eval","model":"mnist_bin"}"#).unwrap();
+    assert_eq!(ev.get("ok").as_bool(), Some(true));
+    assert!(ev.get("bpd").as_f64().unwrap() > 0.0);
+
+    let m = c.call(r#"{"op":"metrics"}"#).unwrap();
+    assert!(m.get("metrics").get("requests").as_i64().unwrap() >= 3);
+    server.stop();
+}
+
+#[test]
+fn sample_request_roundtrip_and_exactness() {
+    let Some(server) = server() else { return };
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r1 = c
+        .call(r#"{"op":"sample","model":"mnist_bin","method":"fpi","n":2,"seed":4}"#)
+        .unwrap();
+    assert_eq!(r1.get("ok").as_bool(), Some(true), "{r1}");
+    let s1 = predsamp::coordinator::protocol::parse_samples(r1.get("samples")).unwrap();
+    assert_eq!(s1.len(), 2);
+    assert_eq!(s1[0].len(), 256);
+
+    // Baseline through the server must give the same samples (exactness
+    // survives the whole serving stack).
+    let r2 = c
+        .call(r#"{"op":"sample","model":"mnist_bin","method":"baseline","n":2,"seed":4}"#)
+        .unwrap();
+    let s2 = predsamp::coordinator::protocol::parse_samples(r2.get("samples")).unwrap();
+    assert_eq!(s1, s2, "serving stack must preserve exactness");
+    // And predictive sampling must have used fewer calls.
+    assert!(r1.get("arm_calls").as_f64().unwrap() < r2.get("arm_calls").as_f64().unwrap());
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_are_batched() {
+    let Some(server) = server() else { return };
+    let addr = server.addr;
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let r = c
+                .call(&format!(
+                    r#"{{"op":"sample","model":"mnist_bin","method":"fpi","n":2,"seed":{i},"return_samples":true}}"#
+                ))
+                .unwrap();
+            assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+            let s = predsamp::coordinator::protocol::parse_samples(r.get("samples")).unwrap();
+            assert_eq!(s.len(), 2);
+            (i, s)
+        }));
+    }
+    let mut results: Vec<(i32, Vec<Vec<i32>>)> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    results.sort_by_key(|(i, _)| *i);
+    // Same seed ⇒ same samples regardless of how requests were merged:
+    let mut c = Client::connect(&addr).unwrap();
+    for (i, s) in &results {
+        let r = c
+            .call(&format!(
+                r#"{{"op":"sample","model":"mnist_bin","method":"fpi","n":2,"seed":{i}}}"#
+            ))
+            .unwrap();
+        let again = predsamp::coordinator::protocol::parse_samples(r.get("samples")).unwrap();
+        assert_eq!(&again, s, "client {i} samples must be reproducible");
+    }
+    server.stop();
+}
+
+#[test]
+fn decode_through_server() {
+    let Some(server) = server() else { return };
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = c
+        .call(r#"{"op":"sample","model":"latent_cifar","method":"fpi","n":1,"seed":0,"return_samples":false,"decode":true}"#)
+        .unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    let imgs = r.get("images").as_arr().unwrap();
+    assert_eq!(imgs.len(), 1);
+    assert_eq!(imgs[0].as_arr().unwrap().len(), 3 * 16 * 16);
+    server.stop();
+}
+
+#[test]
+fn malformed_requests_get_errors() {
+    let Some(server) = server() else { return };
+    let mut c = Client::connect(&server.addr).unwrap();
+    for bad in [
+        "this is not json",
+        r#"{"op":"sample"}"#,
+        r#"{"op":"sample","model":"no_such_model"}"#,
+        r#"{"op":"bogus"}"#,
+    ] {
+        let r = c.call(bad).unwrap();
+        assert_eq!(r.get("ok").as_bool(), Some(false), "{bad} -> {r}");
+        assert!(matches!(r.get("error"), Value::Str(_)));
+    }
+    // connection still usable afterwards
+    let pong = c.call(r#"{"op":"ping"}"#).unwrap();
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    server.stop();
+}
