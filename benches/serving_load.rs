@@ -1,76 +1,110 @@
-//! Serving-load benchmark: Poisson request arrivals against the TCP
-//! server, reporting latency percentiles and throughput for continuous vs
-//! synchronous batching. This is the full production path — client
-//! sockets, protocol parsing, dynamic batching window, engine, PJRT.
+//! Serving-load benchmark: a mixed (model, method) request stream against
+//! the full TCP serving stack — client sockets, protocol parsing,
+//! dispatcher, sharded engine workers, dynamic batching — comparing
+//! throughput across engine-worker counts. Runs on the pure-rust mock ARM
+//! by default (no artifacts or PJRT needed), so the sharding speedup is
+//! measurable anywhere; expected: >= 2x at 4 workers vs 1 on a
+//! multi-core host (printed, not asserted — wall-clock ratios are too
+//! machine-dependent to gate on).
 //!
-//!     cargo bench --bench serving_load [-- --model mnist_bin --rate 4 --secs 6]
+//!     cargo bench --bench serving_load [-- --clients 8 --requests 12 --engine-threads 1,4]
 
-use predsamp::bench::workload::poisson_stream;
 use predsamp::coordinator::config::ServeConfig;
 use predsamp::coordinator::server::{spawn, Client};
-use predsamp::substrate::rng::Rng;
+use predsamp::runtime::artifact::{write_mock_manifest, MockModelSpec};
+use predsamp::substrate::cli::Args;
 use predsamp::substrate::stats::{percentile, Summary};
 use predsamp::substrate::timer::{fmt_duration, Timer};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-fn main() -> anyhow::Result<()> {
-    let args = predsamp::substrate::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
-    let model = args.get("model", "mnist_bin");
-    let rate = args.num::<f64>("rate", 4.0); // requests/sec
-    let secs = args.num::<f64>("secs", 6.0);
+/// The mixed request stream: incompatible (model, method) groups that a
+/// single engine thread can only serve head-of-line.
+const MIX: [(&str, &str); 4] = [("mock_a", "fpi"), ("mock_b", "fpi"), ("mock_a", "zeros"), ("mock_b", "last")];
 
-    for continuous in [true, false] {
-        let cfg = ServeConfig {
-            addr: "127.0.0.1:0".into(),
-            max_batch: 32,
-            max_wait: Duration::from_millis(25),
-            continuous,
-            worker_threads: 8,
-        };
-        let server = spawn(predsamp::artifacts_dir(), cfg)?;
-        // Warm up (compile executables) outside the measured window.
+fn fixture_dir() -> anyhow::Result<std::path::PathBuf> {
+    let dir = std::env::temp_dir().join(format!("predsamp-servebench-{}", std::process::id()));
+    write_mock_manifest(&dir, &MockModelSpec::demo_pair())?;
+    Ok(dir)
+}
+
+fn run_load(dir: std::path::PathBuf, engine_threads: usize, clients: usize, requests: usize) -> anyhow::Result<(f64, Vec<f64>)> {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        continuous: true,
+        // Every open connection pins one handler thread, so leave headroom
+        // beyond the measured clients.
+        worker_threads: clients + 2,
+        engine_threads,
+    };
+    let server = spawn(dir, cfg)?;
+    // Warm every (model, method) group so lazy engine setup happens
+    // outside the measured window; drop the warm connection before
+    // measuring so it doesn't pin a handler thread.
+    {
         let mut warm = Client::connect(&server.addr)?;
-        let w = warm.call(&format!(r#"{{"op":"sample","model":"{model}","n":1,"return_samples":false}}"#))?;
-        anyhow::ensure!(w.get("ok").as_bool() == Some(true), "warmup failed: {w}");
+        for (model, method) in MIX {
+            let w = warm.call(&format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":1,"return_samples":false}}"#))?;
+            anyhow::ensure!(w.get("ok").as_bool() == Some(true), "warmup failed: {w}");
+        }
+    }
 
-        let mut rng = Rng::new(7);
-        let stream = poisson_stream(&mut rng, rate, secs, (1, 4));
-        let n_req = stream.len();
-        let lats = Arc::new(Mutex::new(Vec::<f64>::new()));
-        let t0 = Timer::start();
-        let mut handles = Vec::new();
-        let mut total_samples = 0usize;
-        for item in stream {
-            total_samples += item.n;
-            // Open-loop: wait until the arrival time, then fire from a thread.
-            let wait = (item.at_secs - t0.secs()).max(0.0);
-            std::thread::sleep(Duration::from_secs_f64(wait));
-            let addr = server.addr;
-            let model = model.clone();
-            let lats = Arc::clone(&lats);
-            handles.push(std::thread::spawn(move || {
+    let lats = Arc::new(Mutex::new(Vec::<f64>::new()));
+    let t0 = Timer::start();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = server.addr;
+        let lats = Arc::clone(&lats);
+        handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            let mut client = Client::connect(&addr)?;
+            for r in 0..requests {
+                let (model, method) = MIX[(c + r) % MIX.len()];
                 let t = Timer::start();
-                if let Ok(mut c) = Client::connect(&addr) {
-                    let _ = c.call(&format!(
-                        r#"{{"op":"sample","model":"{model}","method":"fpi","n":{},"seed":{},"return_samples":false}}"#,
-                        item.n, item.seed
-                    ));
-                    lats.lock().unwrap().push(t.secs());
-                }
-            }));
+                let resp = client.call(&format!(
+                    r#"{{"op":"sample","model":"{model}","method":"{method}","n":4,"seed":{},"return_samples":false}}"#,
+                    c * 1000 + r
+                ))?;
+                anyhow::ensure!(resp.get("ok").as_bool() == Some(true), "request failed: {resp}");
+                lats.lock().unwrap().push(t.secs());
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread")?;
+    }
+    let wall = t0.secs();
+    server.stop();
+    let lats = lats.lock().unwrap().clone();
+    Ok((wall, lats))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let clients = args.num::<usize>("clients", 8);
+    let requests = args.num::<usize>("requests", 12);
+    let threads_list: Vec<usize> = {
+        let l = args.list("engine-threads");
+        if l.is_empty() {
+            vec![1, 4]
+        } else {
+            l.iter().filter_map(|s| s.parse().ok()).collect()
         }
-        for h in handles {
-            let _ = h.join();
-        }
-        let wall = t0.secs();
-        let lats = lats.lock().unwrap().clone();
+    };
+    let dir = fixture_dir()?;
+    let total_samples = clients * requests * 4;
+
+    println!("serving load: {clients} clients x {requests} requests, n=4, mixed {} groups (mock ARM)", MIX.len());
+    let mut throughput = Vec::new();
+    for &threads in &threads_list {
+        let (wall, lats) = run_load(dir.clone(), threads, clients, requests)?;
+        let tput = total_samples as f64 / wall;
         let s = Summary::of(&lats);
         println!(
-            "{} batching: {n_req} requests / {total_samples} samples over {}  ({:.1} samples/s)",
-            if continuous { "continuous" } else { "sync      " },
-            fmt_duration(wall),
-            total_samples as f64 / wall
+            "  engine_threads {threads}: {total_samples} samples over {}  ({tput:.1} samples/s)",
+            fmt_duration(wall)
         );
         println!(
             "             latency mean {} p50 {} p95 {} max {}",
@@ -79,7 +113,16 @@ fn main() -> anyhow::Result<()> {
             fmt_duration(percentile(&lats, 95.0)),
             fmt_duration(s.max)
         );
-        server.stop();
+        throughput.push(tput);
     }
+    if throughput.len() >= 2 {
+        let speedup = throughput.last().unwrap() / throughput[0];
+        println!(
+            "  speedup: {speedup:.2}x at {} workers vs {}",
+            threads_list.last().unwrap(),
+            threads_list[0]
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }

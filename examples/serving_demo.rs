@@ -1,29 +1,35 @@
-//! Serving demo: spin up the TCP server, fire concurrent client requests,
-//! and report end-to-end latency/throughput — comparing the paper's
-//! synchronous batching against this repo's continuous-batching scheduler
-//! extension (the "scheduling system" the paper leaves to future work).
+//! Serving demo: spin up the TCP server, fire concurrent client requests
+//! over a mixed (model, method) stream, and report end-to-end latency and
+//! throughput — comparing the paper's synchronous batching, this repo's
+//! continuous-batching scheduler (the "scheduling system" §4.1 leaves to
+//! future work), and the sharded engine-worker pool on top of it.
 //!
-//!     cargo run --release --example serving_demo [-- --model latent_cifar --clients 8 --requests 4]
+//! With compiled artifacts present the demo serves them; without, it
+//! falls back to the pure-rust mock ARM so it runs anywhere:
+//!
+//!     cargo run --release --example serving_demo [-- --model latent_cifar --clients 8 --requests 4 --engine-threads 4]
 
 use predsamp::coordinator::config::ServeConfig;
 use predsamp::coordinator::server::{spawn, Client};
+use predsamp::runtime::artifact::{write_mock_manifest, MockModelSpec};
 use predsamp::substrate::cli::Args;
 use predsamp::substrate::stats::{percentile, Summary};
 use predsamp::substrate::timer::{fmt_duration, Timer};
 use std::time::Duration;
 
-fn run_load(addr: std::net::SocketAddr, model: &str, clients: usize, requests: usize) -> anyhow::Result<(Vec<f64>, f64, usize)> {
+fn run_load(addr: std::net::SocketAddr, models: &[String], clients: usize, requests: usize) -> anyhow::Result<(Vec<f64>, f64, usize)> {
     let timer = Timer::start();
     let mut handles = Vec::new();
     for c in 0..clients {
-        let model = model.to_string();
+        let model = models[c % models.len()].clone();
+        let method = if c % 2 == 0 { "fpi" } else { "zeros" };
         handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
             let mut client = Client::connect(&addr)?;
             let mut lats = Vec::new();
             for r in 0..requests {
                 let t = Timer::start();
                 let resp = client.call(&format!(
-                    r#"{{"op":"sample","model":"{model}","method":"fpi","n":2,"seed":{},"return_samples":false}}"#,
+                    r#"{{"op":"sample","model":"{model}","method":"{method}","n":2,"seed":{},"return_samples":false}}"#,
                     c * 1000 + r
                 ))?;
                 anyhow::ensure!(resp.get("ok").as_bool() == Some(true), "request failed: {resp}");
@@ -43,29 +49,50 @@ fn run_load(addr: std::net::SocketAddr, model: &str, clients: usize, requests: u
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    let model = args.get("model", "latent_cifar");
     let clients = args.num::<usize>("clients", 8);
     let requests = args.num::<usize>("requests", 4);
+    let max_workers = args.num::<usize>("engine-threads", 4);
 
-    for continuous in [true, false] {
+    // Artifacts if built, otherwise a mock fixture (same serving stack).
+    let artifacts = predsamp::artifacts_dir();
+    let (dir, models) = if artifacts.join("manifest.json").exists() {
+        (artifacts, vec![args.get("model", "latent_cifar")])
+    } else {
+        println!("no compiled artifacts found — serving the pure-rust mock ARM instead\n");
+        let dir = std::env::temp_dir().join(format!("predsamp-demo-{}", std::process::id()));
+        let specs = MockModelSpec::demo_pair();
+        let names = specs.iter().map(|s| s.name.clone()).collect();
+        write_mock_manifest(&dir, &specs)?;
+        (dir, names)
+    };
+
+    // (label, continuous batching?, engine workers)
+    let scenarios = [("sync / 1 worker", false, 1), ("continuous / 1 worker", true, 1), ("continuous sharded", true, max_workers)];
+    for (label, continuous, engine_threads) in scenarios {
         let cfg = ServeConfig {
             addr: "127.0.0.1:0".into(),
             max_batch: 32,
-            max_wait: Duration::from_millis(25),
+            max_wait: Duration::from_millis(5),
             continuous,
-            worker_threads: clients.min(8),
+            // one handler thread per client plus headroom for the
+            // warm/metrics connection below
+            worker_threads: clients + 2,
+            engine_threads,
         };
-        let server = spawn(predsamp::artifacts_dir(), cfg)?;
-        // Warm the engine (first request compiles executables).
-        let mut c = Client::connect(&server.addr)?;
-        let warm = c.call(&format!(r#"{{"op":"sample","model":"{model}","n":1,"return_samples":false}}"#))?;
-        anyhow::ensure!(warm.get("ok").as_bool() == Some(true), "warmup failed: {warm}");
+        let server = spawn(dir.clone(), cfg)?;
+        // Warm the engines (lazy per-worker load) outside the measurement.
+        {
+            let mut c = Client::connect(&server.addr)?;
+            for model in &models {
+                let warm = c.call(&format!(r#"{{"op":"sample","model":"{model}","n":1,"return_samples":false}}"#))?;
+                anyhow::ensure!(warm.get("ok").as_bool() == Some(true), "warmup failed: {warm}");
+            }
+        }
 
-        let (lats, wall, n) = run_load(server.addr, &model, clients, requests)?;
+        let (lats, wall, n) = run_load(server.addr, &models, clients, requests)?;
         let s = Summary::of(&lats);
         println!(
-            "{:<11} batching: {n} samples / {clients} clients  wall {}  throughput {:.1} samples/s",
-            if continuous { "continuous" } else { "sync" },
+            "{label:<22} ({engine_threads} engine workers): {n} samples / {clients} clients  wall {}  throughput {:.1} samples/s",
             fmt_duration(wall),
             n as f64 / wall
         );
@@ -75,8 +102,21 @@ fn main() -> anyhow::Result<()> {
             fmt_duration(percentile(&lats, 50.0)),
             fmt_duration(percentile(&lats, 95.0))
         );
+        let mut c = Client::connect(&server.addr)?;
         let m = c.call(r#"{"op":"metrics"}"#)?;
-        println!("             server metrics: {}", m.get("metrics"));
+        let metrics = m.get("metrics");
+        print!("             per-worker (batches, occupancy):");
+        if let Some(workers) = metrics.get("workers").as_arr() {
+            for w in workers {
+                print!(
+                    "  w{}: {} @ {:.0}%",
+                    w.get("id").as_i64().unwrap_or(-1),
+                    w.get("batches").as_i64().unwrap_or(0),
+                    100.0 * w.get("occupancy").as_f64().unwrap_or(0.0)
+                );
+            }
+        }
+        println!();
         server.stop();
     }
     Ok(())

@@ -1,9 +1,11 @@
 //! Serving configuration (CLI- and env-tunable).
 
+use anyhow::{ensure, Result};
 use std::time::Duration;
 
 /// Sampling method selector (maps 1:1 to the paper's table rows).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `Hash`/`Eq` because `(model, method)` keys the server's batching groups.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Method {
     /// Naive ancestral sampling: d ARM calls (the paper's baseline).
     Baseline,
@@ -55,7 +57,14 @@ pub struct ServeConfig {
     /// Use continuous batching (slot refill) rather than synchronous
     /// batch-at-a-time execution.
     pub continuous: bool,
+    /// Connection-handling threads (cheap; no PJRT state).
     pub worker_threads: usize,
+    /// Engine worker shards. Each owns a full `Router` — PJRT handles are
+    /// thread-affine, so engines are replicated per worker, lazily — and
+    /// the dispatcher assigns each `(model, method)` batching group to the
+    /// least-loaded worker. Job noise is keyed by `(seed, job index)`,
+    /// never by worker, so samples are bitwise identical at any setting.
+    pub engine_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -66,7 +75,23 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(20),
             continuous: true,
             worker_threads: 4,
+            engine_threads: 2,
         }
+    }
+}
+
+impl ServeConfig {
+    /// Sanity-check knob ranges before spinning up threads.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.addr.is_empty(), "serve config: empty addr");
+        ensure!(self.max_batch >= 1, "serve config: max_batch must be >= 1");
+        ensure!(self.worker_threads >= 1, "serve config: worker_threads must be >= 1");
+        ensure!(
+            (1..=256).contains(&self.engine_threads),
+            "serve config: engine_threads must be in [1, 256] (each worker replicates engines)"
+        );
+        ensure!(self.max_wait <= Duration::from_secs(60), "serve config: max_wait above 60s will stall clients");
+        Ok(())
     }
 }
 
@@ -88,5 +113,15 @@ mod tests {
     fn labels_stable() {
         assert_eq!(Method::Forecast { t_use: 5 }.label(), "forecast(T=5)");
         assert_eq!(Method::Fpi.label(), "fpi");
+    }
+
+    #[test]
+    fn validate_catches_bad_knobs() {
+        assert!(ServeConfig::default().validate().is_ok());
+        assert!(ServeConfig { engine_threads: 0, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { engine_threads: 1000, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { max_batch: 0, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { worker_threads: 0, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { max_wait: Duration::from_secs(3600), ..ServeConfig::default() }.validate().is_err());
     }
 }

@@ -1,21 +1,28 @@
 //! Serving metrics: counters + latency reservoir, snapshot as JSON.
 //!
-//! Owned by the engine thread (no locks on the hot path); the `metrics`
-//! protocol op returns a snapshot.
+//! Each engine worker owns a `Metrics` behind a mutex it holds only while
+//! recording (never across an ARM pass); the dispatcher aggregates all
+//! workers with [`Metrics::merge`] for the `metrics` protocol op and
+//! attaches per-worker gauges ([`Metrics::worker_value`]): queue depth,
+//! occupancy (busy wall-seconds over uptime), loaded engines.
 
 use crate::substrate::json::Value;
 use crate::substrate::stats;
+use std::time::Instant;
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     pub requests: u64,
     pub samples: u64,
     pub arm_calls: u64,
     pub errors: u64,
     pub batches: u64,
-    /// Per-request wall latencies (seconds), bounded reservoir.
+    /// Wall-seconds spent executing batches (occupancy numerator).
+    pub busy_secs: f64,
+    started: Instant,
+    /// Per-batch wall latencies (seconds), bounded reservoir.
     latencies: Vec<f64>,
-    /// Per-batch ARM-call percentages of baseline.
+    /// Per-batch ARM calls per job as a percentage of the baseline's d.
     calls_pct: Vec<f64>,
 }
 
@@ -23,15 +30,29 @@ const RESERVOIR: usize = 4096;
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics::default()
+        Metrics {
+            requests: 0,
+            samples: 0,
+            arm_calls: 0,
+            errors: 0,
+            batches: 0,
+            busy_secs: 0.0,
+            started: Instant::now(),
+            latencies: Vec::new(),
+            calls_pct: Vec::new(),
+        }
     }
 
-    pub fn record_batch(&mut self, n_jobs: usize, arm_calls: usize, dim: usize, wall_secs: f64) {
+    /// Record one executed batch. `calls_pct` is the per-job ARM-call
+    /// percentage of baseline (the caller normalizes: chunked sync and
+    /// continuous batching have different cost models).
+    pub fn record_batch(&mut self, n_jobs: usize, arm_calls: usize, calls_pct: f64, wall_secs: f64) {
         self.batches += 1;
         self.samples += n_jobs as u64;
         self.arm_calls += arm_calls as u64;
+        self.busy_secs += wall_secs;
         if self.calls_pct.len() < RESERVOIR {
-            self.calls_pct.push(100.0 * arm_calls as f64 / dim as f64);
+            self.calls_pct.push(calls_pct);
         }
         if self.latencies.len() < RESERVOIR {
             self.latencies.push(wall_secs);
@@ -45,6 +66,32 @@ impl Metrics {
         self.errors += 1;
     }
 
+    /// Fraction of this worker's uptime spent executing batches.
+    pub fn occupancy(&self) -> f64 {
+        let uptime = self.started.elapsed().as_secs_f64();
+        if uptime > 0.0 {
+            (self.busy_secs / uptime).min(1.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Fold another worker's counters and reservoirs into this one.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.samples += other.samples;
+        self.arm_calls += other.arm_calls;
+        self.errors += other.errors;
+        self.batches += other.batches;
+        self.busy_secs += other.busy_secs;
+        for &l in other.latencies.iter().take(RESERVOIR.saturating_sub(self.latencies.len())) {
+            self.latencies.push(l);
+        }
+        for &p in other.calls_pct.iter().take(RESERVOIR.saturating_sub(self.calls_pct.len())) {
+            self.calls_pct.push(p);
+        }
+    }
+
     pub fn snapshot(&self) -> Value {
         Value::obj(vec![
             ("requests", Value::num(self.requests as f64)),
@@ -52,10 +99,34 @@ impl Metrics {
             ("arm_calls", Value::num(self.arm_calls as f64)),
             ("errors", Value::num(self.errors as f64)),
             ("batches", Value::num(self.batches as f64)),
+            ("busy_secs", Value::num(self.busy_secs)),
             ("latency_p50_s", Value::num(stats::percentile(&self.latencies, 50.0))),
             ("latency_p95_s", Value::num(stats::percentile(&self.latencies, 95.0))),
             ("calls_pct_mean", Value::num(stats::mean(&self.calls_pct))),
         ])
+    }
+
+    /// Per-worker gauge object for the aggregated `metrics`/`info`
+    /// responses. `queue_depth` and `engines_loaded` are sampled by the
+    /// dispatcher at snapshot time.
+    pub fn worker_value(&self, id: usize, queue_depth: usize, engines_loaded: usize) -> Value {
+        Value::obj(vec![
+            ("id", Value::num(id as f64)),
+            ("batches", Value::num(self.batches as f64)),
+            ("samples", Value::num(self.samples as f64)),
+            ("arm_calls", Value::num(self.arm_calls as f64)),
+            ("errors", Value::num(self.errors as f64)),
+            ("queue_depth", Value::num(queue_depth as f64)),
+            ("engines_loaded", Value::num(engines_loaded as f64)),
+            ("occupancy", Value::num(self.occupancy())),
+            ("latency_p50_s", Value::num(stats::percentile(&self.latencies, 50.0))),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
     }
 }
 
@@ -68,8 +139,8 @@ mod tests {
         let mut m = Metrics::new();
         m.record_request();
         m.record_request();
-        m.record_batch(4, 50, 100, 0.5);
-        m.record_batch(4, 100, 100, 1.5);
+        m.record_batch(4, 50, 50.0, 0.5);
+        m.record_batch(4, 100, 100.0, 1.5);
         m.record_error();
         let s = m.snapshot();
         assert_eq!(s.get("requests").as_i64(), Some(2));
@@ -78,5 +149,37 @@ mod tests {
         assert_eq!(s.get("errors").as_i64(), Some(1));
         assert!((s.get("calls_pct_mean").as_f64().unwrap() - 75.0).abs() < 1e-9);
         assert!(s.get("latency_p95_s").as_f64().unwrap() >= 0.5);
+        assert!((s.get("busy_secs").as_f64().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_aggregates_workers() {
+        let mut a = Metrics::new();
+        a.record_request();
+        a.record_batch(2, 10, 40.0, 0.25);
+        let mut b = Metrics::new();
+        b.record_batch(3, 20, 60.0, 0.75);
+        b.record_error();
+        a.merge(&b);
+        let s = a.snapshot();
+        assert_eq!(s.get("requests").as_i64(), Some(1));
+        assert_eq!(s.get("samples").as_i64(), Some(5));
+        assert_eq!(s.get("arm_calls").as_i64(), Some(30));
+        assert_eq!(s.get("errors").as_i64(), Some(1));
+        assert_eq!(s.get("batches").as_i64(), Some(2));
+        assert!((s.get("calls_pct_mean").as_f64().unwrap() - 50.0).abs() < 1e-9);
+        assert!((s.get("busy_secs").as_f64().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worker_gauges_present_and_bounded() {
+        let mut m = Metrics::new();
+        m.record_batch(4, 12, 30.0, 0.001);
+        let w = m.worker_value(3, 7, 2);
+        assert_eq!(w.get("id").as_i64(), Some(3));
+        assert_eq!(w.get("queue_depth").as_i64(), Some(7));
+        assert_eq!(w.get("engines_loaded").as_i64(), Some(2));
+        let occ = w.get("occupancy").as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&occ), "occupancy {occ} outside [0, 1]");
     }
 }

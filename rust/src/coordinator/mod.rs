@@ -9,10 +9,13 @@
 //!   the paper explicitly leaves to future work (§4.1), which lets batched
 //!   serving approach the batch-size-1 ARM-call rate.
 //! * [`router`] — model-name → engine dispatch.
-//! * [`protocol`] + [`server`] — line-delimited-JSON TCP serving; PJRT
-//!   handles are not `Send`, so a single engine thread owns all models
-//!   and connection threads talk to it over channels.
-//! * [`metrics`] — request/latency/ARM-call accounting.
+//! * [`protocol`] + [`server`] — line-delimited-JSON TCP serving over a
+//!   sharded engine-worker pool: PJRT handles are not `Send`, so each of
+//!   the `engine_threads` workers owns its own `Router` (engines
+//!   replicated lazily) and a dispatcher routes each `(model, method)`
+//!   batching group to the least-loaded worker.
+//! * [`metrics`] — request/latency/ARM-call accounting, per worker,
+//!   aggregated into one snapshot with queue-depth/occupancy gauges.
 
 pub mod batcher;
 pub mod config;

@@ -9,6 +9,13 @@
 //!    "t_use":1,"return_samples":true,"decode":false}
 //!
 //! Responses: {"ok":true, ...} or {"ok":false,"error":"..."}.
+//!
+//! `info` and `metrics` report the engine-worker pool: `engine_workers`
+//! (shard count) and a `workers` array of per-worker gauges — queue depth,
+//! occupancy, loaded engines, batch/sample/error counters. `sample`
+//! responses carry `arm_calls` (batched ARM invocations for the whole
+//! group), `calls_per_job` (passes × batch / jobs — the batched cost
+//! model) and `calls_pct` (`calls_per_job` as % of the baseline's d).
 
 use crate::coordinator::config::Method;
 use crate::substrate::json::{self, Value};

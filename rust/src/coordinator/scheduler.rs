@@ -33,6 +33,20 @@ pub struct ScheduleReport {
     pub calls_per_job: f64,
 }
 
+/// Per-job ARM calls as a percentage of the baseline's `d` calls — the
+/// one normalization both the scheduler reports and the serving layer's
+/// per-group responses use.
+pub fn calls_pct_of(calls_per_job: f64, dim: usize) -> f64 {
+    100.0 * calls_per_job / dim as f64
+}
+
+impl ScheduleReport {
+    /// See [`calls_pct_of`].
+    pub fn calls_pct(&self, dim: usize) -> f64 {
+        calls_pct_of(self.calls_per_job, dim)
+    }
+}
+
 /// Continuous batching: keep every slot busy by refilling converged slots
 /// from the queue. Jobs `0..n_jobs` get noise keyed `(seed, job_id)`.
 pub fn run_continuous<M: StepModel>(
@@ -201,6 +215,35 @@ mod tests {
             sync.total_passes
         );
         assert!(cont.occupancy >= sync.occupancy - 1e-9);
+    }
+
+    #[test]
+    fn occupancy_and_calls_per_job_stay_bounded() {
+        // Property: as jobs drain, occupancy stays in [1/B, 1] (every pass
+        // has at least one active slot, at most B) and calls_per_job stays
+        // in [1, B*d] (every job needs >= 1 pass; no job survives more
+        // than d passes). The identity occupancy * passes * B = total
+        // job-iterations ties the two together.
+        use crate::substrate::proptest_lite::check;
+        check("scheduler-bounds", 16, |g| {
+            let b = g.usize_in(1, 7);
+            let m = MockArm::new(b, g.usize_in(1, 4), g.usize_in(2, 7), g.usize_in(2, 6), 1, g.f64_in(0.0, 4.0) as f32, g.rng.next_u64());
+            let n = g.usize_in(1, 20);
+            let rep = run_continuous(&m, Box::new(FpiReuse), n, g.rng.next_u64()).map_err(|e| e.to_string())?;
+            let (bf, d) = (b as f64, m.dim() as f64);
+            crate::prop_assert!(
+                rep.occupancy >= 1.0 / bf - 1e-9 && rep.occupancy <= 1.0 + 1e-9,
+                "occupancy {} outside [1/{b}, 1] (n={n})",
+                rep.occupancy
+            );
+            crate::prop_assert!(rep.calls_per_job >= 1.0 - 1e-9, "calls_per_job {} < 1", rep.calls_per_job);
+            crate::prop_assert!(rep.calls_per_job <= bf * d + 1e-9, "calls_per_job {} > B*d = {}", rep.calls_per_job, bf * d);
+            let iterations = rep.occupancy * rep.total_passes as f64 * bf;
+            crate::prop_assert!(iterations >= n as f64 - 1e-6, "total iterations {iterations} < n={n}");
+            let pct = rep.calls_pct(m.dim());
+            crate::prop_assert!((pct - 100.0 * rep.calls_per_job / d).abs() < 1e-9, "calls_pct helper disagrees");
+            Ok(())
+        });
     }
 
     #[test]

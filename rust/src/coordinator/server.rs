@@ -1,5 +1,5 @@
-//! TCP serving: line-delimited JSON over a thread pool, with a single
-//! engine thread owning all PJRT state.
+//! TCP serving: line-delimited JSON over a thread pool, dispatched to a
+//! sharded pool of engine workers.
 //!
 //! Topology:
 //!
@@ -7,12 +7,24 @@
 //! clients ──TCP──▶ connection workers (ThreadPool)
 //!                      │ (Request, reply Sender) over mpsc
 //!                      ▼
-//!                engine thread: Router + Metrics + dynamic batching
+//!                dispatcher: answers ping/info/metrics, routes each
+//!                (model, method) batching group to the least-loaded
+//!                engine worker (sticky while the group has jobs in
+//!                flight, so one group's requests batch together)
+//!                      │
+//!        ┌─────────────┼─────────────┐
+//!        ▼             ▼             ▼
+//!   engine worker 0  worker 1 …  worker N-1   (cfg.engine_threads)
+//!   each: Router + Metrics + dynamic batching window
 //! ```
 //!
-//! Compatible `sample` requests arriving within the batching window are
-//! merged into one continuous-batching schedule (the per-job noise keyed
-//! by (seed, index-within-request) keeps results independent of merging).
+//! PJRT handles are thread-affine, so every worker owns a full `Router`
+//! and engines are replicated per worker (lazily, on first use). Sharding
+//! removes the head-of-line blocking a single engine thread imposed on
+//! incompatible `(model, method)` groups. Exactness is untouched: per-job
+//! noise is keyed by `(seed, job index within the request)` — never by
+//! worker or slot — so samples are bitwise identical at any
+//! `engine_threads` setting (see `tests/server_test.rs`).
 
 use crate::coordinator::config::{Method, ServeConfig};
 use crate::coordinator::metrics::Metrics;
@@ -25,17 +37,55 @@ use crate::substrate::json::Value;
 use crate::substrate::threadpool::ThreadPool;
 use crate::substrate::timer::Timer;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 type Reply = mpsc::Sender<String>;
 
+/// Load units an `eval` contributes to a worker's queue depth. eval_bpd
+/// runs a full test-set pass, so it must weigh like a batch of jobs or
+/// least-loaded routing would pile groups behind it.
+const EVAL_LOAD: usize = 8;
+
 enum Msg {
     Req(Request, Reply),
     Shutdown,
+}
+
+/// Work routed to one engine worker by the dispatcher.
+enum WorkerMsg {
+    Sample(PendingSample),
+    Eval { model: String, reply: Reply },
+    Shutdown,
+}
+
+/// A sample request admitted to a worker's batching window.
+struct PendingSample {
+    model: String,
+    method: Method,
+    n: usize,
+    seed: u64,
+    return_samples: bool,
+    decode: bool,
+    reply: Reply,
+    /// Outstanding jobs of this request's (model, method) group — shared
+    /// with the dispatcher's routing table: the group stays pinned to its
+    /// worker until this drains to zero.
+    group_pending: Arc<AtomicUsize>,
+}
+
+/// Dispatcher-side handle to one engine worker.
+struct WorkerHandle {
+    tx: mpsc::Sender<WorkerMsg>,
+    /// Jobs routed to this worker and not yet completed (queue depth).
+    load: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<Metrics>>,
+    engines_loaded: Arc<AtomicUsize>,
+    join: std::thread::JoinHandle<()>,
 }
 
 /// Handle to a running server (for tests and the serving demo).
@@ -43,7 +93,7 @@ pub struct ServerHandle {
     pub addr: SocketAddr,
     tx: mpsc::Sender<Msg>,
     stop: Arc<AtomicBool>,
-    engine_join: Option<std::thread::JoinHandle<()>>,
+    dispatch_join: Option<std::thread::JoinHandle<()>>,
     accept_join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -51,7 +101,7 @@ impl ServerHandle {
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(j) = self.engine_join.take() {
+        if let Some(j) = self.dispatch_join.take() {
             let _ = j.join();
         }
         if let Some(j) = self.accept_join.take() {
@@ -68,28 +118,37 @@ impl Drop for ServerHandle {
 }
 
 /// Bind `cfg.addr` (use port 0 for ephemeral) and serve in background
-/// threads. The returned handle reports the bound address.
+/// threads. The returned handle reports the bound address. Fails fast if
+/// the config is invalid or the manifest is unreadable.
 pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<ServerHandle> {
+    cfg.validate()?;
+    let manifest = Manifest::load(&manifest_dir).context("loading manifest for serving")?;
     let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
     let addr = listener.local_addr()?;
     listener.set_nonblocking(true)?;
     let stop = Arc::new(AtomicBool::new(false));
     let (tx, rx) = mpsc::channel::<Msg>();
 
-    // Engine thread: owns Router (PJRT state) + Metrics.
-    let cfg2 = cfg.clone();
-    let engine_join = std::thread::Builder::new()
-        .name("predsamp-engine".into())
-        .spawn(move || {
-            let manifest = match Manifest::load(&manifest_dir) {
-                Ok(m) => m,
-                Err(e) => {
-                    log::error!("manifest load failed: {e:#}");
-                    return;
-                }
-            };
-            engine_loop(Router::new(manifest), cfg2, rx);
-        })?;
+    // Engine workers: each owns a Router (PJRT state) + Metrics.
+    let mut workers = Vec::with_capacity(cfg.engine_threads);
+    for w in 0..cfg.engine_threads {
+        let (wtx, wrx) = mpsc::channel::<WorkerMsg>();
+        let load = Arc::new(AtomicUsize::new(0));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let engines_loaded = Arc::new(AtomicUsize::new(0));
+        let man = manifest.clone();
+        let cfg2 = cfg.clone();
+        let (load2, metrics2, loaded2) = (Arc::clone(&load), Arc::clone(&metrics), Arc::clone(&engines_loaded));
+        let join = std::thread::Builder::new()
+            .name(format!("predsamp-engine-{w}"))
+            .spawn(move || worker_loop(Router::new(man), cfg2, wrx, load2, metrics2, loaded2))?;
+        workers.push(WorkerHandle { tx: wtx, load, metrics, engines_loaded, join });
+    }
+
+    // Dispatcher: owns the request channel and the group routing table.
+    let dispatch_join = std::thread::Builder::new()
+        .name("predsamp-dispatch".into())
+        .spawn(move || dispatch_loop(manifest, workers, rx))?;
 
     // Acceptor + connection workers.
     let pool = ThreadPool::new(cfg.worker_threads);
@@ -117,7 +176,7 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
             drop(pool); // join workers
         })?;
 
-    Ok(ServerHandle { addr, tx, stop, engine_join: Some(engine_join), accept_join: Some(accept_join) })
+    Ok(ServerHandle { addr, tx, stop, dispatch_join: Some(dispatch_join), accept_join: Some(accept_join) })
 }
 
 fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Msg>, stop: Arc<AtomicBool>) {
@@ -131,29 +190,31 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Msg>, stop: Arc<AtomicBool>) 
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
     loop {
-        line.clear();
-        let mut partial = String::new();
+        let mut line = String::new();
         let n = loop {
-            match reader.read_line(&mut partial) {
+            match reader.read_line(&mut line) {
                 Ok(n) => break n,
                 Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
                     if stop.load(Ordering::SeqCst) {
                         return;
                     }
-                    // partial keeps whatever was read; retry for the rest
-                    if partial.ends_with('\n') {
-                        break partial.len();
+                    // line keeps whatever was read; retry for the rest
+                    if line.ends_with('\n') {
+                        break line.len();
                     }
                 }
                 Err(_) => return,
             }
         };
-        if n == 0 && partial.is_empty() {
-            break; // EOF
+        if n == 0 || !line.ends_with('\n') {
+            // EOF. A final partial line is *not* a request: drop it rather
+            // than parsing (a truncated frame must not be executed).
+            if !line.trim().is_empty() {
+                log::debug!("dropping {} bytes of unterminated trailing input from {peer:?}", line.len());
+            }
+            break;
         }
-        line.push_str(&partial);
         if line.trim().is_empty() {
             continue;
         }
@@ -177,19 +238,174 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Msg>, stop: Arc<AtomicBool>) 
     log::debug!("connection closed: {peer:?}");
 }
 
-/// A sample request admitted to the batching window.
-struct PendingSample {
-    model: String,
-    method: Method,
-    n: usize,
-    seed: u64,
-    return_samples: bool,
-    decode: bool,
-    reply: Reply,
+// ---------------------------------------------------------------------------
+// Dispatcher
+// ---------------------------------------------------------------------------
+
+fn least_loaded(workers: &[WorkerHandle]) -> usize {
+    workers
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, w)| w.load.load(Ordering::SeqCst))
+        .map(|(i, _)| i)
+        .expect("at least one engine worker")
 }
 
-fn engine_loop(mut router: Router, cfg: ServeConfig, rx: mpsc::Receiver<Msg>) {
-    let mut metrics = Metrics::new();
+fn dispatch_loop(manifest: Manifest, workers: Vec<WorkerHandle>, rx: mpsc::Receiver<Msg>) {
+    let started = Instant::now();
+    let mut disp = Metrics::new();
+    // (model, method) → (worker, outstanding jobs). Sticky while jobs are
+    // in flight so one group's requests land in one batching window.
+    let mut groups: HashMap<(String, Method), (usize, Arc<AtomicUsize>)> = HashMap::new();
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Req(req, reply) => {
+                disp.record_request();
+                match req {
+                    Request::Ping => {
+                        let _ = reply.send(protocol::ok(vec![("pong", Value::Bool(true))]));
+                    }
+                    Request::Info => {
+                        let _ = reply.send(info_response(&manifest, &workers));
+                    }
+                    Request::Metrics => {
+                        let _ = reply.send(metrics_response(&disp, &workers, started.elapsed().as_secs_f64()));
+                    }
+                    Request::Eval { model } => {
+                        let w = least_loaded(&workers);
+                        workers[w].load.fetch_add(EVAL_LOAD, Ordering::SeqCst);
+                        if let Err(mpsc::SendError(WorkerMsg::Eval { reply, .. })) = workers[w].tx.send(WorkerMsg::Eval { model, reply }) {
+                            workers[w].load.fetch_sub(EVAL_LOAD, Ordering::SeqCst);
+                            disp.record_error();
+                            let _ = reply.send(protocol::err("engine worker unavailable"));
+                        }
+                    }
+                    Request::Sample { model, method, n, seed, return_samples, decode } => {
+                        let key = (model.clone(), method);
+                        let (widx, pending) = match groups.get(&key) {
+                            Some((w, p)) if p.load(Ordering::SeqCst) > 0 => (*w, Arc::clone(p)),
+                            _ => {
+                                let w = least_loaded(&workers);
+                                let p = Arc::new(AtomicUsize::new(0));
+                                groups.insert(key, (w, Arc::clone(&p)));
+                                (w, p)
+                            }
+                        };
+                        pending.fetch_add(n, Ordering::SeqCst);
+                        workers[widx].load.fetch_add(n, Ordering::SeqCst);
+                        let ps = PendingSample { model, method, n, seed, return_samples, decode, reply, group_pending: pending };
+                        if let Err(mpsc::SendError(WorkerMsg::Sample(ps))) = workers[widx].tx.send(WorkerMsg::Sample(ps)) {
+                            ps.group_pending.fetch_sub(ps.n, Ordering::SeqCst);
+                            workers[widx].load.fetch_sub(ps.n, Ordering::SeqCst);
+                            disp.record_error();
+                            let _ = ps.reply.send(protocol::err("engine worker unavailable"));
+                        }
+                        if groups.len() > 64 {
+                            groups.retain(|_, (_, p)| p.load(Ordering::SeqCst) > 0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for w in &workers {
+        let _ = w.tx.send(WorkerMsg::Shutdown);
+    }
+    for w in workers {
+        let _ = w.join.join();
+    }
+}
+
+fn info_response(manifest: &Manifest, workers: &[WorkerHandle]) -> String {
+    let models: Vec<Value> = manifest
+        .models
+        .values()
+        .map(|m| {
+            Value::obj(vec![
+                ("name", Value::str(m.name.clone())),
+                ("dim", Value::num(m.dim as f64)),
+                ("categories", Value::num(m.categories as f64)),
+                ("kind", Value::str(format!("{:?}", m.kind))),
+                ("bpd", Value::num(m.bpd)),
+                ("mock", Value::Bool(m.mock.is_some())),
+            ])
+        })
+        .collect();
+    let warr: Vec<Value> = workers
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            Value::obj(vec![
+                ("id", Value::num(i as f64)),
+                ("queue_depth", Value::num(w.load.load(Ordering::SeqCst) as f64)),
+                ("engines_loaded", Value::num(w.engines_loaded.load(Ordering::SeqCst) as f64)),
+            ])
+        })
+        .collect();
+    protocol::ok(vec![
+        ("models", Value::Arr(models)),
+        ("engine_workers", Value::num(workers.len() as f64)),
+        ("workers", Value::Arr(warr)),
+    ])
+}
+
+fn metrics_response(disp: &Metrics, workers: &[WorkerHandle], uptime_s: f64) -> String {
+    let mut total = Metrics::new();
+    total.merge(disp);
+    let mut warr = Vec::with_capacity(workers.len());
+    for (i, w) in workers.iter().enumerate() {
+        let m = w.metrics.lock().unwrap();
+        total.merge(&m);
+        warr.push(m.worker_value(i, w.load.load(Ordering::SeqCst), w.engines_loaded.load(Ordering::SeqCst)));
+    }
+    let Value::Obj(mut obj) = total.snapshot() else {
+        unreachable!("snapshot is an object")
+    };
+    obj.insert("engine_workers".into(), Value::num(workers.len() as f64));
+    obj.insert("uptime_s".into(), Value::num(uptime_s));
+    obj.insert("workers".into(), Value::Arr(warr));
+    protocol::ok(vec![("metrics", Value::Obj(obj))])
+}
+
+// ---------------------------------------------------------------------------
+// Engine workers
+// ---------------------------------------------------------------------------
+
+fn handle_eval(router: &mut Router, model: &str, reply: &Reply, metrics: &Mutex<Metrics>, load: &AtomicUsize) {
+    let resp = match router.engine(model).and_then(|e| e.eval_bpd()) {
+        Ok(bpd) => protocol::ok(vec![("model", Value::str(model)), ("bpd", Value::num(bpd))]),
+        Err(e) => {
+            metrics.lock().unwrap().record_error();
+            protocol::err(&format!("{e:#}"))
+        }
+    };
+    let _ = reply.send(resp);
+    load.fetch_sub(EVAL_LOAD, Ordering::SeqCst);
+}
+
+/// Fail every stashed request (shutdown / dispatcher gone) and release its
+/// load accounting.
+fn abort_pending(stash: Vec<PendingSample>, load: &AtomicUsize, why: &str) {
+    for p in stash {
+        let _ = p.reply.send(protocol::err(why));
+        p.group_pending.fetch_sub(p.n, Ordering::SeqCst);
+        load.fetch_sub(p.n, Ordering::SeqCst);
+    }
+}
+
+fn worker_loop(
+    mut router: Router,
+    cfg: ServeConfig,
+    rx: mpsc::Receiver<WorkerMsg>,
+    load: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<Metrics>>,
+    engines_loaded: Arc<AtomicUsize>,
+) {
     let mut stash: Vec<PendingSample> = Vec::new();
     loop {
         let msg = if stash.is_empty() {
@@ -201,19 +417,12 @@ fn engine_loop(mut router: Router, cfg: ServeConfig, rx: mpsc::Receiver<Msg>) {
             None
         };
         match msg {
-            Some(Msg::Shutdown) => break,
-            Some(Msg::Req(req, reply)) => {
-                metrics.record_request();
-                match req {
-                    Request::Sample { model, method, n, seed, return_samples, decode } => {
-                        stash.push(PendingSample { model, method, n, seed, return_samples, decode, reply });
-                    }
-                    other => {
-                        let resp = handle_simple(&mut router, &metrics, &other);
-                        let _ = reply.send(resp);
-                    }
-                }
+            Some(WorkerMsg::Shutdown) => break,
+            Some(WorkerMsg::Eval { model, reply }) => {
+                handle_eval(&mut router, &model, &reply, &metrics, &load);
+                engines_loaded.store(router.loaded(), Ordering::SeqCst);
             }
+            Some(WorkerMsg::Sample(p)) => stash.push(p),
             None => {}
         }
         if stash.is_empty() {
@@ -222,70 +431,44 @@ fn engine_loop(mut router: Router, cfg: ServeConfig, rx: mpsc::Receiver<Msg>) {
         // Batching window: gather more requests compatible with the head.
         let window_end = Instant::now() + cfg.max_wait;
         let head_key = (stash[0].model.clone(), stash[0].method);
-        let mut group_jobs: usize = stash.iter().filter(|p| (p.model.clone(), p.method) == head_key).map(|p| p.n).sum();
+        let mut group_jobs: usize = stash.iter().filter(|p| p.model == head_key.0 && p.method == head_key.1).map(|p| p.n).sum();
         while group_jobs < cfg.max_batch {
             let now = Instant::now();
             if now >= window_end {
                 break;
             }
             match rx.recv_timeout(window_end - now) {
-                Ok(Msg::Req(req, reply)) => {
-                    metrics.record_request();
-                    match req {
-                        Request::Sample { model, method, n, seed, return_samples, decode } => {
-                            if (model.clone(), method) == head_key {
-                                group_jobs += n;
-                            }
-                            stash.push(PendingSample { model, method, n, seed, return_samples, decode, reply });
-                        }
-                        other => {
-                            let resp = handle_simple(&mut router, &metrics, &other);
-                            let _ = reply.send(resp);
-                        }
+                Ok(WorkerMsg::Sample(p)) => {
+                    if p.model == head_key.0 && p.method == head_key.1 {
+                        group_jobs += p.n;
                     }
+                    stash.push(p);
                 }
-                Ok(Msg::Shutdown) => return,
+                Ok(WorkerMsg::Eval { model, reply }) => {
+                    handle_eval(&mut router, &model, &reply, &metrics, &load);
+                    engines_loaded.store(router.loaded(), Ordering::SeqCst);
+                }
+                Ok(WorkerMsg::Shutdown) => {
+                    abort_pending(stash, &load, "server shutting down");
+                    return;
+                }
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    abort_pending(stash, &load, "server shutting down");
+                    return;
+                }
             }
         }
         // Execute the head group; keep the rest stashed for the next turn.
-        let (group, rest): (Vec<_>, Vec<_>) = stash.drain(..).partition(|p| (p.model.clone(), p.method) == head_key);
+        let (group, rest): (Vec<_>, Vec<_>) = stash.drain(..).partition(|p| p.model == head_key.0 && p.method == head_key.1);
         stash = rest;
-        execute_group(&mut router, &cfg, &mut metrics, group);
+        execute_group(&mut router, &cfg, &metrics, group, &load);
+        engines_loaded.store(router.loaded(), Ordering::SeqCst);
     }
+    abort_pending(stash, &load, "server shutting down");
 }
 
-fn handle_simple(router: &mut Router, metrics: &Metrics, req: &Request) -> String {
-    match req {
-        Request::Ping => protocol::ok(vec![("pong", Value::Bool(true))]),
-        Request::Metrics => protocol::ok(vec![("metrics", metrics.snapshot())]),
-        Request::Info => {
-            let models: Vec<Value> = router
-                .manifest()
-                .models
-                .values()
-                .map(|m| {
-                    Value::obj(vec![
-                        ("name", Value::str(m.name.clone())),
-                        ("dim", Value::num(m.dim as f64)),
-                        ("categories", Value::num(m.categories as f64)),
-                        ("kind", Value::str(format!("{:?}", m.kind))),
-                        ("bpd", Value::num(m.bpd)),
-                    ])
-                })
-                .collect();
-            protocol::ok(vec![("models", Value::Arr(models))])
-        }
-        Request::Eval { model } => match router.engine(model).and_then(|e| e.eval_bpd()) {
-            Ok(bpd) => protocol::ok(vec![("model", Value::str(model.clone())), ("bpd", Value::num(bpd))]),
-            Err(e) => protocol::err(&format!("{e:#}")),
-        },
-        Request::Sample { .. } => unreachable!("sample handled by batching path"),
-    }
-}
-
-fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &mut Metrics, group: Vec<PendingSample>) {
+fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &Mutex<Metrics>, group: Vec<PendingSample>, load: &AtomicUsize) {
     if group.is_empty() {
         return;
     }
@@ -294,13 +477,20 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &mut Metrics, 
     let total_jobs: usize = group.iter().map(|p| p.n).sum();
     let timer = Timer::start();
 
-    let mut run = || -> Result<(Vec<crate::sampler::JobResult>, usize)> {
+    // Returns (per-job results in request order, total batched ARM calls,
+    // ARM calls per job under the batched cost model — passes × B / jobs,
+    // matching ScheduleReport::calls_per_job).
+    let mut run = || -> Result<(Vec<crate::sampler::JobResult>, usize, f64)> {
         let engine = router.engine(&model)?;
         let info = &engine.info;
         if method == Method::Baseline || !cfg.continuous {
-            // Synchronous path: per request, pick the smallest exe >= n.
+            // Synchronous path: per request, pick the smallest exe >= n and
+            // run it in chunks. Chunk c covers job ids [done, done + bs):
+            // the offset keys fresh noise per chunk — without it every
+            // chunk would repeat jobs 0..bs and duplicate samples.
             let mut all = Vec::with_capacity(total_jobs);
             let mut calls = 0usize;
+            let mut weighted_calls = 0f64;
             for p in &group {
                 let bs = engine
                     .batch_sizes()
@@ -309,14 +499,15 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &mut Metrics, 
                     .unwrap_or_else(|| *engine.batch_sizes().last().unwrap());
                 let mut done = 0;
                 while done < p.n {
-                    let res = engine.sample_batch(method, bs, p.seed)?;
+                    let res = engine.sample_batch_offset(method, bs, p.seed, done as u64)?;
                     calls += res.arm_calls;
+                    weighted_calls += (res.arm_calls * bs) as f64;
                     let take = (p.n - done).min(bs);
                     all.extend(res.jobs.into_iter().take(take));
                     done += take;
                 }
             }
-            Ok((all, calls))
+            Ok((all, calls, weighted_calls / total_jobs as f64))
         } else {
             // Continuous batching over the merged job queue.
             let bs = *engine.batch_sizes().last().unwrap();
@@ -340,15 +531,16 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &mut Metrics, 
             )
             .expect("known method");
             let rep = scheduler::run_continuous_noises(exe, fc, noises)?;
-            Ok((rep.results, rep.total_passes))
+            Ok((rep.results, rep.total_passes, rep.calls_per_job))
         }
     };
 
     match run() {
-        Ok((results, calls)) => {
+        Ok((results, calls, calls_per_job)) => {
             let wall = timer.secs();
             let dim = results.first().map(|r| r.x.len()).unwrap_or(1);
-            metrics.record_batch(total_jobs, calls, dim, wall);
+            let calls_pct = scheduler::calls_pct_of(calls_per_job, dim);
+            metrics.lock().unwrap().record_batch(total_jobs, calls, calls_pct, wall);
             let mut offset = 0usize;
             for p in group {
                 let mine = &results[offset..offset + p.n];
@@ -357,10 +549,12 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &mut Metrics, 
                     ("model", Value::str(model.clone())),
                     ("method", Value::str(method.label())),
                     ("arm_calls", Value::num(calls as f64)),
-                    ("calls_pct", Value::num(100.0 * calls as f64 / dim as f64)),
+                    ("calls_per_job", Value::num(calls_per_job)),
+                    ("calls_pct", Value::num(calls_pct)),
                     ("wall_secs", Value::num(wall)),
                     ("n", Value::num(p.n as f64)),
                 ];
+                let mut decode_err: Option<String> = None;
                 if p.return_samples {
                     let xs: Vec<Vec<i32>> = mine.iter().map(|r| r.x.clone()).collect();
                     fields.push(("samples", protocol::samples_value(&xs)));
@@ -376,19 +570,25 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &mut Metrics, 
                             );
                             fields.push(("images", arr));
                         }
-                        Err(e) => {
-                            let _ = p.reply.send(protocol::err(&format!("decode: {e:#}")));
-                            continue;
-                        }
+                        Err(e) => decode_err = Some(format!("decode: {e:#}")),
                     }
                 }
-                let _ = p.reply.send(protocol::ok(fields));
+                let resp = match decode_err {
+                    Some(msg) => protocol::err(&msg),
+                    None => protocol::ok(fields),
+                };
+                let _ = p.reply.send(resp);
+                p.group_pending.fetch_sub(p.n, Ordering::SeqCst);
+                load.fetch_sub(p.n, Ordering::SeqCst);
             }
         }
         Err(e) => {
-            metrics.record_error();
+            metrics.lock().unwrap().record_error();
+            let msg = format!("{e:#}");
             for p in group {
-                let _ = p.reply.send(protocol::err(&format!("{e:#}")));
+                let _ = p.reply.send(protocol::err(&msg));
+                p.group_pending.fetch_sub(p.n, Ordering::SeqCst);
+                load.fetch_sub(p.n, Ordering::SeqCst);
             }
         }
     }

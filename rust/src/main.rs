@@ -31,6 +31,7 @@ COMMANDS
   sample   --model M [--method fpi|baseline|zeros|last|forecast|noreparam]
            [--batch N] [--seed S] [--t-use T] [--ppm out.ppm]
   serve    [--addr 127.0.0.1:7199] [--max-batch 32] [--max-wait-ms 20] [--sync]
+           [--engine-threads 2] [--worker-threads 4]
   client   [--addr ...] --json '{\"op\":\"ping\"}'
   table1 | table2 | table3           [--seeds K] [--batches 1,32] [--models a,b]
   fig3 | fig4 | fig5 | fig6          [--seed 10] [--out results/]
@@ -122,14 +123,19 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             args.finish().map_err(|e| anyhow!(e))
         }
         "serve" => {
-            let mut cfg = ServeConfig::default();
-            cfg.addr = args.get("addr", &cfg.addr.clone());
-            cfg.max_batch = args.num::<usize>("max-batch", cfg.max_batch);
-            cfg.max_wait = std::time::Duration::from_millis(args.num::<u64>("max-wait-ms", 20));
-            cfg.continuous = !args.flag("sync");
+            let d = ServeConfig::default();
+            let cfg = ServeConfig {
+                addr: args.get("addr", &d.addr),
+                max_batch: args.num::<usize>("max-batch", d.max_batch),
+                max_wait: std::time::Duration::from_millis(args.num::<u64>("max-wait-ms", 20)),
+                continuous: !args.flag("sync"),
+                worker_threads: args.num::<usize>("worker-threads", d.worker_threads),
+                engine_threads: args.num::<usize>("engine-threads", d.engine_threads),
+            };
             args.finish().map_err(|e| anyhow!(e))?;
+            let (engine_threads, batching) = (cfg.engine_threads, if cfg.continuous { "continuous" } else { "sync" });
             let handle = server::spawn(predsamp::artifacts_dir(), cfg)?;
-            println!("predsamp serving on {} (continuous batching; ctrl-c to stop)", handle.addr);
+            println!("predsamp serving on {} ({engine_threads} engine workers, {batching} batching; ctrl-c to stop)", handle.addr);
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }

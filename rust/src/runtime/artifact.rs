@@ -17,6 +17,20 @@ pub enum ModelKind {
     Latent,
 }
 
+/// Pure-rust mock backend parameters. A model whose manifest entry
+/// carries a `"mock"` object is served by [`crate::sampler::mock::MockArm`]
+/// instead of compiled PJRT executables — used by tests, benches and the
+/// serving demo to exercise the full serving stack without artifacts.
+#[derive(Clone, Debug)]
+pub struct MockSpec {
+    /// Conditional coupling strength (0 = near-iid, large = slow FPI).
+    pub strength: f32,
+    /// Table seed: different seeds give different "models".
+    pub seed: u64,
+    /// Batch sizes to expose (stands in for the step_b* artifact set).
+    pub batches: Vec<usize>,
+}
+
 /// Static description of one ARM, mirrored from `ArmConfig.to_manifest()`.
 #[derive(Clone, Debug)]
 pub struct ModelInfo {
@@ -37,17 +51,23 @@ pub struct ModelInfo {
     /// For latent models: the paired autoencoder name.
     pub autoencoder: Option<String>,
     pub test_n: usize,
+    /// Present when the model is backed by the pure-rust mock ARM.
+    pub mock: Option<MockSpec>,
 }
 
 impl ModelInfo {
     /// Batch sizes for which a step executable exists.
     pub fn step_batch_sizes(&self) -> Vec<usize> {
-        let mut out: Vec<usize> = self
-            .files
-            .keys()
-            .filter_map(|k| k.strip_prefix("step_b").and_then(|b| b.parse().ok()))
-            .collect();
+        let mut out: Vec<usize> = if let Some(mock) = &self.mock {
+            mock.batches.clone()
+        } else {
+            self.files
+                .keys()
+                .filter_map(|k| k.strip_prefix("step_b").and_then(|b| b.parse().ok()))
+                .collect()
+        };
         out.sort_unstable();
+        out.dedup();
         out
     }
 
@@ -110,6 +130,30 @@ impl Manifest {
             let req = |key: &str| -> Result<usize> {
                 m.get(key).as_usize().ok_or_else(|| anyhow!("model {name}: missing {key}"))
             };
+            let mock = if m.get("mock").as_obj().is_some() {
+                let mo = m.get("mock");
+                let batches: Vec<usize> = mo
+                    .get("batches")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                    .unwrap_or_else(|| vec![1]);
+                if batches.is_empty() {
+                    bail!("model {name}: mock spec has no batch sizes");
+                }
+                // Seed travels as a string: JSON numbers are f64 here and
+                // would silently corrupt u64 seeds above 2^53.
+                let seed = match mo.get("seed") {
+                    Value::Str(s) => s.parse().map_err(|_| anyhow!("model {name}: bad mock seed {s:?}"))?,
+                    other => other.as_i64().unwrap_or(0) as u64,
+                };
+                Some(MockSpec {
+                    strength: mo.get("strength").as_f64().unwrap_or(2.0) as f32,
+                    seed,
+                    batches,
+                })
+            } else {
+                None
+            };
             let info = ModelInfo {
                 name: name.clone(),
                 kind,
@@ -125,6 +169,7 @@ impl Manifest {
                 files,
                 autoencoder: m.get("autoencoder").as_str().map(String::from),
                 test_n: m.get("test_n").as_usize().unwrap_or(0),
+                mock,
             };
             if info.dim != info.channels * info.pixels {
                 bail!("model {name}: inconsistent dim");
@@ -198,6 +243,98 @@ impl Manifest {
     }
 }
 
+/// Parameters for one model of a mock-manifest fixture (see
+/// [`write_mock_manifest`]). The flat layout is `channels * pixels`
+/// variables with `height = pixels, width = 1`.
+#[derive(Clone, Debug)]
+pub struct MockModelSpec {
+    pub name: String,
+    pub channels: usize,
+    pub pixels: usize,
+    pub categories: usize,
+    pub t_fore: usize,
+    pub strength: f32,
+    pub seed: u64,
+    pub batches: Vec<usize>,
+}
+
+impl MockModelSpec {
+    /// A small, fast default spec; adjust fields as needed.
+    pub fn new(name: &str, seed: u64) -> MockModelSpec {
+        MockModelSpec {
+            name: name.to_string(),
+            channels: 2,
+            pixels: 12,
+            categories: 5,
+            t_fore: 1,
+            strength: 2.5,
+            seed,
+            batches: vec![1, 4],
+        }
+    }
+
+    /// The two-model fixture the serving bench and demo share — distinct
+    /// shapes and coupling strengths so a mixed `(model, method)` stream
+    /// forms incompatible batching groups that contend for engine workers.
+    pub fn demo_pair() -> Vec<MockModelSpec> {
+        let mut a = MockModelSpec::new("mock_a", 31);
+        a.channels = 3;
+        a.pixels = 64;
+        a.categories = 8;
+        a.strength = 3.0;
+        a.batches = vec![1, 8];
+        let mut b = MockModelSpec::new("mock_b", 17);
+        b.channels = 1;
+        b.pixels = 96;
+        b.categories = 6;
+        b.strength = 2.0;
+        b.batches = vec![1, 8];
+        vec![a, b]
+    }
+}
+
+/// Write `<dir>/manifest.json` describing pure-mock models, creating the
+/// directory. The resulting directory is a drop-in artifacts dir for
+/// [`Manifest::load`] / `server::spawn` — no compiled artifacts or PJRT
+/// needed — so the serving stack can be tested and benchmarked offline.
+pub fn write_mock_manifest(dir: &Path, models: &[MockModelSpec]) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let mut model_objs = BTreeMap::new();
+    for s in models {
+        let entry = Value::obj(vec![
+            ("kind", Value::str("explicit")),
+            ("channels", Value::num(s.channels as f64)),
+            ("height", Value::num(s.pixels as f64)),
+            ("width", Value::num(1.0)),
+            ("categories", Value::num(s.categories as f64)),
+            ("t_fore", Value::num(s.t_fore as f64)),
+            ("share_repr", Value::Bool(true)),
+            ("dim", Value::num((s.channels * s.pixels) as f64)),
+            ("pixels", Value::num(s.pixels as f64)),
+            ("bpd", Value::num(0.0)),
+            ("test_n", Value::num(0.0)),
+            ("files", Value::Obj(BTreeMap::new())),
+            (
+                "mock",
+                Value::obj(vec![
+                    ("strength", Value::num(s.strength as f64)),
+                    ("seed", Value::str(s.seed.to_string())),
+                    ("batches", Value::Arr(s.batches.iter().map(|&b| Value::num(b as f64)).collect())),
+                ]),
+            ),
+        ]);
+        model_objs.insert(s.name.clone(), entry);
+    }
+    let root = Value::obj(vec![
+        ("quick", Value::Bool(true)),
+        ("models", Value::Obj(model_objs)),
+        ("autoencoders", Value::Obj(BTreeMap::new())),
+    ]);
+    let path = dir.join("manifest.json");
+    std::fs::write(&path, root.to_string()).with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -254,6 +391,25 @@ mod tests {
             }
         }
         assert!(Manifest::from_value("/tmp".into(), &v).is_err());
+    }
+
+    #[test]
+    fn mock_manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("predsamp-mockman-{}", std::process::id()));
+        // A seed above 2^53 exercises the string encoding (f64 JSON
+        // numbers would corrupt it silently).
+        let big_seed = u64::MAX - 12345;
+        let mut spec = MockModelSpec::new("mock_m", big_seed);
+        spec.batches = vec![4, 1, 4];
+        write_mock_manifest(&dir, &[spec]).unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let info = man.model("mock_m").unwrap();
+        let mock = info.mock.as_ref().expect("mock spec survives roundtrip");
+        assert_eq!(mock.seed, big_seed);
+        assert!((mock.strength - 2.5).abs() < 1e-6);
+        assert_eq!(info.step_batch_sizes(), vec![1, 4], "sorted + deduped");
+        assert_eq!(info.dim, info.channels * info.pixels);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! channels (see `coordinator::server`).
 
 use anyhow::{Context, Result};
-use once_cell::unsync::OnceCell;
+use std::cell::OnceCell;
 use std::path::Path;
 
 thread_local! {

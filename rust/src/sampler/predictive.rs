@@ -220,11 +220,18 @@ impl<'m, M: StepModel> PredictiveSampler<'m, M> {
     /// convergence of the whole batch, and report the paper's batched
     /// metrics (slowest job determines `arm_calls`).
     pub fn run_sync(&mut self, seed: u64) -> Result<BatchResult> {
+        self.run_sync_offset(seed, 0)
+    }
+
+    /// As [`Self::run_sync`], but slot `s` takes job id `job_offset + s`.
+    /// Chunked serving uses this so consecutive chunks of one request draw
+    /// independent noise blocks instead of repeating jobs `0..B`.
+    pub fn run_sync_offset(&mut self, seed: u64, job_offset: u64) -> Result<BatchResult> {
         let b = self.model.batch();
         let d = self.model.dim();
         let k = self.model.categories();
         for slot in 0..b {
-            self.reset_slot(slot, JobNoise::new(seed, slot as u64, d, k));
+            self.reset_slot(slot, JobNoise::new(seed, job_offset + slot as u64, d, k));
         }
         self.passes = 0;
         let timer = Timer::start();
@@ -315,6 +322,33 @@ mod tests {
         let batch = ps.run_sync(42).unwrap();
         for (id, job) in batch.jobs.iter().enumerate() {
             assert_eq!(job.x, singles[id], "slot {id}");
+        }
+    }
+
+    #[test]
+    fn run_sync_offset_matches_per_job_reference() {
+        // run_sync_offset(seed, o) slot s must equal job id o+s sampled
+        // alone — the chunked serving path's correctness contract.
+        let model1 = MockArm::new(1, 3, 5, 4, 2, 2.0, 9);
+        let model4 = MockArm::new(4, 3, 5, 4, 2, 2.0, 9);
+        let d = model1.dim();
+        let offset = 4u64;
+        let mut ps = PredictiveSampler::new(&model4, Box::new(forecast::FpiReuse));
+        let chunk = ps.run_sync_offset(42, offset).unwrap();
+        for s in 0..4u64 {
+            let mut ps1 = PredictiveSampler::new(&model1, Box::new(forecast::FpiReuse));
+            ps1.reset_slot(0, JobNoise::new(42, offset + s, d, 4));
+            while !ps1.slot_done(0) {
+                ps1.step().unwrap();
+            }
+            let single = ps1.take_result(0).unwrap().x;
+            assert_eq!(chunk.jobs[s as usize].x, single, "job {}", offset + s);
+        }
+        // And the offset chunk is disjoint from the offset-0 chunk.
+        let mut ps0 = PredictiveSampler::new(&model4, Box::new(forecast::FpiReuse));
+        let chunk0 = ps0.run_sync_offset(42, 0).unwrap();
+        for s in 0..4 {
+            assert_ne!(chunk.jobs[s].x, chunk0.jobs[s].x, "slot {s} repeated noise across chunks");
         }
     }
 

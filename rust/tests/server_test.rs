@@ -1,12 +1,15 @@
-//! End-to-end serving tests: spawn the TCP server against the real
-//! artifacts and exercise the protocol, batching and exactness.
+//! End-to-end serving tests. The mock-ARM tests exercise the full TCP
+//! serving stack (protocol, dispatcher, sharded engine workers, batching,
+//! exactness) with no compiled artifacts; the remaining tests add the
+//! real-artifact path and skip when `make artifacts` hasn't run.
 
 use predsamp::coordinator::config::ServeConfig;
-use predsamp::coordinator::server::{spawn, Client};
+use predsamp::coordinator::server::{spawn, Client, ServerHandle};
+use predsamp::runtime::artifact::{write_mock_manifest, MockModelSpec};
 use predsamp::substrate::json::Value;
 use std::time::Duration;
 
-fn server() -> Option<predsamp::coordinator::server::ServerHandle> {
+fn server() -> Option<ServerHandle> {
     let dir = predsamp::artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping server test: run `make artifacts`");
@@ -18,8 +21,149 @@ fn server() -> Option<predsamp::coordinator::server::ServerHandle> {
         max_wait: Duration::from_millis(10),
         continuous: true,
         worker_threads: 4,
+        engine_threads: 2,
     };
     Some(spawn(dir, cfg).expect("server spawns"))
+}
+
+/// Spawn a server over a two-model mock fixture (no artifacts needed).
+fn spawn_mock(tag: &str, engine_threads: usize, continuous: bool) -> ServerHandle {
+    let dir = std::env::temp_dir().join(format!("predsamp-server-{tag}-{}", std::process::id()));
+    let mut a = MockModelSpec::new("mock_a", 11);
+    a.batches = vec![1, 4];
+    let mut b = MockModelSpec::new("mock_b", 7);
+    b.channels = 1;
+    b.pixels = 16;
+    b.categories = 4;
+    b.strength = 1.5;
+    b.batches = vec![1, 4];
+    write_mock_manifest(&dir, &[a, b]).unwrap();
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+        continuous,
+        worker_threads: 4,
+        engine_threads,
+    };
+    spawn(dir, cfg).expect("mock server spawns")
+}
+
+fn samples_of(v: &Value) -> Vec<Vec<i32>> {
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{v}");
+    predsamp::coordinator::protocol::parse_samples(v.get("samples")).expect("samples field")
+}
+
+#[test]
+fn mock_sharding_preserves_bitwise_exactness() {
+    // THE acceptance gate for the worker pool: engine_threads = 1 vs 4
+    // must produce bitwise-identical samples for a mixed concurrent
+    // (model, method) stream — job noise is keyed (seed, job index),
+    // never worker or slot.
+    let collect = |tag: &str, threads: usize| -> Vec<Vec<Vec<i32>>> {
+        let server = spawn_mock(tag, threads, true);
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let model = if i % 2 == 0 { "mock_a" } else { "mock_b" };
+                let method = if i % 3 == 0 { "fpi" } else { "zeros" };
+                let r = c
+                    .call(&format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":3,"seed":{i}}}"#))
+                    .unwrap();
+                samples_of(&r)
+            }));
+        }
+        let out: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        server.stop();
+        out
+    };
+    let one = collect("exact1", 1);
+    let four = collect("exact4", 4);
+    assert_eq!(one, four, "samples must not depend on engine_threads");
+    assert_eq!(one.len(), 6);
+    assert!(one.iter().all(|s| s.len() == 3));
+}
+
+#[test]
+fn sync_path_chunks_are_distinct_jobs() {
+    // Regression for the duplicate-sample bug: n = 2 * batch_size on the
+    // sync path used to reuse job ids 0..bs per chunk, repeating the
+    // first chunk's samples verbatim.
+    let server = spawn_mock("chunks", 1, false);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = c.call(r#"{"op":"sample","model":"mock_a","method":"fpi","n":8,"seed":3}"#).unwrap();
+    let xs = samples_of(&r);
+    assert_eq!(xs.len(), 8);
+    for i in 0..xs.len() {
+        for j in i + 1..xs.len() {
+            assert_ne!(xs[i], xs[j], "jobs {i} and {j} identical — a chunk reused the first chunk's noise");
+        }
+    }
+    // calls_pct is per-job normalized now: 8 jobs at bs=4 with <= d passes
+    // per chunk can never exceed 100% of the baseline's d.
+    let pct = r.get("calls_pct").as_f64().unwrap();
+    assert!(pct > 0.0 && pct <= 100.0 + 1e-9, "calls_pct {pct} out of (0, 100]");
+    server.stop();
+
+    // Cross-path exactness: the continuous scheduler assigns the same job
+    // ids 0..n, so the same request must give bitwise-equal samples.
+    let server = spawn_mock("chunks2", 1, true);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r2 = c.call(r#"{"op":"sample","model":"mock_a","method":"fpi","n":8,"seed":3}"#).unwrap();
+    assert_eq!(samples_of(&r2), xs, "sync chunking and continuous batching must agree bitwise");
+    // Baseline (always sync, chunked) agrees too: exactness across the stack.
+    let r3 = c.call(r#"{"op":"sample","model":"mock_a","method":"baseline","n":8,"seed":3}"#).unwrap();
+    assert_eq!(samples_of(&r3), xs, "baseline must match predictive sampling bitwise");
+    server.stop();
+}
+
+#[test]
+fn mock_metrics_and_info_report_worker_pool() {
+    let server = spawn_mock("metrics", 3, true);
+    let mut c = Client::connect(&server.addr).unwrap();
+    for seed in 0..3 {
+        let r = c
+            .call(&format!(r#"{{"op":"sample","model":"mock_a","method":"fpi","n":4,"seed":{seed},"return_samples":false}}"#))
+            .unwrap();
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    }
+    let info = c.call(r#"{"op":"info"}"#).unwrap();
+    assert_eq!(info.get("engine_workers").as_i64(), Some(3));
+    assert_eq!(info.get("workers").as_arr().unwrap().len(), 3);
+    let m = c.call(r#"{"op":"metrics"}"#).unwrap();
+    let metrics = m.get("metrics");
+    assert_eq!(metrics.get("engine_workers").as_i64(), Some(3));
+    assert!(metrics.get("requests").as_i64().unwrap() >= 4);
+    assert_eq!(metrics.get("samples").as_i64(), Some(12));
+    let workers = metrics.get("workers").as_arr().unwrap();
+    assert_eq!(workers.len(), 3);
+    for w in workers {
+        assert!(w.get("queue_depth").as_i64().unwrap() >= 0);
+        let occ = w.get("occupancy").as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&occ), "occupancy {occ}");
+    }
+    // All batches landed somewhere, and the sum matches the aggregate.
+    let batch_sum: i64 = workers.iter().map(|w| w.get("batches").as_i64().unwrap()).sum();
+    assert_eq!(batch_sum, metrics.get("batches").as_i64().unwrap());
+    server.stop();
+}
+
+#[test]
+fn mock_eval_errors_cleanly_and_server_survives() {
+    // Mock models have no test set: eval must error without wedging the
+    // worker, and unknown models must error per-request.
+    let server = spawn_mock("evalerr", 2, true);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = c.call(r#"{"op":"eval","model":"mock_a"}"#).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "{r}");
+    let r = c.call(r#"{"op":"sample","model":"no_such_model"}"#).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "{r}");
+    // The pool still serves after the errors.
+    let r = c.call(r#"{"op":"sample","model":"mock_b","method":"fpi","n":2,"seed":0}"#).unwrap();
+    assert_eq!(samples_of(&r).len(), 2);
+    server.stop();
 }
 
 #[test]

@@ -1,0 +1,58 @@
+//! Offline minimal reimplementation of the `log` macro facade: levelled
+//! stderr logging controlled by `RUST_LOG` (off/error/warn/info/debug/
+//! trace; default `warn`). No per-module filtering, no pluggable loggers —
+//! just enough for the serving stack's diagnostics.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const UNSET: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn max_level() -> u8 {
+    let cached = LEVEL.load(Ordering::Relaxed);
+    if cached != UNSET {
+        return cached;
+    }
+    let level = match std::env::var("RUST_LOG").ok().map(|s| s.to_ascii_lowercase()).as_deref() {
+        Some("off") => 0,
+        Some("error") => 1,
+        Some("info") => 3,
+        Some("debug") => 4,
+        Some("trace") => 5,
+        _ => 2, // warn (also the default with RUST_LOG unset or unknown)
+    };
+    LEVEL.store(level, Ordering::Relaxed);
+    level
+}
+
+#[doc(hidden)]
+pub fn __log(level: u8, tag: &str, args: std::fmt::Arguments<'_>) {
+    if level <= max_level() {
+        eprintln!("[{tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__log(1, "ERROR", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__log(2, "WARN", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__log(3, "INFO", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__log(4, "DEBUG", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__log(5, "TRACE", format_args!($($arg)*)) };
+}

@@ -1,0 +1,120 @@
+//! Offline **stub** of the `xla` (PJRT) bindings API surface predsamp
+//! uses. It exists so the crate builds and the mock-ARM / substrate paths
+//! run on machines without the XLA closure: every operation that would
+//! touch PJRT returns an error at runtime instead of failing the build.
+//!
+//! To run compiled artifacts, point the `xla` path dependency in the root
+//! `Cargo.toml` at the real bindings — the type and method names here
+//! mirror that API, so no source change is needed.
+
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT is unavailable in this build (offline `xla` stub); point the \
+         `xla` path dependency at the real bindings to run compiled artifacts"
+    )))
+}
+
+/// PJRT CPU client handle (stub: creation succeeds, compilation errors).
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling HLO")
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing")
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("device-to-host transfer")
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[i32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("tuple unpack")
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("tuple unpack")
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        unavailable("tuple unpack")
+    }
+
+    pub fn copy_raw_to(&self, _out: &mut [f32]) -> Result<()> {
+        unavailable("literal read")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("literal read")
+    }
+}
+
+/// Parsed HLO-text module (stub: parsing only checks the file is readable).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let p = path.as_ref();
+        std::fs::read_to_string(p).map_err(|e| Error(format!("reading {}: {e}", p.display())))?;
+        Ok(HloModuleProto)
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
