@@ -1,0 +1,140 @@
+//! Sampler hot-path benchmark: full-shape passes vs frontier-aware
+//! [`PassPlan`] passes (+ batch down-shifting) on the mock serving mix.
+//!
+//! The paper's speedup is measured in ARM inference *calls*; this bench
+//! measures what each call costs. A full pass always evaluates
+//! `B * (d + P*T)` output rows — log-probs for converged slots and
+//! finalized prefixes, forecast heads nobody reads; a planned pass
+//! evaluates only the live spans (plus heads only when the policy
+//! consumes them). Both schedules are run over the same job queues and
+//! asserted bitwise identical, then the positions-evaluated-per-job
+//! reduction and wall time are reported and written to
+//! `BENCH_sampler_hotpath.json` (machine-readable, uploaded as a CI
+//! artifact) to seed the perf trajectory.
+//!
+//!     cargo bench --bench sampler_hotpath [-- --jobs 32 --out BENCH_sampler_hotpath.json]
+//!
+//! [`PassPlan`]: predsamp::sampler::PassPlan
+
+use predsamp::coordinator::scheduler::{self, ScheduleReport};
+use predsamp::sampler::forecast;
+use predsamp::sampler::mock::MockArm;
+use predsamp::sampler::noise::JobNoise;
+use predsamp::sampler::StepModel;
+use predsamp::substrate::cli::Args;
+use predsamp::substrate::json::Value;
+use predsamp::substrate::timer::fmt_duration;
+
+/// The serving mix: the two demo mock models under the methods the
+/// serving bench drives (see `benches/serving_load.rs`).
+const MIX: [(&str, &str); 4] = [("mock_a", "fpi"), ("mock_b", "fpi"), ("mock_a", "zeros"), ("mock_b", "learned")];
+
+fn model(name: &str, batch: usize) -> MockArm {
+    match name {
+        // The demo pair's channel/category structure at serving-scale
+        // dims (d = 192 / 256), big enough that planned passes cross the
+        // shared-pool row-parallel threshold in MockArm::run_plan.
+        "mock_a" => MockArm::new(batch, 3, 64, 8, 2, 2.0, 31),
+        "mock_b" => MockArm::new(batch, 1, 256, 4, 2, 1.5, 17),
+        other => panic!("unknown mix model {other}"),
+    }
+}
+
+fn run_group(name: &str, method: &str, jobs: usize, seed: u64, plan: bool) -> anyhow::Result<ScheduleReport> {
+    let family: Vec<MockArm> = if plan {
+        vec![model(name, 1), model(name, 2), model(name, 4), model(name, 8)]
+    } else {
+        // The pre-plan hot path: one fixed-size executable, full passes.
+        vec![model(name, 8)]
+    };
+    let refs: Vec<&MockArm> = family.iter().collect();
+    let d = refs[0].dim();
+    let k = refs[0].categories();
+    let noises: Vec<JobNoise> = (0..jobs).map(|id| JobNoise::new(seed, id as u64, d, k)).collect();
+    let fc = forecast::by_name(method, 2).expect("known method");
+    scheduler::run_continuous_family_mode(&refs, fc, noises, plan)
+}
+
+fn report_value(r: &ScheduleReport, jobs: usize) -> Value {
+    Value::obj(vec![
+        ("positions", Value::num(r.positions_evaluated as f64)),
+        ("positions_per_job", Value::num(r.positions_evaluated as f64 / jobs as f64)),
+        ("passes", Value::num(r.total_passes as f64)),
+        ("calls_per_job", Value::num(r.calls_per_job)),
+        ("occupancy", Value::num(r.occupancy)),
+        ("downshifts", Value::num(r.downshifts as f64)),
+        ("min_batch", Value::num(r.min_batch as f64)),
+        ("wall_secs", Value::num(r.wall_secs)),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let jobs = args.num::<usize>("jobs", 32);
+    let out_path = args.get("out", "BENCH_sampler_hotpath.json");
+
+    println!("sampler hotpath: {jobs} jobs/group over {} mix groups (mock ARM, B=8 full vs planned+downshift)", MIX.len());
+    let mut groups = Vec::new();
+    let (mut tot_full, mut tot_plan) = (0usize, 0usize);
+    let (mut wall_full, mut wall_plan) = (0f64, 0f64);
+    for (gi, (name, method)) in MIX.iter().enumerate() {
+        let seed = 1000 + gi as u64;
+        let full = run_group(name, method, jobs, seed, false)?;
+        let plan = run_group(name, method, jobs, seed, true)?;
+        for i in 0..jobs {
+            assert_eq!(plan.results[i].x, full.results[i].x, "{name}/{method} job {i}: planned schedule changed the sample");
+        }
+        let d = model(name, 1).dim();
+        let reduction = full.positions_evaluated as f64 / plan.positions_evaluated.max(1) as f64;
+        println!(
+            "  {name:>6}/{method:<7} d={d:<3} positions/job {:>8.0} -> {:>7.0}  ({reduction:.2}x less)  passes {:>3} -> {:>3}  wall {} -> {}",
+            full.positions_evaluated as f64 / jobs as f64,
+            plan.positions_evaluated as f64 / jobs as f64,
+            full.total_passes,
+            plan.total_passes,
+            fmt_duration(full.wall_secs),
+            fmt_duration(plan.wall_secs),
+        );
+        tot_full += full.positions_evaluated;
+        tot_plan += plan.positions_evaluated;
+        wall_full += full.wall_secs;
+        wall_plan += plan.wall_secs;
+        groups.push(Value::obj(vec![
+            ("model", Value::str(*name)),
+            ("method", Value::str(*method)),
+            ("jobs", Value::num(jobs as f64)),
+            ("dim", Value::num(d as f64)),
+            ("full", report_value(&full, jobs)),
+            ("plan", report_value(&plan, jobs)),
+            ("positions_reduction", Value::num(reduction)),
+        ]));
+    }
+    let reduction = tot_full as f64 / tot_plan.max(1) as f64;
+    println!(
+        "  total: positions/job {:.0} -> {:.0} ({reduction:.2}x reduction), wall {} -> {}",
+        tot_full as f64 / (jobs * MIX.len()) as f64,
+        tot_plan as f64 / (jobs * MIX.len()) as f64,
+        fmt_duration(wall_full),
+        fmt_duration(wall_plan)
+    );
+
+    let doc = Value::obj(vec![
+        ("bench", Value::str("sampler_hotpath")),
+        ("jobs_per_group", Value::num(jobs as f64)),
+        ("groups", Value::Arr(groups)),
+        (
+            "total",
+            Value::obj(vec![
+                ("full_positions", Value::num(tot_full as f64)),
+                ("plan_positions", Value::num(tot_plan as f64)),
+                ("positions_reduction", Value::num(reduction)),
+                ("full_wall_secs", Value::num(wall_full)),
+                ("plan_wall_secs", Value::num(wall_plan)),
+            ]),
+        ),
+    ]);
+    std::fs::write(&out_path, format!("{doc}\n"))?;
+    println!("wrote {out_path}");
+    assert!(reduction >= 2.0, "plan-based passes must at least halve positions/job (got {reduction:.2}x)");
+    Ok(())
+}

@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     println!("batch-1 reference: {b1_rate:.1} ARM calls/job ({:.1}% of d={d})", 100.0 * b1_rate / d as f64);
 
     let cont = scheduler::run_continuous(exe, Box::new(FpiReuse), jobs, seed)?;
-    let sync = scheduler::run_sync_chunks(exe, || Box::new(FpiReuse), jobs, seed)?;
+    let sync = scheduler::run_sync_chunks(exe, Box::new(FpiReuse), jobs, seed)?;
     println!("\n{model}, {jobs} jobs, batch {bs}, FPI:");
     for (tag, r) in [("continuous", &cont), ("sync", &sync)] {
         println!(

@@ -54,7 +54,13 @@ pub fn fig_samples(manifest: &Manifest, model: &str, out_dir: &Path, seed: u64, 
             print!("{}", trace::render_with_mistakes(&res.jobs[0], info.width, info.height, info.channels, info.categories).to_ascii());
         }
         let total_mistakes: usize = res.jobs[..n_show].iter().flat_map(|j| j.mistakes.iter().map(|&m| m as usize)).sum();
-        println!("{model} {tag}: {} ARM calls ({:.1}%), {} mistakes / {} vars shown", res.arm_calls, res.calls_pct(info.dim), total_mistakes, n_show * info.dim);
+        println!(
+            "{model} {tag}: {} ARM calls ({:.1}%), {} mistakes / {} vars shown",
+            res.arm_calls,
+            res.calls_pct(info.dim),
+            total_mistakes,
+            n_show * info.dim
+        );
     }
     Ok(written)
 }

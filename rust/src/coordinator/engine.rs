@@ -9,6 +9,7 @@
 //! it; the server replicates engines per worker for the same reason.
 
 use crate::coordinator::config::Method;
+use crate::coordinator::scheduler::{self, ScheduleReport};
 use crate::runtime::artifact::{Manifest, ModelInfo, ModelKind};
 use crate::runtime::autoenc::DecoderExe;
 use crate::runtime::step::{bpd_of, StepExecutable, StepOutput};
@@ -17,8 +18,8 @@ use crate::sampler::forecast::{self, Forecaster};
 use crate::sampler::mock::MockArm;
 use crate::sampler::noise::JobNoise;
 use crate::sampler::predictive::PredictiveSampler;
-use crate::sampler::{BatchResult, StepModel};
-use anyhow::{anyhow, bail, Result};
+use crate::sampler::{BatchResult, PassPlan, StepModel};
+use anyhow::{anyhow, bail, ensure, Result};
 use std::cell::Cell;
 use std::collections::BTreeMap;
 
@@ -79,6 +80,21 @@ impl StepModel for StepBackend {
                 Ok(())
             }
         }
+    }
+    fn run_plan(&self, x: &[i32], out: &mut StepOutput, plan: &PassPlan) -> Result<()> {
+        match self {
+            // Shape-specialized: the compiled executable runs full passes
+            // (the plan's skip permissions go unused, which is allowed).
+            StepBackend::Compiled(exe) => exe.run_into(x, out),
+            StepBackend::Mock { arm, calls } => {
+                arm.run_plan(x, out, plan)?;
+                calls.set(calls.get() + 1);
+                Ok(())
+            }
+        }
+    }
+    fn exploits_plan(&self) -> bool {
+        matches!(self, StepBackend::Mock { .. })
     }
 }
 
@@ -148,6 +164,23 @@ impl Engine {
         v.sort_unstable();
         v.dedup();
         v
+    }
+
+    /// Every exported backend satisfying `need_fore`, ascending by batch
+    /// size — the model family the down-shifting scheduler runs over.
+    pub fn backends_for(&self, need_fore: bool) -> Vec<&StepBackend> {
+        self.batch_sizes().into_iter().filter_map(|b| self.exe_for(b, need_fore).ok()).collect()
+    }
+
+    /// Continuous batching over an explicit job queue, using *every*
+    /// exported batch size: the schedule starts on the smallest batch
+    /// that fits the queue and down-shifts as it drains, so a tail of
+    /// stragglers stops paying full-batch passes. Samples are bitwise
+    /// independent of the shifting (noise is keyed by job id).
+    pub fn sample_continuous(&self, method: Method, noises: Vec<JobNoise>) -> Result<ScheduleReport> {
+        ensure!(method != Method::Baseline, "baseline serves through the sync path");
+        let backends = self.backends_for(Self::needs_fore(method));
+        scheduler::run_continuous_family(&backends, self.forecaster_for(method)?, noises)
     }
 
     /// Whether `method` reads the forecast-head outputs.
@@ -293,6 +326,26 @@ mod tests {
         for s in 0..4 {
             assert_eq!(chunk1.jobs[s].x, base1.jobs[s].x, "slot {s}: offset chunk must stay exact");
         }
+    }
+
+    #[test]
+    fn mock_engine_continuous_downshifts_and_stays_exact() {
+        // The serving continuous path: scheduling over the [1, 4] backend
+        // family must agree bitwise with the fixed-batch sync path, and a
+        // single-job queue must run entirely on the b=1 backend.
+        let eng = mock_engine("family");
+        let d = eng.info.dim;
+        let k = eng.info.categories;
+        let sync = eng.sample_batch(Method::Fpi, 4, 9).unwrap();
+        let noises: Vec<JobNoise> = (0..4).map(|id| JobNoise::new(9, id, d, k)).collect();
+        let rep = eng.sample_continuous(Method::Fpi, noises).unwrap();
+        for s in 0..4 {
+            assert_eq!(rep.results[s].x, sync.jobs[s].x, "job {s}: continuous family diverged from sync");
+        }
+        let one = eng.sample_continuous(Method::Fpi, vec![JobNoise::new(9, 0, d, k)]).unwrap();
+        assert_eq!(one.min_batch, 1, "single job must use the b=1 backend");
+        assert_eq!(one.results[0].x, sync.jobs[0].x);
+        assert!(eng.sample_continuous(Method::Baseline, vec![]).is_err());
     }
 
     #[test]

@@ -10,13 +10,21 @@
 //! approaches the batch-size-1 rate. Per-job noise is keyed by job id
 //! (not slot), so results are bitwise identical to any other placement —
 //! the refill tests rely on that invariant.
+//!
+//! Given a *family* of step models (one per exported batch size), the
+//! scheduler also **down-shifts**: once the queue is dry and fewer jobs
+//! remain in flight than the current batch, the survivors are migrated —
+//! state and all, via [`PredictiveSampler::extract_slot`] — onto the
+//! smallest exported batch that still fits, so a draining tail pays for
+//! b=1 passes instead of b=B ones. Placement irrelevance (noise keyed by
+//! job id) is what makes the migration provably exact.
 
 use crate::sampler::forecast::Forecaster;
 use crate::sampler::noise::JobNoise;
 use crate::sampler::predictive::PredictiveSampler;
 use crate::sampler::{JobResult, StepModel};
 use crate::substrate::timer::Timer;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 /// Outcome of scheduling `n_jobs` through a fixed-size batch engine.
 #[derive(Clone, Debug)]
@@ -28,9 +36,17 @@ pub struct ScheduleReport {
     /// Mean active slots per pass (≤ batch size).
     pub occupancy: f64,
     pub wall_secs: f64,
-    /// ARM calls per job (total_passes * B / n — the batched cost model —
+    /// ARM calls per job (slot-passes / n — the batched cost model —
     /// for comparison against the paper's batch-1 rate).
     pub calls_per_job: f64,
+    /// Output rows the backends were asked for (log-prob positions +
+    /// forecast-head rows), summed over passes — the hot-path bench's
+    /// useful-work metric.
+    pub positions_evaluated: usize,
+    /// Times the schedule migrated to a smaller exported batch size.
+    pub downshifts: usize,
+    /// Smallest batch size the schedule executed on.
+    pub min_batch: usize,
 }
 
 /// Per-job ARM calls as a percentage of the baseline's `d` calls — the
@@ -69,74 +85,156 @@ pub fn run_continuous_noises<M: StepModel>(
     forecaster: Box<dyn Forecaster>,
     noises: Vec<JobNoise>,
 ) -> Result<ScheduleReport> {
+    run_continuous_family(&[model], forecaster, noises)
+}
+
+/// Continuous batching with **batch down-shifting** over a family of step
+/// models for the same weights at different exported batch sizes. Starts
+/// on the smallest batch that fits the queue and migrates surviving jobs
+/// to smaller batches as the queue drains. Single-element families reduce
+/// to plain continuous batching.
+pub fn run_continuous_family<M: StepModel>(
+    models: &[&M],
+    forecaster: Box<dyn Forecaster>,
+    noises: Vec<JobNoise>,
+) -> Result<ScheduleReport> {
+    run_continuous_family_mode(models, forecaster, noises, true)
+}
+
+/// As [`run_continuous_family`]; `use_plan = false` forces full-shape
+/// passes (the pre-plan hot path, kept for `benches/sampler_hotpath.rs`).
+pub fn run_continuous_family_mode<M: StepModel>(
+    models: &[&M],
+    forecaster: Box<dyn Forecaster>,
+    noises: Vec<JobNoise>,
+    use_plan: bool,
+) -> Result<ScheduleReport> {
+    ensure!(!models.is_empty(), "empty model family");
+    // Batch sizes ascending. The family must be one model at different
+    // exported batch sizes: migrating a job across different shapes would
+    // corrupt its noise indexing, and across different weights would
+    // silently break exactness. Shape agreement is checkable here
+    // (t_fore may legitimately differ — logp-only variants export 0);
+    // weight identity is the caller's contract.
+    let mut order: Vec<usize> = (0..models.len()).collect();
+    order.sort_by_key(|&i| models[i].batch());
+    let shapes_agree = models
+        .iter()
+        .all(|m| m.dim() == models[0].dim() && m.categories() == models[0].categories() && m.pixels() == models[0].pixels());
+    ensure!(shapes_agree, "model family mixes shapes");
+    // A fore-reading policy migrates forecast-head blocks between family
+    // members, so their head shapes must agree too — fail fast here
+    // rather than panicking mid-schedule at the first downshift.
+    let fores_agree = models.iter().all(|m| m.t_fore() == models[0].t_fore());
+    ensure!(fores_agree || !forecaster.reads_fore(), "fore-reading policy over a family with mixed t_fore");
+    // Smallest exported batch that fits `need` jobs (largest otherwise).
+    let pick = |need: usize| -> usize { order.iter().copied().find(|&i| models[i].batch() >= need).unwrap_or(*order.last().unwrap()) };
+
     let n_jobs = noises.len();
-    let b = model.batch();
     let timer = Timer::start();
-    let mut ps = PredictiveSampler::new(model, forecaster);
-    let mut slot_job: Vec<Option<usize>> = vec![None; b];
     let mut results: Vec<Option<JobResult>> = (0..n_jobs).map(|_| None).collect();
     let mut queue = noises.into_iter().enumerate().collect::<std::collections::VecDeque<_>>();
+    let mut cur = pick(n_jobs.max(1));
+    let mut ps = PredictiveSampler::new(models[cur], forecaster);
+    ps.set_plan_mode(use_plan);
+    let mut slot_job: Vec<Option<usize>> = vec![None; models[cur].batch()];
     let mut completed = 0usize;
     let mut active_accum = 0usize;
+    let mut capacity_accum = 0usize;
     let mut passes = 0usize;
+    let mut positions = 0usize;
+    let mut downshifts = 0usize;
+    let mut min_batch = models[cur].batch();
 
     // Prime the slots.
-    for s in 0..b {
+    for (s, sj) in slot_job.iter_mut().enumerate() {
         if let Some((id, noise)) = queue.pop_front() {
             ps.reset_slot(s, noise);
-            slot_job[s] = Some(id);
+            *sj = Some(id);
         }
     }
 
     while completed < n_jobs {
-        active_accum += slot_job.iter().filter(|j| j.is_some()).count();
+        let in_flight = slot_job.iter().filter(|j| j.is_some()).count();
+        // Down-shift: queue dry and a smaller exported batch fits the
+        // survivors. Carries each job's full mid-flight state, so the
+        // migration costs no extra passes and changes no samples.
+        if queue.is_empty() && in_flight > 0 {
+            let target = pick(in_flight);
+            if models[target].batch() < models[cur].batch() {
+                downshifts += 1;
+                positions += ps.positions_evaluated;
+                let mut moved = Vec::with_capacity(in_flight);
+                for (s, sj) in slot_job.iter_mut().enumerate() {
+                    if let Some(job) = sj.take() {
+                        moved.push((job, ps.extract_slot(s).expect("in-flight slot")));
+                    }
+                }
+                let fc = ps.into_forecaster();
+                cur = target;
+                min_batch = min_batch.min(models[cur].batch());
+                ps = PredictiveSampler::new(models[cur], fc);
+                ps.set_plan_mode(use_plan);
+                slot_job = vec![None; models[cur].batch()];
+                for (s, (job, st)) in moved.into_iter().enumerate() {
+                    ps.install_slot(s, st);
+                    slot_job[s] = Some(job);
+                }
+            }
+        }
+        active_accum += in_flight;
+        capacity_accum += models[cur].batch();
         ps.step()?;
         passes += 1;
-        for s in 0..b {
-            if slot_job[s].is_some() && ps.slot_done(s) {
-                let job = slot_job[s].take().unwrap();
+        for (s, sj) in slot_job.iter_mut().enumerate() {
+            if sj.is_some() && ps.slot_done(s) {
+                let job = sj.take().unwrap();
                 results[job] = Some(ps.take_result(s).expect("done slot"));
                 completed += 1;
                 if let Some((id, noise)) = queue.pop_front() {
                     ps.reset_slot(s, noise);
-                    slot_job[s] = Some(id);
+                    *sj = Some(id);
                 }
             }
         }
     }
+    positions += ps.positions_evaluated;
 
     let results: Vec<JobResult> = results.into_iter().map(|r| r.expect("all jobs complete")).collect();
     Ok(ScheduleReport {
         total_passes: passes,
-        occupancy: active_accum as f64 / (passes.max(1) * b) as f64,
+        occupancy: active_accum as f64 / capacity_accum.max(1) as f64,
         wall_secs: timer.secs(),
-        calls_per_job: passes as f64 * b as f64 / n_jobs as f64,
+        calls_per_job: capacity_accum as f64 / n_jobs as f64,
         results,
+        positions_evaluated: positions,
+        downshifts,
+        min_batch,
     })
 }
 
 /// Synchronous batching baseline: process jobs in batch-size chunks; each
 /// chunk runs until its slowest job converges (the paper's Table-1/2
-/// semantics, extended to a queue of jobs).
-pub fn run_sync_chunks<M: StepModel>(
-    model: &M,
-    mut make_forecaster: impl FnMut() -> Box<dyn Forecaster>,
-    n_jobs: usize,
-    seed: u64,
-) -> Result<ScheduleReport> {
+/// semantics, extended to a queue of jobs). One sampler — and its `[B*d]`
+/// input and step-output buffers — is built once and reset between chunks
+/// instead of reallocated per chunk.
+pub fn run_sync_chunks<M: StepModel>(model: &M, forecaster: Box<dyn Forecaster>, n_jobs: usize, seed: u64) -> Result<ScheduleReport> {
     let b = model.batch();
     let d = model.dim();
     let k = model.categories();
     let timer = Timer::start();
+    let mut ps = PredictiveSampler::new(model, forecaster);
     let mut results: Vec<JobResult> = Vec::with_capacity(n_jobs);
     let mut passes = 0usize;
     let mut active_accum = 0usize;
     let mut start = 0usize;
     while start < n_jobs {
         let chunk = (n_jobs - start).min(b);
-        let mut ps = PredictiveSampler::new(model, make_forecaster());
         for s in 0..chunk {
             ps.reset_slot(s, JobNoise::new(seed, (start + s) as u64, d, k));
+        }
+        for s in chunk..b {
+            ps.clear_slot(s);
         }
         while (0..chunk).any(|s| !ps.slot_done(s)) {
             active_accum += (0..chunk).filter(|&s| !ps.slot_done(s)).count();
@@ -154,6 +252,9 @@ pub fn run_sync_chunks<M: StepModel>(
         wall_secs: timer.secs(),
         calls_per_job: passes as f64 * b as f64 / n_jobs as f64,
         results,
+        positions_evaluated: ps.positions_evaluated,
+        downshifts: 0,
+        min_batch: b,
     })
 }
 
@@ -194,7 +295,7 @@ mod tests {
     #[test]
     fn sync_matches_per_job_samples() {
         let m = MockArm::new(4, 3, 6, 4, 2, 2.5, 21);
-        let rep = run_sync_chunks(&m, || Box::new(FpiReuse), 11, 3).unwrap();
+        let rep = run_sync_chunks(&m, Box::new(FpiReuse), 11, 3).unwrap();
         let refs = reference_samples(11, 3);
         for (i, job) in rep.results.iter().enumerate() {
             assert_eq!(job.x, refs[i]);
@@ -207,7 +308,7 @@ mod tests {
         // number of passes needed for a queue of jobs.
         let m = MockArm::new(4, 3, 8, 5, 2, 3.0, 33);
         let cont = run_continuous(&m, Box::new(FpiReuse), 16, 9).unwrap();
-        let sync = run_sync_chunks(&m, || Box::new(FpiReuse), 16, 9).unwrap();
+        let sync = run_sync_chunks(&m, Box::new(FpiReuse), 16, 9).unwrap();
         assert!(
             cont.total_passes <= sync.total_passes,
             "continuous {} > sync {}",
@@ -244,6 +345,63 @@ mod tests {
             crate::prop_assert!((pct - 100.0 * rep.calls_per_job / d).abs() < 1e-9, "calls_pct helper disagrees");
             Ok(())
         });
+    }
+
+    #[test]
+    fn queue_drain_downshifts_to_smaller_batches_bitwise() {
+        // THE down-shifting acceptance gate: a queue draining through a
+        // [b=1, b=2, b=4] family must migrate the surviving jobs onto
+        // smaller executables — reaching b=1 for the straggler — while
+        // every per-job sample stays bitwise identical to the fixed-batch
+        // (and batch-1) references. Several seeds are scheduled so the
+        // drain tail is exercised in different shapes; a straggler tail
+        // that reaches batch 1 must occur.
+        let m4 = MockArm::new(4, 3, 6, 4, 2, 2.5, 21);
+        let m2 = MockArm { batch: 2, ..m4.clone() };
+        let m1 = MockArm { batch: 1, ..m4.clone() };
+        let family: Vec<&MockArm> = vec![&m1, &m2, &m4];
+        let mut saw_b1 = false;
+        for seed in 0..8u64 {
+            let n = 9;
+            let noises: Vec<JobNoise> = (0..n).map(|id| JobNoise::new(seed, id as u64, m4.dim(), 4)).collect();
+            let rep = run_continuous_family(&family, Box::new(FpiReuse), noises).unwrap();
+            let fixed = run_continuous(&m4, Box::new(FpiReuse), n, seed).unwrap();
+            for (i, job) in rep.results.iter().enumerate() {
+                assert_eq!(job.x, fixed.results[i].x, "seed {seed} job {i}: down-shifting changed the sample");
+            }
+            let refs = reference_samples(n, seed);
+            for (i, job) in rep.results.iter().enumerate() {
+                assert_eq!(job.x, refs[i], "seed {seed} job {i}: family schedule diverged from batch-1 reference");
+            }
+            // Down-shifting can only shed slot-passes.
+            assert!(
+                rep.calls_per_job <= fixed.calls_per_job + 1e-9,
+                "seed {seed}: down-shifted calls/job {} > fixed {}",
+                rep.calls_per_job,
+                fixed.calls_per_job
+            );
+            assert!(rep.min_batch < 4 || rep.downshifts == 0, "min_batch must track migrations");
+            saw_b1 |= rep.min_batch == 1;
+        }
+        assert!(saw_b1, "no schedule drained to the b=1 executable — straggler tails must down-shift");
+    }
+
+    #[test]
+    fn starts_on_smallest_batch_that_fits() {
+        // A 2-job queue on a [1, 4] family must run on b=4 only while it
+        // needs to — and a 1-job queue must start (and stay) on b=1.
+        let m4 = MockArm::new(4, 2, 5, 3, 1, 2.0, 5);
+        let m1 = MockArm { batch: 1, ..m4.clone() };
+        let family: Vec<&MockArm> = vec![&m1, &m4];
+        let one = run_continuous_family(&family, Box::new(FpiReuse), vec![JobNoise::new(1, 0, m4.dim(), 3)]).unwrap();
+        assert_eq!(one.min_batch, 1);
+        assert_eq!(one.downshifts, 0, "initial sizing is not a migration");
+        assert_eq!(one.occupancy, 1.0, "b=1 schedule must be fully occupied");
+        let refs = reference_samples_small(2, 1, &m4);
+        let two = run_continuous_family(&family, Box::new(FpiReuse), (0..2).map(|id| JobNoise::new(1, id, m4.dim(), 3)).collect()).unwrap();
+        for (i, job) in two.results.iter().enumerate() {
+            assert_eq!(job.x, refs[i], "job {i}");
+        }
     }
 
     #[test]

@@ -21,10 +21,13 @@
 //! PJRT handles are thread-affine, so every worker owns a full `Router`
 //! and engines are replicated per worker (lazily, on first use). Sharding
 //! removes the head-of-line blocking a single engine thread imposed on
-//! incompatible `(model, method)` groups. Exactness is untouched: per-job
-//! noise is keyed by `(seed, job index within the request)` — never by
-//! worker or slot — so samples are bitwise identical at any
-//! `engine_threads` setting (see `tests/server_test.rs`).
+//! incompatible `(model, method)` groups. Continuous batches run through
+//! [`crate::coordinator::engine::Engine::sample_continuous`], which
+//! schedules over every exported batch size and down-shifts as the queue
+//! drains. Exactness is untouched by any of it: per-job noise is keyed by
+//! `(seed, job index within the request)` — never by worker, slot, or
+//! batch size — so samples are bitwise identical at any `engine_threads`
+//! setting (see `tests/server_test.rs`).
 
 use crate::coordinator::config::{Method, ServeConfig};
 use crate::coordinator::metrics::Metrics;
@@ -509,28 +512,17 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &Mutex<Metrics
             }
             Ok((all, calls, weighted_calls / total_jobs as f64))
         } else {
-            // Continuous batching over the merged job queue.
-            let bs = *engine.batch_sizes().last().unwrap();
-            let exe = engine.exe_for(bs, crate::coordinator::engine::Engine::needs_fore(method))?;
+            // Continuous batching over the merged job queue, scheduled
+            // across every exported batch size: the engine starts on the
+            // smallest batch that fits and down-shifts as the queue
+            // drains, so a straggler tail stops paying full-batch passes.
             let mut noises = Vec::with_capacity(total_jobs);
             for p in &group {
                 for j in 0..p.n {
                     noises.push(JobNoise::new(p.seed, j as u64, info.dim, info.categories));
                 }
             }
-            let fc = crate::sampler::forecast::by_name(
-                match method {
-                    Method::Zeros => "zeros",
-                    Method::PredictLast => "last",
-                    Method::Fpi => "fpi",
-                    Method::Forecast { .. } => "learned",
-                    Method::NoReparam => "noreparam",
-                    Method::Baseline => unreachable!(),
-                },
-                if let Method::Forecast { t_use } = method { t_use } else { 1 },
-            )
-            .expect("known method");
-            let rep = scheduler::run_continuous_noises(exe, fc, noises)?;
+            let rep = engine.sample_continuous(method, noises)?;
             Ok((rep.results, rep.total_passes, rep.calls_per_job))
         }
     };

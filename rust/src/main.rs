@@ -81,7 +81,10 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 );
             }
             for a in man.autoencoders.values() {
-                println!("ae:{:<14} img {}x{}  latent {}x{}x{} K={} mse={:.5}", a.name, a.img_size, a.img_size, a.latent_channels, a.latent_hw, a.latent_hw, a.categories, a.mse);
+                println!(
+                    "ae:{:<14} img {}x{}  latent {}x{}x{} K={} mse={:.5}",
+                    a.name, a.img_size, a.img_size, a.latent_channels, a.latent_hw, a.latent_hw, a.categories, a.mse
+                );
             }
             args.finish().map_err(|e| anyhow!(e))
         }
@@ -239,7 +242,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let bs = *engine.batch_sizes().last().unwrap();
             let exe = engine.exe_for(bs, false)?;
             let cont = scheduler::run_continuous(exe, Box::new(forecast::FpiReuse), jobs, seed)?;
-            let sync = scheduler::run_sync_chunks(exe, || Box::new(forecast::FpiReuse), jobs, seed)?;
+            let sync = scheduler::run_sync_chunks(exe, Box::new(forecast::FpiReuse), jobs, seed)?;
             println!("scheduler ablation: {model}, {jobs} jobs, batch {bs} (FPI)");
             for (tag, r) in [("continuous", &cont), ("sync", &sync)] {
                 println!(

@@ -9,6 +9,13 @@
 //! The executable is pure — all sampling (Gumbel-max over `logp + ε`)
 //! happens in the coordinator, which is what lets one artifact serve every
 //! forecaster policy and ablation with ε held fixed across iterations.
+//!
+//! Partial inference: the sampling loop offers every backend a
+//! `sampler::PassPlan` through `StepModel::run_plan`. Compiled executables
+//! are shape-specialized, so they take the trait's full-shape fallback —
+//! a plan is a permission to skip work, never an obligation — and instead
+//! save through batch selection: the logp-only flavor below, and the
+//! engine's batch down-shifting across exported batch sizes.
 
 use super::{artifact::ModelInfo, client};
 use anyhow::{bail, Context, Result};
@@ -16,6 +23,11 @@ use std::path::Path;
 
 /// Output buffers of one step call. Reused across iterations (the hot loop
 /// does not allocate; see `StepExecutable::run_into`).
+///
+/// Under planned passes the buffers may be only *partially* valid: a
+/// backend honoring a `sampler::PassPlan` writes just the plan's live
+/// spans and leaves `fore` empty when the plan says the heads go unread.
+/// Consumers must read only what their plan asked for.
 #[derive(Clone, Debug, Default)]
 pub struct StepOutput {
     /// `[B, d, K]` ARM log-probs.

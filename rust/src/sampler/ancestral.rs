@@ -1,13 +1,24 @@
 //! Naive ancestral sampling (paper Eq. 2) — the baseline every table row
 //! is normalized against: exactly `d` sequential ARM passes, one variable
-//! finalized per pass.
+//! finalized per pass. Pass `j` only ever reads position `j`'s log-probs,
+//! so the passes run under single-position [`PassPlan`]s — a plan-aware
+//! backend computes `d` positions total instead of `d²`, and no forecast
+//! heads at all (the baseline never reads them).
 
 use super::noise::JobNoise;
-use super::{BatchResult, JobResult, StepModel};
+use super::{BatchResult, JobResult, PassPlan, SlotSpan, StepModel};
 use crate::runtime::step::StepOutput;
 use crate::substrate::gumbel::gumbel_argmax;
 use crate::substrate::timer::Timer;
 use anyhow::Result;
+
+/// The pass-`j` plan: every slot live at exactly position `j`.
+fn position_plan(plan: &mut PassPlan, j: usize) {
+    for s in plan.slots.iter_mut() {
+        s.lo = j;
+        s.hi = j + 1;
+    }
+}
 
 /// Sample one image with the d-call baseline (batch-1 view of the model;
 /// for batched models only slot 0 is used).
@@ -17,8 +28,11 @@ pub fn ancestral_sample<M: StepModel>(model: &M, noise: &JobNoise) -> Result<Job
     let b = model.batch();
     let mut x = vec![0i32; b * d];
     let mut out = StepOutput::default();
+    let mut plan = PassPlan { slots: vec![SlotSpan::default(); b], need_fore: false, need_full_scan: false };
+    plan.slots[0].active = true;
     for j in 0..d {
-        model.run_into(&x, &mut out)?;
+        position_plan(&mut plan, j);
+        model.run_plan(&x, &mut out, &plan)?;
         let lp = &out.logp[j * k..(j + 1) * k];
         x[j] = gumbel_argmax(lp, noise.row(j)) as i32;
     }
@@ -39,9 +53,11 @@ pub fn ancestral_batch<M: StepModel>(model: &M, noises: &[JobNoise]) -> Result<B
     assert_eq!(noises.len(), b, "one noise block per slot");
     let mut x = vec![0i32; b * d];
     let mut out = StepOutput::default();
+    let mut plan = PassPlan { slots: vec![SlotSpan { active: true, lo: 0, hi: 0 }; b], need_fore: false, need_full_scan: false };
     let timer = Timer::start();
     for j in 0..d {
-        model.run_into(&x, &mut out)?;
+        position_plan(&mut plan, j);
+        model.run_plan(&x, &mut out, &plan)?;
         for (s, noise) in noises.iter().enumerate() {
             let lp = &out.logp[(s * d + j) * k..(s * d + j + 1) * k];
             x[s * d + j] = gumbel_argmax(lp, noise.row(j)) as i32;
@@ -85,6 +101,24 @@ mod tests {
             assert_eq!(batch.jobs[id].x, single.x, "slot {id}");
         }
         assert_eq!(batch.arm_calls, d);
+    }
+
+    #[test]
+    fn planned_baseline_matches_full_passes() {
+        // The single-position plans must be invisible: same sample as a
+        // literal full-pass ancestral loop.
+        let model = MockArm::new(1, 2, 5, 4, 1, 2.0, 6);
+        let d = model.dim();
+        let k = model.categories();
+        let noise = JobNoise::new(11, 0, d, k);
+        let planned = ancestral_sample(&model, &noise).unwrap();
+        let mut x = vec![0i32; d];
+        let mut out = crate::runtime::step::StepOutput::default();
+        for j in 0..d {
+            model.run_into(&x, &mut out).unwrap();
+            x[j] = crate::substrate::gumbel::gumbel_argmax(&out.logp[j * k..(j + 1) * k], noise.row(j)) as i32;
+        }
+        assert_eq!(planned.x, x, "planned baseline diverged from full-pass baseline");
     }
 
     #[test]

@@ -39,6 +39,19 @@ pub trait Forecaster: Send + Sync {
     fn reparametrized(&self) -> bool {
         true
     }
+    /// Whether `forecast` reads `ctx.fore_prev`. Only the learned policy
+    /// does; every other policy lets the engine skip computing (and, for
+    /// compiled models, transferring) the forecast heads entirely.
+    fn reads_fore(&self) -> bool {
+        false
+    }
+    /// Whether `forecast` reads `ctx.out_prev` / `ctx.greedy_prev` beyond
+    /// the frontier. Policies that don't (zeros, predict-last) let the
+    /// sampler stop scanning outputs at the first forecast disagreement
+    /// instead of materializing the whole reparametrized tail.
+    fn reads_prev_tail(&self) -> bool {
+        true
+    }
 }
 
 /// Baseline: forecast zeros (paper §4.1, binary MNIST baseline).
@@ -52,6 +65,9 @@ impl Forecaster for Zeros {
         for v in x[ctx.i..].iter_mut() {
             *v = 0;
         }
+    }
+    fn reads_prev_tail(&self) -> bool {
+        false
     }
 }
 
@@ -67,6 +83,9 @@ impl Forecaster for PredictLast {
         for v in x[ctx.i..].iter_mut() {
             *v = last;
         }
+    }
+    fn reads_prev_tail(&self) -> bool {
+        false
     }
 }
 
@@ -127,6 +146,9 @@ impl Forecaster for Learned {
                 ctx.out_prev[j]
             };
         }
+    }
+    fn reads_fore(&self) -> bool {
+        true
     }
 }
 
@@ -246,6 +268,18 @@ mod tests {
         NoReparam.forecast(&ctx(3, &out, &greedy, &[], &noise, false), &mut x);
         assert!(x[3..].iter().all(|&v| v == 2));
         assert!(!NoReparam.reparametrized());
+    }
+
+    #[test]
+    fn capability_flags_match_what_policies_read() {
+        // The pass-plan machinery derives skip decisions from these flags,
+        // so they must agree with each forecast() implementation.
+        assert!(!Zeros.reads_fore() && !Zeros.reads_prev_tail());
+        assert!(!PredictLast.reads_fore() && !PredictLast.reads_prev_tail());
+        assert!(!FpiReuse.reads_fore() && FpiReuse.reads_prev_tail());
+        let learned = Learned { t_use: 2 };
+        assert!(learned.reads_fore() && learned.reads_prev_tail());
+        assert!(!NoReparam.reads_fore() && NoReparam.reads_prev_tail());
     }
 
     #[test]

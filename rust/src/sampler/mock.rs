@@ -6,8 +6,16 @@
 //! `p-1`. A `strength` knob interpolates between near-uniform conditionals
 //! (fast FPI convergence) and strongly-coupled ones (slow convergence), so
 //! property tests cover both regimes without touching PJRT.
+//!
+//! The mock exploits [`PassPlan`]s fully — inactive rows are skipped,
+//! each live row starts at its frontier, forecast heads are computed only
+//! when a policy reads them (and then only for pixels the next query can
+//! reach) — and large planned passes fan rows out across the shared
+//! [`crate::substrate::threadpool::ThreadPool`]. Per-position logits are
+//! pure functions of the input row, so planned and full passes are
+//! bitwise identical on every position a plan promises.
 
-use super::StepModel;
+use super::{PassPlan, StepModel};
 use crate::runtime::step::StepOutput;
 use crate::substrate::rng::splitmix64;
 use anyhow::{ensure, Result};
@@ -79,6 +87,21 @@ impl MockArm {
         self.run_into(x, &mut o).expect("mock run");
         o
     }
+
+    /// Fill one row's planned spans: logp for `[lo, hi)` and, when the
+    /// heads are needed, fore rows for pixels `[fore_lo, P)`.
+    fn fill_row(&self, row: &[i32], lo: usize, hi: usize, fore_lo: usize, logp: &mut [f32], fore: &mut [f32]) {
+        let k = self.k;
+        for (i, j) in (lo..hi).enumerate() {
+            self.logp_row(row, j, &mut logp[i * k..(i + 1) * k]);
+        }
+        for (pi, p) in (fore_lo..self.pixels).enumerate() {
+            for t in 0..self.t_fore {
+                let o = (pi * self.t_fore + t) * k;
+                self.fore_row(row, p, t, &mut fore[o..o + k]);
+            }
+        }
+    }
 }
 
 impl StepModel for MockArm {
@@ -117,6 +140,71 @@ impl StepModel for MockArm {
         }
         Ok(())
     }
+
+    fn exploits_plan(&self) -> bool {
+        true
+    }
+
+    fn run_plan(&self, x: &[i32], out: &mut StepOutput, plan: &PassPlan) -> Result<()> {
+        let d = self.dim();
+        let k = self.k;
+        ensure!(x.len() == self.batch * d, "mock input len");
+        ensure!(plan.slots.len() == self.batch, "plan has {} spans for batch {}", plan.slots.len(), self.batch);
+        out.logp.resize(self.batch * d * k, 0.0);
+        if plan.need_fore {
+            out.fore.resize(self.batch * self.pixels * self.t_fore * k, 0.0);
+        } else {
+            // Heads skipped this pass: leave the buffer empty so callers
+            // see "absent" rather than a stale block.
+            out.fore.clear();
+        }
+        // (slot, logp span, first fore pixel). The learned policy's next
+        // query pixel q satisfies q*C <= frontier, and the frontier only
+        // advances, so heads below lo/C can never be read again.
+        let rows: Vec<(usize, usize, usize, usize)> = plan
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.active)
+            .map(|(b, s)| {
+                let hi = s.hi.min(d);
+                let lo = s.lo.min(hi);
+                let fore_lo = if plan.need_fore { (lo / self.channels).min(self.pixels) } else { self.pixels };
+                (b, lo, hi, fore_lo)
+            })
+            .collect();
+        // Fan rows out across the shared pool when the planned work —
+        // logp positions plus any head rows — is big enough to amortize
+        // the dispatch; tiny passes stay serial.
+        if rows.len() >= 2 && plan.rows(self.pixels, self.t_fore, self.channels) * k >= 4096 {
+            let items: Vec<(usize, usize, usize, usize, Vec<i32>)> =
+                rows.iter().map(|&(b, lo, hi, fore_lo)| (b, lo, hi, fore_lo, x[b * d..(b + 1) * d].to_vec())).collect();
+            let arm = self.clone();
+            let segs = crate::substrate::threadpool::shared().map(items, move |(b, lo, hi, fore_lo, row)| {
+                let mut logp = vec![0f32; (hi - lo) * arm.k];
+                let mut fore = vec![0f32; (arm.pixels - fore_lo) * arm.t_fore * arm.k];
+                arm.fill_row(&row, lo, hi, fore_lo, &mut logp, &mut fore);
+                (b, lo, fore_lo, logp, fore)
+            });
+            for (b, lo, fore_lo, logp, fore) in segs {
+                let o = (b * d + lo) * k;
+                out.logp[o..o + logp.len()].copy_from_slice(&logp);
+                if !fore.is_empty() {
+                    let o = (b * self.pixels + fore_lo) * self.t_fore * k;
+                    out.fore[o..o + fore.len()].copy_from_slice(&fore);
+                }
+            }
+        } else {
+            for &(b, lo, hi, fore_lo) in &rows {
+                let row = &x[b * d..(b + 1) * d];
+                let (lp_lo, lp_hi) = ((b * d + lo) * k, (b * d + hi) * k);
+                let (fo_lo, fo_hi) = ((b * self.pixels + fore_lo) * self.t_fore * k, (b + 1) * self.pixels * self.t_fore * k);
+                let fore = if plan.need_fore { &mut out.fore[fo_lo..fo_hi] } else { &mut [][..] };
+                self.fill_row(row, lo, hi, fore_lo, &mut out.logp[lp_lo..lp_hi], fore);
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +238,65 @@ mod tests {
         let o1 = m.run_into_owned(&x1);
         let row = m.t_fore * m.k;
         assert_eq!(&o0.fore[..3 * row], &o1.fore[..3 * row]);
+    }
+
+    #[test]
+    fn run_plan_matches_run_into_on_planned_positions() {
+        use crate::sampler::SlotSpan;
+        let m = MockArm::new(3, 2, 5, 4, 2, 2.0, 9);
+        let d = m.dim();
+        let k = m.k;
+        let x: Vec<i32> = (0..3 * d).map(|i| (i % 4) as i32).collect();
+        let full = m.run_into_owned(&x);
+        let plan = PassPlan {
+            slots: vec![
+                SlotSpan { active: true, lo: 3, hi: d },
+                SlotSpan { active: false, lo: 0, hi: 0 },
+                SlotSpan { active: true, lo: 0, hi: 1 },
+            ],
+            need_fore: true,
+            need_full_scan: true,
+        };
+        let mut out = StepOutput::default();
+        m.run_plan(&x, &mut out, &plan).unwrap();
+        assert_eq!(out.logp.len(), full.logp.len());
+        // Slot 0: positions >= 3 bitwise equal; slot 2: position 0 only.
+        assert_eq!(&out.logp[3 * k..d * k], &full.logp[3 * k..d * k]);
+        assert_eq!(&out.logp[2 * d * k..(2 * d + 1) * k], &full.logp[2 * d * k..(2 * d + 1) * k]);
+        // Fore heads: slot 0 pixels >= lo/C = 1, slot 2 all pixels.
+        let row = m.t_fore * k;
+        let pr = m.pixels * row;
+        assert_eq!(&out.fore[row..pr], &full.fore[row..pr], "slot 0 heads from pixel 1");
+        assert_eq!(&out.fore[2 * pr..3 * pr], &full.fore[2 * pr..3 * pr], "slot 2 heads");
+    }
+
+    #[test]
+    fn run_plan_parallel_path_is_bitwise_exact() {
+        // Big enough to cross the pool threshold (positions * k >= 4096).
+        let m = MockArm::new(4, 3, 24, 16, 2, 2.0, 5);
+        let d = m.dim();
+        let k = m.k;
+        let x: Vec<i32> = (0..4 * d).map(|i| (i % 16) as i32).collect();
+        let full = m.run_into_owned(&x);
+        let mut out = StepOutput::default();
+        m.run_plan(&x, &mut out, &PassPlan::full(4, d)).unwrap();
+        assert!(4 * d * k >= 4096, "fixture must engage the parallel path");
+        assert_eq!(out.logp, full.logp, "parallel planned pass diverged from serial full pass");
+        assert_eq!(out.fore, full.fore);
+    }
+
+    #[test]
+    fn run_plan_skips_fore_when_unread() {
+        let m = MockArm::new(2, 2, 5, 4, 2, 2.0, 9);
+        let d = m.dim();
+        let x = vec![0i32; 2 * d];
+        let mut plan = PassPlan::full(2, d);
+        plan.need_fore = false;
+        let mut out = StepOutput::default();
+        out.fore = vec![1.0; 7]; // stale garbage from a previous pass
+        m.run_plan(&x, &mut out, &plan).unwrap();
+        assert!(out.fore.is_empty(), "skipped heads must read as absent");
+        assert_eq!(out.logp, m.run_into_owned(&x).logp);
     }
 
     #[test]

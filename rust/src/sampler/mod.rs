@@ -11,6 +11,17 @@
 //! * [`noise`] — per-job reparametrization noise (ε lifecycle).
 //! * [`trace`] — mistake maps and convergence maps (paper Figs. 3-6).
 //! * [`mock`] — deterministic pure-rust ARM for fast tests.
+//!
+//! The sampling hot path is *frontier-aware*: each pass the sampler hands
+//! its backend a [`PassPlan`] describing which batch rows are live, which
+//! positions of each row will actually be read (everything below a slot's
+//! frontier is overwritten by the valid prefix, everything of a converged
+//! slot is ignored), and whether the forecast heads are consumed at all.
+//! Backends that can exploit the plan ([`mock::MockArm`]) skip the dead
+//! work; backends that cannot (the compiled executable, which is shape-
+//! specialized) fall back to the full pass. Either way the outputs the
+//! plan promises are bitwise identical, so the paper's exactness guarantee
+//! is untouched — that invariant is what makes partial inference safe.
 
 pub mod ancestral;
 pub mod forecast;
@@ -22,6 +33,88 @@ pub mod trace;
 
 use crate::runtime::step::{StepExecutable, StepOutput};
 use anyhow::Result;
+
+/// The span of one batch slot in a [`PassPlan`]: which row is live and
+/// which flat positions of its log-prob output will actually be read.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SlotSpan {
+    /// Whether this slot holds an unconverged job. Inactive rows may be
+    /// skipped entirely — their outputs are never read.
+    pub active: bool,
+    /// First position whose log-probs the caller will read (the slot's
+    /// frontier). Positions below it are already finalized: their outputs
+    /// are immediately overwritten by the valid prefix and never read.
+    pub lo: usize,
+    /// One past the last position the caller will read (exclusive).
+    /// `dim` for predictive passes; `lo + 1` for ancestral passes, which
+    /// consume exactly one new position per call.
+    pub hi: usize,
+}
+
+/// A frontier-aware work plan for one inference pass (the partial-inference
+/// contract between the sampling loop and a [`StepModel`] backend).
+///
+/// Semantics: after `run_plan(x, out, plan)`, `out.logp` holds valid
+/// log-probs for every active slot's `[lo, hi)` span. Everything else —
+/// inactive rows, positions below `lo` / at or above `hi`, and `out.fore`
+/// when `need_fore` is false — may be stale or unwritten, and the caller
+/// must not read it. Backends are free to ignore the plan and compute the
+/// full shape (the compiled PJRT executable does exactly that); a plan is
+/// a permission to skip work, never an obligation.
+#[derive(Clone, Debug, Default)]
+pub struct PassPlan {
+    /// Per-slot spans, length `batch()`.
+    pub slots: Vec<SlotSpan>,
+    /// Whether the forecast heads (`out.fore`) will be read after this
+    /// pass. False for every policy except the learned forecaster.
+    pub need_fore: bool,
+    /// Whether the caller scans outputs past its first forecast
+    /// disagreement (policies that reuse previous-pass outputs do; purely
+    /// positional policies do not). Informational for backends that could
+    /// stream outputs; row-skipping correctness never depends on it.
+    pub need_full_scan: bool,
+}
+
+impl PassPlan {
+    /// The conservative plan: every row live over the full dimension.
+    pub fn full(batch: usize, dim: usize) -> PassPlan {
+        PassPlan {
+            slots: vec![SlotSpan { active: true, lo: 0, hi: dim }; batch],
+            need_fore: true,
+            need_full_scan: true,
+        }
+    }
+
+    /// Log-prob positions this plan asks for (a full pass is
+    /// `batch * dim`).
+    pub fn positions(&self) -> usize {
+        self.slots.iter().filter(|s| s.active).map(|s| s.hi.saturating_sub(s.lo)).sum()
+    }
+
+    /// Total K-length output rows this plan asks for: log-prob positions
+    /// plus, when the heads are read, the forecast-head rows a backend
+    /// must produce (pixels at or above each live slot's `lo / channels`
+    /// query floor). The useful-work metric the hot-path bench records —
+    /// a full pass is `batch * (dim + pixels * t_fore)`.
+    pub fn rows(&self, pixels: usize, t_fore: usize, channels: usize) -> usize {
+        let logp = self.positions();
+        if !self.need_fore || t_fore == 0 {
+            return logp;
+        }
+        let heads: usize = self
+            .slots
+            .iter()
+            .filter(|s| s.active)
+            .map(|s| (pixels - (s.lo / channels.max(1)).min(pixels)) * t_fore)
+            .sum();
+        logp + heads
+    }
+
+    /// Number of live rows.
+    pub fn active_rows(&self) -> usize {
+        self.slots.iter().filter(|s| s.active).count()
+    }
+}
 
 /// Abstraction over the ARM's parallel-inference pass. Implemented by the
 /// compiled PJRT executable and by [`mock::MockArm`] for tests.
@@ -37,6 +130,20 @@ pub trait StepModel {
     }
     /// One parallel pass: x i32[B,d] -> logp [B,d,K], fore [B,P,T,K].
     fn run_into(&self, x: &[i32], out: &mut StepOutput) -> Result<()>;
+    /// One pass restricted to the plan's live spans (see [`PassPlan`] for
+    /// the staleness contract). Backends that cannot exploit partial
+    /// inference fall back to the full-shape pass — results are bitwise
+    /// identical either way on every position the plan promises.
+    fn run_plan(&self, x: &[i32], out: &mut StepOutput, _plan: &PassPlan) -> Result<()> {
+        self.run_into(x, out)
+    }
+    /// Whether `run_plan` actually skips work the plan allows. Work
+    /// accounting (`positions_evaluated`) trusts this: full-shape
+    /// fallbacks must report false so metrics count what the backend
+    /// really computed, not what the plan permitted.
+    fn exploits_plan(&self) -> bool {
+        false
+    }
 }
 
 impl StepModel for StepExecutable {

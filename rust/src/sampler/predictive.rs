@@ -15,10 +15,19 @@
 //! the mock ARM and, in `tests/integration.rs`, against the compiled
 //! artifacts). Slots can be individually reset with a new job, which is
 //! what the continuous-batching scheduler builds on.
+//!
+//! Each pass the sampler derives a [`PassPlan`] from slot state (dead
+//! slots, per-slot frontiers) and the policy's capability flags, so a
+//! plan-aware backend only computes the positions that will actually be
+//! read; `positions_evaluated` accumulates that useful-work metric. Slots
+//! can also be *migrated* between samplers of different batch sizes
+//! ([`PredictiveSampler::extract_slot`] / [`PredictiveSampler::install_slot`]),
+//! which is what the scheduler's batch down-shifting builds on — noise is
+//! keyed by job id, never by slot, so placement is provably irrelevant.
 
 use super::forecast::{ForecastCtx, Forecaster};
 use super::noise::JobNoise;
-use super::{BatchResult, JobResult, StepModel};
+use super::{BatchResult, JobResult, PassPlan, SlotSpan, StepModel};
 use crate::runtime::step::StepOutput;
 use crate::substrate::gumbel::{argmax, gumbel_argmax};
 use crate::substrate::timer::Timer;
@@ -37,7 +46,6 @@ struct Slot {
     iterations: usize,
     mistakes: Vec<u8>,
     converge_iter: Vec<u32>,
-    occupied: bool,
 }
 
 impl Slot {
@@ -52,8 +60,24 @@ impl Slot {
             iterations: 0,
             mistakes: vec![0; d],
             converge_iter: vec![0; d],
-            occupied: true,
         }
+    }
+}
+
+/// A mid-flight job lifted out of one sampler for installation in another
+/// (batch down-shifting). Carries everything a pass depends on: the slot's
+/// bookkeeping, its input row (valid prefix + last forecasts), and its
+/// previous-pass forecast-head block (read by the learned policy).
+pub struct SlotState {
+    slot: Slot,
+    x_row: Vec<i32>,
+    fore_row: Vec<f32>,
+}
+
+impl SlotState {
+    /// Whether the job has converged (its result is ready to take).
+    pub fn done(&self) -> bool {
+        self.slot.done
     }
 }
 
@@ -64,8 +88,19 @@ pub struct PredictiveSampler<'m, M: StepModel> {
     /// `[B, d]` input rows; valid prefixes persist across passes.
     x: Vec<i32>,
     out: StepOutput,
+    /// Reusable pass plan (rebuilt each step, no allocation steady-state).
+    plan: PassPlan,
+    /// When false, every pass runs the full `[B, d]` shape (`run_into`)
+    /// instead of the frontier-aware plan — the pre-plan behavior, kept
+    /// for the hot-path bench's full-vs-plan comparison.
+    use_plan: bool,
     /// Total ARM passes run by this sampler.
     pub passes: usize,
+    /// Output rows requested from the backend across all passes: log-prob
+    /// positions plus forecast-head rows (`B * (d + P*T)` per full pass;
+    /// the plan's live spans per planned pass) — the useful-work metric
+    /// `benches/sampler_hotpath.rs` records.
+    pub positions_evaluated: usize,
 }
 
 impl<'m, M: StepModel> PredictiveSampler<'m, M> {
@@ -78,12 +113,22 @@ impl<'m, M: StepModel> PredictiveSampler<'m, M> {
             slots: (0..b).map(|_| None).collect(),
             x: vec![0; b * d],
             out: StepOutput::default(),
+            plan: PassPlan::default(),
+            use_plan: true,
             passes: 0,
+            positions_evaluated: 0,
         }
     }
 
     pub fn batch(&self) -> usize {
         self.model.batch()
+    }
+
+    /// Toggle frontier-aware passes (default on). With `false` every pass
+    /// computes the full `[B, d]` shape — results are bitwise identical,
+    /// only the work differs (property-tested in `tests/sampler_props.rs`).
+    pub fn set_plan_mode(&mut self, use_plan: bool) {
+        self.use_plan = use_plan;
     }
 
     /// Install a new job in `slot` (replacing any previous job).
@@ -95,13 +140,62 @@ impl<'m, M: StepModel> PredictiveSampler<'m, M> {
         self.x[slot * d..(slot + 1) * d].fill(0);
     }
 
+    /// Empty `slot` (no job; the pass plan marks the row dead).
+    pub fn clear_slot(&mut self, slot: usize) {
+        self.slots[slot] = None;
+    }
+
     /// Number of slots with an unconverged job.
     pub fn active_slots(&self) -> usize {
-        self.slots.iter().flatten().filter(|s| s.occupied && !s.done).count()
+        self.slots.iter().flatten().filter(|s| !s.done).count()
     }
 
     pub fn slot_done(&self, slot: usize) -> bool {
         self.slots[slot].as_ref().map(|s| s.done).unwrap_or(true)
+    }
+
+    /// Lift the job out of `slot` for migration to another sampler
+    /// (typically one with a smaller batch). The slot is left empty.
+    pub fn extract_slot(&mut self, slot: usize) -> Option<SlotState> {
+        let d = self.model.dim();
+        let s = self.slots[slot].take()?;
+        let x_row = self.x[slot * d..(slot + 1) * d].to_vec();
+        // The forecast-head block travels only when the policy reads it
+        // (models in a down-shift family may disagree on t_fore when the
+        // heads are unread — logp-only variants export t_fore = 0).
+        let len = self.model.pixels() * self.model.t_fore() * self.model.categories();
+        let fore_row = if s.first || self.out.fore.is_empty() || !self.forecaster.reads_fore() {
+            Vec::new()
+        } else {
+            self.out.fore[slot * len..(slot + 1) * len].to_vec()
+        };
+        Some(SlotState { slot: s, x_row, fore_row })
+    }
+
+    /// Install a migrated job in `slot` (replacing any previous job). The
+    /// job resumes exactly where it left off: same frontier, same previous
+    /// outputs, same noise — so the sample (and even the per-job pass
+    /// count) is bitwise independent of the migration.
+    pub fn install_slot(&mut self, slot: usize, st: SlotState) {
+        let d = self.model.dim();
+        assert_eq!(st.x_row.len(), d, "slot migrated across incompatible models");
+        self.x[slot * d..(slot + 1) * d].copy_from_slice(&st.x_row);
+        if !st.fore_row.is_empty() {
+            let len = self.model.pixels() * self.model.t_fore() * self.model.categories();
+            assert_eq!(st.fore_row.len(), len, "fore block migrated across incompatible models");
+            let full = self.model.batch() * len;
+            if self.out.fore.len() != full {
+                self.out.fore.resize(full, 0.0);
+            }
+            self.out.fore[slot * len..(slot + 1) * len].copy_from_slice(&st.fore_row);
+        }
+        self.slots[slot] = Some(st.slot);
+    }
+
+    /// Tear the sampler down, recovering the forecaster for reuse in a
+    /// successor sampler (batch down-shifting migrates the policy too).
+    pub fn into_forecaster(self) -> Box<dyn Forecaster> {
+        self.forecaster
     }
 
     /// Extract the finished job from `slot`, freeing it.
@@ -159,11 +253,37 @@ impl<'m, M: StepModel> PredictiveSampler<'m, M> {
             self.forecaster.forecast(&ctx, row);
         }
 
-        // (2) One parallel inference pass.
-        self.model.run_into(&self.x, &mut self.out)?;
+        // (2) One parallel inference pass, restricted to the live spans:
+        // dead slots are skipped, each active slot starts at its frontier,
+        // and the forecast heads are skipped when no policy reads them.
+        let need_full_scan = self.forecaster.reads_prev_tail();
+        if self.use_plan {
+            self.plan.need_fore = self.forecaster.reads_fore();
+            self.plan.need_full_scan = need_full_scan;
+            self.plan.slots.clear();
+            for slot in &self.slots {
+                self.plan.slots.push(match slot {
+                    Some(s) if !s.done => SlotSpan { active: true, lo: s.frontier, hi: d },
+                    _ => SlotSpan::default(),
+                });
+            }
+            self.model.run_plan(&self.x, &mut self.out, &self.plan)?;
+            // Credit the plan's savings only when the backend takes them;
+            // a full-shape fallback computed the whole tensor regardless.
+            self.positions_evaluated += if self.model.exploits_plan() {
+                self.plan.rows(pixels, t_fore, c)
+            } else {
+                self.model.batch() * (d + pixels * t_fore)
+            };
+        } else {
+            self.model.run_into(&self.x, &mut self.out)?;
+            self.positions_evaluated += self.model.batch() * (d + pixels * t_fore);
+        }
         self.passes += 1;
 
-        // (3) Scan outputs per slot.
+        // (3) Scan outputs per slot. Full mode keeps the full scan so the
+        // bench's full-vs-plan comparison measures the pre-plan hot path.
+        let early_stop = self.use_plan && !need_full_scan;
         let reparam = self.forecaster.reparametrized();
         for (si, slot) in self.slots.iter_mut().enumerate() {
             let Some(s) = slot else { continue };
@@ -183,6 +303,12 @@ impl<'m, M: StepModel> PredictiveSampler<'m, M> {
             s.greedy_prev[..j].copy_from_slice(&row[..j]);
             let mut advancing = true;
             while j < d {
+                // Past the first disagreement the loop only materializes
+                // out_prev/greedy_prev proposals for the next forecast —
+                // skip that tail when the policy never reads it.
+                if !advancing && early_stop {
+                    break;
+                }
                 let lp = &self.out.logp[(si * d + j) * k..(si * d + j + 1) * k];
                 let out_j = gumbel_argmax(lp, s.noise.row(j)) as i32;
                 s.out_prev[j] = out_j;
@@ -234,6 +360,7 @@ impl<'m, M: StepModel> PredictiveSampler<'m, M> {
             self.reset_slot(slot, JobNoise::new(seed, job_offset + slot as u64, d, k));
         }
         self.passes = 0;
+        self.positions_evaluated = 0;
         let timer = Timer::start();
         // Strict triangular dependence guarantees convergence in <= d
         // passes; the +1 margin covers the all-correct final verification
@@ -416,6 +543,72 @@ mod tests {
         let r = ps.take_result(0).unwrap();
         assert!(r.x.iter().all(|&v| v >= 0 && v < 5));
         assert!(r.iterations <= d);
+    }
+
+    #[test]
+    fn plan_mode_smoke_matches_full_mode() {
+        // Quick in-crate smoke: frontier-aware passes are bitwise
+        // invisible and do less work. The exhaustive per-policy /
+        // per-regime property lives in `tests/sampler_props.rs`
+        // (`plan-vs-full`).
+        let model = MockArm::new(3, 2, 6, 4, 2, 2.5, 19);
+        let run = |use_plan: bool| {
+            let mut ps = PredictiveSampler::new(&model, Box::new(forecast::FpiReuse));
+            ps.set_plan_mode(use_plan);
+            let res = ps.run_sync(7).unwrap();
+            (res, ps.positions_evaluated)
+        };
+        let (full, full_pos) = run(false);
+        let (plan, plan_pos) = run(true);
+        for s in 0..3 {
+            assert_eq!(plan.jobs[s].x, full.jobs[s].x, "slot {s} sample");
+        }
+        assert_eq!(plan.arm_calls, full.arm_calls, "pass count");
+        assert!(plan_pos < full_pos, "plan must shed work ({plan_pos} vs {full_pos})");
+    }
+
+    #[test]
+    fn slot_migration_resumes_mid_job() {
+        // extract_slot/install_slot must carry a mid-flight job across
+        // samplers (and batch sizes) without changing its sample, trace,
+        // or even its pass count — the down-shifting invariant.
+        let m2 = MockArm::new(2, 3, 6, 5, 2, 3.0, 23);
+        let m1 = MockArm { batch: 1, ..m2.clone() };
+        let d = m2.dim();
+        let k = m2.categories();
+        for policy in ["fpi", "learned"] {
+            // Reference: job 1 sampled alone to convergence.
+            let mut ps1 = PredictiveSampler::new(&m1, crate::sampler::forecast::by_name(policy, 2).unwrap());
+            ps1.reset_slot(0, JobNoise::new(5, 1, d, k));
+            while !ps1.slot_done(0) {
+                ps1.step().unwrap();
+            }
+            let reference = ps1.take_result(0).unwrap();
+
+            // Run jobs 0 and 1 together for two passes, then migrate job 1
+            // to a fresh batch-1 sampler mid-flight.
+            let mut ps = PredictiveSampler::new(&m2, crate::sampler::forecast::by_name(policy, 2).unwrap());
+            ps.reset_slot(0, JobNoise::new(5, 0, d, k));
+            ps.reset_slot(1, JobNoise::new(5, 1, d, k));
+            let mut migrated_passes = 0usize;
+            while migrated_passes < 2 && !ps.slot_done(1) {
+                ps.step().unwrap();
+                migrated_passes += 1;
+            }
+            let st = ps.extract_slot(1).expect("slot 1 in flight");
+            let fc = ps.into_forecaster();
+            let mut small = PredictiveSampler::new(&m1, fc);
+            small.install_slot(0, st);
+            while !small.slot_done(0) {
+                small.step().unwrap();
+                migrated_passes += 1;
+            }
+            let migrated = small.take_result(0).unwrap();
+            assert_eq!(migrated.x, reference.x, "policy {policy}: migration changed the sample");
+            assert_eq!(migrated.iterations, reference.iterations, "policy {policy}: migration changed pass count");
+            assert_eq!(migrated.mistakes, reference.mistakes, "policy {policy}: migration changed mistakes");
+            assert_eq!(migrated.converge_iter, reference.converge_iter, "policy {policy}: migration changed trace");
+        }
     }
 
     #[test]

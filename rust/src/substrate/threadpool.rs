@@ -1,9 +1,10 @@
 //! Fixed-size worker pool over std::thread + mpsc (tokio is unavailable
-//! offline). Used by the TCP server for connection handling and by the
-//! bench workload generators.
+//! offline). Used by the TCP server for connection handling, by the bench
+//! workload generators, and (via [`shared`]) by the mock ARM's row-parallel
+//! pass-plan execution.
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -68,6 +69,15 @@ impl ThreadPool {
     }
 }
 
+/// Process-wide pool for data-parallel compute helpers (e.g. the mock
+/// ARM's per-row pass-plan fill). Sized to the host's parallelism, spawned
+/// on first use, and deliberately never torn down — workers idle on an
+/// empty channel and cost nothing between bursts.
+pub fn shared() -> &'static ThreadPool {
+    static SHARED: OnceLock<ThreadPool> = OnceLock::new();
+    SHARED.get_or_init(|| ThreadPool::new(thread::available_parallelism().map(|n| n.get()).unwrap_or(4)))
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         drop(self.tx.take()); // closes the channel; workers exit
@@ -101,6 +111,14 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.map((0..50).collect::<Vec<i32>>(), |x| x * 2);
         assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn shared_pool_is_reusable() {
+        let a = shared().map(vec![1, 2, 3], |x| x * 10);
+        assert_eq!(a, vec![10, 20, 30]);
+        let b = shared().map((0..20).collect::<Vec<i32>>(), |x| x + 1);
+        assert_eq!(b, (1..21).collect::<Vec<i32>>());
     }
 
     #[test]

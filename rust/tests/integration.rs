@@ -102,7 +102,7 @@ fn continuous_scheduler_on_artifact() {
     let exe = eng.exe(32).unwrap();
     let n = 48;
     let cont = scheduler::run_continuous(exe, Box::new(forecast::FpiReuse), n, 5).unwrap();
-    let sync = scheduler::run_sync_chunks(exe, || Box::new(forecast::FpiReuse), n, 5).unwrap();
+    let sync = scheduler::run_sync_chunks(exe, Box::new(forecast::FpiReuse), n, 5).unwrap();
     assert_eq!(cont.results.len(), n);
     for i in 0..n {
         assert_eq!(cont.results[i].x, sync.results[i].x, "job {i}");

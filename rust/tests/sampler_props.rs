@@ -135,6 +135,80 @@ fn all_policies_beat_or_match_baseline_calls() {
 }
 
 #[test]
+fn plan_passes_bitwise_equal_full_passes_every_policy() {
+    // The pass-plan contract: frontier-aware partial passes (dead slots
+    // skipped, prefixes skipped, heads skipped, early scan stop) must be
+    // bitwise invisible for every policy, in weak and strong coupling
+    // regimes alike — samples, mistake maps, convergence maps, and pass
+    // counts all identical, with strictly less work whenever a schedule
+    // runs more than one pass.
+    check("plan-vs-full", 12, |g| {
+        let b = g.usize_in(1, 5);
+        let model = MockArm::new(b, g.usize_in(1, 4), g.usize_in(2, 7), g.usize_in(2, 6), 3, g.f64_in(0.0, 4.0) as f32, g.rng.next_u64());
+        let d = model.dim();
+        let seed = g.rng.next_u64();
+        for name in ["zeros", "predict_last", "fpi", "learned", "noreparam"] {
+            let run = |use_plan: bool| -> Result<(predsamp::sampler::BatchResult, usize), String> {
+                let fc = predsamp::sampler::forecast::by_name(name, 2).unwrap();
+                let mut ps = PredictiveSampler::new(&model, fc);
+                ps.set_plan_mode(use_plan);
+                let res = ps.run_sync(seed).map_err(|e| e.to_string())?;
+                Ok((res, ps.positions_evaluated))
+            };
+            let (full, full_pos) = run(false)?;
+            let (plan, plan_pos) = run(true)?;
+            for s in 0..b {
+                prop_assert_eq!(&plan.jobs[s].x, &full.jobs[s].x, "{} slot {} sample", name, s);
+                prop_assert_eq!(&plan.jobs[s].mistakes, &full.jobs[s].mistakes, "{} slot {} mistakes", name, s);
+                prop_assert_eq!(&plan.jobs[s].converge_iter, &full.jobs[s].converge_iter, "{} slot {} trace", name, s);
+                prop_assert_eq!(plan.jobs[s].iterations, full.jobs[s].iterations, "{} slot {} iterations", name, s);
+            }
+            prop_assert_eq!(plan.arm_calls, full.arm_calls, "{} pass count", name);
+            let full_row = d + model.pixels() * model.t_fore();
+            prop_assert_eq!(full_pos, full.arm_calls * b * full_row, "{} full-pass work must be B*(d + P*T) per pass", name);
+            prop_assert!(plan_pos <= full_pos, "{}: planned work {} > full {}", name, plan_pos, full_pos);
+            if full.arm_calls > 1 {
+                prop_assert!(plan_pos < full_pos, "{}: plan skipped nothing over {} passes", name, full.arm_calls);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn downshift_preserves_samples_mid_schedule() {
+    // Batch down-shifting over a [1, 2, 4] family must keep every job's
+    // sample bitwise identical to its batch-1 reference, whatever point
+    // of the schedule the migrations happen at.
+    check("downshift-exactness", 10, |g| {
+        let (c, px, k) = (g.usize_in(1, 4), g.usize_in(2, 7), g.usize_in(2, 6));
+        let strength = g.f64_in(0.0, 4.0) as f32;
+        let mseed = g.rng.next_u64();
+        let m4 = MockArm::new(4, c, px, k, 2, strength, mseed);
+        let m2 = MockArm::new(2, c, px, k, 2, strength, mseed);
+        let m1 = MockArm::new(1, c, px, k, 2, strength, mseed);
+        let d = m4.dim();
+        let seed = g.rng.next_u64();
+        let n = g.usize_in(5, 13);
+        let noises: Vec<JobNoise> = (0..n).map(|id| JobNoise::new(seed, id as u64, d, k)).collect();
+        let family: Vec<&MockArm> = vec![&m1, &m2, &m4];
+        let rep = scheduler::run_continuous_family(&family, Box::new(FpiReuse), noises).map_err(|e| e.to_string())?;
+        prop_assert_eq!(rep.results.len(), n, "all jobs must complete");
+        for (id, job) in rep.results.iter().enumerate() {
+            let mut ps = PredictiveSampler::new(&m1, Box::new(FpiReuse));
+            ps.reset_slot(0, JobNoise::new(seed, id as u64, d, k));
+            while !ps.slot_done(0) {
+                ps.step().map_err(|e| e.to_string())?;
+            }
+            let single = ps.take_result(0).unwrap();
+            prop_assert_eq!(&job.x, &single.x, "job {} changed under down-shifting (downshifts={})", id, rep.downshifts);
+        }
+        prop_assert!(rep.min_batch <= 4 && rep.min_batch >= 1, "min_batch {} out of family", rep.min_batch);
+        Ok(())
+    });
+}
+
+#[test]
 fn scheduler_empty_and_tiny_queues() {
     let model = MockArm::new(3, 2, 4, 3, 1, 2.0, 9);
     let rep = scheduler::run_continuous(&model, Box::new(FpiReuse), 0, 0).unwrap();
