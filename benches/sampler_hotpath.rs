@@ -1,5 +1,7 @@
 //! Sampler hot-path benchmark: full-shape passes vs frontier-aware
-//! [`PassPlan`] passes (+ batch down-shifting) on the mock serving mix.
+//! [`PassPlan`] passes (+ batch down-shifting) on the mock serving mix,
+//! plus a deep-queue **elastic** scenario (live arrivals, up-shifting)
+//! against the down-shift-only scheduler.
 //!
 //! The paper's speedup is measured in ARM inference *calls*; this bench
 //! measures what each call costs. A full pass always evaluates
@@ -12,22 +14,34 @@
 //! `BENCH_sampler_hotpath.json` (machine-readable, uploaded as a CI
 //! artifact) to seed the perf trajectory.
 //!
+//! The elastic scenario trickles awkwardly-sized bursts into a running
+//! schedule. The down-shift-only baseline (PR 2's scheduler) must run
+//! each accumulation of arrivals as its own schedule — paying priming
+//! waste and a straggler drain tail per schedule — while the elastic
+//! scheduler absorbs arrivals into converged slots mid-flight, so its
+//! aggregate `calls_per_job` must come out strictly lower (asserted, and
+//! both are bitwise identical to the batch-1 reference).
+//!
 //!     cargo bench --bench sampler_hotpath [-- --jobs 32 --out BENCH_sampler_hotpath.json]
 //!
 //! [`PassPlan`]: predsamp::sampler::PassPlan
 
-use predsamp::coordinator::scheduler::{self, ScheduleReport};
+use predsamp::coordinator::scheduler::{self, LiveJob, ScheduleReport};
 use predsamp::sampler::forecast;
 use predsamp::sampler::mock::MockArm;
 use predsamp::sampler::noise::JobNoise;
-use predsamp::sampler::StepModel;
+use predsamp::sampler::{JobResult, StepModel};
 use predsamp::substrate::cli::Args;
 use predsamp::substrate::json::Value;
 use predsamp::substrate::timer::fmt_duration;
+use std::collections::VecDeque;
 
 /// The serving mix: the two demo mock models under the methods the
 /// serving bench drives (see `benches/serving_load.rs`).
 const MIX: [(&str, &str); 4] = [("mock_a", "fpi"), ("mock_b", "fpi"), ("mock_a", "zeros"), ("mock_b", "learned")];
+
+/// Groups for the deep-queue elastic scenario.
+const ELASTIC_MIX: [(&str, &str); 2] = [("mock_a", "fpi"), ("mock_b", "learned")];
 
 fn model(name: &str, batch: usize) -> MockArm {
     match name {
@@ -55,6 +69,97 @@ fn run_group(name: &str, method: &str, jobs: usize, seed: u64, plan: bool) -> an
     scheduler::run_continuous_family_mode(&refs, fc, noises, plan)
 }
 
+/// One elastic-vs-baseline comparison (see [`run_elastic_scenario`]).
+struct ElasticOutcome {
+    elastic: ScheduleReport,
+    results: Vec<Option<JobResult>>,
+    /// Down-shift-only aggregate calls_per_job over the same arrivals.
+    base_cpj: f64,
+    /// Down-shift-only total ARM passes (wall-clock proxy).
+    base_passes: usize,
+    /// Schedules the down-shift-only baseline needed.
+    base_schedules: usize,
+}
+
+/// Deep-queue elastic scenario for one (model, method) group: `jobs` jobs
+/// arrive in bursts of `burst` every `gap` passes, once into a single
+/// live elastic schedule and once through the down-shift-only scheduler
+/// (separate schedules per accumulation of arrivals).
+fn run_elastic_scenario(name: &str, method: &str, jobs: usize, burst: usize, gap: usize, seed: u64) -> anyhow::Result<ElasticOutcome> {
+    let family: Vec<MockArm> = vec![model(name, 1), model(name, 2), model(name, 4), model(name, 8)];
+    let refs: Vec<&MockArm> = family.iter().collect();
+    let d = refs[0].dim();
+    let k = refs[0].categories();
+    let job = |id: usize| LiveJob { tag: id as u64, noise: JobNoise::new(seed, id as u64, d, k) };
+
+    // Elastic: one live schedule absorbing every burst mid-flight.
+    let mut bursts: Vec<(usize, Vec<LiveJob>)> = Vec::new();
+    let mut at = gap;
+    let mut next = burst.min(jobs);
+    while next < jobs {
+        let hi = (next + burst).min(jobs);
+        bursts.push((at, (next..hi).map(job).collect()));
+        next = hi;
+        at += gap;
+    }
+    let arrival_ticks: Vec<(usize, usize)> = bursts.iter().map(|(at, b)| (*at, b.len())).collect();
+    let mut feed = scheduler::TickBurstFeed::new(jobs, bursts);
+    let initial: Vec<LiveJob> = (0..burst.min(jobs)).map(job).collect();
+    let fc = forecast::by_name(method, 2).expect("known method");
+    let elastic = scheduler::run_elastic_family(&refs, fc, initial, &mut feed)?;
+
+    // Down-shift-only baseline: arrivals cannot join a running schedule,
+    // so each accumulation of bursts runs as its own schedule (PR 2's
+    // serving behavior — the next window executes whatever queued while
+    // the previous schedule ran). The pass clock links the two.
+    let mut pending: VecDeque<(usize, (usize, usize))> = arrival_ticks
+        .iter()
+        .scan(burst.min(jobs), |lo, (at, len)| {
+            let span = (*lo, *lo + len);
+            *lo += len;
+            Some((*at, span))
+        })
+        .collect();
+    pending.push_front((0, (0, burst.min(jobs))));
+    let mut clock = 0usize;
+    let mut slot_passes = 0f64;
+    let mut base_passes = 0usize;
+    let mut schedules = 0usize;
+    let mut base_results: Vec<Option<JobResult>> = (0..jobs).map(|_| None).collect();
+    while let Some(&(at, _)) = pending.front() {
+        // Everything arrived by `clock` forms the next schedule; if the
+        // queue is idle, jump to the next arrival (idle time costs no
+        // slot-passes).
+        if at > clock {
+            clock = at;
+        }
+        let mut ids: Vec<usize> = Vec::new();
+        while pending.front().is_some_and(|(a, _)| *a <= clock) {
+            let (_, (lo, hi)) = pending.pop_front().expect("non-empty");
+            ids.extend(lo..hi);
+        }
+        let noises: Vec<JobNoise> = ids.iter().map(|&id| JobNoise::new(seed, id as u64, d, k)).collect();
+        let fc = forecast::by_name(method, 2).expect("known method");
+        let rep = scheduler::run_continuous_family(&refs, fc, noises)?;
+        slot_passes += rep.calls_per_job * ids.len() as f64;
+        base_passes += rep.total_passes;
+        clock += rep.total_passes;
+        schedules += 1;
+        for (i, id) in ids.into_iter().enumerate() {
+            base_results[id] = Some(rep.results[i].clone());
+        }
+    }
+    let base_cpj = slot_passes / jobs as f64;
+
+    // Elasticity must be exact: both schedules bitwise agree per job id.
+    for id in 0..jobs {
+        let e = feed.results[id].as_ref().expect("elastic job completed");
+        let b = base_results[id].as_ref().expect("baseline job completed");
+        assert_eq!(e.x, b.x, "{name}/{method} job {id}: elasticity changed the sample");
+    }
+    Ok(ElasticOutcome { elastic, results: feed.results, base_cpj, base_passes, base_schedules: schedules })
+}
+
 fn report_value(r: &ScheduleReport, jobs: usize) -> Value {
     Value::obj(vec![
         ("positions", Value::num(r.positions_evaluated as f64)),
@@ -63,6 +168,7 @@ fn report_value(r: &ScheduleReport, jobs: usize) -> Value {
         ("calls_per_job", Value::num(r.calls_per_job)),
         ("occupancy", Value::num(r.occupancy)),
         ("downshifts", Value::num(r.downshifts as f64)),
+        ("upshifts", Value::num(r.upshifts as f64)),
         ("min_batch", Value::num(r.min_batch as f64)),
         ("wall_secs", Value::num(r.wall_secs)),
     ])
@@ -118,10 +224,59 @@ fn main() -> anyhow::Result<()> {
         fmt_duration(wall_plan)
     );
 
+    // Deep-queue elastic scenario: awkward bursts trickling into a live
+    // schedule vs the down-shift-only scheduler running one schedule per
+    // accumulation of arrivals.
+    let elastic_jobs = args.num::<usize>("elastic-jobs", 40);
+    // Bursts of 5 every 3 passes: 5 jobs fill no export exactly, so the
+    // down-shift-only baseline's first window runs 5 jobs on the b=8
+    // executable — three dead slots for every pass until the first
+    // convergence — and later windows pay their own straggler drains.
+    // The elastic schedule sizes to the largest export it can *fill*
+    // (parking the excess), so every pass runs a full batch and grows to
+    // b=8 as arrivals outpace convergence at these dims.
+    let (burst, gap) = (5usize, 3usize);
+    println!("deep-queue elastic: {elastic_jobs} jobs/group in bursts of {burst} every {gap} passes, elastic vs down-shift-only");
+    let mut elastic_groups = Vec::new();
+    let mut elastic_ok = true;
+    for (gi, (name, method)) in ELASTIC_MIX.iter().enumerate() {
+        let out = run_elastic_scenario(name, method, elastic_jobs, burst, gap, 2000 + gi as u64)?;
+        assert!(out.results.iter().all(|r| r.is_some()), "{name}/{method}: elastic schedule lost jobs");
+        let gain = out.base_cpj / out.elastic.calls_per_job.max(1e-12);
+        println!(
+            "  {name:>6}/{method:<7} calls/job {:>6.2} -> {:>6.2}  ({gain:.2}x less)  passes {:>4} -> {:>4}  schedules {} -> 1  shifts +{}/-{}",
+            out.base_cpj,
+            out.elastic.calls_per_job,
+            out.base_passes,
+            out.elastic.total_passes,
+            out.base_schedules,
+            out.elastic.upshifts,
+            out.elastic.downshifts,
+        );
+        elastic_ok &= out.elastic.calls_per_job < out.base_cpj && out.elastic.upshifts >= 1;
+        elastic_groups.push(Value::obj(vec![
+            ("model", Value::str(*name)),
+            ("method", Value::str(*method)),
+            ("jobs", Value::num(elastic_jobs as f64)),
+            ("burst", Value::num(burst as f64)),
+            ("gap_passes", Value::num(gap as f64)),
+            ("elastic_calls_per_job", Value::num(out.elastic.calls_per_job)),
+            ("downshift_only_calls_per_job", Value::num(out.base_cpj)),
+            ("calls_per_job_gain", Value::num(gain)),
+            ("elastic_passes", Value::num(out.elastic.total_passes as f64)),
+            ("downshift_only_passes", Value::num(out.base_passes as f64)),
+            ("downshift_only_schedules", Value::num(out.base_schedules as f64)),
+            ("upshifts", Value::num(out.elastic.upshifts as f64)),
+            ("downshifts", Value::num(out.elastic.downshifts as f64)),
+            ("occupancy", Value::num(out.elastic.occupancy)),
+        ]));
+    }
+
     let doc = Value::obj(vec![
         ("bench", Value::str("sampler_hotpath")),
         ("jobs_per_group", Value::num(jobs as f64)),
         ("groups", Value::Arr(groups)),
+        ("elastic", Value::Arr(elastic_groups)),
         (
             "total",
             Value::obj(vec![
@@ -136,5 +291,6 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(&out_path, format!("{doc}\n"))?;
     println!("wrote {out_path}");
     assert!(reduction >= 2.0, "plan-based passes must at least halve positions/job (got {reduction:.2}x)");
+    assert!(elastic_ok, "elastic schedule must up-shift and beat the down-shift-only scheduler's calls_per_job on every group");
     Ok(())
 }

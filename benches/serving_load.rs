@@ -34,6 +34,8 @@ fn run_load(dir: std::path::PathBuf, engine_threads: usize, clients: usize, requ
         max_batch: 16,
         max_wait: Duration::from_millis(2),
         continuous: true,
+        elastic: true,
+        steal: true,
         // Every open connection pins one handler thread, so leave headroom
         // beyond the measured clients.
         worker_threads: clients + 2,

@@ -74,6 +74,8 @@ fn main() -> anyhow::Result<()> {
             max_batch: 32,
             max_wait: Duration::from_millis(5),
             continuous,
+            elastic: continuous,
+            steal: true,
             // one handler thread per client plus headroom for the
             // warm/metrics connection below
             worker_threads: clients + 2,

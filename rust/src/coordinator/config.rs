@@ -50,13 +50,28 @@ impl Method {
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub addr: String,
-    /// Dynamic batcher: flush when this many jobs are queued...
+    /// Batching window: a worker executes its head group once this many
+    /// jobs are waiting...
     pub max_batch: usize,
-    /// ...or when the oldest request has waited this long.
+    /// ...or once the group's oldest request has been queued this long
+    /// (windows are keyed to each request's *admission* time, so waiting
+    /// behind other groups counts against the window).
     pub max_wait: Duration,
     /// Use continuous batching (slot refill) rather than synchronous
     /// batch-at-a-time execution.
     pub continuous: bool,
+    /// Elastic batching: a group being executed absorbs its own
+    /// mid-flight arrivals into the live schedule (up-shifting the batch
+    /// as the queue deepens) instead of stashing them for the next
+    /// window. Continuous mode only. Samples are bitwise identical
+    /// either way (noise is keyed by `(seed, job index)`).
+    pub elastic: bool,
+    /// Cross-worker group stealing: a worker whose queue drains pulls a
+    /// whole queued `(model, method)` group from the most-loaded worker.
+    /// Groups move atomically, so sticky batching and PJRT
+    /// thread-affinity are preserved — and samples, as ever, are bitwise
+    /// identical either way.
+    pub steal: bool,
     /// Connection-handling threads (cheap; no PJRT state).
     pub worker_threads: usize,
     /// Engine worker shards. Each owns a full `Router` — PJRT handles are
@@ -74,6 +89,8 @@ impl Default for ServeConfig {
             max_batch: 32,
             max_wait: Duration::from_millis(20),
             continuous: true,
+            elastic: true,
+            steal: true,
             worker_threads: 4,
             engine_threads: 2,
         }

@@ -9,7 +9,7 @@
 //! it; the server replicates engines per worker for the same reason.
 
 use crate::coordinator::config::Method;
-use crate::coordinator::scheduler::{self, ScheduleReport};
+use crate::coordinator::scheduler::{self, JobFeed, LiveJob, ScheduleReport};
 use crate::runtime::artifact::{Manifest, ModelInfo, ModelKind};
 use crate::runtime::autoenc::DecoderExe;
 use crate::runtime::step::{bpd_of, StepExecutable, StepOutput};
@@ -183,6 +183,17 @@ impl Engine {
         scheduler::run_continuous_family(&backends, self.forecaster_for(method)?, noises)
     }
 
+    /// As [`Engine::sample_continuous`], over a **live** queue: `feed` is
+    /// polled between passes, so jobs can keep arriving while the
+    /// schedule runs and the batch up-shifts to absorb them (the serving
+    /// layer's elastic path). Results are delivered through
+    /// [`JobFeed::complete`] the moment each job converges.
+    pub fn sample_elastic(&self, method: Method, initial: Vec<LiveJob>, feed: &mut dyn JobFeed) -> Result<ScheduleReport> {
+        ensure!(method != Method::Baseline, "baseline serves through the sync path");
+        let backends = self.backends_for(Self::needs_fore(method));
+        scheduler::run_elastic_family(&backends, self.forecaster_for(method)?, initial, feed)
+    }
+
     /// Whether `method` reads the forecast-head outputs.
     pub fn needs_fore(method: Method) -> bool {
         matches!(method, Method::Forecast { .. })
@@ -346,6 +357,28 @@ mod tests {
         assert_eq!(one.min_batch, 1, "single job must use the b=1 backend");
         assert_eq!(one.results[0].x, sync.jobs[0].x);
         assert!(eng.sample_continuous(Method::Baseline, vec![]).is_err());
+    }
+
+    #[test]
+    fn mock_engine_elastic_feed_matches_continuous() {
+        // The serving elastic path: jobs delivered mid-schedule through a
+        // feed must sample bitwise identically to the same queue handed
+        // over all at once (and results must flow out via the feed).
+        use crate::coordinator::scheduler::TickBurstFeed;
+        let eng = mock_engine("elastic");
+        let (d, k) = (eng.info.dim, eng.info.categories);
+        let noises: Vec<JobNoise> = (0..6).map(|id| JobNoise::new(11, id, d, k)).collect();
+        let fixed = eng.sample_continuous(Method::Fpi, noises).unwrap();
+        let initial = vec![LiveJob { tag: 0, noise: JobNoise::new(11, 0, d, k) }];
+        // The burst lands at tick 1, i.e. after the schedule has already
+        // run a pass on the b=1 backend.
+        let burst: Vec<LiveJob> = (1..6).map(|id| LiveJob { tag: id, noise: JobNoise::new(11, id, d, k) }).collect();
+        let mut feed = TickBurstFeed::new(6, vec![(1, burst)]);
+        let rep = eng.sample_elastic(Method::Fpi, initial, &mut feed).unwrap();
+        for (id, job) in fixed.results.iter().enumerate() {
+            assert_eq!(feed.results[id].as_ref().unwrap().x, job.x, "job {id}: elastic feed changed the sample");
+        }
+        assert!(rep.upshifts >= 1, "a 1-job start growing to 6 must up-shift onto the b=4 backend");
     }
 
     #[test]

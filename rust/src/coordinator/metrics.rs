@@ -17,6 +17,10 @@ pub struct Metrics {
     pub arm_calls: u64,
     pub errors: u64,
     pub batches: u64,
+    /// Whole `(model, method)` groups this worker stole from a loaded
+    /// peer's queue (work-conservation gauge: nonzero means the fleet
+    /// rebalanced instead of idling).
+    pub steals: u64,
     /// Wall-seconds spent executing batches (occupancy numerator).
     pub busy_secs: f64,
     started: Instant,
@@ -36,6 +40,7 @@ impl Metrics {
             arm_calls: 0,
             errors: 0,
             batches: 0,
+            steals: 0,
             busy_secs: 0.0,
             started: Instant::now(),
             latencies: Vec::new(),
@@ -65,6 +70,9 @@ impl Metrics {
     pub fn record_error(&mut self) {
         self.errors += 1;
     }
+    pub fn record_steal(&mut self) {
+        self.steals += 1;
+    }
 
     /// Fraction of this worker's uptime spent executing batches.
     pub fn occupancy(&self) -> f64 {
@@ -83,6 +91,7 @@ impl Metrics {
         self.arm_calls += other.arm_calls;
         self.errors += other.errors;
         self.batches += other.batches;
+        self.steals += other.steals;
         self.busy_secs += other.busy_secs;
         for &l in other.latencies.iter().take(RESERVOIR.saturating_sub(self.latencies.len())) {
             self.latencies.push(l);
@@ -99,6 +108,7 @@ impl Metrics {
             ("arm_calls", Value::num(self.arm_calls as f64)),
             ("errors", Value::num(self.errors as f64)),
             ("batches", Value::num(self.batches as f64)),
+            ("steals", Value::num(self.steals as f64)),
             ("busy_secs", Value::num(self.busy_secs)),
             ("latency_p50_s", Value::num(stats::percentile(&self.latencies, 50.0))),
             ("latency_p95_s", Value::num(stats::percentile(&self.latencies, 95.0))),
@@ -116,6 +126,7 @@ impl Metrics {
             ("samples", Value::num(self.samples as f64)),
             ("arm_calls", Value::num(self.arm_calls as f64)),
             ("errors", Value::num(self.errors as f64)),
+            ("steals", Value::num(self.steals as f64)),
             ("queue_depth", Value::num(queue_depth as f64)),
             ("engines_loaded", Value::num(engines_loaded as f64)),
             ("occupancy", Value::num(self.occupancy())),
@@ -142,8 +153,10 @@ mod tests {
         m.record_batch(4, 50, 50.0, 0.5);
         m.record_batch(4, 100, 100.0, 1.5);
         m.record_error();
+        m.record_steal();
         let s = m.snapshot();
         assert_eq!(s.get("requests").as_i64(), Some(2));
+        assert_eq!(s.get("steals").as_i64(), Some(1));
         assert_eq!(s.get("samples").as_i64(), Some(8));
         assert_eq!(s.get("arm_calls").as_i64(), Some(150));
         assert_eq!(s.get("errors").as_i64(), Some(1));
@@ -160,8 +173,10 @@ mod tests {
         let mut b = Metrics::new();
         b.record_batch(3, 20, 60.0, 0.75);
         b.record_error();
+        b.record_steal();
         a.merge(&b);
         let s = a.snapshot();
+        assert_eq!(s.get("steals").as_i64(), Some(1));
         assert_eq!(s.get("requests").as_i64(), Some(1));
         assert_eq!(s.get("samples").as_i64(), Some(5));
         assert_eq!(s.get("arm_calls").as_i64(), Some(30));

@@ -3,21 +3,24 @@
 //!
 //! * [`engine`] — owns the compiled executables for one model and runs
 //!   the sampling methods against them.
-//! * [`batcher`] — dynamic batching queue (size/deadline policy).
-//! * [`scheduler`] — continuous batching: converged batch slots are
-//!   refilled from the queue mid-flight. This is the "scheduling system"
-//!   the paper explicitly leaves to future work (§4.1), which lets batched
-//!   serving approach the batch-size-1 ARM-call rate.
+//! * [`scheduler`] — elastic continuous batching: converged batch slots
+//!   are refilled from a live queue mid-flight, and the schedule
+//!   up-/down-shifts across the exported batch sizes as that queue grows
+//!   and drains. This is the "scheduling system" the paper explicitly
+//!   leaves to future work (§4.1), which lets batched serving approach
+//!   the batch-size-1 ARM-call rate.
 //! * [`router`] — model-name → engine dispatch.
 //! * [`protocol`] + [`server`] — line-delimited-JSON TCP serving over a
 //!   sharded engine-worker pool: PJRT handles are not `Send`, so each of
 //!   the `engine_threads` workers owns its own `Router` (engines
 //!   replicated lazily) and a dispatcher routes each `(model, method)`
-//!   batching group to the least-loaded worker.
+//!   batching group to the least-loaded worker. Executing groups absorb
+//!   their own mid-flight arrivals; idle workers steal whole queued
+//!   groups from loaded ones.
 //! * [`metrics`] — request/latency/ARM-call accounting, per worker,
-//!   aggregated into one snapshot with queue-depth/occupancy gauges.
+//!   aggregated into one snapshot with queue-depth/occupancy/steal
+//!   gauges.
 
-pub mod batcher;
 pub mod config;
 pub mod engine;
 pub mod metrics;

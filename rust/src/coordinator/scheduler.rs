@@ -12,19 +12,25 @@
 //! the refill tests rely on that invariant.
 //!
 //! Given a *family* of step models (one per exported batch size), the
-//! scheduler also **down-shifts**: once the queue is dry and fewer jobs
-//! remain in flight than the current batch, the survivors are migrated —
-//! state and all, via [`PredictiveSampler::extract_slot`] — onto the
-//! smallest exported batch that still fits, so a draining tail pays for
-//! b=1 passes instead of b=B ones. Placement irrelevance (noise keyed by
-//! job id) is what makes the migration provably exact.
+//! schedule is **elastic** in both directions. Down-shift: once the queue
+//! is dry and fewer jobs remain in flight than the current batch, the
+//! survivors are migrated — state and all, via
+//! [`PredictiveSampler::extract_slot`] — onto the smallest exported batch
+//! that still fits, so a draining tail pays for b=1 passes instead of b=B
+//! ones. Up-shift: jobs can keep *arriving* while the schedule runs (a
+//! [`JobFeed`] is polled between passes), and when the live queue deepens
+//! past the current batch the in-flight slots migrate onto the next
+//! larger exported batch and the queued jobs are admitted into the freed
+//! capacity. Placement irrelevance (noise keyed by job id) is what makes
+//! both migrations provably exact.
 
 use crate::sampler::forecast::Forecaster;
 use crate::sampler::noise::JobNoise;
-use crate::sampler::predictive::PredictiveSampler;
+use crate::sampler::predictive::{PredictiveSampler, SlotState};
 use crate::sampler::{JobResult, StepModel};
 use crate::substrate::timer::Timer;
 use anyhow::{ensure, Result};
+use std::collections::VecDeque;
 
 /// Outcome of scheduling `n_jobs` through a fixed-size batch engine.
 #[derive(Clone, Debug)]
@@ -45,8 +51,95 @@ pub struct ScheduleReport {
     pub positions_evaluated: usize,
     /// Times the schedule migrated to a smaller exported batch size.
     pub downshifts: usize,
+    /// Times the schedule migrated to a larger exported batch size (a
+    /// live queue deepened past the current batch mid-schedule).
+    pub upshifts: usize,
     /// Smallest batch size the schedule executed on.
     pub min_batch: usize,
+}
+
+/// A job admitted to a live schedule: its noise block plus an opaque tag
+/// the feed uses to route the completed result (the serving layer packs a
+/// request id and per-request job index into it).
+pub struct LiveJob {
+    pub tag: u64,
+    pub noise: JobNoise,
+}
+
+/// Mid-schedule counters handed to [`JobFeed::complete`] — enough for the
+/// serving layer to answer a request the moment its last job finishes
+/// instead of waiting for the whole schedule to end.
+#[derive(Clone, Copy, Debug)]
+pub struct LiveStats {
+    /// ARM passes executed so far.
+    pub passes: usize,
+    /// Slot-passes (Σ batch over passes) accumulated so far.
+    pub slot_passes: usize,
+    /// Jobs completed so far (including the one being delivered).
+    pub completed: usize,
+    pub upshifts: usize,
+    pub downshifts: usize,
+}
+
+/// Live job source for an elastic schedule. The scheduler polls it
+/// between passes, so jobs can be appended while the schedule runs; the
+/// schedule ends when the feed is dry and every admitted job converged.
+pub trait JobFeed {
+    /// Non-blocking poll for newly arrived jobs.
+    fn poll(&mut self) -> Vec<LiveJob>;
+    /// A job converged; called in completion order, mid-schedule.
+    fn complete(&mut self, tag: u64, result: JobResult, stats: &LiveStats);
+}
+
+/// The closed feed: nothing arrives; results are collected by tag (which
+/// [`run_continuous_family_mode`] assigns as the job's queue index).
+struct CollectFeed {
+    results: Vec<Option<JobResult>>,
+}
+
+impl JobFeed for CollectFeed {
+    fn poll(&mut self) -> Vec<LiveJob> {
+        Vec::new()
+    }
+    fn complete(&mut self, tag: u64, result: JobResult, _stats: &LiveStats) {
+        self.results[tag as usize] = Some(result);
+    }
+}
+
+/// Deterministic replay feed: releases each burst once the schedule has
+/// polled `tick` times (the scheduler polls once per pass, so ticks are
+/// pass counts) and collects results by tag, which must index `0..n`.
+/// Bursts must be sorted by tick. This is how tests and benches drive
+/// reproducible live-arrival scenarios without threads or clocks.
+pub struct TickBurstFeed {
+    bursts: VecDeque<(usize, Vec<LiveJob>)>,
+    polls: usize,
+    pub results: Vec<Option<JobResult>>,
+    /// Stats snapshot delivered with each completion, in order.
+    pub completions: Vec<LiveStats>,
+}
+
+impl TickBurstFeed {
+    pub fn new(n_jobs: usize, bursts: Vec<(usize, Vec<LiveJob>)>) -> TickBurstFeed {
+        debug_assert!(bursts.windows(2).all(|w| w[0].0 <= w[1].0), "bursts must be sorted by tick");
+        TickBurstFeed { bursts: bursts.into(), polls: 0, results: (0..n_jobs).map(|_| None).collect(), completions: Vec::new() }
+    }
+}
+
+impl JobFeed for TickBurstFeed {
+    fn poll(&mut self) -> Vec<LiveJob> {
+        let t = self.polls;
+        self.polls += 1;
+        let mut out = Vec::new();
+        while self.bursts.front().is_some_and(|(at, _)| *at <= t) {
+            out.extend(self.bursts.pop_front().expect("non-empty").1);
+        }
+        out
+    }
+    fn complete(&mut self, tag: u64, result: JobResult, stats: &LiveStats) {
+        self.results[tag as usize] = Some(result);
+        self.completions.push(*stats);
+    }
 }
 
 /// Per-job ARM calls as a percentage of the baseline's `d` calls — the
@@ -109,6 +202,49 @@ pub fn run_continuous_family_mode<M: StepModel>(
     noises: Vec<JobNoise>,
     use_plan: bool,
 ) -> Result<ScheduleReport> {
+    let initial: Vec<LiveJob> = noises.into_iter().enumerate().map(|(id, noise)| LiveJob { tag: id as u64, noise }).collect();
+    let mut feed = CollectFeed { results: (0..initial.len()).map(|_| None).collect() };
+    let mut rep = schedule_family(models, forecaster, initial, &mut feed, use_plan, false)?;
+    rep.results = feed.results.into_iter().map(|r| r.expect("all jobs complete")).collect();
+    Ok(rep)
+}
+
+/// Elastic continuous batching over a **live** queue: `initial` jobs plus
+/// whatever `feed` delivers while the schedule runs. Results are handed
+/// to [`JobFeed::complete`] as they converge (the returned report's
+/// `results` is empty). The schedule up-shifts when the live queue
+/// outgrows the current batch and down-shifts as it drains; both
+/// directions migrate in-flight slots state-and-all, so every sample is
+/// bitwise identical to the same job scheduled any other way.
+///
+/// Unlike the closed-queue scheduler (which sizes for latency: the
+/// smallest exported batch that fits *everything*, even half-empty), the
+/// live scheduler sizes for **occupancy**: the largest exported batch the
+/// runnable jobs can completely fill, **parking** any excess in-flight
+/// slots (state and all) to resume ahead of fresh admissions. Every pass
+/// therefore runs a full batch, which is exactly the paper's §4.1 target
+/// of batched sampling at the batch-size-1 ARM-call rate.
+pub fn run_elastic_family<M: StepModel>(
+    models: &[&M],
+    forecaster: Box<dyn Forecaster>,
+    initial: Vec<LiveJob>,
+    feed: &mut dyn JobFeed,
+) -> Result<ScheduleReport> {
+    schedule_family(models, forecaster, initial, feed, true, true)
+}
+
+/// The one scheduling loop under every batching mode. `occupancy_sizing`
+/// selects the resize policy: `false` = the closed-queue rule (smallest
+/// export ≥ runnable jobs; never parks), `true` = the live elastic rule
+/// (largest export the runnable jobs fill; excess in-flight slots park).
+fn schedule_family<M: StepModel>(
+    models: &[&M],
+    forecaster: Box<dyn Forecaster>,
+    initial: Vec<LiveJob>,
+    feed: &mut dyn JobFeed,
+    use_plan: bool,
+    occupancy_sizing: bool,
+) -> Result<ScheduleReport> {
     ensure!(!models.is_empty(), "empty model family");
     // Batch sizes ascending. The family must be one model at different
     // exported batch sizes: migrating a job across different shapes would
@@ -127,88 +263,119 @@ pub fn run_continuous_family_mode<M: StepModel>(
     // rather than panicking mid-schedule at the first downshift.
     let fores_agree = models.iter().all(|m| m.t_fore() == models[0].t_fore());
     ensure!(fores_agree || !forecaster.reads_fore(), "fore-reading policy over a family with mixed t_fore");
-    // Smallest exported batch that fits `need` jobs (largest otherwise).
-    let pick = |need: usize| -> usize { order.iter().copied().find(|&i| models[i].batch() >= need).unwrap_or(*order.last().unwrap()) };
+    // Two sizing rules over the ascending exports. `fit`: smallest batch
+    // that holds `need` jobs (largest otherwise) — the closed-queue rule,
+    // which favors tail latency by keeping every runnable job in a slot.
+    // `fill`: largest batch `need` jobs can completely occupy — the live
+    // rule, which favors the batched ARM-call rate and parks the excess.
+    let fit = |need: usize| -> usize { order.iter().copied().find(|&i| models[i].batch() >= need).unwrap_or(*order.last().unwrap()) };
+    let fill = |need: usize| -> usize { order.iter().copied().filter(|&i| models[i].batch() <= need).last().unwrap_or(order[0]) };
+    let choose = |need: usize| -> usize {
+        if occupancy_sizing {
+            fill(need.max(1))
+        } else {
+            fit(need.max(1))
+        }
+    };
 
-    let n_jobs = noises.len();
     let timer = Timer::start();
-    let mut results: Vec<Option<JobResult>> = (0..n_jobs).map(|_| None).collect();
-    let mut queue = noises.into_iter().enumerate().collect::<std::collections::VecDeque<_>>();
-    let mut cur = pick(n_jobs.max(1));
+    let mut queue: VecDeque<LiveJob> = initial.into();
+    // Mid-flight jobs lifted out when the batch shrinks below the
+    // in-flight count (occupancy sizing only); resumed, oldest first,
+    // ahead of fresh admissions.
+    let mut parked: VecDeque<(u64, SlotState)> = VecDeque::new();
+    let mut cur = choose(queue.len());
     let mut ps = PredictiveSampler::new(models[cur], forecaster);
     ps.set_plan_mode(use_plan);
-    let mut slot_job: Vec<Option<usize>> = vec![None; models[cur].batch()];
+    let mut slot_job: Vec<Option<u64>> = vec![None; models[cur].batch()];
     let mut completed = 0usize;
     let mut active_accum = 0usize;
     let mut capacity_accum = 0usize;
     let mut passes = 0usize;
     let mut positions = 0usize;
     let mut downshifts = 0usize;
+    let mut upshifts = 0usize;
     let mut min_batch = models[cur].batch();
 
-    // Prime the slots.
-    for (s, sj) in slot_job.iter_mut().enumerate() {
-        if let Some((id, noise)) = queue.pop_front() {
-            ps.reset_slot(s, noise);
-            *sj = Some(id);
-        }
-    }
-
-    while completed < n_jobs {
+    loop {
+        // Merge live arrivals before deciding whether anything is left.
+        queue.extend(feed.poll());
         let in_flight = slot_job.iter().filter(|j| j.is_some()).count();
-        // Down-shift: queue dry and a smaller exported batch fits the
-        // survivors. Carries each job's full mid-flight state, so the
-        // migration costs no extra passes and changes no samples.
-        if queue.is_empty() && in_flight > 0 {
-            let target = pick(in_flight);
-            if models[target].batch() < models[cur].batch() {
+        let runnable = in_flight + parked.len() + queue.len();
+        if runnable == 0 {
+            break;
+        }
+        // Elastic resize. Larger than the current batch (the live queue
+        // deepened) => up-shift; smaller (the queue drained) =>
+        // down-shift. Both carry each job's full mid-flight state —
+        // migrated or parked — so no pass repeats and no sample changes.
+        let target = choose(runnable);
+        if models[target].batch() != models[cur].batch() {
+            if models[target].batch() > models[cur].batch() {
+                upshifts += 1;
+            } else {
                 downshifts += 1;
-                positions += ps.positions_evaluated;
-                let mut moved = Vec::with_capacity(in_flight);
-                for (s, sj) in slot_job.iter_mut().enumerate() {
-                    if let Some(job) = sj.take() {
-                        moved.push((job, ps.extract_slot(s).expect("in-flight slot")));
-                    }
+            }
+            positions += ps.positions_evaluated;
+            let mut moved = Vec::with_capacity(in_flight);
+            for (s, sj) in slot_job.iter_mut().enumerate() {
+                if let Some(job) = sj.take() {
+                    moved.push((job, ps.extract_slot(s).expect("in-flight slot")));
                 }
-                let fc = ps.into_forecaster();
-                cur = target;
-                min_batch = min_batch.min(models[cur].batch());
-                ps = PredictiveSampler::new(models[cur], fc);
-                ps.set_plan_mode(use_plan);
-                slot_job = vec![None; models[cur].batch()];
-                for (s, (job, st)) in moved.into_iter().enumerate() {
+            }
+            let fc = ps.into_forecaster();
+            cur = target;
+            min_batch = min_batch.min(models[cur].batch());
+            ps = PredictiveSampler::new(models[cur], fc);
+            ps.set_plan_mode(use_plan);
+            slot_job = vec![None; models[cur].batch()];
+            let batch = models[cur].batch();
+            for (s, (job, st)) in moved.drain(..batch.min(moved.len())).enumerate() {
+                ps.install_slot(s, st);
+                slot_job[s] = Some(job);
+            }
+            // A shrink below the in-flight count parks the rest (FIFO by
+            // park time behind anything already parked).
+            parked.extend(moved);
+        }
+        // Fill every free slot: parked jobs resume first, then fresh
+        // admissions from the queue.
+        for (s, sj) in slot_job.iter_mut().enumerate() {
+            if sj.is_none() {
+                if let Some((job, st)) = parked.pop_front() {
                     ps.install_slot(s, st);
-                    slot_job[s] = Some(job);
+                    *sj = Some(job);
+                } else if let Some(job) = queue.pop_front() {
+                    let got = ps.admit(job.noise).expect("free slot");
+                    debug_assert_eq!(got, s);
+                    *sj = Some(job.tag);
                 }
             }
         }
-        active_accum += in_flight;
+        active_accum += slot_job.iter().filter(|j| j.is_some()).count();
         capacity_accum += models[cur].batch();
         ps.step()?;
         passes += 1;
         for (s, sj) in slot_job.iter_mut().enumerate() {
             if sj.is_some() && ps.slot_done(s) {
-                let job = sj.take().unwrap();
-                results[job] = Some(ps.take_result(s).expect("done slot"));
+                let tag = sj.take().unwrap();
                 completed += 1;
-                if let Some((id, noise)) = queue.pop_front() {
-                    ps.reset_slot(s, noise);
-                    *sj = Some(id);
-                }
+                let stats = LiveStats { passes, slot_passes: capacity_accum, completed, upshifts, downshifts };
+                feed.complete(tag, ps.take_result(s).expect("done slot"), &stats);
             }
         }
     }
     positions += ps.positions_evaluated;
 
-    let results: Vec<JobResult> = results.into_iter().map(|r| r.expect("all jobs complete")).collect();
     Ok(ScheduleReport {
         total_passes: passes,
         occupancy: active_accum as f64 / capacity_accum.max(1) as f64,
         wall_secs: timer.secs(),
-        calls_per_job: capacity_accum as f64 / n_jobs as f64,
-        results,
+        calls_per_job: capacity_accum as f64 / completed.max(1) as f64,
+        results: Vec::new(),
         positions_evaluated: positions,
         downshifts,
+        upshifts,
         min_batch,
     })
 }
@@ -254,6 +421,7 @@ pub fn run_sync_chunks<M: StepModel>(model: &M, forecaster: Box<dyn Forecaster>,
         results,
         positions_evaluated: ps.positions_evaluated,
         downshifts: 0,
+        upshifts: 0,
         min_batch: b,
     })
 }
@@ -384,6 +552,76 @@ mod tests {
             saw_b1 |= rep.min_batch == 1;
         }
         assert!(saw_b1, "no schedule drained to the b=1 executable — straggler tails must down-shift");
+    }
+
+    fn live_jobs(ids: std::ops::Range<usize>, seed: u64, d: usize, k: usize) -> Vec<LiveJob> {
+        ids.map(|id| LiveJob { tag: id as u64, noise: JobNoise::new(seed, id as u64, d, k) }).collect()
+    }
+
+    #[test]
+    fn live_arrivals_upshift_and_stay_bitwise() {
+        // THE up-shifting acceptance gate: a schedule that starts with one
+        // job on the b=1 executable and sees the queue deepen mid-flight
+        // must migrate onto larger exported batches — and every sample
+        // must stay bitwise identical to the batch-1 reference and to the
+        // same jobs scheduled all-at-once.
+        let m4 = MockArm::new(4, 3, 6, 4, 2, 2.5, 21);
+        let m2 = MockArm { batch: 2, ..m4.clone() };
+        let m1 = MockArm { batch: 1, ..m4.clone() };
+        let family: Vec<&MockArm> = vec![&m1, &m2, &m4];
+        let (d, k) = (m4.dim(), 4);
+        let mut saw_upshift = false;
+        for seed in 0..6u64 {
+            let n = 9;
+            let initial = live_jobs(0..1, seed, d, k);
+            let bursts = vec![(1, live_jobs(1..4, seed, d, k)), (3, live_jobs(4..n, seed, d, k))];
+            let mut feed = TickBurstFeed::new(n, bursts);
+            let rep = run_elastic_family(&family, Box::new(FpiReuse), initial, &mut feed).unwrap();
+            let refs = reference_samples(n, seed);
+            for (id, r) in feed.results.iter().enumerate() {
+                let r = r.as_ref().expect("job completed");
+                assert_eq!(r.x, refs[id], "seed {seed} job {id}: up-shifting changed the sample");
+            }
+            let all_noises: Vec<JobNoise> = (0..n).map(|id| JobNoise::new(seed, id as u64, d, k)).collect();
+            let all_at_once = run_continuous_family(&family, Box::new(FpiReuse), all_noises).unwrap();
+            for (id, job) in all_at_once.results.iter().enumerate() {
+                assert_eq!(feed.results[id].as_ref().unwrap().x, job.x, "seed {seed} job {id}: live arrival order changed the sample");
+            }
+            assert_eq!(feed.completions.len(), n, "every completion must be delivered through the feed");
+            assert!(feed.completions.windows(2).all(|w| w[0].completed < w[1].completed), "completion stats must be monotone");
+            saw_upshift |= rep.upshifts > 0;
+            // A grown-then-drained queue must also shed batch again.
+            assert!(rep.upshifts == 0 || rep.min_batch <= 2 || rep.downshifts > 0, "seed {seed}: grown schedule never downshifted");
+        }
+        assert!(saw_upshift, "queue deepening never up-shifted the batch");
+    }
+
+    #[test]
+    fn elastic_closed_queue_stays_exact_and_sheds_waste() {
+        // A dry feed degenerates the elastic scheduler to a closed queue:
+        // samples must stay bitwise identical to the latency-sized
+        // continuous schedule, the batch never grows (nothing arrives),
+        // and occupancy sizing (fill the largest export, park the rest)
+        // must spend no more slot-passes per job than fit sizing does.
+        let m4 = MockArm::new(4, 3, 6, 4, 2, 2.5, 21);
+        let m1 = MockArm { batch: 1, ..m4.clone() };
+        let family: Vec<&MockArm> = vec![&m1, &m4];
+        let (d, k) = (m4.dim(), 4);
+        let n = 7;
+        let mut feed = TickBurstFeed::new(n, Vec::new());
+        let rep = run_elastic_family(&family, Box::new(FpiReuse), live_jobs(0..n, 5, d, k), &mut feed).unwrap();
+        let fixed = run_continuous_family(&family, Box::new(FpiReuse), (0..n).map(|id| JobNoise::new(5, id as u64, d, k)).collect()).unwrap();
+        assert_eq!(rep.upshifts, 0, "nothing arrived, nothing to grow for");
+        assert!(
+            rep.calls_per_job <= fixed.calls_per_job + 1e-9,
+            "occupancy sizing must not waste slot-passes: elastic {} vs fit {}",
+            rep.calls_per_job,
+            fixed.calls_per_job
+        );
+        assert!(rep.occupancy > fixed.occupancy - 1e-9, "parking exists to keep batches full");
+        for (id, job) in fixed.results.iter().enumerate() {
+            assert_eq!(feed.results[id].as_ref().unwrap().x, job.x, "job {id}: parking or sizing changed the sample");
+        }
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! TCP serving: line-delimited JSON over a thread pool, dispatched to a
-//! sharded pool of engine workers.
+//! sharded pool of engine workers with elastic batching and work stealing.
 //!
 //! Topology:
 //!
@@ -9,45 +9,67 @@
 //!                      ▼
 //!                dispatcher: answers ping/info/metrics, routes each
 //!                (model, method) batching group to the least-loaded
-//!                engine worker (sticky while the group has jobs in
-//!                flight, so one group's requests batch together)
-//!                      │
+//!                engine worker (ties: fewest loaded engines, then
+//!                round-robin; sticky while the group has jobs in flight)
+//!                      │ shared work pool (per-worker queues + routing
+//!                      │ table under one lock)
 //!        ┌─────────────┼─────────────┐
 //!        ▼             ▼             ▼
 //!   engine worker 0  worker 1 …  worker N-1   (cfg.engine_threads)
-//!   each: Router + Metrics + dynamic batching window
+//!   each: Router + Metrics + admission-keyed batching window
+//!        │                           ▲
+//!        └── executing group absorbs │ idle workers steal whole queued
+//!            its own live arrivals   │ groups from the most-loaded one
 //! ```
 //!
 //! PJRT handles are thread-affine, so every worker owns a full `Router`
 //! and engines are replicated per worker (lazily, on first use). Sharding
 //! removes the head-of-line blocking a single engine thread imposed on
-//! incompatible `(model, method)` groups. Continuous batches run through
-//! [`crate::coordinator::engine::Engine::sample_continuous`], which
-//! schedules over every exported batch size and down-shifts as the queue
-//! drains. Exactness is untouched by any of it: per-job noise is keyed by
-//! `(seed, job index within the request)` — never by worker, slot, or
-//! batch size — so samples are bitwise identical at any `engine_threads`
-//! setting (see `tests/server_test.rs`).
+//! incompatible `(model, method)` groups; two mechanisms keep the fleet
+//! work-conserving on top of it:
+//!
+//! * **Live-queue elasticity** — a group being executed keeps absorbing
+//!   its own mid-flight arrivals: the worker's schedule polls the shared
+//!   queue between ARM passes ([`crate::coordinator::engine::Engine::sample_elastic`]),
+//!   up-shifts onto a larger exported batch when the queue deepens, and
+//!   answers each request the moment its last job converges — instead of
+//!   stashing arrivals for the next batching window.
+//! * **Group stealing** — a worker whose queue drains pulls a whole
+//!   queued `(model, method)` group from the most-loaded worker. Groups
+//!   move atomically (every queued request at once, order preserved,
+//!   route retargeted under the pool lock), so sticky batching and PJRT
+//!   thread-affinity survive the migration.
+//!
+//! Batching windows are sized off each request's *admission* time, not
+//! the window's opening: a request queued behind k other groups executes
+//! as soon as a worker reaches it, instead of re-paying `cfg.max_wait`
+//! per preceding group. Exactness is untouched by any of it: per-job
+//! noise is keyed by `(seed, job index within the request)` — never by
+//! worker, slot, batch size, or arrival time — so samples are bitwise
+//! identical at any `engine_threads`/`elastic`/`steal` setting (see
+//! `tests/server_test.rs`).
 
 use crate::coordinator::config::{Method, ServeConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::protocol::{self, Request};
 use crate::coordinator::router::Router;
-use crate::coordinator::scheduler;
+use crate::coordinator::scheduler::{self, JobFeed, LiveJob, LiveStats};
 use crate::runtime::artifact::Manifest;
 use crate::sampler::noise::JobNoise;
+use crate::sampler::JobResult;
 use crate::substrate::json::Value;
 use crate::substrate::threadpool::ThreadPool;
 use crate::substrate::timer::Timer;
 use anyhow::{Context, Result};
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 type Reply = mpsc::Sender<String>;
+type GroupKey = (String, Method);
 
 /// Load units an `eval` contributes to a worker's queue depth. eval_bpd
 /// runs a full test-set pass, so it must weigh like a batch of jobs or
@@ -59,14 +81,17 @@ enum Msg {
     Shutdown,
 }
 
-/// Work routed to one engine worker by the dispatcher.
-enum WorkerMsg {
-    Sample(PendingSample),
-    Eval { model: String, reply: Reply },
-    Shutdown,
+/// Shared state of one `(model, method)` batching group. Held by the
+/// routing table and by every queued request of the group, so a steal can
+/// retarget the route atomically under the pool lock.
+struct GroupSlot {
+    /// Worker currently owning the group.
+    worker: AtomicUsize,
+    /// Outstanding jobs; the routing entry dies when this drains to zero.
+    pending: AtomicUsize,
 }
 
-/// A sample request admitted to a worker's batching window.
+/// A sample request admitted to the serving plane.
 struct PendingSample {
     model: String,
     method: Method,
@@ -75,15 +100,45 @@ struct PendingSample {
     return_samples: bool,
     decode: bool,
     reply: Reply,
-    /// Outstanding jobs of this request's (model, method) group — shared
-    /// with the dispatcher's routing table: the group stays pinned to its
-    /// worker until this drains to zero.
-    group_pending: Arc<AtomicUsize>,
+    /// When the dispatcher admitted the request. Batching windows close
+    /// at `admitted + max_wait`, so time spent queued behind other groups
+    /// counts against the window instead of restarting it.
+    admitted: Instant,
+    group: Arc<GroupSlot>,
+}
+
+/// Work queued to one engine worker.
+enum Work {
+    Sample(PendingSample),
+    Eval { model: String, reply: Reply },
+}
+
+/// Everything routing-related under one lock: per-worker FIFO queues, the
+/// group routing table, and what each worker is executing right now —
+/// so queueing, routing, and whole-group steals are mutually atomic.
+struct PoolState {
+    queues: Vec<VecDeque<Work>>,
+    /// Per-worker executing group: its live schedule absorbs its own
+    /// arrivals, so thieves must never take it.
+    executing: Vec<Option<GroupKey>>,
+    /// (model, method) → group slot; sticky while `pending > 0`.
+    routes: HashMap<GroupKey, Arc<GroupSlot>>,
+    /// Workers whose thread has exited (panic included): the dispatcher
+    /// routes around them so requests never queue where nobody drains.
+    dead: Vec<bool>,
+}
+
+/// The shared work pool engine workers and the dispatcher operate on.
+struct Pool {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// Queue depth per worker (jobs routed, not yet answered).
+    loads: Vec<Arc<AtomicUsize>>,
 }
 
 /// Dispatcher-side handle to one engine worker.
 struct WorkerHandle {
-    tx: mpsc::Sender<WorkerMsg>,
     /// Jobs routed to this worker and not yet completed (queue depth).
     load: Arc<AtomicUsize>,
     metrics: Arc<Mutex<Metrics>>,
@@ -132,29 +187,41 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
     let stop = Arc::new(AtomicBool::new(false));
     let (tx, rx) = mpsc::channel::<Msg>();
 
-    // Engine workers: each owns a Router (PJRT state) + Metrics.
+    // The shared work pool, then one engine worker thread per shard: each
+    // owns a Router (PJRT state) + Metrics.
+    let loads: Vec<Arc<AtomicUsize>> = (0..cfg.engine_threads).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+    let pool = Arc::new(Pool {
+        state: Mutex::new(PoolState {
+            queues: (0..cfg.engine_threads).map(|_| VecDeque::new()).collect(),
+            executing: vec![None; cfg.engine_threads],
+            routes: HashMap::new(),
+            dead: vec![false; cfg.engine_threads],
+        }),
+        cv: Condvar::new(),
+        shutdown: AtomicBool::new(false),
+        loads: loads.clone(),
+    });
     let mut workers = Vec::with_capacity(cfg.engine_threads);
     for w in 0..cfg.engine_threads {
-        let (wtx, wrx) = mpsc::channel::<WorkerMsg>();
-        let load = Arc::new(AtomicUsize::new(0));
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let engines_loaded = Arc::new(AtomicUsize::new(0));
         let man = manifest.clone();
         let cfg2 = cfg.clone();
-        let (load2, metrics2, loaded2) = (Arc::clone(&load), Arc::clone(&metrics), Arc::clone(&engines_loaded));
+        let (pool2, load2, metrics2, loaded2) = (Arc::clone(&pool), Arc::clone(&loads[w]), Arc::clone(&metrics), Arc::clone(&engines_loaded));
         let join = std::thread::Builder::new()
             .name(format!("predsamp-engine-{w}"))
-            .spawn(move || worker_loop(Router::new(man), cfg2, wrx, load2, metrics2, loaded2))?;
-        workers.push(WorkerHandle { tx: wtx, load, metrics, engines_loaded, join });
+            .spawn(move || worker_loop(Router::new(man), cfg2, w, pool2, load2, metrics2, loaded2))?;
+        workers.push(WorkerHandle { load: Arc::clone(&loads[w]), metrics, engines_loaded, join });
     }
 
     // Dispatcher: owns the request channel and the group routing table.
+    let pool2 = Arc::clone(&pool);
     let dispatch_join = std::thread::Builder::new()
         .name("predsamp-dispatch".into())
-        .spawn(move || dispatch_loop(manifest, workers, rx))?;
+        .spawn(move || dispatch_loop(manifest, workers, pool2, rx))?;
 
     // Acceptor + connection workers.
-    let pool = ThreadPool::new(cfg.worker_threads);
+    let conn_pool = ThreadPool::new(cfg.worker_threads);
     let stop2 = Arc::clone(&stop);
     let tx2 = tx.clone();
     let accept_join = std::thread::Builder::new()
@@ -165,7 +232,7 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
                     Ok((stream, _)) => {
                         let tx3 = tx2.clone();
                         let stop3 = Arc::clone(&stop2);
-                        pool.execute(move || handle_conn(stream, tx3, stop3));
+                        conn_pool.execute(move || handle_conn(stream, tx3, stop3));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(Duration::from_millis(5));
@@ -176,7 +243,7 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
                     }
                 }
             }
-            drop(pool); // join workers
+            drop(conn_pool); // join workers
         })?;
 
     Ok(ServerHandle { addr, tx, stop, dispatch_join: Some(dispatch_join), accept_join: Some(accept_join) })
@@ -245,21 +312,28 @@ fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Msg>, stop: Arc<AtomicBool>) 
 // Dispatcher
 // ---------------------------------------------------------------------------
 
-fn least_loaded(workers: &[WorkerHandle]) -> usize {
-    workers
+/// Least-loaded live worker, ties broken by the fewest lazily-loaded
+/// engines (an idle fleet spreads lazy engine loads instead of
+/// serializing them on worker 0), then round-robin among exact ties.
+/// `None` when every worker thread has died.
+fn pick_worker(workers: &[WorkerHandle], rr: &mut usize, dead: &[bool]) -> Option<usize> {
+    let costs: Vec<(usize, (usize, usize))> = workers
         .iter()
         .enumerate()
-        .min_by_key(|(_, w)| w.load.load(Ordering::SeqCst))
-        .map(|(i, _)| i)
-        .expect("at least one engine worker")
+        .filter(|&(i, _)| !dead[i])
+        .map(|(i, w)| (i, (w.load.load(Ordering::SeqCst), w.engines_loaded.load(Ordering::SeqCst))))
+        .collect();
+    let best = costs.iter().map(|&(_, c)| c).min()?;
+    let ties: Vec<usize> = costs.iter().filter(|&&(_, c)| c == best).map(|&(i, _)| i).collect();
+    let pick = ties[*rr % ties.len()];
+    *rr += 1;
+    Some(pick)
 }
 
-fn dispatch_loop(manifest: Manifest, workers: Vec<WorkerHandle>, rx: mpsc::Receiver<Msg>) {
+fn dispatch_loop(manifest: Manifest, workers: Vec<WorkerHandle>, pool: Arc<Pool>, rx: mpsc::Receiver<Msg>) {
     let started = Instant::now();
     let mut disp = Metrics::new();
-    // (model, method) → (worker, outstanding jobs). Sticky while jobs are
-    // in flight so one group's requests land in one batching window.
-    let mut groups: HashMap<(String, Method), (usize, Arc<AtomicUsize>)> = HashMap::new();
+    let mut rr = 0usize; // round-robin cursor for routing ties
     loop {
         let msg = match rx.recv() {
             Ok(m) => m,
@@ -280,45 +354,77 @@ fn dispatch_loop(manifest: Manifest, workers: Vec<WorkerHandle>, rx: mpsc::Recei
                         let _ = reply.send(metrics_response(&disp, &workers, started.elapsed().as_secs_f64()));
                     }
                     Request::Eval { model } => {
-                        let w = least_loaded(&workers);
-                        workers[w].load.fetch_add(EVAL_LOAD, Ordering::SeqCst);
-                        if let Err(mpsc::SendError(WorkerMsg::Eval { reply, .. })) = workers[w].tx.send(WorkerMsg::Eval { model, reply }) {
-                            workers[w].load.fetch_sub(EVAL_LOAD, Ordering::SeqCst);
+                        let mut st = pool.state.lock().expect("pool lock");
+                        let Some(w) = pick_worker(&workers, &mut rr, &st.dead) else {
+                            drop(st);
                             disp.record_error();
-                            let _ = reply.send(protocol::err("engine worker unavailable"));
-                        }
+                            let _ = reply.send(protocol::err("engine workers unavailable"));
+                            continue;
+                        };
+                        workers[w].load.fetch_add(EVAL_LOAD, Ordering::SeqCst);
+                        st.queues[w].push_back(Work::Eval { model, reply });
+                        drop(st);
+                        pool.cv.notify_all();
                     }
                     Request::Sample { model, method, n, seed, return_samples, decode } => {
+                        // Route under the pool lock: a sticky group follows
+                        // its (possibly stolen) worker, a fresh group goes
+                        // to the least-loaded one, and no steal can
+                        // interleave between the route read and the push.
                         let key = (model.clone(), method);
-                        let (widx, pending) = match groups.get(&key) {
-                            Some((w, p)) if p.load(Ordering::SeqCst) > 0 => (*w, Arc::clone(p)),
-                            _ => {
-                                let w = least_loaded(&workers);
-                                let p = Arc::new(AtomicUsize::new(0));
-                                groups.insert(key, (w, Arc::clone(&p)));
-                                (w, p)
-                            }
+                        let mut st = pool.state.lock().expect("pool lock");
+                        let sticky = match st.routes.get(&key) {
+                            Some(g) if g.pending.load(Ordering::SeqCst) > 0 => Some(Arc::clone(g)),
+                            _ => None,
                         };
-                        pending.fetch_add(n, Ordering::SeqCst);
+                        let group = match sticky {
+                            Some(g) => g,
+                            None => match pick_worker(&workers, &mut rr, &st.dead) {
+                                Some(w) => {
+                                    let g = Arc::new(GroupSlot { worker: AtomicUsize::new(w), pending: AtomicUsize::new(0) });
+                                    st.routes.insert(key, Arc::clone(&g));
+                                    g
+                                }
+                                None => {
+                                    drop(st);
+                                    disp.record_error();
+                                    let _ = reply.send(protocol::err("engine workers unavailable"));
+                                    continue;
+                                }
+                            },
+                        };
+                        let mut widx = group.worker.load(Ordering::SeqCst);
+                        if st.dead[widx] {
+                            // The sticky worker died: re-home the group.
+                            match pick_worker(&workers, &mut rr, &st.dead) {
+                                Some(w) => {
+                                    group.worker.store(w, Ordering::SeqCst);
+                                    widx = w;
+                                }
+                                None => {
+                                    drop(st);
+                                    disp.record_error();
+                                    let _ = reply.send(protocol::err("engine workers unavailable"));
+                                    continue;
+                                }
+                            }
+                        }
+                        group.pending.fetch_add(n, Ordering::SeqCst);
                         workers[widx].load.fetch_add(n, Ordering::SeqCst);
-                        let ps = PendingSample { model, method, n, seed, return_samples, decode, reply, group_pending: pending };
-                        if let Err(mpsc::SendError(WorkerMsg::Sample(ps))) = workers[widx].tx.send(WorkerMsg::Sample(ps)) {
-                            ps.group_pending.fetch_sub(ps.n, Ordering::SeqCst);
-                            workers[widx].load.fetch_sub(ps.n, Ordering::SeqCst);
-                            disp.record_error();
-                            let _ = ps.reply.send(protocol::err("engine worker unavailable"));
+                        let ps = PendingSample { model, method, n, seed, return_samples, decode, reply, admitted: Instant::now(), group };
+                        st.queues[widx].push_back(Work::Sample(ps));
+                        if st.routes.len() > 64 {
+                            st.routes.retain(|_, g| g.pending.load(Ordering::SeqCst) > 0);
                         }
-                        if groups.len() > 64 {
-                            groups.retain(|_, (_, p)| p.load(Ordering::SeqCst) > 0);
-                        }
+                        drop(st);
+                        pool.cv.notify_all();
                     }
                 }
             }
         }
     }
-    for w in &workers {
-        let _ = w.tx.send(WorkerMsg::Shutdown);
-    }
+    pool.shutdown.store(true, Ordering::SeqCst);
+    pool.cv.notify_all();
     for w in workers {
         let _ = w.join.join();
     }
@@ -391,87 +497,237 @@ fn handle_eval(router: &mut Router, model: &str, reply: &Reply, metrics: &Mutex<
     load.fetch_sub(EVAL_LOAD, Ordering::SeqCst);
 }
 
-/// Fail every stashed request (shutdown / dispatcher gone) and release its
-/// load accounting.
-fn abort_pending(stash: Vec<PendingSample>, load: &AtomicUsize, why: &str) {
-    for p in stash {
-        let _ = p.reply.send(protocol::err(why));
-        p.group_pending.fetch_sub(p.n, Ordering::SeqCst);
-        load.fetch_sub(p.n, Ordering::SeqCst);
+/// Fail one request (shutdown / unknown model / engine error) and release
+/// its load and group accounting.
+fn fail_request(p: PendingSample, load: &AtomicUsize, why: &str) {
+    let _ = p.reply.send(protocol::err(why));
+    p.group.pending.fetch_sub(p.n, Ordering::SeqCst);
+    load.fetch_sub(p.n, Ordering::SeqCst);
+}
+
+/// Fail every queued work item (shutdown) and release its accounting.
+fn abort_queue(queue: VecDeque<Work>, load: &AtomicUsize, why: &str) {
+    for w in queue {
+        match w {
+            Work::Sample(p) => fail_request(p, load, why),
+            Work::Eval { reply, .. } => {
+                let _ = reply.send(protocol::err(why));
+                load.fetch_sub(EVAL_LOAD, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Move every queued request of `key` from `queue` into `group`,
+/// preserving arrival order.
+fn take_group_arrivals(queue: &mut VecDeque<Work>, key: &GroupKey, group: &mut Vec<PendingSample>) {
+    let mut i = 0;
+    while i < queue.len() {
+        let hit = matches!(&queue[i], Work::Sample(p) if p.model == key.0 && p.method == key.1);
+        if hit {
+            let Some(Work::Sample(p)) = queue.remove(i) else { unreachable!("just matched") };
+            group.push(p);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Steal work from a loaded worker into `thief`'s queue. Victims are
+/// tried heaviest-queue first (evals weigh [`EVAL_LOAD`]); from each, the
+/// oldest whole queued `(model, method)` group moves atomically — every
+/// queued request of the key at once, arrival order preserved, and the
+/// route retargeted — all under the pool lock, so sticky batching and
+/// PJRT thread-affinity survive the migration. Groups currently executing
+/// are never stolen (their owner's live schedule is absorbing arrivals);
+/// a victim with nothing but its executing group still yields any queued
+/// eval (evals are not sticky — every worker owns a full `Router`).
+/// Returns whether anything moved.
+fn steal_group(st: &mut PoolState, thief: usize, loads: &[Arc<AtomicUsize>]) -> bool {
+    let mut victims: Vec<(usize, usize)> = st
+        .queues
+        .iter()
+        .enumerate()
+        .filter(|&(w, _)| w != thief)
+        .map(|(w, q)| {
+            let weight: usize = q
+                .iter()
+                .map(|it| match it {
+                    Work::Sample(p) => p.n,
+                    Work::Eval { .. } => EVAL_LOAD,
+                })
+                .sum();
+            (w, weight)
+        })
+        .filter(|&(_, weight)| weight > 0)
+        .collect();
+    victims.sort_by(|a, b| b.1.cmp(&a.1));
+    for (v, _) in victims {
+        let executing = st.executing[v].clone();
+        let key = st.queues[v].iter().find_map(|it| match it {
+            Work::Sample(p) => {
+                let k = (p.model.clone(), p.method);
+                if executing.as_ref() == Some(&k) {
+                    None
+                } else {
+                    Some(k)
+                }
+            }
+            Work::Eval { .. } => None,
+        });
+        if let Some(key) = key {
+            let mut moved: Vec<PendingSample> = Vec::new();
+            take_group_arrivals(&mut st.queues[v], &key, &mut moved);
+            if !moved.is_empty() {
+                let jobs: usize = moved.iter().map(|p| p.n).sum();
+                moved[0].group.worker.store(thief, Ordering::SeqCst);
+                loads[v].fetch_sub(jobs, Ordering::SeqCst);
+                loads[thief].fetch_add(jobs, Ordering::SeqCst);
+                for p in moved {
+                    st.queues[thief].push_back(Work::Sample(p));
+                }
+                return true;
+            }
+        }
+        if let Some(pos) = st.queues[v].iter().position(|it| matches!(it, Work::Eval { .. })) {
+            let eval = st.queues[v].remove(pos).expect("just found");
+            loads[v].fetch_sub(EVAL_LOAD, Ordering::SeqCst);
+            loads[thief].fetch_add(EVAL_LOAD, Ordering::SeqCst);
+            st.queues[thief].push_back(eval);
+            return true;
+        }
+    }
+    false
+}
+
+/// Runs on worker-thread exit — panic included: marks the worker dead so
+/// the dispatcher routes around it, and fails whatever is queued on it
+/// (a request must never sit on a queue nobody will drain).
+struct WorkerGuard {
+    pool: Arc<Pool>,
+    widx: usize,
+    load: Arc<AtomicUsize>,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        let q = {
+            let mut st = self.pool.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.dead[self.widx] = true;
+            std::mem::take(&mut st.queues[self.widx])
+        };
+        abort_queue(q, &self.load, "engine worker unavailable");
+        self.pool.cv.notify_all();
     }
 }
 
 fn worker_loop(
     mut router: Router,
     cfg: ServeConfig,
-    rx: mpsc::Receiver<WorkerMsg>,
+    widx: usize,
+    pool: Arc<Pool>,
     load: Arc<AtomicUsize>,
     metrics: Arc<Mutex<Metrics>>,
     engines_loaded: Arc<AtomicUsize>,
 ) {
-    let mut stash: Vec<PendingSample> = Vec::new();
+    let _guard = WorkerGuard { pool: Arc::clone(&pool), widx, load: Arc::clone(&load) };
     loop {
-        let msg = if stash.is_empty() {
-            match rx.recv() {
-                Ok(m) => Some(m),
-                Err(_) => break,
+        // Claim the oldest work item on our queue, stealing a whole queued
+        // group from the most-loaded worker when ours is empty.
+        let mut stole = false;
+        let mut st = pool.state.lock().expect("pool lock");
+        let head = loop {
+            if pool.shutdown.load(Ordering::SeqCst) {
+                let q = std::mem::take(&mut st.queues[widx]);
+                drop(st);
+                abort_queue(q, &load, "server shutting down");
+                return;
             }
-        } else {
-            None
+            if let Some(w) = st.queues[widx].pop_front() {
+                break w;
+            }
+            if cfg.steal && steal_group(&mut st, widx, &pool.loads) {
+                stole = true;
+                continue;
+            }
+            st = pool.cv.wait_timeout(st, Duration::from_millis(100)).expect("pool lock poisoned").0;
         };
-        match msg {
-            Some(WorkerMsg::Shutdown) => break,
-            Some(WorkerMsg::Eval { model, reply }) => {
+        match head {
+            Work::Eval { model, reply } => {
+                drop(st);
+                if stole {
+                    metrics.lock().unwrap().record_steal();
+                }
                 handle_eval(&mut router, &model, &reply, &metrics, &load);
                 engines_loaded.store(router.loaded(), Ordering::SeqCst);
             }
-            Some(WorkerMsg::Sample(p)) => stash.push(p),
-            None => {}
-        }
-        if stash.is_empty() {
-            continue;
-        }
-        // Batching window: gather more requests compatible with the head.
-        let window_end = Instant::now() + cfg.max_wait;
-        let head_key = (stash[0].model.clone(), stash[0].method);
-        let mut group_jobs: usize = stash.iter().filter(|p| p.model == head_key.0 && p.method == head_key.1).map(|p| p.n).sum();
-        while group_jobs < cfg.max_batch {
-            let now = Instant::now();
-            if now >= window_end {
-                break;
-            }
-            match rx.recv_timeout(window_end - now) {
-                Ok(WorkerMsg::Sample(p)) => {
-                    if p.model == head_key.0 && p.method == head_key.1 {
-                        group_jobs += p.n;
+            Work::Sample(head) => {
+                // Mark the group executing before the window opens, still
+                // under the claim's lock: thieves skip it from here on,
+                // and (on the elastic path) the live schedule owns its
+                // arrivals through to the end of execution.
+                let key = (head.model.clone(), head.method);
+                st.executing[widx] = Some(key.clone());
+                // Batching window, sized off the *oldest admission* of the
+                // head group: a request that already waited its window
+                // while queued behind other groups executes immediately
+                // instead of re-paying max_wait per preceding group.
+                let deadline = head.admitted + cfg.max_wait;
+                let mut group = vec![head];
+                loop {
+                    take_group_arrivals(&mut st.queues[widx], &key, &mut group);
+                    // Evals interleave into the window (otherwise, on a
+                    // single-worker server with no thief to rescue them,
+                    // they'd wait out the whole group execution too).
+                    while let Some(pos) = st.queues[widx].iter().position(|it| matches!(it, Work::Eval { .. })) {
+                        let Some(Work::Eval { model, reply }) = st.queues[widx].remove(pos) else { unreachable!("just matched") };
+                        drop(st);
+                        handle_eval(&mut router, &model, &reply, &metrics, &load);
+                        engines_loaded.store(router.loaded(), Ordering::SeqCst);
+                        st = pool.state.lock().expect("pool lock");
                     }
-                    stash.push(p);
+                    if pool.shutdown.load(Ordering::SeqCst) {
+                        let q = std::mem::take(&mut st.queues[widx]);
+                        st.executing[widx] = None;
+                        drop(st);
+                        for p in group {
+                            fail_request(p, &load, "server shutting down");
+                        }
+                        abort_queue(q, &load, "server shutting down");
+                        return;
+                    }
+                    let group_jobs: usize = group.iter().map(|p| p.n).sum();
+                    let now = Instant::now();
+                    if group_jobs >= cfg.max_batch || now >= deadline {
+                        break;
+                    }
+                    st = pool.cv.wait_timeout(st, deadline - now).expect("pool lock poisoned").0;
                 }
-                Ok(WorkerMsg::Eval { model, reply }) => {
-                    handle_eval(&mut router, &model, &reply, &metrics, &load);
-                    engines_loaded.store(router.loaded(), Ordering::SeqCst);
+                drop(st);
+                if stole {
+                    metrics.lock().unwrap().record_steal();
                 }
-                Ok(WorkerMsg::Shutdown) => {
-                    abort_pending(stash, &load, "server shutting down");
-                    return;
+                let continuous = cfg.continuous && key.1 != Method::Baseline;
+                if continuous && cfg.elastic {
+                    execute_elastic_group(&mut router, &metrics, group, &load, &pool, widx, cfg.max_batch);
+                } else {
+                    execute_group(&mut router, &metrics, group, &load, continuous);
                 }
-                Err(mpsc::RecvTimeoutError::Timeout) => break,
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    abort_pending(stash, &load, "server shutting down");
-                    return;
-                }
+                pool.state.lock().expect("pool lock").executing[widx] = None;
+                engines_loaded.store(router.loaded(), Ordering::SeqCst);
             }
         }
-        // Execute the head group; keep the rest stashed for the next turn.
-        let (group, rest): (Vec<_>, Vec<_>) = stash.drain(..).partition(|p| p.model == head_key.0 && p.method == head_key.1);
-        stash = rest;
-        execute_group(&mut router, &cfg, &metrics, group, &load);
-        engines_loaded.store(router.loaded(), Ordering::SeqCst);
     }
-    abort_pending(stash, &load, "server shutting down");
 }
 
-fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &Mutex<Metrics>, group: Vec<PendingSample>, load: &AtomicUsize) {
+// ---------------------------------------------------------------------------
+// Group execution
+// ---------------------------------------------------------------------------
+
+/// Execute a closed group (synchronous chunking, or continuous batching
+/// with elasticity disabled): run the whole merged queue, then answer
+/// every request with the group-level stats.
+fn execute_group(router: &mut Router, metrics: &Mutex<Metrics>, group: Vec<PendingSample>, load: &AtomicUsize, continuous: bool) {
     if group.is_empty() {
         return;
     }
@@ -483,10 +739,10 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &Mutex<Metrics
     // Returns (per-job results in request order, total batched ARM calls,
     // ARM calls per job under the batched cost model — passes × B / jobs,
     // matching ScheduleReport::calls_per_job).
-    let mut run = || -> Result<(Vec<crate::sampler::JobResult>, usize, f64)> {
+    let mut run = || -> Result<(Vec<JobResult>, usize, f64)> {
         let engine = router.engine(&model)?;
         let info = &engine.info;
-        if method == Method::Baseline || !cfg.continuous {
+        if !continuous {
             // Synchronous path: per request, pick the smallest exe >= n and
             // run it in chunks. Chunk c covers job ids [done, done + bs):
             // the offset keys fresh noise per chunk — without it every
@@ -537,15 +793,7 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &Mutex<Metrics
             for p in group {
                 let mine = &results[offset..offset + p.n];
                 offset += p.n;
-                let mut fields = vec![
-                    ("model", Value::str(model.clone())),
-                    ("method", Value::str(method.label())),
-                    ("arm_calls", Value::num(calls as f64)),
-                    ("calls_per_job", Value::num(calls_per_job)),
-                    ("calls_pct", Value::num(calls_pct)),
-                    ("wall_secs", Value::num(wall)),
-                    ("n", Value::num(p.n as f64)),
-                ];
+                let mut fields = sample_fields(&model, method, calls, calls_per_job, calls_pct, wall, p.n);
                 let mut decode_err: Option<String> = None;
                 if p.return_samples {
                     let xs: Vec<Vec<i32>> = mine.iter().map(|r| r.x.clone()).collect();
@@ -554,14 +802,7 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &Mutex<Metrics
                 if p.decode {
                     let xs: Vec<Vec<i32>> = mine.iter().map(|r| r.x.clone()).collect();
                     match router.engine(&model).and_then(|e| e.decode(&xs)) {
-                        Ok(imgs) => {
-                            let arr = Value::Arr(
-                                imgs.iter()
-                                    .map(|im| Value::Arr(im.iter().map(|&f| Value::num(f as f64)).collect()))
-                                    .collect(),
-                            );
-                            fields.push(("images", arr));
-                        }
+                        Ok(imgs) => fields.push(("images", images_value(&imgs))),
                         Err(e) => decode_err = Some(format!("decode: {e:#}")),
                     }
                 }
@@ -570,7 +811,7 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &Mutex<Metrics
                     None => protocol::ok(fields),
                 };
                 let _ = p.reply.send(resp);
-                p.group_pending.fetch_sub(p.n, Ordering::SeqCst);
+                p.group.pending.fetch_sub(p.n, Ordering::SeqCst);
                 load.fetch_sub(p.n, Ordering::SeqCst);
             }
         }
@@ -578,10 +819,246 @@ fn execute_group(router: &mut Router, cfg: &ServeConfig, metrics: &Mutex<Metrics
             metrics.lock().unwrap().record_error();
             let msg = format!("{e:#}");
             for p in group {
-                let _ = p.reply.send(protocol::err(&msg));
-                p.group_pending.fetch_sub(p.n, Ordering::SeqCst);
-                load.fetch_sub(p.n, Ordering::SeqCst);
+                fail_request(p, load, &msg);
             }
+        }
+    }
+}
+
+fn sample_fields(
+    model: &str,
+    method: Method,
+    arm_calls: usize,
+    calls_per_job: f64,
+    calls_pct: f64,
+    wall: f64,
+    n: usize,
+) -> Vec<(&'static str, Value)> {
+    vec![
+        ("model", Value::str(model)),
+        ("method", Value::str(method.label())),
+        ("arm_calls", Value::num(arm_calls as f64)),
+        ("calls_per_job", Value::num(calls_per_job)),
+        ("calls_pct", Value::num(calls_pct)),
+        ("wall_secs", Value::num(wall)),
+        ("n", Value::num(n as f64)),
+    ]
+}
+
+fn images_value(imgs: &[Vec<f32>]) -> Value {
+    Value::Arr(
+        imgs.iter()
+            .map(|im| Value::Arr(im.iter().map(|&f| Value::num(f as f64)).collect()))
+            .collect(),
+    )
+}
+
+/// One request inside a live schedule.
+struct FeedReq {
+    p: PendingSample,
+    results: Vec<Option<JobResult>>,
+    remaining: usize,
+    replied: bool,
+}
+
+/// Bridges a live schedule to the serving plane: polls the worker's
+/// shared queue between ARM passes for mid-flight arrivals of the
+/// executing group, and answers each request the moment its last job
+/// converges (requests needing the decoder wait for the schedule to end,
+/// when the router is borrowable again).
+struct ServeFeed<'a> {
+    pool: &'a Pool,
+    widx: usize,
+    key: GroupKey,
+    dim: usize,
+    categories: usize,
+    load: &'a AtomicUsize,
+    /// Mid-flight job admissions left before this schedule stops
+    /// absorbing arrivals (fairness: a hot group must not starve other
+    /// groups queued on this worker forever; whatever it leaves queued
+    /// forms a normal next window — or gets stolen).
+    absorb_budget: usize,
+    /// Requests with jobs in the schedule; tags pack (request index,
+    /// job index within the request).
+    reqs: Vec<FeedReq>,
+    /// Completed decode=true requests, replied after the schedule ends.
+    deferred: Vec<usize>,
+    /// Jobs completed across the whole schedule (group metrics).
+    completed_jobs: usize,
+    last_stats: Option<LiveStats>,
+}
+
+impl<'a> ServeFeed<'a> {
+    fn new(pool: &'a Pool, widx: usize, key: GroupKey, dim: usize, categories: usize, load: &'a AtomicUsize, absorb_budget: usize) -> ServeFeed<'a> {
+        ServeFeed {
+            pool,
+            widx,
+            key,
+            dim,
+            categories,
+            load,
+            absorb_budget,
+            reqs: Vec::new(),
+            deferred: Vec::new(),
+            completed_jobs: 0,
+            last_stats: None,
+        }
+    }
+
+    /// Register a request with the schedule, returning its jobs. Noise is
+    /// keyed `(seed, job index within the request)` — identical to every
+    /// other serving path, which is what makes mid-flight admission exact.
+    fn admit_request(&mut self, p: PendingSample) -> Vec<LiveJob> {
+        let ri = self.reqs.len() as u64;
+        let jobs = (0..p.n)
+            .map(|j| LiveJob { tag: ri << 32 | j as u64, noise: JobNoise::new(p.seed, j as u64, self.dim, self.categories) })
+            .collect();
+        self.reqs.push(FeedReq { remaining: p.n, results: (0..p.n).map(|_| None).collect(), replied: false, p });
+        jobs
+    }
+
+    /// Answer completed request `ri` with the schedule's stats as of now.
+    /// `router` present selects the decode path (only possible once the
+    /// schedule ended and the router is borrowable again).
+    fn reply_request(&mut self, ri: usize, stats: &LiveStats, router: Option<&mut Router>) {
+        let req = &mut self.reqs[ri];
+        // Per-request cost: each job owns its slot for exactly its pass
+        // count, so slot-passes per job = mean iterations — exact under
+        // occupancy sizing (every pass runs a full batch), and never
+        // inflated by capacity other jobs are still consuming the way a
+        // running schedule-wide ratio would be.
+        let iters: usize = req.results.iter().map(|r| r.as_ref().expect("request complete").iterations).sum();
+        let calls_per_job = iters as f64 / req.p.n.max(1) as f64;
+        let calls_pct = scheduler::calls_pct_of(calls_per_job, self.dim);
+        // Wall time is this request's serving latency (queue + schedule),
+        // not the whole schedule's age — a request absorbed mid-flight
+        // must not inherit the time before it arrived.
+        let wall = req.p.admitted.elapsed().as_secs_f64();
+        let mut fields = sample_fields(&self.key.0, self.key.1, stats.passes, calls_per_job, calls_pct, wall, req.p.n);
+        let xs: Vec<Vec<i32>> = if req.p.return_samples || router.is_some() {
+            req.results.iter().map(|r| r.as_ref().expect("request complete").x.clone()).collect()
+        } else {
+            Vec::new()
+        };
+        if req.p.return_samples {
+            fields.push(("samples", protocol::samples_value(&xs)));
+        }
+        let resp = match router {
+            Some(router) => match router.engine(&self.key.0).and_then(|e| e.decode(&xs)) {
+                Ok(imgs) => {
+                    fields.push(("images", images_value(&imgs)));
+                    protocol::ok(fields)
+                }
+                Err(e) => protocol::err(&format!("decode: {e:#}")),
+            },
+            None => protocol::ok(fields),
+        };
+        let _ = req.p.reply.send(resp);
+        req.replied = true;
+        req.p.group.pending.fetch_sub(req.p.n, Ordering::SeqCst);
+        self.load.fetch_sub(req.p.n, Ordering::SeqCst);
+    }
+
+    /// Schedule finished cleanly: answer deferred decode requests, then
+    /// fail anything that somehow never completed (accounting safety net).
+    fn finish(&mut self, router: &mut Router) {
+        let stats = self.last_stats.unwrap_or(LiveStats { passes: 0, slot_passes: 0, completed: 0, upshifts: 0, downshifts: 0 });
+        for ri in std::mem::take(&mut self.deferred) {
+            self.reply_request(ri, &stats, Some(&mut *router));
+        }
+        self.fail_rest("schedule ended with jobs outstanding");
+    }
+
+    /// Fail every request that has not been answered yet.
+    fn fail_rest(&mut self, why: &str) {
+        for req in self.reqs.iter_mut().filter(|r| !r.replied) {
+            let _ = req.p.reply.send(protocol::err(why));
+            req.replied = true;
+            req.p.group.pending.fetch_sub(req.p.n, Ordering::SeqCst);
+            self.load.fetch_sub(req.p.n, Ordering::SeqCst);
+        }
+    }
+}
+
+impl JobFeed for ServeFeed<'_> {
+    fn poll(&mut self) -> Vec<LiveJob> {
+        if self.absorb_budget == 0 {
+            return Vec::new();
+        }
+        let mut fresh: Vec<PendingSample> = Vec::new();
+        {
+            let mut st = self.pool.state.lock().expect("pool lock");
+            take_group_arrivals(&mut st.queues[self.widx], &self.key, &mut fresh);
+        }
+        let mut jobs = Vec::new();
+        for p in fresh {
+            self.absorb_budget = self.absorb_budget.saturating_sub(p.n);
+            jobs.extend(self.admit_request(p));
+        }
+        jobs
+    }
+
+    fn complete(&mut self, tag: u64, result: JobResult, stats: &LiveStats) {
+        self.completed_jobs += 1;
+        self.last_stats = Some(*stats);
+        let (ri, j) = ((tag >> 32) as usize, (tag & 0xffff_ffff) as usize);
+        let req = &mut self.reqs[ri];
+        req.results[j] = Some(result);
+        req.remaining -= 1;
+        if req.remaining == 0 {
+            if req.p.decode {
+                self.deferred.push(ri);
+            } else {
+                self.reply_request(ri, stats, None);
+            }
+        }
+    }
+}
+
+/// Execute a group as a **live** schedule: the initial window plus every
+/// mid-flight arrival the feed absorbs, with per-request replies as they
+/// complete.
+fn execute_elastic_group(
+    router: &mut Router,
+    metrics: &Mutex<Metrics>,
+    group: Vec<PendingSample>,
+    load: &AtomicUsize,
+    pool: &Pool,
+    widx: usize,
+    max_batch: usize,
+) {
+    if group.is_empty() {
+        return;
+    }
+    let key = (group[0].model.clone(), group[0].method);
+    let shape = router.engine(&key.0).map(|e| (e.info.dim, e.info.categories));
+    let (dim, categories) = match shape {
+        Ok(s) => s,
+        Err(e) => {
+            metrics.lock().unwrap().record_error();
+            let msg = format!("{e:#}");
+            for p in group {
+                fail_request(p, load, &msg);
+            }
+            return;
+        }
+    };
+    let method = key.1;
+    let mut feed = ServeFeed::new(pool, widx, key.clone(), dim, categories, load, max_batch.max(1) * 8);
+    let mut initial = Vec::new();
+    for p in group {
+        initial.extend(feed.admit_request(p));
+    }
+    let rep = router.engine(&key.0).and_then(|e| e.sample_elastic(method, initial, &mut feed));
+    match rep {
+        Ok(rep) => {
+            let calls_pct = scheduler::calls_pct_of(rep.calls_per_job, dim);
+            metrics.lock().unwrap().record_batch(feed.completed_jobs, rep.total_passes, calls_pct, rep.wall_secs);
+            feed.finish(router);
+        }
+        Err(e) => {
+            metrics.lock().unwrap().record_error();
+            feed.fail_rest(&format!("{e:#}"));
         }
     }
 }
@@ -608,7 +1085,123 @@ impl Client {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         let mut resp = String::new();
-        self.reader.read_line(&mut resp)?;
+        let n = self.reader.read_line(&mut resp)?;
+        if n == 0 {
+            // A clean EOF is not a malformed response: say what happened.
+            anyhow::bail!("connection closed by server");
+        }
         Ok(crate::substrate::json::parse(resp.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(model: &str, method: Method, n: usize, widx: usize, routes: &mut HashMap<GroupKey, Arc<GroupSlot>>) -> Work {
+        let group = Arc::clone(
+            routes
+                .entry((model.to_string(), method))
+                .or_insert_with(|| Arc::new(GroupSlot { worker: AtomicUsize::new(widx), pending: AtomicUsize::new(0) })),
+        );
+        group.pending.fetch_add(n, Ordering::SeqCst);
+        let (reply, rx) = mpsc::channel();
+        drop(rx); // replies are discarded in these unit tests
+        let (model, admitted) = (model.to_string(), Instant::now());
+        Work::Sample(PendingSample { model, method, n, seed: 0, return_samples: false, decode: false, reply, admitted, group })
+    }
+
+    fn queued_keys(q: &VecDeque<Work>) -> Vec<(String, Method)> {
+        q.iter()
+            .filter_map(|w| match w {
+                Work::Sample(p) => Some((p.model.clone(), p.method)),
+                Work::Eval { .. } => None,
+            })
+            .collect()
+    }
+
+    fn pool_state(workers: usize) -> PoolState {
+        PoolState {
+            queues: (0..workers).map(|_| VecDeque::new()).collect(),
+            executing: vec![None; workers],
+            routes: HashMap::new(),
+            dead: vec![false; workers],
+        }
+    }
+
+    #[test]
+    fn steal_moves_whole_group_atomically_and_retargets_route() {
+        // Victim (worker 0) queues two groups interleaved; the thief
+        // (worker 1) must take the oldest non-executing group *whole*,
+        // preserve arrival order, retarget its route, and move the load.
+        let mut routes = HashMap::new();
+        let mut st = pool_state(2);
+        st.queues[0].push_back(sample("a", Method::Fpi, 2, 0, &mut routes));
+        st.queues[0].push_back(sample("b", Method::Fpi, 3, 0, &mut routes));
+        st.queues[0].push_back(sample("a", Method::Fpi, 1, 0, &mut routes));
+        let loads = vec![Arc::new(AtomicUsize::new(6)), Arc::new(AtomicUsize::new(0))];
+        assert!(steal_group(&mut st, 1, &loads));
+        // Group "a" (the oldest) moved whole: both its requests, in order.
+        assert_eq!(queued_keys(&st.queues[1]), vec![("a".to_string(), Method::Fpi), ("a".to_string(), Method::Fpi)]);
+        assert_eq!(queued_keys(&st.queues[0]), vec![("b".to_string(), Method::Fpi)]);
+        assert_eq!(routes[&("a".to_string(), Method::Fpi)].worker.load(Ordering::SeqCst), 1, "route must follow the stolen group");
+        assert_eq!(routes[&("b".to_string(), Method::Fpi)].worker.load(Ordering::SeqCst), 0, "unstolen route must not move");
+        assert_eq!(loads[0].load(Ordering::SeqCst), 3);
+        assert_eq!(loads[1].load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn steal_skips_executing_groups() {
+        // The only queued group on the victim is the one it is executing
+        // (mid-flight arrivals owned by its live schedule): no steal. A
+        // second, non-executing group is fair game.
+        let mut routes = HashMap::new();
+        let mut st = pool_state(2);
+        st.queues[0].push_back(sample("a", Method::Fpi, 2, 0, &mut routes));
+        st.executing[0] = Some(("a".to_string(), Method::Fpi));
+        let loads = vec![Arc::new(AtomicUsize::new(2)), Arc::new(AtomicUsize::new(0))];
+        assert!(!steal_group(&mut st, 1, &loads), "executing group must not be stolen");
+        assert_eq!(st.queues[0].len(), 1);
+        st.queues[0].push_back(sample("b", Method::Zeros, 1, 0, &mut routes));
+        assert!(steal_group(&mut st, 1, &loads), "queued group behind an executing one is stealable");
+        assert_eq!(queued_keys(&st.queues[1]), vec![("b".to_string(), Method::Zeros)]);
+        assert_eq!(queued_keys(&st.queues[0]), vec![("a".to_string(), Method::Fpi)]);
+    }
+
+    #[test]
+    fn steal_prefers_most_loaded_victim_and_needs_queued_work() {
+        let mut routes = HashMap::new();
+        let mut st = pool_state(3);
+        let loads = vec![Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(1)), Arc::new(AtomicUsize::new(9))];
+        assert!(!steal_group(&mut st, 0, &loads), "nothing queued, nothing to steal");
+        st.queues[1].push_back(sample("a", Method::Fpi, 1, 1, &mut routes));
+        st.queues[2].push_back(sample("b", Method::Fpi, 9, 2, &mut routes));
+        assert!(steal_group(&mut st, 0, &loads));
+        assert_eq!(queued_keys(&st.queues[0]), vec![("b".to_string(), Method::Fpi)], "steal must come from the most-loaded queue");
+    }
+
+    #[test]
+    fn steal_falls_through_to_lighter_victims_and_evals() {
+        // The heaviest victim's only queued group is executing; the thief
+        // must fall through to the lighter victim's free group rather
+        // than give up (work conservation). Once only an eval remains
+        // queued anywhere, that moves too — evals are not sticky.
+        let mut routes = HashMap::new();
+        let mut st = pool_state(3);
+        st.queues[1].push_back(sample("hot", Method::Fpi, 9, 1, &mut routes));
+        st.executing[1] = Some(("hot".to_string(), Method::Fpi));
+        st.queues[2].push_back(sample("cold", Method::Fpi, 1, 2, &mut routes));
+        let loads = vec![Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(9)), Arc::new(AtomicUsize::new(1))];
+        assert!(steal_group(&mut st, 0, &loads), "a lighter victim with a free group must still be robbed");
+        assert_eq!(queued_keys(&st.queues[0]), vec![("cold".to_string(), Method::Fpi)]);
+        assert_eq!(st.queues[2].len(), 0);
+        // Only the executing group's arrivals and an eval remain: the
+        // eval is the one stealable item.
+        let (reply, rx) = mpsc::channel();
+        drop(rx);
+        st.queues[1].push_back(Work::Eval { model: "hot".into(), reply });
+        assert!(steal_group(&mut st, 2, &loads), "a queued eval behind an executing group is stealable");
+        assert!(matches!(st.queues[2].front(), Some(Work::Eval { .. })), "the eval must have moved to the thief");
+        assert_eq!(st.queues[1].len(), 1, "the executing group's queued request must stay");
     }
 }

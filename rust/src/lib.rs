@@ -13,9 +13,9 @@
 //!   policies (zeros / predict-last / FPI / learned modules / ablations),
 //!   and the Gumbel-max reparametrization that makes sampling a
 //!   deterministic fixed-point problem.
-//! * [`coordinator`] — the serving layer: engine, dynamic batcher,
+//! * [`coordinator`] — the serving layer: engine, elastic
 //!   continuous-batching scheduler (the paper's deferred "scheduling
-//!   system" future work), TCP server, metrics.
+//!   system" future work), sharded work-stealing TCP server, metrics.
 //! * [`substrate`] — offline-friendly building blocks (PRNG, Gumbel noise,
 //!   JSON, stats, images, CLI, thread pool, property-test harness); this
 //!   environment has no crates.io access beyond the `xla` closure.

@@ -31,7 +31,7 @@ COMMANDS
   sample   --model M [--method fpi|baseline|zeros|last|forecast|noreparam]
            [--batch N] [--seed S] [--t-use T] [--ppm out.ppm]
   serve    [--addr 127.0.0.1:7199] [--max-batch 32] [--max-wait-ms 20] [--sync]
-           [--engine-threads 2] [--worker-threads 4]
+           [--engine-threads 2] [--worker-threads 4] [--no-elastic] [--no-steal]
   client   [--addr ...] --json '{\"op\":\"ping\"}'
   table1 | table2 | table3           [--seeds K] [--batches 1,32] [--models a,b]
   fig3 | fig4 | fig5 | fig6          [--seed 10] [--out results/]
@@ -132,6 +132,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 max_batch: args.num::<usize>("max-batch", d.max_batch),
                 max_wait: std::time::Duration::from_millis(args.num::<u64>("max-wait-ms", 20)),
                 continuous: !args.flag("sync"),
+                elastic: !args.flag("no-elastic"),
+                steal: !args.flag("no-steal"),
                 worker_threads: args.num::<usize>("worker-threads", d.worker_threads),
                 engine_threads: args.num::<usize>("engine-threads", d.engine_threads),
             };

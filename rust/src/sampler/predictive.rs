@@ -145,6 +145,17 @@ impl<'m, M: StepModel> PredictiveSampler<'m, M> {
         self.slots[slot] = None;
     }
 
+    /// Admit a new job into the first free slot of a *running* sampler,
+    /// returning the slot it landed in (`None` when every slot holds a
+    /// job). The elastic scheduler's admission path: noise is keyed by
+    /// job id, never by slot, so mid-schedule admission cannot disturb
+    /// any neighbour's sample.
+    pub fn admit(&mut self, noise: JobNoise) -> Option<usize> {
+        let free = self.slots.iter().position(|s| s.is_none())?;
+        self.reset_slot(free, noise);
+        Some(free)
+    }
+
     /// Number of slots with an unconverged job.
     pub fn active_slots(&self) -> usize {
         self.slots.iter().flatten().filter(|s| !s.done).count()
@@ -609,6 +620,35 @@ mod tests {
             assert_eq!(migrated.mistakes, reference.mistakes, "policy {policy}: migration changed mistakes");
             assert_eq!(migrated.converge_iter, reference.converge_iter, "policy {policy}: migration changed trace");
         }
+    }
+
+    #[test]
+    fn admit_into_running_sampler_is_exact() {
+        // Admission mid-schedule: a job admitted into a free slot of a
+        // sampler that has already run passes must sample exactly as if
+        // it ran alone, without disturbing the in-flight neighbour — and
+        // admission must report the slot it used (None when full).
+        let m = MockArm::new(2, 2, 5, 4, 1, 2.0, 13);
+        let m1 = MockArm { batch: 1, ..m.clone() };
+        let d = m.dim();
+        let reference = |id: u64| {
+            let mut ps = PredictiveSampler::new(&m1, Box::new(forecast::FpiReuse));
+            ps.reset_slot(0, JobNoise::new(1, id, d, 4));
+            while !ps.slot_done(0) {
+                ps.step().unwrap();
+            }
+            ps.take_result(0).unwrap().x
+        };
+        let mut ps = PredictiveSampler::new(&m, Box::new(forecast::FpiReuse));
+        ps.reset_slot(0, JobNoise::new(1, 0, d, 4));
+        ps.step().unwrap();
+        assert_eq!(ps.admit(JobNoise::new(1, 7, d, 4)), Some(1), "slot 1 is free");
+        assert_eq!(ps.admit(JobNoise::new(1, 9, d, 4)), None, "sampler is full");
+        while !ps.slot_done(0) || !ps.slot_done(1) {
+            ps.step().unwrap();
+        }
+        assert_eq!(ps.take_result(0).unwrap().x, reference(0), "neighbour disturbed by admission");
+        assert_eq!(ps.take_result(1).unwrap().x, reference(7), "admitted job diverged");
     }
 
     #[test]

@@ -209,6 +209,46 @@ fn downshift_preserves_samples_mid_schedule() {
 }
 
 #[test]
+fn elastic_live_arrivals_preserve_samples() {
+    // The elastic scheduler's contract: whatever trickle pattern jobs
+    // arrive in mid-schedule — triggering any interleaving of up-shifts
+    // and down-shifts across the [1, 2, 4] family — every job's sample
+    // stays bitwise identical to its batch-1 reference.
+    use predsamp::coordinator::scheduler::{LiveJob, TickBurstFeed};
+    check("elastic-exactness", 10, |g| {
+        let (c, px, k) = (g.usize_in(1, 3), g.usize_in(2, 6), g.usize_in(2, 5));
+        let strength = g.f64_in(0.0, 4.0) as f32;
+        let mseed = g.rng.next_u64();
+        let m4 = MockArm::new(4, c, px, k, 2, strength, mseed);
+        let m2 = MockArm::new(2, c, px, k, 2, strength, mseed);
+        let m1 = MockArm::new(1, c, px, k, 2, strength, mseed);
+        let family: Vec<&MockArm> = vec![&m1, &m2, &m4];
+        let d = m4.dim();
+        let seed = g.rng.next_u64();
+        let n = g.usize_in(4, 12);
+        let first = g.usize_in(1, 3).min(n);
+        let job = |id: usize| LiveJob { tag: id as u64, noise: JobNoise::new(seed, id as u64, d, k) };
+        let initial: Vec<LiveJob> = (0..first).map(job).collect();
+        let mut arrivals: Vec<(usize, Vec<LiveJob>)> = (first..n).map(|id| (g.usize_in(1, 8), vec![job(id)])).collect();
+        arrivals.sort_by_key(|(at, _)| *at);
+        let mut feed = TickBurstFeed::new(n, arrivals);
+        let rep = scheduler::run_elastic_family(&family, Box::new(FpiReuse), initial, &mut feed).map_err(|e| e.to_string())?;
+        for id in 0..n {
+            let mut ps = PredictiveSampler::new(&m1, Box::new(FpiReuse));
+            ps.reset_slot(0, JobNoise::new(seed, id as u64, d, k));
+            while !ps.slot_done(0) {
+                ps.step().map_err(|e| e.to_string())?;
+            }
+            let single = ps.take_result(0).unwrap();
+            let live = feed.results[id].as_ref().ok_or("job not completed")?;
+            prop_assert_eq!(&live.x, &single.x, "job {} changed under elastic scheduling (up={}, down={})", id, rep.upshifts, rep.downshifts);
+        }
+        prop_assert!(rep.min_batch >= 1 && rep.min_batch <= 4, "min_batch {} out of family", rep.min_batch);
+        Ok(())
+    });
+}
+
+#[test]
 fn scheduler_empty_and_tiny_queues() {
     let model = MockArm::new(3, 2, 4, 3, 1, 2.0, 9);
     let rep = scheduler::run_continuous(&model, Box::new(FpiReuse), 0, 0).unwrap();

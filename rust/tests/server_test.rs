@@ -20,6 +20,8 @@ fn server() -> Option<ServerHandle> {
         max_batch: 8,
         max_wait: Duration::from_millis(10),
         continuous: true,
+        elastic: true,
+        steal: true,
         worker_threads: 4,
         engine_threads: 2,
     };
@@ -27,7 +29,7 @@ fn server() -> Option<ServerHandle> {
 }
 
 /// Spawn a server over a two-model mock fixture (no artifacts needed).
-fn spawn_mock(tag: &str, engine_threads: usize, continuous: bool) -> ServerHandle {
+fn spawn_mock_cfg(tag: &str, engine_threads: usize, continuous: bool, elastic: bool, steal: bool, max_wait: Duration) -> ServerHandle {
     let dir = std::env::temp_dir().join(format!("predsamp-server-{tag}-{}", std::process::id()));
     let mut a = MockModelSpec::new("mock_a", 11);
     a.batches = vec![1, 4];
@@ -38,15 +40,12 @@ fn spawn_mock(tag: &str, engine_threads: usize, continuous: bool) -> ServerHandl
     b.strength = 1.5;
     b.batches = vec![1, 4];
     write_mock_manifest(&dir, &[a, b]).unwrap();
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".into(),
-        max_batch: 8,
-        max_wait: Duration::from_millis(5),
-        continuous,
-        worker_threads: 4,
-        engine_threads,
-    };
+    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), max_batch: 8, max_wait, continuous, elastic, steal, worker_threads: 4, engine_threads };
     spawn(dir, cfg).expect("mock server spawns")
+}
+
+fn spawn_mock(tag: &str, engine_threads: usize, continuous: bool) -> ServerHandle {
+    spawn_mock_cfg(tag, engine_threads, continuous, true, true, Duration::from_millis(5))
 }
 
 fn samples_of(v: &Value) -> Vec<Vec<i32>> {
@@ -164,6 +163,115 @@ fn mock_eval_errors_cleanly_and_server_survives() {
     let r = c.call(r#"{"op":"sample","model":"mock_b","method":"fpi","n":2,"seed":0}"#).unwrap();
     assert_eq!(samples_of(&r).len(), 2);
     server.stop();
+}
+
+#[test]
+fn elasticity_and_stealing_preserve_bitwise_exactness() {
+    // THE elastic acceptance gate at the serving layer: the same staggered
+    // mixed stream with live-queue elasticity + group stealing on vs off
+    // must produce bitwise-identical samples — arrival time, absorption
+    // into a running schedule, and group migration must all be invisible.
+    let collect = |tag: &str, elastic: bool, steal: bool| -> Vec<Vec<Vec<i32>>> {
+        let server = spawn_mock_cfg(tag, 3, true, elastic, steal, Duration::from_millis(30));
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for i in 0..8u64 {
+            handles.push(std::thread::spawn(move || {
+                // Stagger arrivals so some requests land while their group
+                // is already queued or executing.
+                std::thread::sleep(Duration::from_millis(i * 7));
+                let mut c = Client::connect(&addr).unwrap();
+                let model = if i % 2 == 0 { "mock_a" } else { "mock_b" };
+                let method = if i % 3 == 0 { "fpi" } else { "zeros" };
+                let r = c
+                    .call(&format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":3,"seed":{i}}}"#))
+                    .unwrap();
+                samples_of(&r)
+            }));
+        }
+        let out: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        server.stop();
+        out
+    };
+    let on = collect("elastic-on", true, true);
+    let off = collect("elastic-off", false, false);
+    assert_eq!(on, off, "elasticity/stealing must not change any sample");
+    assert!(on.iter().all(|s| s.len() == 3));
+}
+
+#[test]
+fn stashed_group_executes_within_its_own_window() {
+    // Regression for the k×max_wait latency bug: a request queued behind
+    // another group's batching window used to re-pay a full max_wait from
+    // the moment the worker got to it. Windows are now sized off each
+    // request's admission time, so group B executes as soon as the worker
+    // frees up (its window already elapsed while queued).
+    let wait = Duration::from_millis(200);
+    let server = spawn_mock_cfg("stash-latency", 1, true, true, true, wait);
+    let addr = server.addr;
+    let a = std::thread::spawn(move || {
+        let mut c = Client::connect(&addr).unwrap();
+        let r = c.call(r#"{"op":"sample","model":"mock_a","method":"fpi","n":2,"seed":1,"return_samples":false}"#).unwrap();
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    });
+    // Let A's window open first, then queue B behind it.
+    std::thread::sleep(Duration::from_millis(40));
+    let mut c = Client::connect(&server.addr).unwrap();
+    let t = std::time::Instant::now();
+    let r = c.call(r#"{"op":"sample","model":"mock_b","method":"fpi","n":1,"seed":2,"return_samples":false}"#).unwrap();
+    let b_latency = t.elapsed();
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    a.join().unwrap();
+    server.stop();
+    // New behavior: ~max_wait (B's own window, mostly elapsed while queued
+    // behind A). Old behavior: A's window remainder + a *fresh* max_wait
+    // ≈ 360ms+. The bound sits between the two with slack for CI jitter.
+    assert!(
+        b_latency < wait + Duration::from_millis(100),
+        "request stashed behind another group took {b_latency:?} — re-paying the batching window (max_wait = {wait:?})"
+    );
+}
+
+#[test]
+fn idle_tiebreak_spreads_lazy_engine_loads() {
+    // Regression for least-loaded ties resolving to worker 0: on an idle
+    // 2-worker server, two sequential single-model bursts must land on
+    // *different* workers (ties break to the fewest loaded engines, then
+    // round-robin), so lazy engine loads stop serializing on worker 0.
+    let server = spawn_mock("tiebreak", 2, true);
+    let mut c = Client::connect(&server.addr).unwrap();
+    for (model, seed) in [("mock_a", 0), ("mock_b", 1)] {
+        let r = c
+            .call(&format!(r#"{{"op":"sample","model":"{model}","method":"fpi","n":2,"seed":{seed},"return_samples":false}}"#))
+            .unwrap();
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    }
+    // Gauges are stored after the worker's turn ends; give them a beat.
+    std::thread::sleep(Duration::from_millis(100));
+    let info = c.call(r#"{"op":"info"}"#).unwrap();
+    let workers = info.get("workers").as_arr().unwrap();
+    let loaded: Vec<i64> = workers.iter().map(|w| w.get("engines_loaded").as_i64().unwrap()).collect();
+    assert_eq!(loaded.iter().sum::<i64>(), 2, "two engines loaded in total: {loaded:?}");
+    assert!(loaded.iter().all(|&l| l == 1), "idle-server groups must spread across workers, got {loaded:?}");
+    server.stop();
+}
+
+#[test]
+fn client_call_reports_server_eof() {
+    // A server that hangs up must surface as a clear error, not JSON
+    // parse noise over an empty string.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let peer = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        // Consume the request line, then close without replying.
+        let mut line = String::new();
+        std::io::BufRead::read_line(&mut std::io::BufReader::new(stream), &mut line).unwrap();
+    });
+    let mut c = Client::connect(&addr).unwrap();
+    let err = c.call(r#"{"op":"ping"}"#).expect_err("EOF must be an error").to_string();
+    peer.join().unwrap();
+    assert!(err.contains("connection closed by server"), "unhelpful EOF error: {err}");
 }
 
 #[test]
