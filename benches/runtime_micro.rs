@@ -1,6 +1,6 @@
 //! Runtime micro-benchmarks: per-pass latency of every model's step
 //! executable at each batch size, plus the Pallas-lowered artifact parity
-//! check (DESIGN.md X2). These are the denominators behind the table
+//! check. These are the denominators behind the table
 //! timings — and the numbers the §Perf optimization pass tracks.
 //!
 //!     cargo bench --bench runtime_micro

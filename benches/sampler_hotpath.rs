@@ -22,10 +22,21 @@
 //! aggregate `calls_per_job` must come out strictly lower (asserted, and
 //! both are bitwise identical to the batch-1 reference).
 //!
+//! The **sparse-family policy** scenario runs 3-job groups on a `{1, 4}`
+//! export family under each sizing policy
+//! ([`predsamp::coordinator::policy`]): occupancy-first serializes the
+//! odd-sized group on full b=1 batches (best ARM-call rate, worst
+//! latency), latency-lean seats everyone on b=4 (worst rate, best
+//! latency), and the SLO hybrid is asserted to beat occupancy-first on
+//! p50 latency without exceeding latency-lean's `calls_per_job` — while
+//! a loose target recovers occupancy economics. Samples are asserted
+//! bitwise identical across all policies.
+//!
 //!     cargo bench --bench sampler_hotpath [-- --jobs 32 --out BENCH_sampler_hotpath.json]
 //!
 //! [`PassPlan`]: predsamp::sampler::PassPlan
 
+use predsamp::coordinator::policy::{LatencyLean, OccupancyFirst, SizingPolicy, SloHybrid, SloTarget};
 use predsamp::coordinator::scheduler::{self, LiveJob, ScheduleReport};
 use predsamp::sampler::forecast;
 use predsamp::sampler::mock::MockArm;
@@ -33,6 +44,7 @@ use predsamp::sampler::noise::JobNoise;
 use predsamp::sampler::{JobResult, StepModel};
 use predsamp::substrate::cli::Args;
 use predsamp::substrate::json::Value;
+use predsamp::substrate::stats::percentile;
 use predsamp::substrate::timer::fmt_duration;
 use std::collections::VecDeque;
 
@@ -160,6 +172,38 @@ fn run_elastic_scenario(name: &str, method: &str, jobs: usize, burst: usize, gap
     Ok(ElasticOutcome { elastic, results: feed.results, base_cpj, base_passes, base_schedules: schedules })
 }
 
+/// One policy's outcome on a sparse-family group (see
+/// [`run_policy_group`]): per-job latency in passes, the schedule
+/// report, and the samples (for the cross-policy exactness assert).
+struct PolicyOutcome {
+    rep: ScheduleReport,
+    latency_passes: Vec<usize>,
+    samples: Vec<Vec<i32>>,
+}
+
+/// Run one 3-job group on a sparse `{1, 4}` export family under
+/// `sizing` — the ROADMAP's pathological shape: 3 jobs cannot fill the
+/// b=4 export, so occupancy-first sizing runs them one at a time on
+/// full b=1 batches (optimal ARM-call rate, serialized latency) while
+/// latency-lean seats all three on b=4 at once (dead slot, minimal
+/// latency) and the SLO hybrid up-shifts exactly when the projected
+/// queue delay blows its target. Latency is measured deterministically
+/// in ARM passes (arrival tick 0 → completion pass).
+fn run_policy_group(name: &str, method: &str, seed: u64, sizing: &dyn SizingPolicy) -> anyhow::Result<PolicyOutcome> {
+    const GROUP: usize = 3;
+    let family: Vec<MockArm> = vec![model(name, 1), model(name, 4)];
+    let refs: Vec<&MockArm> = family.iter().collect();
+    let d = refs[0].dim();
+    let k = refs[0].categories();
+    let initial: Vec<LiveJob> = (0..GROUP).map(|id| LiveJob { tag: id as u64, noise: JobNoise::new(seed, id as u64, d, k) }).collect();
+    let mut feed = scheduler::TickBurstFeed::new(GROUP, Vec::new());
+    let fc = forecast::by_name(method, 2).expect("known method");
+    let rep = scheduler::run_elastic_family_policy(&refs, fc, initial, &mut feed, sizing)?;
+    let latency_passes: Vec<usize> = (0..GROUP).map(|id| feed.completed_pass[id].expect("job completed")).collect();
+    let samples: Vec<Vec<i32>> = feed.results.into_iter().map(|r| r.expect("job completed").x).collect();
+    Ok(PolicyOutcome { rep, latency_passes, samples })
+}
+
 fn report_value(r: &ScheduleReport, jobs: usize) -> Value {
     Value::obj(vec![
         ("positions", Value::num(r.positions_evaluated as f64)),
@@ -272,11 +316,87 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // Sparse-export-family policy scenario: 3-job groups on a {1, 4}
+    // family, the shape that maximally separates the sizing policies.
+    // Per group (mathematically guaranteed, not tuned): occupancy-first
+    // serializes on b=1, so its median latency is the sum of two jobs'
+    // pass counts, while latency-lean's is the median of the individual
+    // pass counts — strictly smaller; and a tight SLO hybrid makes the
+    // same decisions as latency-lean (every positive projected delay
+    // exceeds the target), so it pays exactly fit's calls_per_job. A
+    // loose SLO target reproduces occupancy-first's economics instead:
+    // the same knob spans the whole trade.
+    let policy_seeds = args.num::<u64>("policy-seeds", 4);
+    println!("sparse-family policies: 3-job groups on a {{1,4}} export family, occupancy vs latency vs slo (latency in ARM passes)");
+    let mut policy_groups = Vec::new();
+    let mut policies_ok = true;
+    for (gi, (name, method)) in ELASTIC_MIX.iter().enumerate() {
+        let tight = SloHybrid { target: SloTarget::Passes(0.5) };
+        let loose = SloHybrid { target: SloTarget::Passes(1e12) };
+        let runs: Vec<(&str, &dyn SizingPolicy)> = vec![("occupancy", &OccupancyFirst), ("latency", &LatencyLean), ("slo", &tight), ("slo-loose", &loose)];
+        // (label -> per-group median latencies, slot-passes, jobs)
+        let mut medians: Vec<Vec<f64>> = vec![Vec::new(); runs.len()];
+        let mut slot_passes: Vec<f64> = vec![0.0; runs.len()];
+        let mut jobs_done = 0usize;
+        for s in 0..policy_seeds {
+            let seed = 3000 + 100 * gi as u64 + s;
+            let mut outs = Vec::with_capacity(runs.len());
+            for (_, sizing) in &runs {
+                outs.push(run_policy_group(name, method, seed, *sizing)?);
+            }
+            for o in &outs[1..] {
+                assert_eq!(o.samples, outs[0].samples, "{name}/{method} seed {seed}: sizing policy changed a sample");
+            }
+            jobs_done += outs[0].latency_passes.len();
+            for (ri, o) in outs.iter().enumerate() {
+                let lats: Vec<f64> = o.latency_passes.iter().map(|&l| l as f64).collect();
+                medians[ri].push(percentile(&lats, 50.0));
+                slot_passes[ri] += o.rep.calls_per_job * lats.len() as f64;
+            }
+            // Per-group gates (exact, not statistical): the SLO hybrid's
+            // median latency beats occupancy-first's serialized median,
+            // at no more than latency-lean's slot-pass cost.
+            let (occ_med, fit_med, slo_med) = (*medians[0].last().unwrap(), *medians[1].last().unwrap(), *medians[2].last().unwrap());
+            policies_ok &= slo_med < occ_med && slo_med <= fit_med + 1e-9;
+        }
+        let p50 = |ri: usize| percentile(&medians[ri], 50.0);
+        let cpj = |ri: usize| slot_passes[ri] / jobs_done as f64;
+        println!(
+            "  {name:>6}/{method:<7} p50 latency (passes): occupancy {:>6.1}  latency {:>6.1}  slo {:>6.1}   calls/job: occupancy {:>6.2}  latency {:>6.2}  slo {:>6.2}  slo-loose {:>6.2}",
+            p50(0),
+            p50(1),
+            p50(2),
+            cpj(0),
+            cpj(1),
+            cpj(2),
+            cpj(3),
+        );
+        policies_ok &= p50(2) < p50(0) && cpj(2) <= cpj(1) + 1e-9;
+        // The loose target must recover occupancy-first's economics.
+        policies_ok &= (cpj(3) - cpj(0)).abs() < 1e-9;
+        let entry = |ri: usize| {
+            Value::obj(vec![
+                ("policy", Value::str(runs[ri].0)),
+                ("p50_latency_passes", Value::num(p50(ri))),
+                ("calls_per_job", Value::num(cpj(ri))),
+            ])
+        };
+        policy_groups.push(Value::obj(vec![
+            ("model", Value::str(*name)),
+            ("method", Value::str(*method)),
+            ("group_jobs", Value::num(3.0)),
+            ("exports", Value::Arr(vec![Value::num(1.0), Value::num(4.0)])),
+            ("seeds", Value::num(policy_seeds as f64)),
+            ("policies", Value::Arr((0..runs.len()).map(entry).collect())),
+        ]));
+    }
+
     let doc = Value::obj(vec![
         ("bench", Value::str("sampler_hotpath")),
         ("jobs_per_group", Value::num(jobs as f64)),
         ("groups", Value::Arr(groups)),
         ("elastic", Value::Arr(elastic_groups)),
+        ("policies", Value::Arr(policy_groups)),
         (
             "total",
             Value::obj(vec![
@@ -292,5 +412,9 @@ fn main() -> anyhow::Result<()> {
     println!("wrote {out_path}");
     assert!(reduction >= 2.0, "plan-based passes must at least halve positions/job (got {reduction:.2}x)");
     assert!(elastic_ok, "elastic schedule must up-shift and beat the down-shift-only scheduler's calls_per_job on every group");
+    assert!(
+        policies_ok,
+        "the SLO policy must beat occupancy-first on p50 latency without exceeding latency-lean's calls_per_job (and a loose target must recover occupancy economics)"
+    );
     Ok(())
 }

@@ -1,4 +1,4 @@
-//! Extension ablation (DESIGN.md X1): continuous batching (slot refill)
+//! Scheduling ablation: continuous batching (slot refill)
 //! vs the paper's synchronous batch semantics, over a queue of jobs.
 //! The paper predicts (§4.1) that a scheduling system "would allow
 //! sampling at an average rate equal to the batch size 1 setting" — this

@@ -40,6 +40,7 @@ fn run_load(dir: std::path::PathBuf, engine_threads: usize, clients: usize, requ
         // beyond the measured clients.
         worker_threads: clients + 2,
         engine_threads,
+        ..ServeConfig::default()
     };
     let server = spawn(dir, cfg)?;
     // Warm every (model, method) group so lazy engine setup happens

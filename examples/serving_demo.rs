@@ -1,8 +1,10 @@
 //! Serving demo: spin up the TCP server, fire concurrent client requests
 //! over a mixed (model, method) stream, and report end-to-end latency and
 //! throughput — comparing the paper's synchronous batching, this repo's
-//! continuous-batching scheduler (the "scheduling system" §4.1 leaves to
-//! future work), and the sharded engine-worker pool on top of it.
+//! elastic continuous-batching scheduler (the "scheduling system" §4.1
+//! leaves to future work; executing groups absorb their own mid-flight
+//! arrivals under the configured sizing/admission policies), and the
+//! sharded work-stealing engine-worker pool on top of it.
 //!
 //! With compiled artifacts present the demo serves them; without, it
 //! falls back to the pure-rust mock ARM so it runs anywhere:
@@ -80,6 +82,7 @@ fn main() -> anyhow::Result<()> {
             // warm/metrics connection below
             worker_threads: clients + 2,
             engine_threads,
+            ..ServeConfig::default()
         };
         let server = spawn(dir.clone(), cfg)?;
         // Warm the engines (lazy per-worker load) outside the measurement.

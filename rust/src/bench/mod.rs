@@ -4,7 +4,7 @@
 //!
 //! Every table and figure of the paper's evaluation (§4) maps to a
 //! function here; `cargo bench` and the `predsamp table1|table2|table3|
-//! fig3..fig6` subcommands call the same code (see DESIGN.md §6).
+//! fig3..fig6` subcommands call the same code.
 
 pub mod figures;
 pub mod harness;

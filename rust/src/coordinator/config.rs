@@ -1,5 +1,8 @@
-//! Serving configuration (CLI- and env-tunable).
+//! Serving configuration (CLI- and env-tunable). Every knob is
+//! documented — with where it takes effect — in `docs/ARCHITECTURE.md`;
+//! a CI grep keeps that page in sync with this struct.
 
+use crate::coordinator::policy::{AdmissionKind, PolicyKind};
 use anyhow::{ensure, Result};
 use std::time::Duration;
 
@@ -80,6 +83,20 @@ pub struct ServeConfig {
     /// least-loaded worker. Job noise is keyed by `(seed, job index)`,
     /// never by worker, so samples are bitwise identical at any setting.
     pub engine_threads: usize,
+    /// Batch-sizing policy for live (elastic) schedules (`--policy`):
+    /// occupancy-first (full batches, the batch-1 ARM-call rate),
+    /// latency-lean (every runnable job seated), or the SLO hybrid
+    /// (occupancy until the projected queue delay exceeds [`Self::slo`]).
+    /// Sizing never changes samples.
+    pub policy: PolicyKind,
+    /// Queue-delay target the SLO hybrid sizes against (`--slo-ms`).
+    /// Ignored by the other policies.
+    pub slo: Duration,
+    /// Mid-flight admission policy for executing groups: age-based
+    /// oldest-admission-first fairness (default), or the legacy fixed
+    /// absorb budget (`--absorb-budget N`). Admission only defers work —
+    /// samples are bitwise identical either way.
+    pub admission: AdmissionKind,
 }
 
 impl Default for ServeConfig {
@@ -93,6 +110,9 @@ impl Default for ServeConfig {
             steal: true,
             worker_threads: 4,
             engine_threads: 2,
+            policy: PolicyKind::Occupancy,
+            slo: Duration::from_millis(50),
+            admission: AdmissionKind::OldestFirst,
         }
     }
 }
@@ -108,6 +128,10 @@ impl ServeConfig {
             "serve config: engine_threads must be in [1, 256] (each worker replicates engines)"
         );
         ensure!(self.max_wait <= Duration::from_secs(60), "serve config: max_wait above 60s will stall clients");
+        ensure!(self.slo <= Duration::from_secs(60), "serve config: slo above 60s is not a latency target");
+        if let AdmissionKind::Budget(b) = self.admission {
+            ensure!(b >= 1, "serve config: absorb budget must be >= 1 (or use age-based admission)");
+        }
         Ok(())
     }
 }
@@ -140,5 +164,8 @@ mod tests {
         assert!(ServeConfig { max_batch: 0, ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { worker_threads: 0, ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { max_wait: Duration::from_secs(3600), ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { slo: Duration::from_secs(3600), ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { admission: AdmissionKind::Budget(0), ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { admission: AdmissionKind::Budget(8), policy: PolicyKind::Slo, ..ServeConfig::default() }.validate().is_ok());
     }
 }

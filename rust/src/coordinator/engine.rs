@@ -187,11 +187,26 @@ impl Engine {
     /// polled between passes, so jobs can keep arriving while the
     /// schedule runs and the batch up-shifts to absorb them (the serving
     /// layer's elastic path). Results are delivered through
-    /// [`JobFeed::complete`] the moment each job converges.
+    /// [`JobFeed::complete`] the moment each job converges. Sizes with
+    /// the occupancy-first default; see [`Engine::sample_elastic_policy`].
     pub fn sample_elastic(&self, method: Method, initial: Vec<LiveJob>, feed: &mut dyn JobFeed) -> Result<ScheduleReport> {
+        self.sample_elastic_policy(method, initial, feed, &crate::coordinator::policy::OccupancyFirst)
+    }
+
+    /// As [`Engine::sample_elastic`], with an explicit batch-sizing
+    /// policy (occupancy-first, latency-lean, or the SLO hybrid — see
+    /// [`crate::coordinator::policy`]). The server builds the policy from
+    /// `ServeConfig::policy`/`--policy`; sizing never changes samples.
+    pub fn sample_elastic_policy(
+        &self,
+        method: Method,
+        initial: Vec<LiveJob>,
+        feed: &mut dyn JobFeed,
+        sizing: &dyn crate::coordinator::policy::SizingPolicy,
+    ) -> Result<ScheduleReport> {
         ensure!(method != Method::Baseline, "baseline serves through the sync path");
         let backends = self.backends_for(Self::needs_fore(method));
-        scheduler::run_elastic_family(&backends, self.forecaster_for(method)?, initial, feed)
+        scheduler::run_elastic_family_policy(&backends, self.forecaster_for(method)?, initial, feed, sizing)
     }
 
     /// Whether `method` reads the forecast-head outputs.

@@ -5,10 +5,25 @@
 //! workers with [`Metrics::merge`] for the `metrics` protocol op and
 //! attaches per-worker gauges ([`Metrics::worker_value`]): queue depth,
 //! occupancy (busy wall-seconds over uptime), loaded engines.
+//!
+//! The policy layer reports through here too: per-sizing-policy schedule
+//! counters (`schedules_by_policy`), mid-flight absorption counters
+//! (`absorbed` jobs, `absorb_denials` events), and a queue-age histogram
+//! ([`AGE_BUCKET_MS`]) sampled once per request at the moment it enters
+//! execution — queued time under the admission policy is exactly what
+//! the age buckets make visible.
 
 use crate::substrate::json::Value;
 use crate::substrate::stats;
-use std::time::Instant;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Upper bounds (milliseconds) of the queue-age histogram buckets; the
+/// last bucket is the overflow (`>= 500ms`).
+pub const AGE_BUCKET_MS: [u64; 5] = [1, 5, 20, 100, 500];
+
+/// Number of histogram buckets: one per bound plus the overflow.
+pub const AGE_BUCKETS: usize = AGE_BUCKET_MS.len() + 1;
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -23,6 +38,20 @@ pub struct Metrics {
     pub steals: u64,
     /// Wall-seconds spent executing batches (occupancy numerator).
     pub busy_secs: f64,
+    /// Jobs absorbed into an executing group's live schedule mid-flight
+    /// (admission-policy accepts; the initial window is not counted).
+    pub absorbed: u64,
+    /// Mid-flight admission denials (events at poll granularity: a
+    /// deferred request is re-evaluated — and re-counted — each poll).
+    pub absorb_denials: u64,
+    /// Queue-age histogram: each request sampled once when it enters
+    /// execution, bucketed per [`AGE_BUCKET_MS`] (+ overflow).
+    age_buckets: [u64; AGE_BUCKETS],
+    /// Executed schedule windows per sizing-policy label ("occupancy",
+    /// "latency", "slo", "sync", ...). A long-lived elastic schedule
+    /// flushes one window per `record_batch`, so these always track
+    /// `batches`.
+    by_policy: BTreeMap<String, u64>,
     started: Instant,
     /// Per-batch wall latencies (seconds), bounded reservoir.
     latencies: Vec<f64>,
@@ -42,6 +71,10 @@ impl Metrics {
             batches: 0,
             steals: 0,
             busy_secs: 0.0,
+            absorbed: 0,
+            absorb_denials: 0,
+            age_buckets: [0; AGE_BUCKETS],
+            by_policy: BTreeMap::new(),
             started: Instant::now(),
             latencies: Vec::new(),
             calls_pct: Vec::new(),
@@ -74,6 +107,34 @@ impl Metrics {
         self.steals += 1;
     }
 
+    /// Record `n` jobs absorbed into an executing live schedule.
+    pub fn record_absorbed(&mut self, n: usize) {
+        self.absorbed += n as u64;
+    }
+
+    /// Record one mid-flight admission denial event.
+    pub fn record_absorb_denial(&mut self) {
+        self.absorb_denials += 1;
+    }
+
+    /// Record one executed schedule under sizing policy `name`.
+    pub fn record_policy(&mut self, name: &str) {
+        *self.by_policy.entry(name.to_string()).or_insert(0) += 1;
+    }
+
+    /// Record one request's queue age at the moment it enters execution
+    /// (window close or mid-flight absorption).
+    pub fn record_admission_age(&mut self, age: Duration) {
+        let ms = age.as_millis() as u64;
+        let bucket = AGE_BUCKET_MS.iter().position(|&b| ms < b).unwrap_or(AGE_BUCKET_MS.len());
+        self.age_buckets[bucket] += 1;
+    }
+
+    /// The queue-age histogram (tests and the aggregation gauges).
+    pub fn age_buckets(&self) -> &[u64; AGE_BUCKETS] {
+        &self.age_buckets
+    }
+
     /// Fraction of this worker's uptime spent executing batches.
     pub fn occupancy(&self) -> f64 {
         let uptime = self.started.elapsed().as_secs_f64();
@@ -93,6 +154,14 @@ impl Metrics {
         self.batches += other.batches;
         self.steals += other.steals;
         self.busy_secs += other.busy_secs;
+        self.absorbed += other.absorbed;
+        self.absorb_denials += other.absorb_denials;
+        for (b, o) in self.age_buckets.iter_mut().zip(other.age_buckets.iter()) {
+            *b += o;
+        }
+        for (name, n) in &other.by_policy {
+            *self.by_policy.entry(name.clone()).or_insert(0) += n;
+        }
         for &l in other.latencies.iter().take(RESERVOIR.saturating_sub(self.latencies.len())) {
             self.latencies.push(l);
         }
@@ -101,7 +170,13 @@ impl Metrics {
         }
     }
 
+    /// The queue-age histogram as a JSON array (counts per bucket).
+    fn age_buckets_value(&self) -> Value {
+        Value::Arr(self.age_buckets.iter().map(|&c| Value::num(c as f64)).collect())
+    }
+
     pub fn snapshot(&self) -> Value {
+        let by_policy: BTreeMap<String, Value> = self.by_policy.iter().map(|(k, &v)| (k.clone(), Value::num(v as f64))).collect();
         Value::obj(vec![
             ("requests", Value::num(self.requests as f64)),
             ("samples", Value::num(self.samples as f64)),
@@ -109,10 +184,15 @@ impl Metrics {
             ("errors", Value::num(self.errors as f64)),
             ("batches", Value::num(self.batches as f64)),
             ("steals", Value::num(self.steals as f64)),
+            ("absorbed", Value::num(self.absorbed as f64)),
+            ("absorb_denials", Value::num(self.absorb_denials as f64)),
             ("busy_secs", Value::num(self.busy_secs)),
             ("latency_p50_s", Value::num(stats::percentile(&self.latencies, 50.0))),
             ("latency_p95_s", Value::num(stats::percentile(&self.latencies, 95.0))),
             ("calls_pct_mean", Value::num(stats::mean(&self.calls_pct))),
+            ("admission_age_bounds_ms", Value::Arr(AGE_BUCKET_MS.iter().map(|&b| Value::num(b as f64)).collect())),
+            ("admission_age_buckets", self.age_buckets_value()),
+            ("schedules_by_policy", Value::Obj(by_policy)),
         ])
     }
 
@@ -130,6 +210,8 @@ impl Metrics {
             ("queue_depth", Value::num(queue_depth as f64)),
             ("engines_loaded", Value::num(engines_loaded as f64)),
             ("occupancy", Value::num(self.occupancy())),
+            ("absorbed", Value::num(self.absorbed as f64)),
+            ("admission_age_buckets", self.age_buckets_value()),
             ("latency_p50_s", Value::num(stats::percentile(&self.latencies, 50.0))),
         ])
     }
@@ -184,6 +266,67 @@ mod tests {
         assert_eq!(s.get("batches").as_i64(), Some(2));
         assert!((s.get("calls_pct_mean").as_f64().unwrap() - 50.0).abs() < 1e-9);
         assert!((s.get("busy_secs").as_f64().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn age_buckets_bucket_correctly() {
+        let mut m = Metrics::new();
+        m.record_admission_age(Duration::from_micros(200)); // < 1ms
+        m.record_admission_age(Duration::from_millis(3)); // < 5ms
+        m.record_admission_age(Duration::from_millis(5)); // boundary: < 20ms
+        m.record_admission_age(Duration::from_millis(99)); // < 100ms
+        m.record_admission_age(Duration::from_secs(2)); // overflow
+        assert_eq!(m.age_buckets(), &[1, 1, 1, 1, 0, 1]);
+        let s = m.snapshot();
+        let arr = s.get("admission_age_buckets").as_arr().unwrap();
+        assert_eq!(arr.len(), AGE_BUCKETS);
+        let total: i64 = arr.iter().map(|v| v.as_i64().unwrap()).sum();
+        assert_eq!(total, 5, "every recorded age lands in exactly one bucket");
+        assert_eq!(s.get("admission_age_bounds_ms").as_arr().unwrap().len(), AGE_BUCKET_MS.len());
+    }
+
+    #[test]
+    fn merge_sums_age_buckets_policy_counters_and_absorption() {
+        // The cross-worker aggregation invariant the server's `metrics`
+        // op relies on: merging N workers must sum bucket-wise and
+        // key-wise, so the aggregate equals the per-worker sums even
+        // when a worker died mid-run (its Metrics is still merged) or a
+        // group was stolen (its counters just land on the thief).
+        let workers: Vec<Metrics> = (0..3)
+            .map(|i| {
+                let mut m = Metrics::new();
+                for _ in 0..=i {
+                    m.record_admission_age(Duration::from_millis(2));
+                    m.record_policy("occupancy");
+                }
+                m.record_admission_age(Duration::from_millis(800));
+                m.record_absorbed(2 * i);
+                if i == 2 {
+                    m.record_absorb_denial();
+                    m.record_policy("slo");
+                }
+                m
+            })
+            .collect();
+        let mut total = Metrics::new();
+        for w in &workers {
+            total.merge(w);
+        }
+        let mut expect = [0u64; AGE_BUCKETS];
+        for w in &workers {
+            for (e, b) in expect.iter_mut().zip(w.age_buckets()) {
+                *e += b;
+            }
+        }
+        assert_eq!(total.age_buckets(), &expect, "aggregate buckets must equal the per-worker sums");
+        assert_eq!(total.age_buckets()[1], 6, "1+2+3 sub-5ms ages");
+        assert_eq!(total.age_buckets()[AGE_BUCKETS - 1], 3, "one overflow age per worker");
+        assert_eq!(total.absorbed, 6, "2*i absorbed jobs per worker");
+        assert_eq!(total.absorb_denials, 1);
+        let s = total.snapshot();
+        let by_policy = s.get("schedules_by_policy");
+        assert_eq!(by_policy.get("occupancy").as_i64(), Some(6));
+        assert_eq!(by_policy.get("slo").as_i64(), Some(1));
     }
 
     #[test]

@@ -9,6 +9,11 @@
 //!   and drains. This is the "scheduling system" the paper explicitly
 //!   leaves to future work (§4.1), which lets batched serving approach
 //!   the batch-size-1 ARM-call rate.
+//! * [`policy`] — the pluggable decisions on top of that machinery:
+//!   batch *sizing* (occupancy-first / latency-lean / SLO-driven hybrid)
+//!   and mid-flight *admission* (age-based oldest-first fairness, or the
+//!   legacy absorb budget). Policies move work around but never change
+//!   samples.
 //! * [`router`] — model-name → engine dispatch.
 //! * [`protocol`] + [`server`] — line-delimited-JSON TCP serving over a
 //!   sharded engine-worker pool: PJRT handles are not `Send`, so each of
@@ -24,6 +29,7 @@
 pub mod config;
 pub mod engine;
 pub mod metrics;
+pub mod policy;
 pub mod protocol;
 pub mod router;
 pub mod scheduler;

@@ -1,0 +1,492 @@
+//! Pluggable scheduling policies: batch **sizing** and mid-flight
+//! **admission**, extracted from the scheduler and server so the
+//! rate-vs-latency trade is an explicit, documented dial instead of
+//! constants buried in `scheduler.rs` (see `docs/ARCHITECTURE.md`).
+//!
+//! Two decisions are pluggable, and both are *work placement only* —
+//! never correctness. Per-job noise is keyed by `(seed, job index)`, so
+//! any sizing or admission choice produces bitwise the same samples
+//! (property-tested in `tests/sampler_props.rs`, `policy-exactness`):
+//!
+//! * [`SizingPolicy`] — which exported batch size an elastic schedule
+//!   runs on, re-decided between ARM passes. [`OccupancyFirst`] fills
+//!   the largest export the runnable jobs can occupy completely (the
+//!   paper's §4.1 batch-1 ARM-call-rate target; excess in-flight slots
+//!   park). [`LatencyLean`] fits every runnable job into the smallest
+//!   export that holds them all, accepting dead slots. [`SloHybrid`]
+//!   sizes for occupancy until the projected queue delay exceeds a
+//!   target, then up-shifts — occupancy-first economics under an
+//!   explicit latency ceiling.
+//! * [`AdmissionPolicy`] — whether a live schedule absorbs a mid-flight
+//!   arrival of its own `(model, method)` group or leaves it queued for
+//!   the next batching window (or a thief). [`OldestFirst`] replaces
+//!   the old blunt 8×`max_batch` absorb budget with age-based fairness:
+//!   absorb only while no *other* group's queued request has been
+//!   waiting meaningfully longer, so a hot group cannot starve its
+//!   neighbours. [`AbsorbBudget`] keeps the legacy cap available.
+//!
+//! Selection is wired through [`crate::coordinator::config::ServeConfig`]
+//! (`policy`, `slo`, `admission`; CLI `--policy`, `--slo-ms`,
+//! `--absorb-budget`) and lands in the scheduler via
+//! [`crate::coordinator::scheduler::run_elastic_family_policy`].
+#![deny(missing_docs)]
+
+use std::time::Duration;
+
+/// Everything a [`SizingPolicy`] may consult, snapshotted by the
+/// scheduler before each resize decision. Counts are jobs, not slots.
+#[derive(Clone, Copy, Debug)]
+pub struct SizingCtx {
+    /// Jobs currently installed in batch slots (mid-flight).
+    pub in_flight: usize,
+    /// Mid-flight jobs parked out of their slots, waiting to resume.
+    pub parked: usize,
+    /// Fresh jobs queued for admission.
+    pub queued: usize,
+    /// ARM passes the schedule has run so far.
+    pub passes: usize,
+    /// How many passes the oldest waiting (parked or queued) job has
+    /// been waiting; 0 when nothing waits.
+    pub oldest_wait_passes: usize,
+    /// Model dimension `d` — the worst-case passes a job can need, used
+    /// as the convergence prior before any job has completed.
+    pub dim: usize,
+    /// EWMA of wall-seconds per ARM pass (`None` before the first pass).
+    pub pass_secs: Option<f64>,
+    /// EWMA of passes a job needs to converge (`None` before the first
+    /// completion).
+    pub passes_per_job: Option<f64>,
+}
+
+impl SizingCtx {
+    /// Total runnable jobs (in-flight + parked + queued), floored at 1.
+    pub fn need(&self) -> usize {
+        (self.in_flight + self.parked + self.queued).max(1)
+    }
+}
+
+/// Batch-sizing policy for the elastic scheduler: between ARM passes,
+/// pick which exported batch size the schedule should run on.
+///
+/// Contract: `choose` must return one of `exports` (non-empty,
+/// ascending). The scheduler falls back to the fit rule on a value not
+/// in the family, so a buggy policy degrades to latency-lean sizing
+/// instead of panicking. Sizing never affects samples — only which
+/// slots run when — so implementations are free to be heuristic.
+pub trait SizingPolicy {
+    /// Stable label for reports and metrics (`ScheduleReport::policy`,
+    /// the server's `schedules_by_policy` counters).
+    fn name(&self) -> &'static str;
+    /// Choose a batch size from `exports` for the current state.
+    fn choose(&self, exports: &[usize], ctx: &SizingCtx) -> usize;
+}
+
+/// The *fit* rule: smallest export that holds `need` jobs (the largest
+/// export when nothing fits). Favors tail latency — every runnable job
+/// gets a slot — at the cost of dead slots on partial batches.
+pub fn fit_size(exports: &[usize], need: usize) -> usize {
+    let need = need.max(1);
+    exports.iter().copied().find(|&b| b >= need).unwrap_or_else(|| *exports.last().expect("non-empty export family"))
+}
+
+/// The *fill* rule: largest export `need` jobs can completely occupy
+/// (the smallest export when even that cannot be filled). Favors the
+/// batched ARM-call rate — every pass runs a full batch — at the cost
+/// of parking excess jobs.
+pub fn fill_size(exports: &[usize], need: usize) -> usize {
+    let need = need.max(1);
+    exports.iter().copied().rev().find(|&b| b <= need).unwrap_or_else(|| *exports.first().expect("non-empty export family"))
+}
+
+/// Occupancy-first sizing (the live scheduler's default, PR 3's rule):
+/// always [`fill_size`]. Every pass runs a full batch — the paper's
+/// §4.1 batch-1 ARM-call-rate target — but small odd-sized groups on
+/// sparse export families serialize (3 jobs on a `{1, 4}` family run
+/// b=1, one at a time).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OccupancyFirst;
+
+impl SizingPolicy for OccupancyFirst {
+    fn name(&self) -> &'static str {
+        "occupancy"
+    }
+    fn choose(&self, exports: &[usize], ctx: &SizingCtx) -> usize {
+        fill_size(exports, ctx.need())
+    }
+}
+
+/// Latency-lean sizing (the closed-queue scheduler's rule since PR 2):
+/// always [`fit_size`]. No job ever waits for a slot, so per-job
+/// latency is minimal, but partial batches burn slot-passes on dead
+/// slots.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyLean;
+
+impl SizingPolicy for LatencyLean {
+    fn name(&self) -> &'static str {
+        "latency"
+    }
+    fn choose(&self, exports: &[usize], ctx: &SizingCtx) -> usize {
+        fit_size(exports, ctx.need())
+    }
+}
+
+/// Queue-delay target for [`SloHybrid`].
+#[derive(Clone, Copy, Debug)]
+pub enum SloTarget {
+    /// Wall-clock target (the serving `--slo-ms` knob). Projected delay
+    /// is passes × the schedule's measured per-pass wall-time EWMA;
+    /// before an estimate exists the policy up-shifts conservatively
+    /// (protect the SLO, not the call rate).
+    Wall(Duration),
+    /// Pass-denominated target. Fully deterministic — no clock reads —
+    /// so tests and benches use it to pin exact policy trajectories.
+    Passes(f64),
+}
+
+/// SLO-driven hybrid sizing: occupancy-first economics under an
+/// explicit latency ceiling. Sizes with [`fill_size`] (full batches,
+/// batch-1 call rate) while the *projected queue delay* — accrued wait
+/// of the oldest waiting job plus the cohorts of full batches that must
+/// converge before the last waiting job gets a slot — stays within the
+/// target, and up-shifts to [`fit_size`] the moment it would not.
+///
+/// The projection uses the schedule's own convergence EWMA, falling
+/// back to the worst case (`d` passes per job, the ancestral rate)
+/// before any job has completed, so a cold schedule errs on the side of
+/// the SLO.
+#[derive(Clone, Copy, Debug)]
+pub struct SloHybrid {
+    /// The queue-delay ceiling.
+    pub target: SloTarget,
+}
+
+impl SloHybrid {
+    /// Projected worst-case queue delay, in passes, if the schedule
+    /// sized to `fill_b` (leaving `need - fill_b` jobs waiting).
+    ///
+    /// When sizing to `fill_b` would **evict seated jobs**
+    /// (`fill_b < in_flight`), the projection uses the worst-case prior
+    /// (`d` passes) instead of the convergence EWMA. The EWMA reflects
+    /// *completed* — typically fast — jobs, so it can badly underestimate
+    /// a seated straggler's remaining passes; and an eviction right after
+    /// an SLO up-shift has just zeroed the evictees' accrued wait, so an
+    /// optimistic projection here would park-and-reseat the same jobs in
+    /// a starvation loop. Using the worst case makes SLO up-shifts sticky
+    /// until the batch drains naturally (`need` small enough that nothing
+    /// seated is evicted), while leaving loose targets (above `d`-scale
+    /// delays) free to park — so the extreme targets still reproduce
+    /// occupancy-first and latency-lean exactly.
+    fn projected_delay_passes(&self, fill_b: usize, ctx: &SizingCtx) -> f64 {
+        let waiting = ctx.need() - fill_b;
+        let rounds = waiting.div_ceil(fill_b);
+        let worst = ctx.dim.max(1) as f64;
+        let per_job = if fill_b < ctx.in_flight { worst } else { ctx.passes_per_job.unwrap_or(worst) };
+        ctx.oldest_wait_passes as f64 + rounds as f64 * per_job
+    }
+}
+
+impl SizingPolicy for SloHybrid {
+    fn name(&self) -> &'static str {
+        "slo"
+    }
+    fn choose(&self, exports: &[usize], ctx: &SizingCtx) -> usize {
+        let need = ctx.need();
+        let fill_b = fill_size(exports, need);
+        let fit_b = fit_size(exports, need);
+        if fit_b <= fill_b {
+            // `need` fills an export exactly (or exceeds the largest):
+            // occupancy sizing leaves nobody waiting that fit would seat.
+            return fill_b;
+        }
+        let delay = self.projected_delay_passes(fill_b, ctx);
+        let exceeded = match self.target {
+            SloTarget::Passes(p) => delay > p,
+            SloTarget::Wall(d) => match ctx.pass_secs {
+                Some(s) => delay * s > d.as_secs_f64(),
+                None => true,
+            },
+        };
+        if exceeded {
+            fit_b
+        } else {
+            fill_b
+        }
+    }
+}
+
+/// Everything an [`AdmissionPolicy`] may consult about one mid-flight
+/// arrival of the executing group, snapshotted under the pool lock.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionCtx {
+    /// Jobs in the arriving request.
+    pub jobs: usize,
+    /// Jobs this schedule has already absorbed mid-flight (the initial
+    /// batching window is not counted).
+    pub absorbed: usize,
+    /// How long ago the serving plane admitted the arriving request
+    /// (its dispatcher admission timestamp — the same clock batching
+    /// windows key on).
+    pub age: Duration,
+    /// Age of the oldest request of any *other* group queued on this
+    /// worker — the request the absorption would starve. `None` when no
+    /// other group waits.
+    pub oldest_other_age: Option<Duration>,
+}
+
+/// Mid-flight admission policy: whether an executing group's live
+/// schedule absorbs its own arrival or leaves it queued for the next
+/// batching window (or a work-stealing neighbour). Denial never drops a
+/// request — it only defers it — and absorption never changes samples,
+/// so this is purely a group-throughput vs cross-group-latency dial.
+pub trait AdmissionPolicy {
+    /// Stable label for metrics.
+    fn name(&self) -> &'static str;
+    /// Whether to absorb the arrival described by `ctx`.
+    fn admit(&self, ctx: &AdmissionCtx) -> bool;
+}
+
+/// Age-based fairness (the default): absorb an arrival only while no
+/// other group's queued request has been waiting more than `slack`
+/// longer than it — oldest-admission-first across groups. With nothing
+/// else queued the schedule absorbs freely (work conservation); the
+/// moment an older neighbour waits, the hot group stops growing and the
+/// neighbour runs next.
+#[derive(Clone, Copy, Debug)]
+pub struct OldestFirst {
+    /// Grace margin before an older neighbour blocks absorption.
+    /// Serving uses `max_wait` — a neighbour inside its own batching
+    /// window would not have executed yet anyway.
+    pub slack: Duration,
+}
+
+impl AdmissionPolicy for OldestFirst {
+    fn name(&self) -> &'static str {
+        "oldest-first"
+    }
+    fn admit(&self, ctx: &AdmissionCtx) -> bool {
+        match ctx.oldest_other_age {
+            None => true,
+            Some(other) => ctx.age + self.slack >= other,
+        }
+    }
+}
+
+/// The legacy blunt cap (PR 3's absorb budget): absorb until `budget`
+/// jobs have been absorbed, regardless of who else waits.
+#[derive(Clone, Copy, Debug)]
+pub struct AbsorbBudget {
+    /// Mid-flight jobs the schedule may absorb in total.
+    pub budget: usize,
+}
+
+impl AdmissionPolicy for AbsorbBudget {
+    fn name(&self) -> &'static str {
+        "budget"
+    }
+    fn admit(&self, ctx: &AdmissionCtx) -> bool {
+        ctx.absorbed < self.budget
+    }
+}
+
+/// Serving-config selector for the sizing policy (`--policy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// [`OccupancyFirst`].
+    Occupancy,
+    /// [`LatencyLean`].
+    Latency,
+    /// [`SloHybrid`] with the config's wall-clock `slo` target.
+    Slo,
+}
+
+impl PolicyKind {
+    /// Parse a `--policy` flag value.
+    pub fn parse(name: &str) -> Option<PolicyKind> {
+        Some(match name {
+            "occupancy" | "fill" => PolicyKind::Occupancy,
+            "latency" | "fit" => PolicyKind::Latency,
+            "slo" => PolicyKind::Slo,
+            _ => return None,
+        })
+    }
+
+    /// The canonical flag spelling.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Occupancy => "occupancy",
+            PolicyKind::Latency => "latency",
+            PolicyKind::Slo => "slo",
+        }
+    }
+}
+
+/// Serving-config selector for the admission policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionKind {
+    /// [`OldestFirst`] with `max_wait` slack (the default).
+    OldestFirst,
+    /// [`AbsorbBudget`] with an explicit job cap (`--absorb-budget`).
+    Budget(usize),
+}
+
+/// Build the sizing policy a server execution runs under.
+pub fn sizing_for(kind: PolicyKind, slo: Duration) -> Box<dyn SizingPolicy> {
+    match kind {
+        PolicyKind::Occupancy => Box::new(OccupancyFirst),
+        PolicyKind::Latency => Box::new(LatencyLean),
+        PolicyKind::Slo => Box::new(SloHybrid { target: SloTarget::Wall(slo) }),
+    }
+}
+
+/// Build the admission policy a server execution runs under. `slack` is
+/// the serving batching window (`max_wait`).
+pub fn admission_for(kind: AdmissionKind, slack: Duration) -> Box<dyn AdmissionPolicy> {
+    match kind {
+        AdmissionKind::OldestFirst => Box::new(OldestFirst { slack }),
+        AdmissionKind::Budget(budget) => Box::new(AbsorbBudget { budget }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(in_flight: usize, parked: usize, queued: usize) -> SizingCtx {
+        SizingCtx { in_flight, parked, queued, passes: 0, oldest_wait_passes: 0, dim: 48, pass_secs: None, passes_per_job: None }
+    }
+
+    #[test]
+    fn fit_and_fill_rules() {
+        let exports = [1usize, 4];
+        assert_eq!(fit_size(&exports, 1), 1);
+        assert_eq!(fit_size(&exports, 2), 4);
+        assert_eq!(fit_size(&exports, 3), 4);
+        assert_eq!(fit_size(&exports, 4), 4);
+        assert_eq!(fit_size(&exports, 9), 4, "beyond the family: the largest export");
+        assert_eq!(fit_size(&exports, 0), 1, "need floors at 1");
+        assert_eq!(fill_size(&exports, 1), 1);
+        assert_eq!(fill_size(&exports, 3), 1, "cannot fill b=4: run full b=1 batches");
+        assert_eq!(fill_size(&exports, 4), 4);
+        assert_eq!(fill_size(&exports, 9), 4);
+        assert_eq!(fill_size(&[4, 8], 2), 4, "nothing fillable: the smallest export");
+    }
+
+    #[test]
+    fn occupancy_and_latency_policies_follow_their_rules() {
+        let exports = [1usize, 2, 4];
+        for need in 1..9 {
+            let c = ctx(0, 0, need);
+            assert_eq!(OccupancyFirst.choose(&exports, &c), fill_size(&exports, need), "need {need}");
+            assert_eq!(LatencyLean.choose(&exports, &c), fit_size(&exports, need), "need {need}");
+        }
+        assert_eq!(OccupancyFirst.name(), "occupancy");
+        assert_eq!(LatencyLean.name(), "latency");
+    }
+
+    #[test]
+    fn slo_hybrid_interpolates_between_fill_and_fit() {
+        let exports = [1usize, 4];
+        // 3 jobs on {1, 4}: fill leaves 2 waiting through 2 cohorts.
+        let c = ctx(1, 0, 2);
+        let loose = SloHybrid { target: SloTarget::Passes(1e9) };
+        let tight = SloHybrid { target: SloTarget::Passes(0.5) };
+        assert_eq!(loose.choose(&exports, &c), 1, "within a loose target the hybrid keeps full b=1 batches");
+        assert_eq!(tight.choose(&exports, &c), 4, "a tight target forces the up-shift");
+        // A filled export never up-shifts: nobody fit would seat waits.
+        let full = ctx(4, 0, 0);
+        assert_eq!(tight.choose(&exports, &full), 4);
+        let one = ctx(1, 0, 0);
+        assert_eq!(tight.choose(&exports, &one), 1, "a single job has no queue to protect");
+    }
+
+    #[test]
+    fn slo_hybrid_uses_conservative_prior_then_ewma() {
+        let exports = [1usize, 4];
+        // Cold (no completions): prior is d passes per waiting cohort —
+        // 2 cohorts * 48 = 96 projected passes.
+        let cold = ctx(1, 0, 2);
+        let mid = SloHybrid { target: SloTarget::Passes(50.0) };
+        assert_eq!(mid.choose(&exports, &cold), 4, "cold schedules err toward the SLO");
+        // Warm: jobs converge in ~3 passes, projection 6 <= 50.
+        let warm = SizingCtx { passes_per_job: Some(3.0), ..cold };
+        assert_eq!(mid.choose(&exports, &warm), 1, "a fast-converging schedule keeps occupancy sizing");
+        // Accrued wait counts against the target too.
+        let stale = SizingCtx { oldest_wait_passes: 60, ..warm };
+        assert_eq!(mid.choose(&exports, &stale), 4, "jobs already waiting past the target force the up-shift");
+    }
+
+    #[test]
+    fn slo_hybrid_does_not_thrash_seated_jobs() {
+        // Anti-oscillation: right after an SLO up-shift seats everyone,
+        // the evictees' accrued wait is zero and the convergence EWMA may
+        // badly underestimate a seated straggler — an optimistic
+        // projection would park-and-reseat the same jobs in a loop. A
+        // down-shift that would evict seated jobs must therefore be
+        // judged against the worst-case prior, not the EWMA.
+        let exports = [1usize, 4];
+        let mid = SloHybrid { target: SloTarget::Passes(50.0) };
+        // 3 jobs, all seated (post-up-shift), EWMA says jobs are fast:
+        // parking 2 of them projects 2 cohorts * d=48 = 96 > 50 — stay up.
+        let seated = SizingCtx { passes_per_job: Some(3.0), ..ctx(3, 0, 0) };
+        assert_eq!(mid.choose(&exports, &seated), 4, "never re-park seated jobs on an optimistic EWMA");
+        // The same EWMA with nobody evicted (1 seated, 2 queued) still
+        // projects from the EWMA and keeps occupancy sizing.
+        let queued = SizingCtx { passes_per_job: Some(3.0), ..ctx(1, 0, 2) };
+        assert_eq!(mid.choose(&exports, &queued), 1, "fresh admissions still size by the EWMA");
+        // A loose target (above d-scale delays) may still park seated
+        // jobs — that is what keeps it equivalent to occupancy-first.
+        let loose = SloHybrid { target: SloTarget::Passes(1e9) };
+        assert_eq!(loose.choose(&exports, &seated), 1, "loose targets keep occupancy-first economics");
+    }
+
+    #[test]
+    fn slo_wall_target_upshifts_without_an_estimate() {
+        let exports = [1usize, 4];
+        let c = ctx(1, 0, 2);
+        let p = SloHybrid { target: SloTarget::Wall(Duration::from_millis(100)) };
+        assert_eq!(p.choose(&exports, &c), 4, "no pass-time estimate: protect the SLO");
+        let warm = SizingCtx { pass_secs: Some(1e-6), passes_per_job: Some(2.0), ..c };
+        assert_eq!(p.choose(&exports, &warm), 1, "microsecond passes project far under a 100ms target");
+        let slow = SizingCtx { pass_secs: Some(0.5), passes_per_job: Some(2.0), ..c };
+        assert_eq!(p.choose(&exports, &slow), 4, "half-second passes blow a 100ms target");
+    }
+
+    #[test]
+    fn oldest_first_admission_is_age_ordered() {
+        let p = OldestFirst { slack: Duration::from_millis(10) };
+        let base = AdmissionCtx { jobs: 2, absorbed: 0, age: Duration::from_millis(5), oldest_other_age: None };
+        assert!(p.admit(&base), "nothing else waits: absorb freely");
+        let younger_other = AdmissionCtx { oldest_other_age: Some(Duration::from_millis(3)), ..base };
+        assert!(p.admit(&younger_other), "the arrival is older than the neighbour");
+        let slightly_older = AdmissionCtx { oldest_other_age: Some(Duration::from_millis(12)), ..base };
+        assert!(p.admit(&slightly_older), "inside the slack the arrival still absorbs");
+        let much_older = AdmissionCtx { oldest_other_age: Some(Duration::from_millis(40)), ..base };
+        assert!(!p.admit(&much_older), "a starved neighbour blocks absorption");
+    }
+
+    #[test]
+    fn absorb_budget_admission_caps_total_jobs() {
+        let p = AbsorbBudget { budget: 8 };
+        let go = AdmissionCtx { jobs: 4, absorbed: 7, age: Duration::ZERO, oldest_other_age: Some(Duration::from_secs(9)) };
+        assert!(p.admit(&go), "budget admission ignores neighbour ages");
+        let stop = AdmissionCtx { absorbed: 8, ..go };
+        assert!(!p.admit(&stop), "an exhausted budget stops absorbing");
+    }
+
+    #[test]
+    fn kind_parsing_and_builders() {
+        assert_eq!(PolicyKind::parse("occupancy"), Some(PolicyKind::Occupancy));
+        assert_eq!(PolicyKind::parse("fill"), Some(PolicyKind::Occupancy));
+        assert_eq!(PolicyKind::parse("latency"), Some(PolicyKind::Latency));
+        assert_eq!(PolicyKind::parse("fit"), Some(PolicyKind::Latency));
+        assert_eq!(PolicyKind::parse("slo"), Some(PolicyKind::Slo));
+        assert_eq!(PolicyKind::parse("wat"), None);
+        for kind in [PolicyKind::Occupancy, PolicyKind::Latency, PolicyKind::Slo] {
+            assert_eq!(PolicyKind::parse(kind.label()), Some(kind), "label must round-trip");
+            assert_eq!(sizing_for(kind, Duration::from_millis(50)).name(), kind.label());
+        }
+        assert_eq!(admission_for(AdmissionKind::OldestFirst, Duration::ZERO).name(), "oldest-first");
+        assert_eq!(admission_for(AdmissionKind::Budget(4), Duration::ZERO).name(), "budget");
+    }
+}

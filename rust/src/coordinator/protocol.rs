@@ -12,10 +12,16 @@
 //!
 //! `info` and `metrics` report the engine-worker pool: `engine_workers`
 //! (shard count) and a `workers` array of per-worker gauges — queue depth,
-//! occupancy, loaded engines, batch/sample/error counters. `sample`
-//! responses carry `arm_calls` (batched ARM invocations for the whole
-//! group), `calls_per_job` (passes × batch / jobs — the batched cost
-//! model) and `calls_pct` (`calls_per_job` as % of the baseline's d).
+//! occupancy, loaded engines, batch/sample/error counters, and the
+//! policy-layer gauges (per-policy schedule counters, absorption
+//! counters, queue-age histogram). `sample` responses carry `arm_calls`
+//! (batched ARM invocations for the whole group), `calls_per_job`
+//! (passes × batch / jobs — the batched cost model) and `calls_pct`
+//! (`calls_per_job` as % of the baseline's d).
+//!
+//! The full wire contract — field tables, error and EOF semantics, and a
+//! worked request/response example per method — lives in
+//! `docs/PROTOCOL.md`.
 
 use crate::coordinator::config::Method;
 use crate::substrate::json::{self, Value};

@@ -23,7 +23,18 @@
 //! larger exported batch and the queued jobs are admitted into the freed
 //! capacity. Placement irrelevance (noise keyed by job id) is what makes
 //! both migrations provably exact.
+//!
+//! *Which* export a schedule runs on is not decided here: every resize
+//! consults a pluggable [`SizingPolicy`](crate::coordinator::policy::SizingPolicy)
+//! (occupancy-first, latency-lean, or the SLO-driven hybrid — see
+//! [`crate::coordinator::policy`]). The closed-queue entry points pin the
+//! latency-lean policy; [`run_elastic_family`] defaults to occupancy-first
+//! and [`run_elastic_family_policy`] takes the policy explicitly. Sizing
+//! only moves work around, so samples are bitwise identical under every
+//! policy (`policy-exactness` in `tests/sampler_props.rs`).
+#![deny(missing_docs)]
 
+use crate::coordinator::policy::{self, LatencyLean, OccupancyFirst, SizingCtx, SizingPolicy};
 use crate::sampler::forecast::Forecaster;
 use crate::sampler::noise::JobNoise;
 use crate::sampler::predictive::{PredictiveSampler, SlotState};
@@ -31,6 +42,10 @@ use crate::sampler::{JobResult, StepModel};
 use crate::substrate::timer::Timer;
 use anyhow::{ensure, Result};
 use std::collections::VecDeque;
+
+/// Smoothing factor for the schedule's per-pass wall-time and
+/// passes-per-job estimates (the SLO policy's projection inputs).
+const EWMA_ALPHA: f64 = 0.2;
 
 /// Outcome of scheduling `n_jobs` through a fixed-size batch engine.
 #[derive(Clone, Debug)]
@@ -41,6 +56,7 @@ pub struct ScheduleReport {
     pub total_passes: usize,
     /// Mean active slots per pass (≤ batch size).
     pub occupancy: f64,
+    /// Wall-clock seconds the schedule ran for.
     pub wall_secs: f64,
     /// ARM calls per job (slot-passes / n — the batched cost model —
     /// for comparison against the paper's batch-1 rate).
@@ -56,13 +72,19 @@ pub struct ScheduleReport {
     pub upshifts: usize,
     /// Smallest batch size the schedule executed on.
     pub min_batch: usize,
+    /// Label of the sizing policy the schedule ran under (see
+    /// [`crate::coordinator::policy::SizingPolicy::name`]; `"sync"` for
+    /// the synchronous baseline).
+    pub policy: &'static str,
 }
 
 /// A job admitted to a live schedule: its noise block plus an opaque tag
 /// the feed uses to route the completed result (the serving layer packs a
 /// request id and per-request job index into it).
 pub struct LiveJob {
+    /// Caller-owned routing tag, echoed back through [`JobFeed::complete`].
     pub tag: u64,
+    /// The job's reparametrization noise block (keys its identity).
     pub noise: JobNoise,
 }
 
@@ -77,7 +99,9 @@ pub struct LiveStats {
     pub slot_passes: usize,
     /// Jobs completed so far (including the one being delivered).
     pub completed: usize,
+    /// Up-shifts (migrations to a larger exported batch) so far.
     pub upshifts: usize,
+    /// Down-shifts (migrations to a smaller exported batch) so far.
     pub downshifts: usize,
 }
 
@@ -114,15 +138,28 @@ impl JobFeed for CollectFeed {
 pub struct TickBurstFeed {
     bursts: VecDeque<(usize, Vec<LiveJob>)>,
     polls: usize,
+    /// Completed results, indexed by tag.
     pub results: Vec<Option<JobResult>>,
     /// Stats snapshot delivered with each completion, in order.
     pub completions: Vec<LiveStats>,
+    /// Pass count at which each tag's job converged — with the burst tick
+    /// it arrived at, a deterministic per-job latency in ARM passes (the
+    /// policy bench's latency metric).
+    pub completed_pass: Vec<Option<usize>>,
 }
 
 impl TickBurstFeed {
+    /// A feed over jobs tagged `0..n_jobs`, releasing `bursts` (sorted by
+    /// tick) as the schedule polls.
     pub fn new(n_jobs: usize, bursts: Vec<(usize, Vec<LiveJob>)>) -> TickBurstFeed {
         debug_assert!(bursts.windows(2).all(|w| w[0].0 <= w[1].0), "bursts must be sorted by tick");
-        TickBurstFeed { bursts: bursts.into(), polls: 0, results: (0..n_jobs).map(|_| None).collect(), completions: Vec::new() }
+        TickBurstFeed {
+            bursts: bursts.into(),
+            polls: 0,
+            results: (0..n_jobs).map(|_| None).collect(),
+            completions: Vec::new(),
+            completed_pass: (0..n_jobs).map(|_| None).collect(),
+        }
     }
 }
 
@@ -139,6 +176,7 @@ impl JobFeed for TickBurstFeed {
     fn complete(&mut self, tag: u64, result: JobResult, stats: &LiveStats) {
         self.results[tag as usize] = Some(result);
         self.completions.push(*stats);
+        self.completed_pass[tag as usize] = Some(stats.passes);
     }
 }
 
@@ -204,7 +242,7 @@ pub fn run_continuous_family_mode<M: StepModel>(
 ) -> Result<ScheduleReport> {
     let initial: Vec<LiveJob> = noises.into_iter().enumerate().map(|(id, noise)| LiveJob { tag: id as u64, noise }).collect();
     let mut feed = CollectFeed { results: (0..initial.len()).map(|_| None).collect() };
-    let mut rep = schedule_family(models, forecaster, initial, &mut feed, use_plan, false)?;
+    let mut rep = schedule_family(models, forecaster, initial, &mut feed, use_plan, &LatencyLean)?;
     rep.results = feed.results.into_iter().map(|r| r.expect("all jobs complete")).collect();
     Ok(rep)
 }
@@ -219,31 +257,49 @@ pub fn run_continuous_family_mode<M: StepModel>(
 ///
 /// Unlike the closed-queue scheduler (which sizes for latency: the
 /// smallest exported batch that fits *everything*, even half-empty), the
-/// live scheduler sizes for **occupancy**: the largest exported batch the
-/// runnable jobs can completely fill, **parking** any excess in-flight
-/// slots (state and all) to resume ahead of fresh admissions. Every pass
-/// therefore runs a full batch, which is exactly the paper's §4.1 target
-/// of batched sampling at the batch-size-1 ARM-call rate.
+/// live scheduler defaults to sizing for **occupancy**: the largest
+/// exported batch the runnable jobs can completely fill, **parking** any
+/// excess in-flight slots (state and all) to resume ahead of fresh
+/// admissions. Every pass therefore runs a full batch, which is exactly
+/// the paper's §4.1 target of batched sampling at the batch-size-1
+/// ARM-call rate. Use [`run_elastic_family_policy`] to size under a
+/// different policy.
 pub fn run_elastic_family<M: StepModel>(
     models: &[&M],
     forecaster: Box<dyn Forecaster>,
     initial: Vec<LiveJob>,
     feed: &mut dyn JobFeed,
 ) -> Result<ScheduleReport> {
-    schedule_family(models, forecaster, initial, feed, true, true)
+    schedule_family(models, forecaster, initial, feed, true, &OccupancyFirst)
 }
 
-/// The one scheduling loop under every batching mode. `occupancy_sizing`
-/// selects the resize policy: `false` = the closed-queue rule (smallest
-/// export ≥ runnable jobs; never parks), `true` = the live elastic rule
-/// (largest export the runnable jobs fill; excess in-flight slots park).
+/// As [`run_elastic_family`], sizing every resize decision with an
+/// explicit [`SizingPolicy`] (the serving layer builds one from
+/// `ServeConfig::policy` / `--policy`). Sizing moves work around but
+/// never changes samples: every policy is property-tested bitwise
+/// identical to the batch-1 references (`policy-exactness`).
+pub fn run_elastic_family_policy<M: StepModel>(
+    models: &[&M],
+    forecaster: Box<dyn Forecaster>,
+    initial: Vec<LiveJob>,
+    feed: &mut dyn JobFeed,
+    sizing: &dyn SizingPolicy,
+) -> Result<ScheduleReport> {
+    schedule_family(models, forecaster, initial, feed, true, sizing)
+}
+
+/// The one scheduling loop under every batching mode. `sizing` decides
+/// which exported batch each pass runs on: the closed-queue entry points
+/// pass [`LatencyLean`] (smallest export ≥ runnable jobs; never parks),
+/// the live entry points pass the caller's policy (the occupancy-first
+/// default parks excess in-flight slots to keep batches full).
 fn schedule_family<M: StepModel>(
     models: &[&M],
     forecaster: Box<dyn Forecaster>,
     initial: Vec<LiveJob>,
     feed: &mut dyn JobFeed,
     use_plan: bool,
-    occupancy_sizing: bool,
+    sizing: &dyn SizingPolicy,
 ) -> Result<ScheduleReport> {
     ensure!(!models.is_empty(), "empty model family");
     // Batch sizes ascending. The family must be one model at different
@@ -263,35 +319,49 @@ fn schedule_family<M: StepModel>(
     // rather than panicking mid-schedule at the first downshift.
     let fores_agree = models.iter().all(|m| m.t_fore() == models[0].t_fore());
     ensure!(fores_agree || !forecaster.reads_fore(), "fore-reading policy over a family with mixed t_fore");
-    // Two sizing rules over the ascending exports. `fit`: smallest batch
-    // that holds `need` jobs (largest otherwise) — the closed-queue rule,
-    // which favors tail latency by keeping every runnable job in a slot.
-    // `fill`: largest batch `need` jobs can completely occupy — the live
-    // rule, which favors the batched ARM-call rate and parks the excess.
-    let fit = |need: usize| -> usize { order.iter().copied().find(|&i| models[i].batch() >= need).unwrap_or(*order.last().unwrap()) };
-    let fill = |need: usize| -> usize { order.iter().copied().filter(|&i| models[i].batch() <= need).last().unwrap_or(order[0]) };
-    let choose = |need: usize| -> usize {
-        if occupancy_sizing {
-            fill(need.max(1))
-        } else {
-            fit(need.max(1))
-        }
+    // Exported batch sizes, ascending, parallel to `order`. The sizing
+    // policy picks from these; a value outside the family (a buggy custom
+    // policy) degrades to the fit rule rather than panicking.
+    let exports: Vec<usize> = order.iter().map(|&i| models[i].batch()).collect();
+    let dim = models[0].dim();
+    let index_of = |batch: usize| -> usize {
+        let pos = exports
+            .iter()
+            .position(|&e| e == batch)
+            .unwrap_or_else(|| exports.iter().position(|&e| e == policy::fit_size(&exports, batch)).expect("fit_size returns an export"));
+        order[pos]
     };
 
     let timer = Timer::start();
-    let mut queue: VecDeque<LiveJob> = initial.into();
+    // Queued fresh jobs, each with the pass count at its arrival (the
+    // policies' wait gauge).
+    let mut queue: VecDeque<(LiveJob, usize)> = initial.into_iter().map(|j| (j, 0)).collect();
     // Mid-flight jobs lifted out when the batch shrinks below the
     // in-flight count (occupancy sizing only); resumed, oldest first,
-    // ahead of fresh admissions.
-    let mut parked: VecDeque<(u64, SlotState)> = VecDeque::new();
-    let mut cur = choose(queue.len());
+    // ahead of fresh admissions. Each carries the pass it parked at.
+    let mut parked: VecDeque<(u64, SlotState, usize)> = VecDeque::new();
+    let mut passes = 0usize;
+    // Rolling estimates the SLO policy projects from: wall-seconds per
+    // ARM pass, and passes a job needs to converge.
+    let mut pass_secs: Option<f64> = None;
+    let mut passes_per_job: Option<f64> = None;
+    let ctx0 = SizingCtx {
+        in_flight: 0,
+        parked: 0,
+        queued: queue.len(),
+        passes: 0,
+        oldest_wait_passes: 0,
+        dim,
+        pass_secs,
+        passes_per_job,
+    };
+    let mut cur = index_of(sizing.choose(&exports, &ctx0));
     let mut ps = PredictiveSampler::new(models[cur], forecaster);
     ps.set_plan_mode(use_plan);
     let mut slot_job: Vec<Option<u64>> = vec![None; models[cur].batch()];
     let mut completed = 0usize;
     let mut active_accum = 0usize;
     let mut capacity_accum = 0usize;
-    let mut passes = 0usize;
     let mut positions = 0usize;
     let mut downshifts = 0usize;
     let mut upshifts = 0usize;
@@ -299,17 +369,34 @@ fn schedule_family<M: StepModel>(
 
     loop {
         // Merge live arrivals before deciding whether anything is left.
-        queue.extend(feed.poll());
+        for job in feed.poll() {
+            queue.push_back((job, passes));
+        }
         let in_flight = slot_job.iter().filter(|j| j.is_some()).count();
         let runnable = in_flight + parked.len() + queue.len();
         if runnable == 0 {
             break;
         }
-        // Elastic resize. Larger than the current batch (the live queue
-        // deepened) => up-shift; smaller (the queue drained) =>
-        // down-shift. Both carry each job's full mid-flight state —
-        // migrated or parked — so no pass repeats and no sample changes.
-        let target = choose(runnable);
+        // Elastic resize, policy-driven. Larger than the current batch
+        // (the live queue deepened) => up-shift; smaller (the queue
+        // drained) => down-shift. Both carry each job's full mid-flight
+        // state — migrated or parked — so no pass repeats and no sample
+        // changes.
+        let waiting_since = match (parked.front().map(|p| p.2), queue.front().map(|q| q.1)) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        let ctx = SizingCtx {
+            in_flight,
+            parked: parked.len(),
+            queued: queue.len(),
+            passes,
+            oldest_wait_passes: waiting_since.map(|at| passes - at).unwrap_or(0),
+            dim,
+            pass_secs,
+            passes_per_job,
+        };
+        let target = index_of(sizing.choose(&exports, &ctx));
         if models[target].batch() != models[cur].batch() {
             if models[target].batch() > models[cur].batch() {
                 upshifts += 1;
@@ -336,16 +423,16 @@ fn schedule_family<M: StepModel>(
             }
             // A shrink below the in-flight count parks the rest (FIFO by
             // park time behind anything already parked).
-            parked.extend(moved);
+            parked.extend(moved.into_iter().map(|(job, st)| (job, st, passes)));
         }
         // Fill every free slot: parked jobs resume first, then fresh
         // admissions from the queue.
         for (s, sj) in slot_job.iter_mut().enumerate() {
             if sj.is_none() {
-                if let Some((job, st)) = parked.pop_front() {
+                if let Some((job, st, _)) = parked.pop_front() {
                     ps.install_slot(s, st);
                     *sj = Some(job);
-                } else if let Some(job) = queue.pop_front() {
+                } else if let Some((job, _)) = queue.pop_front() {
                     let got = ps.admit(job.noise).expect("free slot");
                     debug_assert_eq!(got, s);
                     *sj = Some(job.tag);
@@ -354,14 +441,26 @@ fn schedule_family<M: StepModel>(
         }
         active_accum += slot_job.iter().filter(|j| j.is_some()).count();
         capacity_accum += models[cur].batch();
+        let pass_timer = Timer::start();
         ps.step()?;
+        let spent = pass_timer.secs();
+        pass_secs = Some(match pass_secs {
+            None => spent,
+            Some(p) => p + EWMA_ALPHA * (spent - p),
+        });
         passes += 1;
         for (s, sj) in slot_job.iter_mut().enumerate() {
             if sj.is_some() && ps.slot_done(s) {
                 let tag = sj.take().unwrap();
                 completed += 1;
+                let result = ps.take_result(s).expect("done slot");
+                let iters = result.iterations as f64;
+                passes_per_job = Some(match passes_per_job {
+                    None => iters,
+                    Some(p) => p + EWMA_ALPHA * (iters - p),
+                });
                 let stats = LiveStats { passes, slot_passes: capacity_accum, completed, upshifts, downshifts };
-                feed.complete(tag, ps.take_result(s).expect("done slot"), &stats);
+                feed.complete(tag, result, &stats);
             }
         }
     }
@@ -377,6 +476,7 @@ fn schedule_family<M: StepModel>(
         downshifts,
         upshifts,
         min_batch,
+        policy: sizing.name(),
     })
 }
 
@@ -423,6 +523,7 @@ pub fn run_sync_chunks<M: StepModel>(model: &M, forecaster: Box<dyn Forecaster>,
         downshifts: 0,
         upshifts: 0,
         min_batch: b,
+        policy: "sync",
     })
 }
 
@@ -665,5 +766,75 @@ mod tests {
                 ps.take_result(0).unwrap().x
             })
             .collect()
+    }
+
+    #[test]
+    fn sizing_policy_extremes_reproduce_fill_and_fit_trajectories() {
+        // The policy refactor must be a pure extraction: an SLO hybrid
+        // with an infinite target is occupancy-first pass for pass, and
+        // one with a zero target is latency-lean pass for pass — same
+        // pass counts, same calls/job, same shifts, same samples.
+        use crate::coordinator::policy::{LatencyLean, OccupancyFirst, SizingPolicy, SloHybrid, SloTarget};
+        let m4 = MockArm::new(4, 3, 6, 4, 2, 2.5, 21);
+        let m1 = MockArm { batch: 1, ..m4.clone() };
+        let family: Vec<&MockArm> = vec![&m1, &m4];
+        let (d, k) = (m4.dim(), 4);
+        let n = 9;
+        let run = |sizing: &dyn SizingPolicy| -> (ScheduleReport, Vec<Vec<i32>>) {
+            let initial = live_jobs(0..3, 7, d, k);
+            let bursts = vec![(2, live_jobs(3..n, 7, d, k))];
+            let mut feed = TickBurstFeed::new(n, bursts);
+            let rep = run_elastic_family_policy(&family, Box::new(FpiReuse), initial, &mut feed, sizing).unwrap();
+            (rep, feed.results.into_iter().map(|r| r.expect("job completed").x).collect())
+        };
+        let (occ, occ_x) = run(&OccupancyFirst);
+        let (fit, fit_x) = run(&LatencyLean);
+        let (loose, loose_x) = run(&SloHybrid { target: SloTarget::Passes(1e12) });
+        let (tight, tight_x) = run(&SloHybrid { target: SloTarget::Passes(0.0) });
+        assert_eq!(occ_x, fit_x, "sizing policy must never change a sample");
+        assert_eq!(occ_x, loose_x);
+        assert_eq!(occ_x, tight_x);
+        assert_eq!(occ.policy, "occupancy");
+        assert_eq!(fit.policy, "latency");
+        assert_eq!(loose.policy, "slo");
+        for (a, b, what) in [(&loose, &occ, "loose-SLO vs occupancy"), (&tight, &fit, "tight-SLO vs latency")] {
+            assert_eq!(a.total_passes, b.total_passes, "{what}: pass count");
+            assert_eq!(a.upshifts, b.upshifts, "{what}: upshifts");
+            assert_eq!(a.downshifts, b.downshifts, "{what}: downshifts");
+            assert_eq!(a.min_batch, b.min_batch, "{what}: min_batch");
+            assert!((a.calls_per_job - b.calls_per_job).abs() < 1e-9, "{what}: calls/job {} vs {}", a.calls_per_job, b.calls_per_job);
+        }
+        // The extremes genuinely differ on this trickle (occupancy parks
+        // for full batches, fit seats everyone) — otherwise the test
+        // proves nothing.
+        assert!(occ.occupancy > fit.occupancy - 1e-9, "occupancy sizing exists to keep batches full");
+        assert!(occ.calls_per_job <= fit.calls_per_job + 1e-9, "occupancy sizing must not spend more slot-passes than fit");
+    }
+
+    #[test]
+    fn custom_sizing_policy_out_of_family_degrades_to_fit() {
+        // A policy returning a batch size the family does not export must
+        // degrade to the fit rule (round up), not panic.
+        use crate::coordinator::policy::{SizingCtx, SizingPolicy};
+        struct Wild;
+        impl SizingPolicy for Wild {
+            fn name(&self) -> &'static str {
+                "wild"
+            }
+            fn choose(&self, _exports: &[usize], ctx: &SizingCtx) -> usize {
+                ctx.need() * 3 + 1 // never an export
+            }
+        }
+        let m4 = MockArm::new(4, 2, 5, 3, 1, 2.0, 5);
+        let m1 = MockArm { batch: 1, ..m4.clone() };
+        let family: Vec<&MockArm> = vec![&m1, &m4];
+        let (d, k) = (m4.dim(), 3);
+        let mut feed = TickBurstFeed::new(2, Vec::new());
+        let rep = run_elastic_family_policy(&family, Box::new(FpiReuse), live_jobs(0..2, 1, d, k), &mut feed, &Wild).unwrap();
+        assert_eq!(rep.policy, "wild");
+        let refs = reference_samples_small(2, 1, &m4);
+        for (id, r) in feed.results.iter().enumerate() {
+            assert_eq!(r.as_ref().expect("job completed").x, refs[id], "job {id}");
+        }
     }
 }

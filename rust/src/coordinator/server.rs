@@ -33,7 +33,12 @@
 //!   queue between ARM passes ([`crate::coordinator::engine::Engine::sample_elastic`]),
 //!   up-shifts onto a larger exported batch when the queue deepens, and
 //!   answers each request the moment its last job converges — instead of
-//!   stashing arrivals for the next batching window.
+//!   stashing arrivals for the next batching window. How the schedule
+//!   *sizes* those batches and *which* arrivals it absorbs are pluggable
+//!   policies ([`crate::coordinator::policy`]): `cfg.policy`/`cfg.slo`
+//!   select occupancy-first, latency-lean, or SLO-hybrid sizing, and
+//!   `cfg.admission` gates absorption (age-based oldest-first fairness
+//!   by default, so a hot group cannot starve queued neighbours).
 //! * **Group stealing** — a worker whose queue drains pulls a whole
 //!   queued `(model, method)` group from the most-loaded worker. Groups
 //!   move atomically (every queued request at once, order preserved,
@@ -51,6 +56,7 @@
 
 use crate::coordinator::config::{Method, ServeConfig};
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::{self, AdmissionCtx, AdmissionPolicy};
 use crate::coordinator::protocol::{self, Request};
 use crate::coordinator::router::Router;
 use crate::coordinator::scheduler::{self, JobFeed, LiveJob, LiveStats};
@@ -110,7 +116,13 @@ struct PendingSample {
 /// Work queued to one engine worker.
 enum Work {
     Sample(PendingSample),
-    Eval { model: String, reply: Reply },
+    Eval {
+        model: String,
+        reply: Reply,
+        /// Dispatcher admission time — age-based admission must see a
+        /// queued eval too, or a hot absorbing group could starve it.
+        admitted: Instant,
+    },
 }
 
 /// Everything routing-related under one lock: per-worker FIFO queues, the
@@ -362,7 +374,7 @@ fn dispatch_loop(manifest: Manifest, workers: Vec<WorkerHandle>, pool: Arc<Pool>
                             continue;
                         };
                         workers[w].load.fetch_add(EVAL_LOAD, Ordering::SeqCst);
-                        st.queues[w].push_back(Work::Eval { model, reply });
+                        st.queues[w].push_back(Work::Eval { model, reply, admitted: Instant::now() });
                         drop(st);
                         pool.cv.notify_all();
                     }
@@ -653,7 +665,7 @@ fn worker_loop(
             st = pool.cv.wait_timeout(st, Duration::from_millis(100)).expect("pool lock poisoned").0;
         };
         match head {
-            Work::Eval { model, reply } => {
+            Work::Eval { model, reply, .. } => {
                 drop(st);
                 if stole {
                     metrics.lock().unwrap().record_steal();
@@ -680,7 +692,7 @@ fn worker_loop(
                     // single-worker server with no thief to rescue them,
                     // they'd wait out the whole group execution too).
                     while let Some(pos) = st.queues[widx].iter().position(|it| matches!(it, Work::Eval { .. })) {
-                        let Some(Work::Eval { model, reply }) = st.queues[widx].remove(pos) else { unreachable!("just matched") };
+                        let Some(Work::Eval { model, reply, .. }) = st.queues[widx].remove(pos) else { unreachable!("just matched") };
                         drop(st);
                         handle_eval(&mut router, &model, &reply, &metrics, &load);
                         engines_loaded.store(router.loaded(), Ordering::SeqCst);
@@ -704,12 +716,20 @@ fn worker_loop(
                     st = pool.cv.wait_timeout(st, deadline - now).expect("pool lock poisoned").0;
                 }
                 drop(st);
-                if stole {
-                    metrics.lock().unwrap().record_steal();
+                {
+                    // The window just closed: sample each request's queue
+                    // age (admission → execution) into the age histogram.
+                    let mut m = metrics.lock().unwrap();
+                    if stole {
+                        m.record_steal();
+                    }
+                    for p in &group {
+                        m.record_admission_age(p.admitted.elapsed());
+                    }
                 }
                 let continuous = cfg.continuous && key.1 != Method::Baseline;
                 if continuous && cfg.elastic {
-                    execute_elastic_group(&mut router, &metrics, group, &load, &pool, widx, cfg.max_batch);
+                    execute_elastic_group(&mut router, &metrics, group, &load, &pool, widx, &cfg);
                 } else {
                     execute_group(&mut router, &metrics, group, &load, continuous);
                 }
@@ -788,7 +808,14 @@ fn execute_group(router: &mut Router, metrics: &Mutex<Metrics>, group: Vec<Pendi
             let wall = timer.secs();
             let dim = results.first().map(|r| r.x.len()).unwrap_or(1);
             let calls_pct = scheduler::calls_pct_of(calls_per_job, dim);
-            metrics.lock().unwrap().record_batch(total_jobs, calls, calls_pct, wall);
+            {
+                let mut m = metrics.lock().unwrap();
+                m.record_batch(total_jobs, calls, calls_pct, wall);
+                // The closed continuous path schedules under the
+                // latency-lean (fit) rule; the chunked path is the
+                // synchronous baseline.
+                m.record_policy(if continuous { "latency" } else { "sync" });
+            }
             let mut offset = 0usize;
             for p in group {
                 let mine = &results[offset..offset + p.n];
@@ -873,11 +900,38 @@ struct ServeFeed<'a> {
     dim: usize,
     categories: usize,
     load: &'a AtomicUsize,
-    /// Mid-flight job admissions left before this schedule stops
-    /// absorbing arrivals (fairness: a hot group must not starve other
-    /// groups queued on this worker forever; whatever it leaves queued
-    /// forms a normal next window — or gets stolen).
-    absorb_budget: usize,
+    /// Decides whether an arrival of this group joins the live schedule
+    /// or stays queued for the next window (fairness: a hot group must
+    /// not starve other groups queued on this worker; whatever it leaves
+    /// queued forms a normal next window — or gets stolen). Denial only
+    /// defers — samples are identical either way.
+    admission: Box<dyn AdmissionPolicy>,
+    /// Jobs absorbed mid-flight so far (the initial window not counted).
+    absorbed_jobs: usize,
+    metrics: &'a Mutex<Metrics>,
+    /// Sizing-policy label for the per-policy metric counters.
+    policy_label: &'static str,
+    /// Completed jobs between mid-schedule metric flushes. Age-based
+    /// admission puts no bound on a schedule's lifetime (a hot group on
+    /// an idle server absorbs forever), so batch/latency/policy metrics
+    /// are flushed as windows every `flush_every` completions instead of
+    /// only when the schedule ends — otherwise the `metrics` op would
+    /// report an eternally-busy server as idle.
+    flush_every: usize,
+    /// Jobs / slot-passes / passes already flushed to metrics.
+    flushed_jobs: usize,
+    flushed_slot_passes: usize,
+    flushed_passes: usize,
+    /// Wall-clock of the current metrics window.
+    window_timer: Timer,
+    /// Absorption stops once this many requests have joined the schedule
+    /// — a hygiene bound, not a fairness knob: every request leaves a
+    /// small routing stub in `reqs` for its tags, so an unboundedly
+    /// long-lived schedule would leak. When the cap is hit the schedule
+    /// drains and ends, replies flush, and the queued backlog opens a
+    /// fresh window immediately (windows are keyed to admission time,
+    /// so ending costs no extra `max_wait`).
+    absorb_cap: usize,
     /// Requests with jobs in the schedule; tags pack (request index,
     /// job index within the request).
     reqs: Vec<FeedReq>,
@@ -889,19 +943,33 @@ struct ServeFeed<'a> {
 }
 
 impl<'a> ServeFeed<'a> {
-    fn new(pool: &'a Pool, widx: usize, key: GroupKey, dim: usize, categories: usize, load: &'a AtomicUsize, absorb_budget: usize) -> ServeFeed<'a> {
-        ServeFeed {
-            pool,
-            widx,
-            key,
-            dim,
-            categories,
-            load,
-            absorb_budget,
-            reqs: Vec::new(),
-            deferred: Vec::new(),
-            completed_jobs: 0,
-            last_stats: None,
+    /// Flush the metrics window ending at `stats`: one `record_batch`
+    /// (+ per-policy count) covering everything completed since the last
+    /// flush. No-op when the window is empty.
+    fn flush_window(&mut self, stats: &LiveStats) {
+        let jobs = self.completed_jobs - self.flushed_jobs;
+        if jobs == 0 {
+            return;
+        }
+        let slot_passes = stats.slot_passes - self.flushed_slot_passes;
+        let passes = stats.passes - self.flushed_passes;
+        let calls_per_job = slot_passes as f64 / jobs as f64;
+        let wall = self.window_timer.secs();
+        {
+            let mut m = self.metrics.lock().expect("metrics lock");
+            m.record_batch(jobs, passes, scheduler::calls_pct_of(calls_per_job, self.dim), wall);
+            m.record_policy(self.policy_label);
+        }
+        self.flushed_jobs = self.completed_jobs;
+        self.flushed_slot_passes = stats.slot_passes;
+        self.flushed_passes = stats.passes;
+        self.window_timer = Timer::start();
+    }
+
+    /// Flush whatever the last completion left unflushed (schedule end).
+    fn flush_final(&mut self) {
+        if let Some(stats) = self.last_stats {
+            self.flush_window(&stats);
         }
     }
 
@@ -955,6 +1023,10 @@ impl<'a> ServeFeed<'a> {
         };
         let _ = req.p.reply.send(resp);
         req.replied = true;
+        // Drop the sample payloads now: a live schedule can absorb for a
+        // long time, and only the small routing stub must outlive the
+        // reply (tags index `reqs` for the schedule's whole lifetime).
+        req.results = Vec::new();
         req.p.group.pending.fetch_sub(req.p.n, Ordering::SeqCst);
         self.load.fetch_sub(req.p.n, Ordering::SeqCst);
     }
@@ -982,17 +1054,76 @@ impl<'a> ServeFeed<'a> {
 
 impl JobFeed for ServeFeed<'_> {
     fn poll(&mut self) -> Vec<LiveJob> {
-        if self.absorb_budget == 0 {
+        // Stop absorbing — letting the schedule drain and end — once (a)
+        // a completed decode request is waiting on the router (deferred
+        // replies can only be sent after the schedule ends, when the
+        // router is borrowable again), or (b) the request table hit its
+        // hygiene cap. Queued arrivals just form the next window.
+        if !self.deferred.is_empty() || self.reqs.len() >= self.absorb_cap {
             return Vec::new();
         }
         let mut fresh: Vec<PendingSample> = Vec::new();
+        let mut denied = false;
         {
             let mut st = self.pool.state.lock().expect("pool lock");
-            take_group_arrivals(&mut st.queues[self.widx], &self.key, &mut fresh);
+            // The oldest admission among work of *other* groups queued on
+            // this worker — whatever absorption would starve. Evals count
+            // too: without them, an endlessly-absorbing group could hold
+            // a queued eval past any bound (no budget caps the schedule
+            // any more).
+            let oldest_other = st.queues[self.widx]
+                .iter()
+                .filter_map(|it| match it {
+                    Work::Sample(p) if !(p.model == self.key.0 && p.method == self.key.1) => Some(p.admitted),
+                    Work::Sample(_) => None,
+                    Work::Eval { admitted, .. } => Some(*admitted),
+                })
+                .min();
+            let oldest_other_age = oldest_other.map(|t| t.elapsed());
+            // Take this group's arrivals, oldest first, while the
+            // admission policy accepts them. The first denial stops the
+            // sweep — later arrivals are younger still — and leaves the
+            // denied requests queued in place for the next window (or a
+            // thief), preserving arrival order.
+            let q = &mut st.queues[self.widx];
+            let mut i = 0;
+            while i < q.len() {
+                let decision = match &q[i] {
+                    Work::Sample(p) if p.model == self.key.0 && p.method == self.key.1 => {
+                        let ctx = AdmissionCtx { jobs: p.n, absorbed: self.absorbed_jobs, age: p.admitted.elapsed(), oldest_other_age };
+                        Some(self.admission.admit(&ctx))
+                    }
+                    _ => None,
+                };
+                match decision {
+                    Some(true) => {
+                        let Some(Work::Sample(p)) = q.remove(i) else { unreachable!("just matched") };
+                        self.absorbed_jobs += p.n;
+                        fresh.push(p);
+                        if self.reqs.len() + fresh.len() >= self.absorb_cap {
+                            break;
+                        }
+                    }
+                    Some(false) => {
+                        denied = true;
+                        break;
+                    }
+                    None => i += 1,
+                }
+            }
+        }
+        if !fresh.is_empty() || denied {
+            let mut m = self.metrics.lock().expect("metrics lock");
+            for p in &fresh {
+                m.record_absorbed(p.n);
+                m.record_admission_age(p.admitted.elapsed());
+            }
+            if denied {
+                m.record_absorb_denial();
+            }
         }
         let mut jobs = Vec::new();
         for p in fresh {
-            self.absorb_budget = self.absorb_budget.saturating_sub(p.n);
             jobs.extend(self.admit_request(p));
         }
         jobs
@@ -1012,12 +1143,16 @@ impl JobFeed for ServeFeed<'_> {
                 self.reply_request(ri, stats, None);
             }
         }
+        if self.completed_jobs - self.flushed_jobs >= self.flush_every {
+            self.flush_window(stats);
+        }
     }
 }
 
 /// Execute a group as a **live** schedule: the initial window plus every
-/// mid-flight arrival the feed absorbs, with per-request replies as they
-/// complete.
+/// mid-flight arrival the feed absorbs (gated by the configured
+/// [`AdmissionPolicy`]), sized per pass by the configured
+/// [`policy::SizingPolicy`], with per-request replies as they complete.
 fn execute_elastic_group(
     router: &mut Router,
     metrics: &Mutex<Metrics>,
@@ -1025,7 +1160,7 @@ fn execute_elastic_group(
     load: &AtomicUsize,
     pool: &Pool,
     widx: usize,
-    max_batch: usize,
+    cfg: &ServeConfig,
 ) {
     if group.is_empty() {
         return;
@@ -1044,16 +1179,37 @@ fn execute_elastic_group(
         }
     };
     let method = key.1;
-    let mut feed = ServeFeed::new(pool, widx, key.clone(), dim, categories, load, max_batch.max(1) * 8);
+    let sizing = policy::sizing_for(cfg.policy, cfg.slo);
+    let mut feed = ServeFeed {
+        pool,
+        widx,
+        key: key.clone(),
+        dim,
+        categories,
+        load,
+        admission: policy::admission_for(cfg.admission, cfg.max_wait),
+        absorbed_jobs: 0,
+        metrics,
+        policy_label: sizing.name(),
+        flush_every: cfg.max_batch.max(1) * 8,
+        flushed_jobs: 0,
+        flushed_slot_passes: 0,
+        flushed_passes: 0,
+        window_timer: Timer::start(),
+        absorb_cap: cfg.max_batch.max(1) * 64,
+        reqs: Vec::new(),
+        deferred: Vec::new(),
+        completed_jobs: 0,
+        last_stats: None,
+    };
     let mut initial = Vec::new();
     for p in group {
         initial.extend(feed.admit_request(p));
     }
-    let rep = router.engine(&key.0).and_then(|e| e.sample_elastic(method, initial, &mut feed));
+    let rep = router.engine(&key.0).and_then(|e| e.sample_elastic_policy(method, initial, &mut feed, sizing.as_ref()));
     match rep {
-        Ok(rep) => {
-            let calls_pct = scheduler::calls_pct_of(rep.calls_per_job, dim);
-            metrics.lock().unwrap().record_batch(feed.completed_jobs, rep.total_passes, calls_pct, rep.wall_secs);
+        Ok(_) => {
+            feed.flush_final();
             feed.finish(router);
         }
         Err(e) => {
@@ -1199,7 +1355,7 @@ mod tests {
         // eval is the one stealable item.
         let (reply, rx) = mpsc::channel();
         drop(rx);
-        st.queues[1].push_back(Work::Eval { model: "hot".into(), reply });
+        st.queues[1].push_back(Work::Eval { model: "hot".into(), reply, admitted: Instant::now() });
         assert!(steal_group(&mut st, 2, &loads), "a queued eval behind an executing group is stealable");
         assert!(matches!(st.queues[2].front(), Some(Work::Eval { .. })), "the eval must have moved to the thief");
         assert_eq!(st.queues[1].len(), 1, "the executing group's queued request must stay");

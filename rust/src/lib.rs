@@ -3,7 +3,9 @@
 //! A rust serving stack reproducing Wiggers & Hoogeboom, *Predictive
 //! Sampling with Forecasting Autoregressive Models*, ICML 2020.
 //!
-//! Architecture (see `DESIGN.md`):
+//! Architecture (see `docs/ARCHITECTURE.md` for the full layer diagram,
+//! slot lifecycle, and `ServeConfig` knob map; `docs/PROTOCOL.md` for
+//! the wire protocol):
 //!
 //! * [`runtime`] — loads the AOT-compiled JAX/Pallas model artifacts
 //!   (`artifacts/*.hlo.txt`) onto the PJRT CPU client and exposes typed
@@ -15,7 +17,8 @@
 //!   deterministic fixed-point problem.
 //! * [`coordinator`] — the serving layer: engine, elastic
 //!   continuous-batching scheduler (the paper's deferred "scheduling
-//!   system" future work), sharded work-stealing TCP server, metrics.
+//!   system" future work), pluggable sizing/admission policies, sharded
+//!   work-stealing TCP server, metrics.
 //! * [`substrate`] — offline-friendly building blocks (PRNG, Gumbel noise,
 //!   JSON, stats, images, CLI, thread pool, property-test harness); this
 //!   environment has no crates.io access beyond the `xla` closure.

@@ -14,6 +14,7 @@ use anyhow::{anyhow, bail, Result};
 use predsamp::bench::{figures, tables};
 use predsamp::coordinator::config::{Method, ServeConfig};
 use predsamp::coordinator::engine::Engine;
+use predsamp::coordinator::policy::{AdmissionKind, PolicyKind};
 use predsamp::coordinator::scheduler;
 use predsamp::coordinator::server;
 use predsamp::runtime::artifact::Manifest;
@@ -32,12 +33,15 @@ COMMANDS
            [--batch N] [--seed S] [--t-use T] [--ppm out.ppm]
   serve    [--addr 127.0.0.1:7199] [--max-batch 32] [--max-wait-ms 20] [--sync]
            [--engine-threads 2] [--worker-threads 4] [--no-elastic] [--no-steal]
+           [--policy occupancy|latency|slo] [--slo-ms 50] [--absorb-budget N]
   client   [--addr ...] --json '{\"op\":\"ping\"}'
   table1 | table2 | table3           [--seeds K] [--batches 1,32] [--models a,b]
   fig3 | fig4 | fig5 | fig6          [--seed 10] [--out results/]
   schedule-ablation                  [--model M] [--jobs N] [--seed S]
 
-Artifacts are found via ./artifacts or $PREDSAMP_ARTIFACTS (run `make artifacts`).";
+Artifacts are found via ./artifacts or $PREDSAMP_ARTIFACTS (built by the
+python AOT path under python/compile/); without them, `serve` and the
+serving demo fall back to pure-rust mock models.";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -127,6 +131,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         "serve" => {
             let d = ServeConfig::default();
+            let policy_name = args.get("policy", d.policy.label());
+            let policy = PolicyKind::parse(&policy_name).ok_or_else(|| anyhow!("unknown --policy {policy_name:?} (occupancy|latency|slo)"))?;
+            let admission = match args.opt("absorb-budget") {
+                Some(n) => AdmissionKind::Budget(n.parse().map_err(|_| anyhow!("--absorb-budget must be a job count"))?),
+                None => AdmissionKind::OldestFirst,
+            };
             let cfg = ServeConfig {
                 addr: args.get("addr", &d.addr),
                 max_batch: args.num::<usize>("max-batch", d.max_batch),
@@ -136,11 +146,30 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 steal: !args.flag("no-steal"),
                 worker_threads: args.num::<usize>("worker-threads", d.worker_threads),
                 engine_threads: args.num::<usize>("engine-threads", d.engine_threads),
+                policy,
+                slo: std::time::Duration::from_millis(args.num::<u64>("slo-ms", d.slo.as_millis() as u64)),
+                admission,
             };
             args.finish().map_err(|e| anyhow!(e))?;
             let (engine_threads, batching) = (cfg.engine_threads, if cfg.continuous { "continuous" } else { "sync" });
-            let handle = server::spawn(predsamp::artifacts_dir(), cfg)?;
-            println!("predsamp serving on {} ({engine_threads} engine workers, {batching} batching; ctrl-c to stop)", handle.addr);
+            let policy_label = cfg.policy.label();
+            // No compiled artifacts: serve the pure-rust mock demo pair
+            // instead of refusing to start (same fallback as the demo),
+            // so the quickstart works on a clean checkout.
+            let dir = predsamp::artifacts_dir();
+            let dir = if dir.join("manifest.json").exists() {
+                dir
+            } else {
+                let tmp = std::env::temp_dir().join(format!("predsamp-serve-mock-{}", std::process::id()));
+                predsamp::runtime::artifact::write_mock_manifest(&tmp, &predsamp::runtime::artifact::MockModelSpec::demo_pair())?;
+                println!("no compiled artifacts found — serving the pure-rust mock ARM demo pair (mock_a, mock_b)");
+                tmp
+            };
+            let handle = server::spawn(dir, cfg)?;
+            println!(
+                "predsamp serving on {} ({engine_threads} engine workers, {batching} batching, {policy_label} sizing; ctrl-c to stop)",
+                handle.addr
+            );
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }

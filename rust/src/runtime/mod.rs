@@ -1,6 +1,6 @@
 //! Runtime: AOT artifact loading + execution on the PJRT CPU client.
 //!
-//! The contract with the python build path (see DESIGN.md §2):
+//! The contract with the python build path (under `python/compile/`):
 //! `artifacts/*.hlo.txt` (HLO **text**, the xla_extension-0.5.1-safe
 //! interchange) are compiled once at startup and executed from the
 //! coordinator's hot loop; `artifacts/manifest.json` describes shapes and

@@ -1,6 +1,7 @@
 //! Typed wrapper over an ARM step executable.
 //!
-//! Signature (the L2↔L3 contract, DESIGN.md §2):
+//! Signature (the runtime↔coordinator contract, fixed by the python
+//! AOT export under `python/compile/`):
 //!
 //! ```text
 //! x i32[B, d]  ->  (logp f32[B, d, K],  fore f32[B, P, T, K])
@@ -38,7 +39,8 @@ pub struct StepOutput {
 
 /// A compiled ARM step executable for one fixed batch size.
 ///
-/// Two flavors exist per model (DESIGN.md §8): the full step
+/// Two flavors exist per model (both exported by the python AOT
+/// path): the full step
 /// `(logp, fore)` and a logp-only variant (`has_fore = false`) that skips
 /// the forecast-head compute *and* its device→host transfer — the
 /// dominant per-pass cost at B=32 for the K=256 models.

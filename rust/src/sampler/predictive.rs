@@ -24,6 +24,7 @@
 //! ([`PredictiveSampler::extract_slot`] / [`PredictiveSampler::install_slot`]),
 //! which is what the scheduler's batch down-shifting builds on — noise is
 //! keyed by job id, never by slot, so placement is provably irrelevant.
+#![deny(missing_docs)]
 
 use super::forecast::{ForecastCtx, Forecaster};
 use super::noise::JobNoise;
@@ -81,6 +82,10 @@ impl SlotState {
     }
 }
 
+/// The paper's Algorithm 1, batched: B slots of predictive sampling
+/// against one fixed-batch [`StepModel`], generic over a [`Forecaster`]
+/// policy. See the module docs for the pass anatomy and the exactness
+/// and migration invariants everything above this layer builds on.
 pub struct PredictiveSampler<'m, M: StepModel> {
     model: &'m M,
     forecaster: Box<dyn Forecaster>,
@@ -104,6 +109,8 @@ pub struct PredictiveSampler<'m, M: StepModel> {
 }
 
 impl<'m, M: StepModel> PredictiveSampler<'m, M> {
+    /// A sampler over `model`'s batch slots, all initially empty, driving
+    /// forecasts through `forecaster`.
     pub fn new(model: &'m M, forecaster: Box<dyn Forecaster>) -> Self {
         let b = model.batch();
         let d = model.dim();
@@ -120,6 +127,7 @@ impl<'m, M: StepModel> PredictiveSampler<'m, M> {
         }
     }
 
+    /// The model's batch size (number of slots).
     pub fn batch(&self) -> usize {
         self.model.batch()
     }
@@ -161,6 +169,7 @@ impl<'m, M: StepModel> PredictiveSampler<'m, M> {
         self.slots.iter().flatten().filter(|s| !s.done).count()
     }
 
+    /// Whether `slot` holds no unconverged job (empty slots count as done).
     pub fn slot_done(&self, slot: usize) -> bool {
         self.slots[slot].as_ref().map(|s| s.done).unwrap_or(true)
     }

@@ -144,7 +144,7 @@ fn mistake_and_convergence_traces_consistent() {
 
 #[test]
 fn pallas_artifact_parity() {
-    // DESIGN.md X2: the Pallas-kernel lowering and the reference lowering
+    // Artifact-parity gate: the Pallas-kernel lowering and the reference lowering
     // of the same trained model must agree through the rust runtime.
     let Some(man) = manifest() else { return };
     let info = man.model("mnist_bin").unwrap();

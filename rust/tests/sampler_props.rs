@@ -249,6 +249,68 @@ fn elastic_live_arrivals_preserve_samples() {
 }
 
 #[test]
+fn sizing_policies_preserve_samples() {
+    // THE policy-subsystem acceptance gate: whatever sizing policy drives
+    // the elastic scheduler — occupancy-first, latency-lean, or the
+    // SLO-driven hybrid at any target (pass-denominated or wall-clock) —
+    // every job's sample stays bitwise identical to its batch-1
+    // reference, under random trickle patterns over a sparse [1, 4]
+    // export family (the shape that maximally separates the policies'
+    // sizing decisions).
+    use predsamp::coordinator::policy::{LatencyLean, OccupancyFirst, SizingPolicy, SloHybrid, SloTarget};
+    use predsamp::coordinator::scheduler::{LiveJob, TickBurstFeed};
+    use std::time::Duration;
+    check("policy-exactness", 10, |g| {
+        let (c, px, k) = (g.usize_in(1, 3), g.usize_in(2, 6), g.usize_in(2, 5));
+        let strength = g.f64_in(0.0, 4.0) as f32;
+        let mseed = g.rng.next_u64();
+        let m4 = MockArm::new(4, c, px, k, 2, strength, mseed);
+        let m1 = MockArm::new(1, c, px, k, 2, strength, mseed);
+        let family: Vec<&MockArm> = vec![&m1, &m4];
+        let d = m4.dim();
+        let seed = g.rng.next_u64();
+        let n = g.usize_in(4, 11);
+        let first = g.usize_in(1, 3).min(n);
+        let mut ticks: Vec<(usize, usize)> = (first..n).map(|id| (g.usize_in(1, 8), id)).collect();
+        ticks.sort();
+        let policies: Vec<Box<dyn SizingPolicy>> = vec![
+            Box::new(OccupancyFirst),
+            Box::new(LatencyLean),
+            Box::new(SloHybrid { target: SloTarget::Passes(g.f64_in(0.0, 30.0)) }),
+            Box::new(SloHybrid { target: SloTarget::Wall(Duration::from_millis(g.usize_in(0, 40) as u64)) }),
+        ];
+        for sizing in &policies {
+            let job = |id: usize| LiveJob { tag: id as u64, noise: JobNoise::new(seed, id as u64, d, k) };
+            let initial: Vec<LiveJob> = (0..first).map(job).collect();
+            let arrivals: Vec<(usize, Vec<LiveJob>)> = ticks.iter().map(|&(at, id)| (at, vec![job(id)])).collect();
+            let mut feed = TickBurstFeed::new(n, arrivals);
+            let rep =
+                scheduler::run_elastic_family_policy(&family, Box::new(FpiReuse), initial, &mut feed, sizing.as_ref()).map_err(|e| e.to_string())?;
+            for id in 0..n {
+                let mut ps = PredictiveSampler::new(&m1, Box::new(FpiReuse));
+                ps.reset_slot(0, JobNoise::new(seed, id as u64, d, k));
+                while !ps.slot_done(0) {
+                    ps.step().map_err(|e| e.to_string())?;
+                }
+                let single = ps.take_result(0).unwrap();
+                let live = feed.results[id].as_ref().ok_or("job not completed")?;
+                prop_assert_eq!(
+                    &live.x,
+                    &single.x,
+                    "policy {} job {} diverged from the batch-1 reference (up={}, down={})",
+                    rep.policy,
+                    id,
+                    rep.upshifts,
+                    rep.downshifts
+                );
+                prop_assert_eq!(live.iterations, single.iterations, "policy {} job {}: sizing changed the pass count", rep.policy, id);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn scheduler_empty_and_tiny_queues() {
     let model = MockArm::new(3, 2, 4, 3, 1, 2.0, 9);
     let rep = scheduler::run_continuous(&model, Box::new(FpiReuse), 0, 0).unwrap();

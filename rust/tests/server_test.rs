@@ -24,12 +24,15 @@ fn server() -> Option<ServerHandle> {
         steal: true,
         worker_threads: 4,
         engine_threads: 2,
+        ..ServeConfig::default()
     };
     Some(spawn(dir, cfg).expect("server spawns"))
 }
 
-/// Spawn a server over a two-model mock fixture (no artifacts needed).
-fn spawn_mock_cfg(tag: &str, engine_threads: usize, continuous: bool, elastic: bool, steal: bool, max_wait: Duration) -> ServerHandle {
+/// Spawn a server over the shared two-model mock fixture (no artifacts
+/// needed) with an arbitrary config; every mock server in this file
+/// serves the same model family so the tests stay comparable.
+fn spawn_mock_with(tag: &str, cfg: ServeConfig) -> ServerHandle {
     let dir = std::env::temp_dir().join(format!("predsamp-server-{tag}-{}", std::process::id()));
     let mut a = MockModelSpec::new("mock_a", 11);
     a.batches = vec![1, 4];
@@ -40,12 +43,41 @@ fn spawn_mock_cfg(tag: &str, engine_threads: usize, continuous: bool, elastic: b
     b.strength = 1.5;
     b.batches = vec![1, 4];
     write_mock_manifest(&dir, &[a, b]).unwrap();
-    let cfg = ServeConfig { addr: "127.0.0.1:0".into(), max_batch: 8, max_wait, continuous, elastic, steal, worker_threads: 4, engine_threads };
     spawn(dir, cfg).expect("mock server spawns")
+}
+
+fn spawn_mock_cfg(tag: &str, engine_threads: usize, continuous: bool, elastic: bool, steal: bool, max_wait: Duration) -> ServerHandle {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait,
+        continuous,
+        elastic,
+        steal,
+        worker_threads: 4,
+        engine_threads,
+        ..ServeConfig::default()
+    };
+    spawn_mock_with(tag, cfg)
 }
 
 fn spawn_mock(tag: &str, engine_threads: usize, continuous: bool) -> ServerHandle {
     spawn_mock_cfg(tag, engine_threads, continuous, true, true, Duration::from_millis(5))
+}
+
+/// As [`spawn_mock`], overriding the scheduling-policy knobs.
+fn spawn_mock_policy(tag: &str, policy: predsamp::coordinator::policy::PolicyKind, admission: predsamp::coordinator::policy::AdmissionKind) -> ServerHandle {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(20),
+        engine_threads: 2,
+        policy,
+        admission,
+        slo: Duration::from_millis(10),
+        ..ServeConfig::default()
+    };
+    spawn_mock_with(tag, cfg)
 }
 
 fn samples_of(v: &Value) -> Vec<Vec<i32>> {
@@ -147,6 +179,91 @@ fn mock_metrics_and_info_report_worker_pool() {
     let batch_sum: i64 = workers.iter().map(|w| w.get("batches").as_i64().unwrap()).sum();
     assert_eq!(batch_sum, metrics.get("batches").as_i64().unwrap());
     server.stop();
+}
+
+#[test]
+fn metrics_aggregate_sums_age_buckets_and_policy_counters() {
+    // The aggregation invariant for the new policy gauges: the top-level
+    // `metrics` response must equal the element-wise sum of the
+    // per-worker age histograms (every request sampled exactly once, at
+    // window close or mid-flight absorption — wherever its group ended
+    // up after routing and stealing), and the per-policy schedule
+    // counters must cover every executed batch.
+    let server = spawn_mock("agebuckets", 2, true);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let n_requests = 6;
+    for i in 0..n_requests {
+        let model = if i % 2 == 0 { "mock_a" } else { "mock_b" };
+        let r = c
+            .call(&format!(r#"{{"op":"sample","model":"{model}","method":"fpi","n":2,"seed":{i},"return_samples":false}}"#))
+            .unwrap();
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    }
+    let m = c.call(r#"{"op":"metrics"}"#).unwrap();
+    let metrics = m.get("metrics");
+    let agg: Vec<i64> = metrics.get("admission_age_buckets").as_arr().unwrap().iter().map(|v| v.as_i64().unwrap()).collect();
+    assert_eq!(
+        agg.len(),
+        metrics.get("admission_age_bounds_ms").as_arr().unwrap().len() + 1,
+        "one bucket per bound plus the overflow"
+    );
+    let workers = metrics.get("workers").as_arr().unwrap();
+    let mut summed = vec![0i64; agg.len()];
+    for w in workers {
+        let wb = w.get("admission_age_buckets").as_arr().unwrap();
+        assert_eq!(wb.len(), agg.len());
+        for (s, v) in summed.iter_mut().zip(wb) {
+            *s += v.as_i64().unwrap();
+        }
+    }
+    assert_eq!(summed, agg, "aggregate age histogram must equal the per-worker sums");
+    assert_eq!(agg.iter().sum::<i64>(), n_requests, "every sample request is aged exactly once");
+    // Elastic continuous serving sizes with the default occupancy-first
+    // policy; the per-policy counters must cover every executed batch.
+    let by_policy = metrics.get("schedules_by_policy");
+    let occ = by_policy.get("occupancy").as_i64().unwrap_or(0);
+    assert!(occ >= 1, "elastic schedules must be counted under their sizing policy: {m}");
+    let batches = metrics.get("batches").as_i64().unwrap();
+    assert_eq!(occ, batches, "every batch ran under the occupancy policy on this server");
+    server.stop();
+}
+
+#[test]
+fn sizing_policy_and_admission_choices_preserve_bitwise_exactness() {
+    // Policy-subsystem acceptance at the serving layer: the same
+    // staggered mixed stream served under occupancy-first, latency-lean,
+    // SLO-hybrid sizing, and the legacy absorb-budget admission must
+    // produce bitwise-identical samples — policies move work, never
+    // samples.
+    use predsamp::coordinator::policy::{AdmissionKind, PolicyKind};
+    let collect = |tag: &str, policy: PolicyKind, admission: AdmissionKind| -> Vec<Vec<Vec<i32>>> {
+        let server = spawn_mock_policy(tag, policy, admission);
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for i in 0..8u64 {
+            handles.push(std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(i * 5));
+                let mut c = Client::connect(&addr).unwrap();
+                let model = if i % 2 == 0 { "mock_a" } else { "mock_b" };
+                let method = if i % 3 == 0 { "fpi" } else { "zeros" };
+                let r = c
+                    .call(&format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":3,"seed":{i}}}"#))
+                    .unwrap();
+                samples_of(&r)
+            }));
+        }
+        let out: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        server.stop();
+        out
+    };
+    let occ = collect("pol-occ", PolicyKind::Occupancy, AdmissionKind::OldestFirst);
+    let fit = collect("pol-fit", PolicyKind::Latency, AdmissionKind::OldestFirst);
+    let slo = collect("pol-slo", PolicyKind::Slo, AdmissionKind::OldestFirst);
+    let budget = collect("pol-budget", PolicyKind::Occupancy, AdmissionKind::Budget(64));
+    assert_eq!(occ, fit, "sizing policy must not change any sample");
+    assert_eq!(occ, slo, "SLO sizing must not change any sample");
+    assert_eq!(occ, budget, "admission policy must not change any sample");
+    assert!(occ.iter().all(|s| s.len() == 3));
 }
 
 #[test]
