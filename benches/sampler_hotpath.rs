@@ -333,7 +333,8 @@ fn main() -> anyhow::Result<()> {
     for (gi, (name, method)) in ELASTIC_MIX.iter().enumerate() {
         let tight = SloHybrid { target: SloTarget::Passes(0.5) };
         let loose = SloHybrid { target: SloTarget::Passes(1e12) };
-        let runs: Vec<(&str, &dyn SizingPolicy)> = vec![("occupancy", &OccupancyFirst), ("latency", &LatencyLean), ("slo", &tight), ("slo-loose", &loose)];
+        let runs: Vec<(&str, &dyn SizingPolicy)> =
+            vec![("occupancy", &OccupancyFirst), ("latency", &LatencyLean), ("slo", &tight), ("slo-loose", &loose)];
         // (label -> per-group median latencies, slot-passes, jobs)
         let mut medians: Vec<Vec<f64>> = vec![Vec::new(); runs.len()];
         let mut slot_passes: Vec<f64> = vec![0.0; runs.len()];
