@@ -1,18 +1,24 @@
 //! Serving-load benchmark: a mixed (model, method) request stream against
 //! the full TCP serving stack — client sockets, protocol parsing,
 //! dispatcher, sharded engine workers, dynamic batching — comparing
-//! throughput across engine-worker counts. Runs on the pure-rust mock ARM
-//! by default (no artifacts or PJRT needed), so the sharding speedup is
-//! measurable anywhere; expected: >= 2x at 4 workers vs 1 on a
-//! multi-core host (printed, not asserted — wall-clock ratios are too
-//! machine-dependent to gate on).
+//! throughput across engine-worker counts, plus a placement scenario
+//! proving per-model pinning serves the same stream with strictly fewer
+//! engine loads than replicate-all. Runs on the pure-rust mock ARM by
+//! default (no artifacts or PJRT needed), so both results are measurable
+//! anywhere; the sharding speedup is printed, not asserted (wall-clock
+//! ratios are too machine-dependent to gate on), while the engine-load
+//! comparison *is* asserted (it counts work, not time). Results land in
+//! `BENCH_serving_load.json` (uploaded as a CI artifact).
 //!
-//!     cargo bench --bench serving_load [-- --clients 8 --requests 12 --engine-threads 1,4]
+//!     cargo bench --bench serving_load [-- --clients 8 --requests 12 --engine-threads 1,4 --out BENCH_serving_load.json]
 
 use predsamp::coordinator::config::ServeConfig;
+use predsamp::coordinator::placement::PlacementKind;
+use predsamp::coordinator::protocol::parse_samples;
 use predsamp::coordinator::server::{spawn, Client};
 use predsamp::runtime::artifact::{write_mock_manifest, MockModelSpec};
 use predsamp::substrate::cli::Args;
+use predsamp::substrate::json::Value;
 use predsamp::substrate::stats::{percentile, Summary};
 use predsamp::substrate::timer::{fmt_duration, Timer};
 use std::sync::{Arc, Mutex};
@@ -84,10 +90,73 @@ fn run_load(dir: std::path::PathBuf, engine_threads: usize, clients: usize, requ
     Ok((wall, lats))
 }
 
+/// One run of the placement scenario: a large `mock_a` group keeps its
+/// worker busy while two small requests — a `mock_b` group and a second
+/// `mock_a` group — arrive on a 2-worker fleet. Under replicate-all the
+/// second `mock_a` group routes to the *idle* worker (least-loaded wins)
+/// and pays a redundant lazy engine load there; under pinning it waits
+/// for `mock_a`'s only eligible worker instead. Returns the three
+/// requests' samples plus the fleet's total `engine_loads` gauge.
+fn run_placement(dir: std::path::PathBuf, placement: PlacementKind, big_jobs: usize) -> anyhow::Result<(Vec<Vec<Vec<i32>>>, i64)> {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        worker_threads: 6,
+        engine_threads: 2,
+        placement,
+        ..ServeConfig::default()
+    };
+    let server = spawn(dir, cfg)?;
+    let addr = server.addr;
+    let big = std::thread::spawn(move || -> anyhow::Result<Vec<Vec<i32>>> {
+        let mut c = Client::connect(&addr)?;
+        let r = c.call(&format!(r#"{{"op":"sample","model":"mock_a","method":"fpi","n":{big_jobs},"seed":1}}"#))?;
+        anyhow::ensure!(r.get("ok").as_bool() == Some(true), "big request failed: {r}");
+        Ok(parse_samples(r.get("samples")).expect("samples"))
+    });
+    // Wait until the dispatcher has routed the big group (its jobs show
+    // up as queue depth) before sending the small requests, so "the big
+    // group's worker is busy" is a fact, not a sleep.
+    let mut c = Client::connect(&server.addr)?;
+    for _ in 0..200 {
+        let info = c.call(r#"{"op":"info"}"#)?;
+        let depth: i64 = info.get("workers").as_arr().unwrap().iter().map(|w| w.get("queue_depth").as_i64().unwrap_or(0)).sum();
+        if depth >= big_jobs as i64 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // The second mock_a group goes out first — one round trip after the
+    // routing confirmation, while the big schedule is still running — so
+    // replicate-all demonstrably routes it to the other (cold) worker.
+    let ra = c.call(r#"{"op":"sample","model":"mock_a","method":"zeros","n":1,"seed":3}"#)?;
+    anyhow::ensure!(ra.get("ok").as_bool() == Some(true), "mock_a/zeros request failed: {ra}");
+    let rb = c.call(r#"{"op":"sample","model":"mock_b","method":"fpi","n":1,"seed":2}"#)?;
+    anyhow::ensure!(rb.get("ok").as_bool() == Some(true), "mock_b request failed: {rb}");
+    let big_samples = big.join().expect("big client thread")?;
+    // Workers publish their gauges after a turn ends, which can trail the
+    // last reply by a beat: read until two consecutive snapshots agree.
+    let mut engine_loads = -1i64;
+    for _ in 0..40 {
+        let m = c.call(r#"{"op":"metrics"}"#)?;
+        let now = m.get("metrics").get("engine_loads").as_i64().unwrap_or(-1);
+        if now >= 0 && now == engine_loads {
+            break;
+        }
+        engine_loads = now;
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    server.stop();
+    let outputs = vec![big_samples, parse_samples(rb.get("samples")).expect("samples"), parse_samples(ra.get("samples")).expect("samples")];
+    Ok((outputs, engine_loads))
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let clients = args.num::<usize>("clients", 8);
     let requests = args.num::<usize>("requests", 12);
+    let out_path = args.get("out", "BENCH_serving_load.json");
     let threads_list: Vec<usize> = {
         let l = args.list("engine-threads");
         if l.is_empty() {
@@ -101,6 +170,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("serving load: {clients} clients x {requests} requests, n=4, mixed {} groups (mock ARM)", MIX.len());
     let mut throughput = Vec::new();
+    let mut shard_values = Vec::new();
     for &threads in &threads_list {
         let (wall, lats) = run_load(dir.clone(), threads, clients, requests)?;
         let tput = total_samples as f64 / wall;
@@ -116,16 +186,63 @@ fn main() -> anyhow::Result<()> {
             fmt_duration(percentile(&lats, 95.0)),
             fmt_duration(s.max)
         );
+        shard_values.push(Value::obj(vec![
+            ("engine_threads", Value::num(threads as f64)),
+            ("samples", Value::num(total_samples as f64)),
+            ("wall_secs", Value::num(wall)),
+            ("samples_per_s", Value::num(tput)),
+            ("latency_p50_s", Value::num(percentile(&lats, 50.0))),
+            ("latency_p95_s", Value::num(percentile(&lats, 95.0))),
+        ]));
         throughput.push(tput);
     }
+    let mut speedup = None;
     if throughput.len() >= 2 {
-        let speedup = throughput.last().unwrap() / throughput[0];
+        let s = throughput.last().unwrap() / throughput[0];
         println!(
-            "  speedup: {speedup:.2}x at {} workers vs {}",
+            "  speedup: {s:.2}x at {} workers vs {}",
             threads_list.last().unwrap(),
             threads_list[0]
         );
+        speedup = Some(s);
     }
+
+    // Placement scenario: the same three-request stream under
+    // replicate-all vs per-model pinning. Outputs must be bitwise equal;
+    // pinning must pay strictly fewer lazy engine loads (replicate-all
+    // loads mock_a on the idle second worker; pinning never does).
+    let big_jobs = args.num::<usize>("big-jobs", 256);
+    let pinned_kind = PlacementKind::Pinned(vec![("mock_a".to_string(), vec![0]), ("mock_b".to_string(), vec![1])]);
+    let (rep_out, rep_loads) = run_placement(dir.clone(), PlacementKind::ReplicateAll, big_jobs)?;
+    let (pin_out, pin_loads) = run_placement(dir.clone(), pinned_kind, big_jobs)?;
+    println!("placement: replicate-all {rep_loads} engine loads vs pinned {pin_loads} (same {big_jobs}+1+1-job stream)");
+    assert_eq!(rep_out, pin_out, "placement must not change any sample");
+    assert!(
+        pin_loads < rep_loads,
+        "pinning must pay strictly fewer engine loads than replicate-all: pinned {pin_loads} vs replicated {rep_loads}"
+    );
+
+    let mut root = vec![
+        ("bench", Value::str("serving_load")),
+        ("clients", Value::num(clients as f64)),
+        ("requests", Value::num(requests as f64)),
+        ("sharding", Value::Arr(shard_values)),
+        (
+            "placement",
+            Value::obj(vec![
+                ("big_jobs", Value::num(big_jobs as f64)),
+                ("replicated_engine_loads", Value::num(rep_loads as f64)),
+                ("pinned_engine_loads", Value::num(pin_loads as f64)),
+                ("outputs_bitwise_equal", Value::Bool(true)),
+            ]),
+        ),
+    ];
+    if let Some(s) = speedup {
+        root.push(("sharding_speedup", Value::num(s)));
+    }
+    std::fs::write(&out_path, Value::obj(root).to_string())?;
+    println!("wrote {out_path}");
+
     let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }

@@ -2,6 +2,7 @@
 //! documented — with where it takes effect — in `docs/ARCHITECTURE.md`;
 //! a CI grep keeps that page in sync with this struct.
 
+use crate::coordinator::placement::PlacementKind;
 use crate::coordinator::policy::{AdmissionKind, PolicyKind};
 use anyhow::{ensure, Result};
 use std::time::Duration;
@@ -97,6 +98,12 @@ pub struct ServeConfig {
     /// absorb budget (`--absorb-budget N`). Admission only defers work —
     /// samples are bitwise identical either way.
     pub admission: AdmissionKind,
+    /// Model placement across engine workers (`--placement`, `--pin`,
+    /// `--max-engines`): replicate-all (default), models pinned to
+    /// explicit worker subsets, or an LRU-evicted per-worker engine cap.
+    /// Placement only moves `(model, method)` groups between workers, so
+    /// samples are bitwise identical under every policy.
+    pub placement: PlacementKind,
 }
 
 impl Default for ServeConfig {
@@ -113,6 +120,7 @@ impl Default for ServeConfig {
             policy: PolicyKind::Occupancy,
             slo: Duration::from_millis(50),
             admission: AdmissionKind::OldestFirst,
+            placement: PlacementKind::ReplicateAll,
         }
     }
 }
@@ -132,6 +140,9 @@ impl ServeConfig {
         if let AdmissionKind::Budget(b) = self.admission {
             ensure!(b >= 1, "serve config: absorb budget must be >= 1 (or use age-based admission)");
         }
+        // Placement knobs (pin lists, engine cap) are validated by
+        // `placement::placement_for` at spawn — it is the single
+        // authority, since it also sees the manifest's own pins.
         Ok(())
     }
 }
@@ -167,5 +178,15 @@ mod tests {
         assert!(ServeConfig { slo: Duration::from_secs(3600), ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { admission: AdmissionKind::Budget(0), ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { admission: AdmissionKind::Budget(8), policy: PolicyKind::Slo, ..ServeConfig::default() }.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_leaves_placement_to_placement_for() {
+        // Placement knobs are validated by `placement_for` at spawn (the
+        // single authority — it also sees the manifest's pins); validate
+        // must accept any kind rather than duplicate those rules.
+        let pin = PlacementKind::Pinned(vec![("m".to_string(), vec![0, 1])]);
+        assert!(ServeConfig { placement: PlacementKind::CapacityCapped(1), ..ServeConfig::default() }.validate().is_ok());
+        assert!(ServeConfig { placement: pin, ..ServeConfig::default() }.validate().is_ok());
     }
 }

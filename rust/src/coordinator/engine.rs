@@ -204,9 +204,26 @@ impl Engine {
         feed: &mut dyn JobFeed,
         sizing: &dyn crate::coordinator::policy::SizingPolicy,
     ) -> Result<ScheduleReport> {
+        self.sample_elastic_primed(method, initial, feed, sizing, None)
+    }
+
+    /// As [`Engine::sample_elastic_policy`], seeding the schedule's
+    /// convergence EWMAs from the server's cross-schedule history for
+    /// this workload ([`crate::coordinator::policy::ConvergenceBook`]),
+    /// so SLO sizing's cold-start projections use observed behavior
+    /// instead of the worst-case `d` prior. Priming never changes
+    /// samples.
+    pub fn sample_elastic_primed(
+        &self,
+        method: Method,
+        initial: Vec<LiveJob>,
+        feed: &mut dyn JobFeed,
+        sizing: &dyn crate::coordinator::policy::SizingPolicy,
+        prior: Option<crate::coordinator::policy::ConvergencePrior>,
+    ) -> Result<ScheduleReport> {
         ensure!(method != Method::Baseline, "baseline serves through the sync path");
         let backends = self.backends_for(Self::needs_fore(method));
-        scheduler::run_elastic_family_policy(&backends, self.forecaster_for(method)?, initial, feed, sizing)
+        scheduler::run_elastic_family_primed(&backends, self.forecaster_for(method)?, initial, feed, sizing, prior)
     }
 
     /// Whether `method` reads the forecast-head outputs.

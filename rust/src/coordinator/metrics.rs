@@ -197,24 +197,41 @@ impl Metrics {
     }
 
     /// Per-worker gauge object for the aggregated `metrics`/`info`
-    /// responses. `queue_depth` and `engines_loaded` are sampled by the
-    /// dispatcher at snapshot time.
-    pub fn worker_value(&self, id: usize, queue_depth: usize, engines_loaded: usize) -> Value {
+    /// responses. The [`WorkerGauges`] are sampled by the dispatcher at
+    /// snapshot time (queue depth and the placement-plane residency
+    /// gauges live on the worker, not in its `Metrics`).
+    pub fn worker_value(&self, g: &WorkerGauges) -> Value {
         Value::obj(vec![
-            ("id", Value::num(id as f64)),
+            ("id", Value::num(g.id as f64)),
             ("batches", Value::num(self.batches as f64)),
             ("samples", Value::num(self.samples as f64)),
             ("arm_calls", Value::num(self.arm_calls as f64)),
             ("errors", Value::num(self.errors as f64)),
             ("steals", Value::num(self.steals as f64)),
-            ("queue_depth", Value::num(queue_depth as f64)),
-            ("engines_loaded", Value::num(engines_loaded as f64)),
+            ("queue_depth", Value::num(g.queue_depth as f64)),
+            ("engines_loaded", Value::num(g.engines_loaded as f64)),
+            ("engine_loads", Value::num(g.engine_loads as f64)),
+            ("evictions", Value::num(g.evictions as f64)),
+            ("resident_models", Value::Arr(g.resident.iter().map(|m| Value::str(m.clone())).collect())),
             ("occupancy", Value::num(self.occupancy())),
             ("absorbed", Value::num(self.absorbed as f64)),
             ("admission_age_buckets", self.age_buckets_value()),
             ("latency_p50_s", Value::num(stats::percentile(&self.latencies, 50.0))),
         ])
     }
+}
+
+/// Dispatcher-sampled per-worker gauges that live outside the worker's
+/// `Metrics`: queue depth plus the placement plane's residency view —
+/// currently-resident engines, cumulative lazy engine loads (reloads
+/// after eviction included), and cumulative LRU evictions.
+pub struct WorkerGauges {
+    pub id: usize,
+    pub queue_depth: usize,
+    pub engines_loaded: usize,
+    pub engine_loads: usize,
+    pub evictions: usize,
+    pub resident: Vec<String>,
 }
 
 impl Default for Metrics {
@@ -333,10 +350,23 @@ mod tests {
     fn worker_gauges_present_and_bounded() {
         let mut m = Metrics::new();
         m.record_batch(4, 12, 30.0, 0.001);
-        let w = m.worker_value(3, 7, 2);
+        let g = WorkerGauges {
+            id: 3,
+            queue_depth: 7,
+            engines_loaded: 2,
+            engine_loads: 5,
+            evictions: 3,
+            resident: vec!["mock_a".into(), "mock_b".into()],
+        };
+        let w = m.worker_value(&g);
         assert_eq!(w.get("id").as_i64(), Some(3));
         assert_eq!(w.get("queue_depth").as_i64(), Some(7));
         assert_eq!(w.get("engines_loaded").as_i64(), Some(2));
+        assert_eq!(w.get("engine_loads").as_i64(), Some(5));
+        assert_eq!(w.get("evictions").as_i64(), Some(3));
+        let resident = w.get("resident_models").as_arr().unwrap();
+        assert_eq!(resident.len(), 2);
+        assert_eq!(resident[0].as_str(), Some("mock_a"));
         let occ = w.get("occupancy").as_f64().unwrap();
         assert!((0.0..=1.0).contains(&occ), "occupancy {occ} outside [0, 1]");
     }

@@ -14,21 +14,27 @@
 //!   and mid-flight *admission* (age-based oldest-first fairness, or the
 //!   legacy absorb budget). Policies move work around but never change
 //!   samples.
-//! * [`router`] — model-name → engine dispatch.
+//! * [`router`] — model-name → engine dispatch with LRU eviction.
+//! * [`placement`] — the placement plane: which workers may *own* which
+//!   models. Replicate-all (the default), explicit per-model worker
+//!   pins, or an LRU-evicted per-worker engine cap; eligibility threads
+//!   through routing, stealing, and eval dispatch.
 //! * [`protocol`] + [`server`] — line-delimited-JSON TCP serving over a
 //!   sharded engine-worker pool: PJRT handles are not `Send`, so each of
-//!   the `engine_threads` workers owns its own `Router` (engines
-//!   replicated lazily) and a dispatcher routes each `(model, method)`
-//!   batching group to the least-loaded worker. Executing groups absorb
+//!   the `engine_threads` workers owns its own `Router` (engines loaded
+//!   lazily where placement allows) and a dispatcher routes each
+//!   `(model, method)` batching group to the least-loaded *eligible*
+//!   worker, preferring warm ones among ties. Executing groups absorb
 //!   their own mid-flight arrivals; idle workers steal whole queued
-//!   groups from loaded ones.
+//!   groups they can host from loaded ones.
 //! * [`metrics`] — request/latency/ARM-call accounting, per worker,
 //!   aggregated into one snapshot with queue-depth/occupancy/steal
-//!   gauges.
+//!   gauges plus the placement plane's residency gauges.
 
 pub mod config;
 pub mod engine;
 pub mod metrics;
+pub mod placement;
 pub mod policy;
 pub mod protocol;
 pub mod router;

@@ -1,0 +1,273 @@
+//! The placement plane: which engine workers may own which models.
+//!
+//! PRs 1–4 replicated every engine on every worker (`Router` per thread,
+//! engines loaded lazily on first touch), which multiplies compile time
+//! and memory by `engine_threads` — worker memory becomes the scaling
+//! wall as the manifest grows heterogeneous (explicit-likelihood ARMs
+//! next to latent models with heavyweight decoders). This module makes
+//! ownership an explicit, pluggable decision:
+//!
+//! * [`ReplicateAll`] — every worker may own every model (the default;
+//!   bit-identical to the pre-placement fleet).
+//! * [`Pinned`] — models pinned to explicit worker subsets, from the
+//!   manifest's `"pin": [0, 2]` field and/or the CLI's repeatable
+//!   `--pin model=0,2`. Unpinned models still replicate anywhere.
+//! * [`CapacityCapped`] — every worker is eligible for every model, but
+//!   at most `max_engines` engines stay resident per worker; the
+//!   least-recently-used engine is evicted beyond that
+//!   ([`crate::coordinator::router::Router::enforce_cap`]).
+//!
+//! Eligibility threads through every layer that used to assume
+//! replicate-all: the dispatcher routes fresh `(model, method)` groups —
+//! and evals — only to eligible workers (preferring, among least-loaded
+//! ties, workers with the engine already warm), group stealing skips
+//! groups the thief may not host, and the per-worker resident-model /
+//! `engine_loads` / `evictions` gauges feed the `metrics` snapshot.
+//! Placement only moves groups between workers; per-job noise is keyed
+//! by `(seed, job index)`, so samples are bitwise identical under every
+//! policy (`rust/tests/server_test.rs`).
+#![deny(missing_docs)]
+
+use crate::runtime::artifact::Manifest;
+use anyhow::{anyhow, ensure, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Serving-config selector for the placement policy (`--placement`,
+/// `--pin`, `--max-engines`). Resolved against the manifest and worker
+/// count by [`placement_for`] at server spawn.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// [`ReplicateAll`] (the default).
+    ReplicateAll,
+    /// [`Pinned`]: the CLI `--pin model=workers` entries; manifest
+    /// `"pin"` fields merge in at spawn, with CLI entries winning per
+    /// model.
+    Pinned(Vec<(String, Vec<usize>)>),
+    /// [`CapacityCapped`] with the given per-worker engine budget
+    /// (`--max-engines`).
+    CapacityCapped(usize),
+}
+
+impl PlacementKind {
+    /// The canonical `--placement` spelling.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementKind::ReplicateAll => "replicate",
+            PlacementKind::Pinned(_) => "pinned",
+            PlacementKind::CapacityCapped(_) => "capped",
+        }
+    }
+}
+
+/// A placement policy: the worker-eligibility rule the dispatcher, the
+/// work-stealing path, and eval routing all consult, plus the per-worker
+/// residency bound capacity enforcement runs under.
+///
+/// Contract: `eligible` must be stable for the lifetime of the server
+/// (routing caches nothing, but a group stolen by an eligible thief must
+/// stay hostable), and at least one worker must be eligible for every
+/// servable model — [`placement_for`] validates that at spawn. Placement
+/// never touches job noise, so it can never change a sample.
+pub trait PlacementPolicy: Send + Sync {
+    /// Stable label for the `info`/`metrics` responses.
+    fn name(&self) -> &'static str;
+    /// Whether `worker` may host `model`'s engine.
+    fn eligible(&self, model: &str, worker: usize) -> bool;
+    /// Upper bound on engines resident per worker (`None` = unlimited).
+    fn max_resident(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// Every worker may own every model — the pre-placement fleet, and the
+/// default. Existing serving trajectories are bit-identical under it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicateAll;
+
+impl PlacementPolicy for ReplicateAll {
+    fn name(&self) -> &'static str {
+        "replicate"
+    }
+    fn eligible(&self, _model: &str, _worker: usize) -> bool {
+        true
+    }
+}
+
+/// Models pinned to explicit worker subsets; unpinned models replicate
+/// anywhere. Build via [`placement_for`], which merges manifest pins
+/// with CLI pins and validates worker indices.
+#[derive(Clone, Debug)]
+pub struct Pinned {
+    /// model → eligible worker indices (non-empty, validated in range).
+    pins: BTreeMap<String, Vec<usize>>,
+}
+
+impl Pinned {
+    /// The resolved pin table (gauges and tests).
+    pub fn pins(&self) -> &BTreeMap<String, Vec<usize>> {
+        &self.pins
+    }
+}
+
+impl PlacementPolicy for Pinned {
+    fn name(&self) -> &'static str {
+        "pinned"
+    }
+    fn eligible(&self, model: &str, worker: usize) -> bool {
+        self.pins.get(model).map(|ws| ws.contains(&worker)).unwrap_or(true)
+    }
+}
+
+/// Every worker is eligible for every model, but at most `max_engines`
+/// engines stay resident per worker — before a missing engine loads,
+/// the worker evicts least-recently-used ones to make room (so
+/// residency never exceeds the cap, even transiently), trading reload
+/// latency for a hard per-worker memory bound.
+#[derive(Clone, Copy, Debug)]
+pub struct CapacityCapped {
+    /// Engines allowed resident per worker (≥ 1).
+    pub max_engines: usize,
+}
+
+impl PlacementPolicy for CapacityCapped {
+    fn name(&self) -> &'static str {
+        "capped"
+    }
+    fn eligible(&self, _model: &str, _worker: usize) -> bool {
+        true
+    }
+    fn max_resident(&self) -> Option<usize> {
+        Some(self.max_engines)
+    }
+}
+
+/// Parse one `--pin model=0,2` argument into `(model, workers)`.
+pub fn parse_pin(arg: &str) -> Result<(String, Vec<usize>)> {
+    let (model, list) = arg.split_once('=').ok_or_else(|| anyhow!("--pin {arg:?}: expected model=W[,W...]"))?;
+    ensure!(!model.is_empty(), "--pin {arg:?}: empty model name");
+    let workers = list
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().map_err(|_| anyhow!("--pin {arg:?}: bad worker index {s:?}")))
+        .collect::<Result<Vec<usize>>>()?;
+    ensure!(!workers.is_empty(), "--pin {arg:?}: empty worker list");
+    Ok((model.to_string(), workers))
+}
+
+/// Resolve a [`PlacementKind`] into the policy a server runs under:
+/// merges manifest `"pin"` fields with CLI pins (CLI wins per model) and
+/// validates that every pin names a known model, a non-empty in-range
+/// worker set — so a typo fails at spawn, not as a routing dead-end.
+pub fn placement_for(kind: &PlacementKind, manifest: &Manifest, n_workers: usize) -> Result<Arc<dyn PlacementPolicy>> {
+    match kind {
+        PlacementKind::ReplicateAll => Ok(Arc::new(ReplicateAll)),
+        PlacementKind::CapacityCapped(cap) => {
+            ensure!(*cap >= 1, "placement: --max-engines must be >= 1");
+            Ok(Arc::new(CapacityCapped { max_engines: *cap }))
+        }
+        PlacementKind::Pinned(cli) => {
+            let mut pins: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+            for (name, info) in &manifest.models {
+                if let Some(p) = &info.pin {
+                    pins.insert(name.clone(), p.clone());
+                }
+            }
+            for (model, workers) in cli {
+                ensure!(
+                    manifest.models.contains_key(model),
+                    "--pin {model}: unknown model (have {:?})",
+                    manifest.models.keys().collect::<Vec<_>>()
+                );
+                pins.insert(model.clone(), workers.clone());
+            }
+            for (model, workers) in &pins {
+                ensure!(!workers.is_empty(), "model {model}: empty pin list");
+                for &w in workers {
+                    ensure!(w < n_workers, "model {model} pinned to worker {w}, but only {n_workers} engine workers exist");
+                }
+            }
+            Ok(Arc::new(Pinned { pins }))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{write_mock_manifest, MockModelSpec};
+
+    fn manifest_with_pins() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("predsamp-placement-{}", std::process::id()));
+        let mut a = MockModelSpec::new("pin_a", 1);
+        a.pin = Some(vec![0]);
+        let b = MockModelSpec::new("free_b", 2);
+        write_mock_manifest(&dir, &[a, b]).unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        man
+    }
+
+    #[test]
+    fn replicate_all_is_always_eligible() {
+        let p = ReplicateAll;
+        assert!(p.eligible("anything", 0) && p.eligible("anything", 7));
+        assert_eq!(p.max_resident(), None);
+        assert_eq!(p.name(), "replicate");
+    }
+
+    #[test]
+    fn pinned_restricts_pinned_models_only() {
+        let man = manifest_with_pins();
+        let p = placement_for(&PlacementKind::Pinned(Vec::new()), &man, 2).unwrap();
+        assert_eq!(p.name(), "pinned");
+        assert!(p.eligible("pin_a", 0), "manifest pin admits its worker");
+        assert!(!p.eligible("pin_a", 1), "manifest pin excludes other workers");
+        assert!(p.eligible("free_b", 0) && p.eligible("free_b", 1), "unpinned models replicate anywhere");
+        assert_eq!(p.max_resident(), None);
+    }
+
+    #[test]
+    fn cli_pin_overrides_manifest_pin() {
+        let man = manifest_with_pins();
+        let cli = vec![("pin_a".to_string(), vec![1])];
+        let p = placement_for(&PlacementKind::Pinned(cli), &man, 2).unwrap();
+        assert!(!p.eligible("pin_a", 0) && p.eligible("pin_a", 1), "a CLI pin must win over the manifest's");
+    }
+
+    #[test]
+    fn pin_validation_fails_fast() {
+        let man = manifest_with_pins();
+        // Manifest pin to worker 0 needs >= 1 workers; CLI pin beyond the
+        // fleet, to an unknown model, or empty must all fail at spawn.
+        assert!(placement_for(&PlacementKind::Pinned(vec![("pin_a".into(), vec![5])]), &man, 2).is_err(), "out-of-range worker");
+        assert!(placement_for(&PlacementKind::Pinned(vec![("nope".into(), vec![0])]), &man, 2).is_err(), "unknown model");
+        assert!(placement_for(&PlacementKind::Pinned(vec![("free_b".into(), vec![])]), &man, 2).is_err(), "empty pin list");
+        assert!(placement_for(&PlacementKind::CapacityCapped(0), &man, 2).is_err(), "zero engine budget");
+    }
+
+    #[test]
+    fn capacity_capped_bounds_residency_not_eligibility() {
+        let man = manifest_with_pins();
+        let p = placement_for(&PlacementKind::CapacityCapped(1), &man, 4).unwrap();
+        assert_eq!(p.name(), "capped");
+        assert!(p.eligible("pin_a", 3), "capacity capping never restricts routing");
+        assert_eq!(p.max_resident(), Some(1));
+    }
+
+    #[test]
+    fn pin_arg_parsing() {
+        assert_eq!(parse_pin("m=0,2").unwrap(), ("m".to_string(), vec![0, 2]));
+        assert_eq!(parse_pin("m=1").unwrap(), ("m".to_string(), vec![1]));
+        assert!(parse_pin("m").is_err(), "missing =");
+        assert!(parse_pin("=0").is_err(), "empty model");
+        assert!(parse_pin("m=").is_err(), "empty worker list");
+        assert!(parse_pin("m=x").is_err(), "non-numeric worker");
+    }
+
+    #[test]
+    fn kind_labels_are_stable() {
+        assert_eq!(PlacementKind::ReplicateAll.label(), "replicate");
+        assert_eq!(PlacementKind::Pinned(Vec::new()).label(), "pinned");
+        assert_eq!(PlacementKind::CapacityCapped(2).label(), "capped");
+    }
+}

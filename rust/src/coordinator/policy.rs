@@ -31,6 +31,8 @@
 //! [`crate::coordinator::scheduler::run_elastic_family_policy`].
 #![deny(missing_docs)]
 
+use std::collections::HashMap;
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Everything a [`SizingPolicy`] may consult, snapshotted by the
@@ -289,6 +291,78 @@ impl AdmissionPolicy for AbsorbBudget {
     }
 }
 
+/// A convergence estimate for one workload: mean ARM passes a job needs
+/// to converge, and mean wall-seconds per ARM pass. Produced by the
+/// server's [`ConvergenceBook`] from completed schedules and used to
+/// *seed* a fresh schedule's EWMAs
+/// ([`crate::coordinator::scheduler::run_elastic_family_primed`]), so
+/// [`SloHybrid`]'s cold-start projections start from observed history
+/// instead of the worst-case `d` prior.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConvergencePrior {
+    /// Mean passes a job needs to converge.
+    pub passes_per_job: f64,
+    /// Mean wall-seconds per ARM pass.
+    pub pass_secs: f64,
+}
+
+/// Smoothing factor for the cross-schedule estimates: heavier than the
+/// in-schedule EWMA (each observation already averages a whole
+/// schedule).
+const BOOK_ALPHA: f64 = 0.3;
+
+/// Server-level convergence history, shared by every engine worker: one
+/// EWMA'd [`ConvergencePrior`] per workload key (the server keys by
+/// `"model/method"`). Before this existed, every fresh schedule's SLO
+/// projection assumed the worst case (`d` passes per job) until its own
+/// first completion — so cold-start up-shift decisions were maximally
+/// conservative on every schedule, forever, no matter how much history
+/// the server had. The book closes that loop: schedules observe in,
+/// fresh schedules seed from it.
+///
+/// Seeding only biases *sizing* — samples are bitwise identical under
+/// any prior, like every other policy decision.
+#[derive(Debug, Default)]
+pub struct ConvergenceBook {
+    inner: Mutex<HashMap<String, (ConvergencePrior, u64)>>,
+}
+
+impl ConvergenceBook {
+    /// An empty book.
+    pub fn new() -> ConvergenceBook {
+        ConvergenceBook::default()
+    }
+
+    /// Fold one completed schedule's observation into `key`'s estimate.
+    /// Non-finite or non-positive observations are ignored (an empty or
+    /// zero-pass schedule has nothing to teach).
+    pub fn observe(&self, key: &str, obs: ConvergencePrior) {
+        if !(obs.passes_per_job.is_finite() && obs.passes_per_job > 0.0 && obs.pass_secs.is_finite() && obs.pass_secs > 0.0) {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("book lock");
+        let slot = inner.entry(key.to_string()).or_insert((obs, 0));
+        if slot.1 > 0 {
+            slot.0.passes_per_job += BOOK_ALPHA * (obs.passes_per_job - slot.0.passes_per_job);
+            slot.0.pass_secs += BOOK_ALPHA * (obs.pass_secs - slot.0.pass_secs);
+        }
+        slot.1 += 1;
+    }
+
+    /// The current estimate for `key`, if any schedule has completed.
+    pub fn prior(&self, key: &str) -> Option<ConvergencePrior> {
+        self.inner.lock().expect("book lock").get(key).map(|(est, _)| *est)
+    }
+
+    /// Every estimate with its observation count (metrics snapshot).
+    pub fn entries(&self) -> Vec<(String, ConvergencePrior, u64)> {
+        let inner = self.inner.lock().expect("book lock");
+        let mut out: Vec<(String, ConvergencePrior, u64)> = inner.iter().map(|(k, (est, n))| (k.clone(), *est, *n)).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
 /// Serving-config selector for the sizing policy (`--policy`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PolicyKind {
@@ -472,6 +546,29 @@ mod tests {
         assert!(p.admit(&go), "budget admission ignores neighbour ages");
         let stop = AdmissionCtx { absorbed: 8, ..go };
         assert!(!p.admit(&stop), "an exhausted budget stops absorbing");
+    }
+
+    #[test]
+    fn convergence_book_ewma_and_misses() {
+        let book = ConvergenceBook::new();
+        assert_eq!(book.prior("m/fpi"), None, "an unseen key has no prior");
+        book.observe("m/fpi", ConvergencePrior { passes_per_job: 4.0, pass_secs: 0.01 });
+        let first = book.prior("m/fpi").unwrap();
+        assert_eq!(first.passes_per_job, 4.0, "the first observation seeds the estimate directly");
+        book.observe("m/fpi", ConvergencePrior { passes_per_job: 8.0, pass_secs: 0.01 });
+        let second = book.prior("m/fpi").unwrap();
+        assert!(second.passes_per_job > 4.0 && second.passes_per_job < 8.0, "later observations blend by EWMA: {}", second.passes_per_job);
+        // Garbage observations must not poison the estimate.
+        book.observe("m/fpi", ConvergencePrior { passes_per_job: f64::NAN, pass_secs: 0.01 });
+        book.observe("m/fpi", ConvergencePrior { passes_per_job: 0.0, pass_secs: 0.01 });
+        assert_eq!(book.prior("m/fpi").unwrap(), second, "non-finite / non-positive observations are ignored");
+        // Keys are independent; entries() reports counts.
+        book.observe("m/zeros", ConvergencePrior { passes_per_job: 2.0, pass_secs: 0.02 });
+        let entries = book.entries();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].0, "m/fpi");
+        assert_eq!(entries[0].2, 2, "only valid observations count");
+        assert_eq!(entries[1].2, 1);
     }
 
     #[test]

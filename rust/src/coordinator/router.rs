@@ -1,8 +1,19 @@
-//! Model-name → engine routing with lazy loading.
+//! Model-name → engine routing with lazy loading and LRU eviction.
 //!
 //! Engines are expensive (compiling every batch-size executable), so they
 //! are created on first request and cached. Thread-affine like everything
 //! PJRT: a `Router` lives on the engine thread.
+//!
+//! The placement plane ([`crate::coordinator::placement`]) decides which
+//! workers may *own* which engines; this module supplies the mechanics it
+//! needs on each worker: recency tracking ([`Router::engine`] bumps the
+//! touched model to most-recent), explicit unloading ([`Router::unload`]),
+//! and capacity enforcement — [`Router::make_room`] evicts
+//! least-recently-used engines *before* a lazy load so residency never
+//! exceeds the cap even transiently, with [`Router::enforce_cap`] as the
+//! after-the-fact safety net. The cumulative [`Router::loads`] /
+//! [`Router::evictions`] counters feed the server's per-worker
+//! `engine_loads` / `evictions` gauges.
 
 use crate::coordinator::engine::Engine;
 use crate::runtime::artifact::Manifest;
@@ -12,11 +23,17 @@ use std::collections::BTreeMap;
 pub struct Router {
     manifest: Manifest,
     engines: BTreeMap<String, Engine>,
+    /// Model names by recency of use, least-recent first.
+    recency: Vec<String>,
+    /// Cumulative engine loads since construction (reloads included).
+    loads: u64,
+    /// Cumulative LRU evictions since construction.
+    evictions: u64,
 }
 
 impl Router {
     pub fn new(manifest: Manifest) -> Router {
-        Router { manifest, engines: BTreeMap::new() }
+        Router { manifest, engines: BTreeMap::new(), recency: Vec::new(), loads: 0, evictions: 0 }
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -28,24 +45,102 @@ impl Router {
         self.manifest.models.keys().cloned().collect()
     }
 
-    /// Engine for `model`, loading it on first use.
+    /// Engine for `model`, loading it on first use (and again after an
+    /// eviction). Every call marks `model` most-recently-used.
     pub fn engine(&mut self, model: &str) -> Result<&Engine> {
         if !self.engines.contains_key(model) {
             let eng = Engine::load(&self.manifest, model)?;
             self.engines.insert(model.to_string(), eng);
+            self.loads += 1;
         }
+        self.touch(model);
         Ok(self.engines.get(model).expect("just inserted"))
+    }
+
+    fn touch(&mut self, model: &str) {
+        if let Some(pos) = self.recency.iter().position(|m| m == model) {
+            self.recency.remove(pos);
+        }
+        self.recency.push(model.to_string());
+    }
+
+    /// Drop `model`'s engine if resident, freeing its executables.
+    /// Returns whether anything was unloaded.
+    pub fn unload(&mut self, model: &str) -> bool {
+        if let Some(pos) = self.recency.iter().position(|m| m == model) {
+            self.recency.remove(pos);
+        }
+        self.engines.remove(model).is_some()
+    }
+
+    /// Evict least-recently-used engines until at most `cap` stay
+    /// resident (the `CapacityCapped` placement policy's safety net).
+    /// Returns how many engines were evicted.
+    pub fn enforce_cap(&mut self, cap: usize) -> usize {
+        let mut evicted = 0;
+        while self.engines.len() > cap {
+            let victim = self.recency.first().expect("resident engines are recency-tracked").clone();
+            self.unload(&victim);
+            evicted += 1;
+        }
+        self.evictions += evicted as u64;
+        evicted
+    }
+
+    /// Make room for `model`'s engine under a residency cap: if it is
+    /// not already resident, evict least-recently-used engines until the
+    /// upcoming lazy load fits within `cap`. Called *before* the load —
+    /// evicting afterwards would let residency peak at `cap + 1`, which
+    /// breaks the capacity policy's promise of a hard per-worker memory
+    /// bound. Returns how many engines were evicted.
+    pub fn make_room(&mut self, model: &str, cap: usize) -> usize {
+        if self.engines.contains_key(model) {
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.engines.len() >= cap.max(1) {
+            let victim = self.recency.first().expect("resident engines are recency-tracked").clone();
+            self.unload(&victim);
+            evicted += 1;
+        }
+        self.evictions += evicted as u64;
+        evicted
     }
 
     /// Number of currently-loaded engines.
     pub fn loaded(&self) -> usize {
         self.engines.len()
     }
+
+    /// Names of the currently-resident engines (sorted, for gauges).
+    pub fn resident_models(&self) -> Vec<String> {
+        self.engines.keys().cloned().collect()
+    }
+
+    /// Cumulative engine loads since construction (reloads included).
+    pub fn loads(&self) -> u64 {
+        self.loads
+    }
+
+    /// Cumulative LRU evictions since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::artifact::{write_mock_manifest, MockModelSpec};
+
+    fn mock_router(tag: &str, names: &[&str]) -> Router {
+        let dir = std::env::temp_dir().join(format!("predsamp-router-{tag}-{}", std::process::id()));
+        let specs: Vec<MockModelSpec> = names.iter().enumerate().map(|(i, n)| MockModelSpec::new(n, i as u64 + 1)).collect();
+        write_mock_manifest(&dir, &specs).unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        Router::new(man)
+    }
 
     #[test]
     fn lazy_loading_and_caching() {
@@ -63,5 +158,56 @@ mod tests {
         r.engine("mnist_bin").unwrap(); // cached
         assert_eq!(r.loaded(), 1);
         assert!(r.engine("not_a_model").is_err());
+    }
+
+    #[test]
+    fn lru_eviction_under_capacity_cap() {
+        // The CapacityCapped mechanism: loading beyond the cap must evict
+        // the least-recently-*used* engine — touch order, not load order.
+        let mut r = mock_router("lru", &["a", "b", "c"]);
+        r.engine("a").unwrap();
+        r.engine("b").unwrap();
+        r.engine("c").unwrap();
+        assert_eq!(r.loaded(), 3);
+        assert_eq!(r.loads(), 3);
+        r.engine("a").unwrap(); // cached touch: "b" is now the LRU
+        assert_eq!(r.loads(), 3, "a cache hit is not a load");
+        assert_eq!(r.enforce_cap(2), 1);
+        assert_eq!(r.resident_models(), vec!["a".to_string(), "c".to_string()], "the LRU engine (b) must be the eviction victim");
+        assert_eq!(r.evictions(), 1);
+        // Reloading an evicted engine counts as a fresh load.
+        r.engine("b").unwrap();
+        assert_eq!(r.loads(), 4);
+        // A cap at the resident count evicts nothing.
+        assert_eq!(r.enforce_cap(3), 0);
+        assert_eq!(r.evictions(), 1);
+    }
+
+    #[test]
+    fn make_room_evicts_before_the_load_never_after() {
+        // The capacity promise: residency must never exceed the cap,
+        // even transiently — so room is made *before* the lazy load.
+        let mut r = mock_router("room", &["a", "b", "c"]);
+        r.engine("a").unwrap();
+        assert_eq!(r.make_room("a", 1), 0, "a resident model needs no room");
+        assert_eq!(r.make_room("b", 1), 1, "at the cap, the LRU engine goes first");
+        assert_eq!(r.loaded(), 0, "room is made before the load, not after");
+        r.engine("b").unwrap();
+        assert_eq!(r.loaded(), 1);
+        assert_eq!(r.make_room("c", 2), 0, "under the cap nothing is evicted");
+        r.engine("c").unwrap();
+        assert_eq!(r.loaded(), 2);
+        assert_eq!(r.evictions(), 1);
+    }
+
+    #[test]
+    fn unload_frees_and_reports() {
+        let mut r = mock_router("unload", &["a", "b"]);
+        r.engine("a").unwrap();
+        assert!(r.unload("a"), "resident engine must unload");
+        assert!(!r.unload("a"), "second unload is a no-op");
+        assert!(!r.unload("never_loaded"));
+        assert_eq!(r.loaded(), 0);
+        assert!(r.resident_models().is_empty());
     }
 }

@@ -34,7 +34,7 @@
 //! policy (`policy-exactness` in `tests/sampler_props.rs`).
 #![deny(missing_docs)]
 
-use crate::coordinator::policy::{self, LatencyLean, OccupancyFirst, SizingCtx, SizingPolicy};
+use crate::coordinator::policy::{self, ConvergencePrior, LatencyLean, OccupancyFirst, SizingCtx, SizingPolicy};
 use crate::sampler::forecast::Forecaster;
 use crate::sampler::noise::JobNoise;
 use crate::sampler::predictive::{PredictiveSampler, SlotState};
@@ -242,7 +242,7 @@ pub fn run_continuous_family_mode<M: StepModel>(
 ) -> Result<ScheduleReport> {
     let initial: Vec<LiveJob> = noises.into_iter().enumerate().map(|(id, noise)| LiveJob { tag: id as u64, noise }).collect();
     let mut feed = CollectFeed { results: (0..initial.len()).map(|_| None).collect() };
-    let mut rep = schedule_family(models, forecaster, initial, &mut feed, use_plan, &LatencyLean)?;
+    let mut rep = schedule_family(models, forecaster, initial, &mut feed, use_plan, &LatencyLean, None)?;
     rep.results = feed.results.into_iter().map(|r| r.expect("all jobs complete")).collect();
     Ok(rep)
 }
@@ -270,7 +270,7 @@ pub fn run_elastic_family<M: StepModel>(
     initial: Vec<LiveJob>,
     feed: &mut dyn JobFeed,
 ) -> Result<ScheduleReport> {
-    schedule_family(models, forecaster, initial, feed, true, &OccupancyFirst)
+    schedule_family(models, forecaster, initial, feed, true, &OccupancyFirst, None)
 }
 
 /// As [`run_elastic_family`], sizing every resize decision with an
@@ -285,14 +285,37 @@ pub fn run_elastic_family_policy<M: StepModel>(
     feed: &mut dyn JobFeed,
     sizing: &dyn SizingPolicy,
 ) -> Result<ScheduleReport> {
-    schedule_family(models, forecaster, initial, feed, true, sizing)
+    schedule_family(models, forecaster, initial, feed, true, sizing, None)
+}
+
+/// As [`run_elastic_family_policy`], seeding the schedule's per-pass
+/// wall-time and passes-per-job EWMAs from a [`ConvergencePrior`] — the
+/// server's cross-schedule history for this `(model, method)` workload
+/// ([`crate::coordinator::policy::ConvergenceBook`]). A seeded schedule's
+/// [`crate::coordinator::policy::SloHybrid`] projections start from
+/// observed behavior instead of the worst-case `d` prior, so cold-start
+/// up-shift decisions stop being maximally conservative; the EWMAs then
+/// blend in the schedule's own observations as usual. Seeding biases
+/// sizing only — samples stay bitwise identical under any prior.
+pub fn run_elastic_family_primed<M: StepModel>(
+    models: &[&M],
+    forecaster: Box<dyn Forecaster>,
+    initial: Vec<LiveJob>,
+    feed: &mut dyn JobFeed,
+    sizing: &dyn SizingPolicy,
+    prior: Option<ConvergencePrior>,
+) -> Result<ScheduleReport> {
+    schedule_family(models, forecaster, initial, feed, true, sizing, prior)
 }
 
 /// The one scheduling loop under every batching mode. `sizing` decides
 /// which exported batch each pass runs on: the closed-queue entry points
 /// pass [`LatencyLean`] (smallest export ≥ runnable jobs; never parks),
 /// the live entry points pass the caller's policy (the occupancy-first
-/// default parks excess in-flight slots to keep batches full).
+/// default parks excess in-flight slots to keep batches full). `prior`
+/// seeds the wall-time / passes-per-job EWMAs (see
+/// [`run_elastic_family_primed`]); `None` starts them cold.
+#[allow(clippy::too_many_arguments)]
 fn schedule_family<M: StepModel>(
     models: &[&M],
     forecaster: Box<dyn Forecaster>,
@@ -300,6 +323,7 @@ fn schedule_family<M: StepModel>(
     feed: &mut dyn JobFeed,
     use_plan: bool,
     sizing: &dyn SizingPolicy,
+    prior: Option<ConvergencePrior>,
 ) -> Result<ScheduleReport> {
     ensure!(!models.is_empty(), "empty model family");
     // Batch sizes ascending. The family must be one model at different
@@ -342,9 +366,11 @@ fn schedule_family<M: StepModel>(
     let mut parked: VecDeque<(u64, SlotState, usize)> = VecDeque::new();
     let mut passes = 0usize;
     // Rolling estimates the SLO policy projects from: wall-seconds per
-    // ARM pass, and passes a job needs to converge.
-    let mut pass_secs: Option<f64> = None;
-    let mut passes_per_job: Option<f64> = None;
+    // ARM pass, and passes a job needs to converge. A caller-provided
+    // prior (server-level cross-schedule history) seeds them; the
+    // schedule's own observations blend in through the same EWMA.
+    let mut pass_secs: Option<f64> = prior.map(|p| p.pass_secs);
+    let mut passes_per_job: Option<f64> = prior.map(|p| p.passes_per_job);
     let ctx0 = SizingCtx {
         in_flight: 0,
         parked: 0,
@@ -809,6 +835,51 @@ mod tests {
         // proves nothing.
         assert!(occ.occupancy > fit.occupancy - 1e-9, "occupancy sizing exists to keep batches full");
         assert!(occ.calls_per_job <= fit.calls_per_job + 1e-9, "occupancy sizing must not spend more slot-passes than fit");
+    }
+
+    #[test]
+    fn convergence_prior_seeds_schedule_ewmas_and_keeps_samples() {
+        // The server-level estimator's contract at the scheduler layer: a
+        // primed schedule must hand the sizing policy the prior's
+        // passes-per-job / pass-seconds from the very first decision
+        // (instead of None → the worst-case `d` fallback), and priming
+        // must never change a sample.
+        use std::cell::RefCell;
+        #[derive(Default)]
+        struct Probe {
+            seen: RefCell<Vec<(Option<f64>, Option<f64>)>>,
+        }
+        impl SizingPolicy for Probe {
+            fn name(&self) -> &'static str {
+                "probe"
+            }
+            fn choose(&self, exports: &[usize], ctx: &SizingCtx) -> usize {
+                self.seen.borrow_mut().push((ctx.passes_per_job, ctx.pass_secs));
+                policy::fit_size(exports, ctx.need())
+            }
+        }
+        let m4 = MockArm::new(4, 3, 6, 4, 2, 2.5, 21);
+        let m1 = MockArm { batch: 1, ..m4.clone() };
+        let family: Vec<&MockArm> = vec![&m1, &m4];
+        let (d, k) = (m4.dim(), 4);
+        let run = |prior: Option<ConvergencePrior>| -> (Vec<(Option<f64>, Option<f64>)>, Vec<Vec<i32>>) {
+            let probe = Probe::default();
+            // A burst after the first pass guarantees the schedule runs
+            // multiple passes, so the EWMAs demonstrably move off the seed.
+            let mut feed = TickBurstFeed::new(6, vec![(1, live_jobs(3..6, 13, d, k))]);
+            run_elastic_family_primed(&family, Box::new(FpiReuse), live_jobs(0..3, 13, d, k), &mut feed, &probe, prior).unwrap();
+            (probe.seen.into_inner(), feed.results.into_iter().map(|r| r.expect("job completed").x).collect())
+        };
+        let (cold_ctxs, cold_x) = run(None);
+        assert_eq!(cold_ctxs[0], (None, None), "an unprimed schedule starts with cold EWMAs");
+        let prior = ConvergencePrior { passes_per_job: 3.5, pass_secs: 0.25 };
+        let (primed_ctxs, primed_x) = run(Some(prior));
+        assert_eq!(primed_ctxs[0], (Some(3.5), Some(0.25)), "the prior must reach the policy's first decision");
+        // The schedule's own observations take over: once a pass has run
+        // (and a job completed), the EWMAs move off the exact seed.
+        let last = *primed_ctxs.last().unwrap();
+        assert!(last.1.is_some() && last.1 != Some(0.25), "pass-time observations must blend into the seeded EWMA");
+        assert_eq!(primed_x, cold_x, "priming must never change a sample");
     }
 
     #[test]

@@ -1,0 +1,33 @@
+//! Minimal blocking client for examples, benches and tests.
+
+use crate::substrate::json::Value;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// One line-delimited-JSON connection to a predsamp server.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one request line, wait for the response.
+    pub fn call(&mut self, line: &str) -> Result<Value> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp)?;
+        if n == 0 {
+            // A clean EOF is not a malformed response: say what happened.
+            anyhow::bail!("connection closed by server");
+        }
+        Ok(crate::substrate::json::parse(resp.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?)
+    }
+}

@@ -1,0 +1,375 @@
+//! The live-schedule bridge: `ServeFeed` connects an executing group's
+//! elastic schedule to the serving plane — absorbing the group's own
+//! mid-flight arrivals under the admission policy, answering each
+//! request the moment its last job converges, and observing the finished
+//! schedule into the server-level convergence history.
+
+use crate::coordinator::config::ServeConfig;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::{self, AdmissionCtx, AdmissionPolicy, ConvergencePrior};
+use crate::coordinator::protocol;
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler::{self, JobFeed, LiveJob, LiveStats};
+use crate::coordinator::server::pool::{fail_request, GroupKey, PendingSample, Pool, Work};
+use crate::coordinator::server::worker::{book_key, images_value, sample_fields, WorkerShared};
+use crate::sampler::noise::JobNoise;
+use crate::sampler::JobResult;
+use crate::substrate::timer::Timer;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One request inside a live schedule.
+struct FeedReq {
+    p: PendingSample,
+    results: Vec<Option<JobResult>>,
+    remaining: usize,
+    replied: bool,
+}
+
+/// Bridges a live schedule to the serving plane: polls the worker's
+/// shared queue between ARM passes for mid-flight arrivals of the
+/// executing group, and answers each request the moment its last job
+/// converges (requests needing the decoder wait for the schedule to end,
+/// when the router is borrowable again).
+struct ServeFeed<'a> {
+    pool: &'a Pool,
+    widx: usize,
+    key: GroupKey,
+    dim: usize,
+    categories: usize,
+    load: &'a AtomicUsize,
+    /// Decides whether an arrival of this group joins the live schedule
+    /// or stays queued for the next window (fairness: a hot group must
+    /// not starve other groups queued on this worker; whatever it leaves
+    /// queued forms a normal next window — or gets stolen). Denial only
+    /// defers — samples are identical either way.
+    admission: Box<dyn AdmissionPolicy>,
+    /// Jobs absorbed mid-flight so far (the initial window not counted).
+    absorbed_jobs: usize,
+    metrics: &'a Mutex<Metrics>,
+    /// Sizing-policy label for the per-policy metric counters.
+    policy_label: &'static str,
+    /// Completed jobs between mid-schedule metric flushes. Age-based
+    /// admission puts no bound on a schedule's lifetime (a hot group on
+    /// an idle server absorbs forever), so batch/latency/policy metrics
+    /// are flushed as windows every `flush_every` completions instead of
+    /// only when the schedule ends — otherwise the `metrics` op would
+    /// report an eternally-busy server as idle.
+    flush_every: usize,
+    /// Jobs / slot-passes / passes already flushed to metrics.
+    flushed_jobs: usize,
+    flushed_slot_passes: usize,
+    flushed_passes: usize,
+    /// Wall-clock of the current metrics window.
+    window_timer: Timer,
+    /// Absorption stops once this many requests have joined the schedule
+    /// — a hygiene bound, not a fairness knob: every request leaves a
+    /// small routing stub in `reqs` for its tags, so an unboundedly
+    /// long-lived schedule would leak. When the cap is hit the schedule
+    /// drains and ends, replies flush, and the queued backlog opens a
+    /// fresh window immediately (windows are keyed to admission time,
+    /// so ending costs no extra `max_wait`).
+    absorb_cap: usize,
+    /// Requests with jobs in the schedule; tags pack (request index,
+    /// job index within the request).
+    reqs: Vec<FeedReq>,
+    /// Completed decode=true requests, replied after the schedule ends.
+    deferred: Vec<usize>,
+    /// Jobs completed across the whole schedule (group metrics).
+    completed_jobs: usize,
+    /// Per-job iterations summed across completions — with
+    /// `completed_jobs`, the schedule's mean passes/job observation for
+    /// the convergence book.
+    total_iters: usize,
+    last_stats: Option<LiveStats>,
+}
+
+impl<'a> ServeFeed<'a> {
+    /// Flush the metrics window ending at `stats`: one `record_batch`
+    /// (+ per-policy count) covering everything completed since the last
+    /// flush. No-op when the window is empty.
+    fn flush_window(&mut self, stats: &LiveStats) {
+        let jobs = self.completed_jobs - self.flushed_jobs;
+        if jobs == 0 {
+            return;
+        }
+        let slot_passes = stats.slot_passes - self.flushed_slot_passes;
+        let passes = stats.passes - self.flushed_passes;
+        let calls_per_job = slot_passes as f64 / jobs as f64;
+        let wall = self.window_timer.secs();
+        {
+            let mut m = self.metrics.lock().expect("metrics lock");
+            m.record_batch(jobs, passes, scheduler::calls_pct_of(calls_per_job, self.dim), wall);
+            m.record_policy(self.policy_label);
+        }
+        self.flushed_jobs = self.completed_jobs;
+        self.flushed_slot_passes = stats.slot_passes;
+        self.flushed_passes = stats.passes;
+        self.window_timer = Timer::start();
+    }
+
+    /// Flush whatever the last completion left unflushed (schedule end).
+    fn flush_final(&mut self) {
+        if let Some(stats) = self.last_stats {
+            self.flush_window(&stats);
+        }
+    }
+
+    /// Register a request with the schedule, returning its jobs. Noise is
+    /// keyed `(seed, job index within the request)` — identical to every
+    /// other serving path, which is what makes mid-flight admission exact.
+    fn admit_request(&mut self, p: PendingSample) -> Vec<LiveJob> {
+        let ri = self.reqs.len() as u64;
+        let jobs = (0..p.n)
+            .map(|j| LiveJob { tag: ri << 32 | j as u64, noise: JobNoise::new(p.seed, j as u64, self.dim, self.categories) })
+            .collect();
+        self.reqs.push(FeedReq { remaining: p.n, results: (0..p.n).map(|_| None).collect(), replied: false, p });
+        jobs
+    }
+
+    /// Answer completed request `ri` with the schedule's stats as of now.
+    /// `router` present selects the decode path (only possible once the
+    /// schedule ended and the router is borrowable again).
+    fn reply_request(&mut self, ri: usize, stats: &LiveStats, router: Option<&mut Router>) {
+        let req = &mut self.reqs[ri];
+        // Per-request cost: each job owns its slot for exactly its pass
+        // count, so slot-passes per job = mean iterations — exact under
+        // occupancy sizing (every pass runs a full batch), and never
+        // inflated by capacity other jobs are still consuming the way a
+        // running schedule-wide ratio would be.
+        let iters: usize = req.results.iter().map(|r| r.as_ref().expect("request complete").iterations).sum();
+        let calls_per_job = iters as f64 / req.p.n.max(1) as f64;
+        let calls_pct = scheduler::calls_pct_of(calls_per_job, self.dim);
+        // Wall time is this request's serving latency (queue + schedule),
+        // not the whole schedule's age — a request absorbed mid-flight
+        // must not inherit the time before it arrived.
+        let wall = req.p.admitted.elapsed().as_secs_f64();
+        let mut fields = sample_fields(&self.key.0, self.key.1, stats.passes, calls_per_job, calls_pct, wall, req.p.n);
+        let xs: Vec<Vec<i32>> = if req.p.return_samples || router.is_some() {
+            req.results.iter().map(|r| r.as_ref().expect("request complete").x.clone()).collect()
+        } else {
+            Vec::new()
+        };
+        if req.p.return_samples {
+            fields.push(("samples", protocol::samples_value(&xs)));
+        }
+        let resp = match router {
+            Some(router) => match router.engine(&self.key.0).and_then(|e| e.decode(&xs)) {
+                Ok(imgs) => {
+                    fields.push(("images", images_value(&imgs)));
+                    protocol::ok(fields)
+                }
+                Err(e) => protocol::err(&format!("decode: {e:#}")),
+            },
+            None => protocol::ok(fields),
+        };
+        let _ = req.p.reply.send(resp);
+        req.replied = true;
+        // Drop the sample payloads now: a live schedule can absorb for a
+        // long time, and only the small routing stub must outlive the
+        // reply (tags index `reqs` for the schedule's whole lifetime).
+        req.results = Vec::new();
+        req.p.group.pending.fetch_sub(req.p.n, Ordering::SeqCst);
+        self.load.fetch_sub(req.p.n, Ordering::SeqCst);
+    }
+
+    /// Schedule finished cleanly: answer deferred decode requests, then
+    /// fail anything that somehow never completed (accounting safety net).
+    fn finish(&mut self, router: &mut Router) {
+        let stats = self.last_stats.unwrap_or(LiveStats { passes: 0, slot_passes: 0, completed: 0, upshifts: 0, downshifts: 0 });
+        for ri in std::mem::take(&mut self.deferred) {
+            self.reply_request(ri, &stats, Some(&mut *router));
+        }
+        self.fail_rest("schedule ended with jobs outstanding");
+    }
+
+    /// Fail every request that has not been answered yet.
+    fn fail_rest(&mut self, why: &str) {
+        for req in self.reqs.iter_mut().filter(|r| !r.replied) {
+            let _ = req.p.reply.send(protocol::err(why));
+            req.replied = true;
+            req.p.group.pending.fetch_sub(req.p.n, Ordering::SeqCst);
+            self.load.fetch_sub(req.p.n, Ordering::SeqCst);
+        }
+    }
+}
+
+impl JobFeed for ServeFeed<'_> {
+    fn poll(&mut self) -> Vec<LiveJob> {
+        // Stop absorbing — letting the schedule drain and end — once (a)
+        // a completed decode request is waiting on the router (deferred
+        // replies can only be sent after the schedule ends, when the
+        // router is borrowable again), or (b) the request table hit its
+        // hygiene cap. Queued arrivals just form the next window.
+        if !self.deferred.is_empty() || self.reqs.len() >= self.absorb_cap {
+            return Vec::new();
+        }
+        let mut fresh: Vec<PendingSample> = Vec::new();
+        let mut denied = false;
+        {
+            let mut st = self.pool.state.lock().expect("pool lock");
+            // The oldest admission among work of *other* groups queued on
+            // this worker — whatever absorption would starve. Evals count
+            // too: without them, an endlessly-absorbing group could hold
+            // a queued eval past any bound (no budget caps the schedule
+            // any more).
+            let oldest_other = st.queues[self.widx]
+                .iter()
+                .filter_map(|it| match it {
+                    Work::Sample(p) if !(p.model == self.key.0 && p.method == self.key.1) => Some(p.admitted),
+                    Work::Sample(_) => None,
+                    Work::Eval { admitted, .. } => Some(*admitted),
+                })
+                .min();
+            let oldest_other_age = oldest_other.map(|t| t.elapsed());
+            // Take this group's arrivals, oldest first, while the
+            // admission policy accepts them. The first denial stops the
+            // sweep — later arrivals are younger still — and leaves the
+            // denied requests queued in place for the next window (or a
+            // thief), preserving arrival order.
+            let q = &mut st.queues[self.widx];
+            let mut i = 0;
+            while i < q.len() {
+                let decision = match &q[i] {
+                    Work::Sample(p) if p.model == self.key.0 && p.method == self.key.1 => {
+                        let ctx = AdmissionCtx { jobs: p.n, absorbed: self.absorbed_jobs, age: p.admitted.elapsed(), oldest_other_age };
+                        Some(self.admission.admit(&ctx))
+                    }
+                    _ => None,
+                };
+                match decision {
+                    Some(true) => {
+                        let Some(Work::Sample(p)) = q.remove(i) else { unreachable!("just matched") };
+                        self.absorbed_jobs += p.n;
+                        fresh.push(p);
+                        if self.reqs.len() + fresh.len() >= self.absorb_cap {
+                            break;
+                        }
+                    }
+                    Some(false) => {
+                        denied = true;
+                        break;
+                    }
+                    None => i += 1,
+                }
+            }
+        }
+        if !fresh.is_empty() || denied {
+            let mut m = self.metrics.lock().expect("metrics lock");
+            for p in &fresh {
+                m.record_absorbed(p.n);
+                m.record_admission_age(p.admitted.elapsed());
+            }
+            if denied {
+                m.record_absorb_denial();
+            }
+        }
+        let mut jobs = Vec::new();
+        for p in fresh {
+            jobs.extend(self.admit_request(p));
+        }
+        jobs
+    }
+
+    fn complete(&mut self, tag: u64, result: JobResult, stats: &LiveStats) {
+        self.completed_jobs += 1;
+        self.total_iters += result.iterations;
+        self.last_stats = Some(*stats);
+        let (ri, j) = ((tag >> 32) as usize, (tag & 0xffff_ffff) as usize);
+        let req = &mut self.reqs[ri];
+        req.results[j] = Some(result);
+        req.remaining -= 1;
+        if req.remaining == 0 {
+            if req.p.decode {
+                self.deferred.push(ri);
+            } else {
+                self.reply_request(ri, stats, None);
+            }
+        }
+        if self.completed_jobs - self.flushed_jobs >= self.flush_every {
+            self.flush_window(stats);
+        }
+    }
+}
+
+/// Execute a group as a **live** schedule: the initial window plus every
+/// mid-flight arrival the feed absorbs (gated by the configured
+/// [`AdmissionPolicy`]), sized per pass by the configured
+/// [`policy::SizingPolicy`] — its convergence EWMAs seeded from the
+/// server-level history for this workload — with per-request replies as
+/// they complete. A finished schedule observes its mean passes/job and
+/// pass wall-time back into the history.
+pub(crate) fn execute_elastic_group(
+    router: &mut Router,
+    shared: &WorkerShared,
+    group: Vec<PendingSample>,
+    pool: &Pool,
+    widx: usize,
+    cfg: &ServeConfig,
+) {
+    if group.is_empty() {
+        return;
+    }
+    let key = (group[0].model.clone(), group[0].method);
+    let shape = router.engine(&key.0).map(|e| (e.info.dim, e.info.categories));
+    let (dim, categories) = match shape {
+        Ok(s) => s,
+        Err(e) => {
+            shared.metrics.lock().unwrap().record_error();
+            let msg = format!("{e:#}");
+            for p in group {
+                fail_request(p, &shared.load, &msg);
+            }
+            return;
+        }
+    };
+    let method = key.1;
+    let sizing = policy::sizing_for(cfg.policy, cfg.slo);
+    let workload = book_key(&key.0, method);
+    let prior = shared.book.prior(&workload);
+    let mut feed = ServeFeed {
+        pool,
+        widx,
+        key: key.clone(),
+        dim,
+        categories,
+        load: &shared.load,
+        admission: policy::admission_for(cfg.admission, cfg.max_wait),
+        absorbed_jobs: 0,
+        metrics: &shared.metrics,
+        policy_label: sizing.name(),
+        flush_every: cfg.max_batch.max(1) * 8,
+        flushed_jobs: 0,
+        flushed_slot_passes: 0,
+        flushed_passes: 0,
+        window_timer: Timer::start(),
+        absorb_cap: cfg.max_batch.max(1) * 64,
+        reqs: Vec::new(),
+        deferred: Vec::new(),
+        completed_jobs: 0,
+        total_iters: 0,
+        last_stats: None,
+    };
+    let mut initial = Vec::new();
+    for p in group {
+        initial.extend(feed.admit_request(p));
+    }
+    let rep = router.engine(&key.0).and_then(|e| e.sample_elastic_primed(method, initial, &mut feed, sizing.as_ref(), prior));
+    match rep {
+        Ok(rep) => {
+            feed.flush_final();
+            feed.finish(router);
+            if rep.total_passes > 0 && feed.completed_jobs > 0 {
+                let obs = ConvergencePrior {
+                    passes_per_job: feed.total_iters as f64 / feed.completed_jobs as f64,
+                    pass_secs: rep.wall_secs / rep.total_passes as f64,
+                };
+                shared.book.observe(&workload, obs);
+            }
+        }
+        Err(e) => {
+            shared.metrics.lock().unwrap().record_error();
+            feed.fail_rest(&format!("{e:#}"));
+        }
+    }
+}

@@ -1,0 +1,518 @@
+//! TCP serving: line-delimited JSON over a thread pool, dispatched to a
+//! sharded pool of engine workers with elastic batching, work stealing,
+//! and an explicit model-placement plane.
+//!
+//! Topology:
+//!
+//! ```text
+//! clients ──TCP──▶ connection workers (ThreadPool)
+//!                      │ (Request, reply Sender) over mpsc
+//!                      ▼
+//!                dispatcher: answers ping/info/metrics, routes each
+//!                (model, method) batching group to the least-loaded
+//!                *eligible* engine worker (ties: engine already warm,
+//!                then fewest loaded engines, then round-robin; sticky
+//!                while the group has jobs in flight)
+//!                      │ shared work pool (per-worker queues + routing
+//!                      │ table under one lock)
+//!        ┌─────────────┼─────────────┐
+//!        ▼             ▼             ▼
+//!   engine worker 0  worker 1 …  worker N-1   (cfg.engine_threads)
+//!   each: Router + Metrics + admission-keyed batching window
+//!        │                           ▲
+//!        └── executing group absorbs │ idle workers steal whole queued
+//!            its own live arrivals   │ groups they can host
+//! ```
+//!
+//! PJRT handles are thread-affine, so every worker owns its own `Router`
+//! and engines load lazily on the worker that needs them. *Which* workers
+//! may own which models is the placement plane's call
+//! ([`crate::coordinator::placement`], `cfg.placement`): replicate-all
+//! (the default — every worker eligible for everything, bit-identical to
+//! the pre-placement fleet), per-model worker pins (manifest `"pin"`
+//! field / `--pin model=0,2`), or a per-worker engine cap with LRU
+//! eviction (`--max-engines`). Eligibility applies everywhere a model
+//! lands on a worker: fresh-group routing, dead-worker re-homing, eval
+//! routing, and group stealing.
+//!
+//! Three mechanisms keep the fleet work-conserving on top of sharding:
+//!
+//! * **Live-queue elasticity** — a group being executed keeps absorbing
+//!   its own mid-flight arrivals: the worker's schedule polls the shared
+//!   queue between ARM passes ([`crate::coordinator::engine::Engine::sample_elastic`]),
+//!   up-shifts onto a larger exported batch when the queue deepens, and
+//!   answers each request the moment its last job converges — instead of
+//!   stashing arrivals for the next batching window. How the schedule
+//!   *sizes* those batches and *which* arrivals it absorbs are pluggable
+//!   policies ([`crate::coordinator::policy`]): `cfg.policy`/`cfg.slo`
+//!   select occupancy-first, latency-lean, or SLO-hybrid sizing — the
+//!   SLO hybrid's cold-start projections seeded from the server-level
+//!   [`ConvergenceBook`] — and `cfg.admission` gates absorption
+//!   (age-based oldest-first fairness by default, so a hot group cannot
+//!   starve queued neighbours).
+//! * **Group stealing** — a worker whose queue drains pulls a whole
+//!   queued `(model, method)` group it is eligible to host from the
+//!   most-loaded worker. Groups move atomically (every queued request at
+//!   once, order preserved, route retargeted under the pool lock), so
+//!   sticky batching, PJRT thread-affinity, and placement pins survive
+//!   the migration.
+//! * **Admission-keyed batching windows** — windows are sized off each
+//!   request's *admission* time, not the window's opening: a request
+//!   queued behind k other groups executes as soon as a worker reaches
+//!   it, instead of re-paying `cfg.max_wait` per preceding group.
+//!
+//! Exactness is untouched by any of it: per-job noise is keyed by
+//! `(seed, job index within the request)` — never by worker, slot,
+//! batch size, placement, or arrival time — so samples are bitwise
+//! identical at any `engine_threads`/`elastic`/`steal`/`placement`
+//! setting (see `rust/tests/server_test.rs`).
+
+mod client;
+mod feed;
+mod pool;
+mod worker;
+
+pub use client::Client;
+
+use crate::coordinator::config::ServeConfig;
+use crate::coordinator::metrics::{Metrics, WorkerGauges};
+use crate::coordinator::placement::{placement_for, PlacementPolicy};
+use crate::coordinator::policy::ConvergenceBook;
+use crate::coordinator::protocol::{self, Request};
+use crate::coordinator::router::Router;
+use crate::coordinator::server::pool::{GroupSlot, PendingSample, Pool, PoolState, Work, EVAL_LOAD};
+use crate::coordinator::server::worker::{worker_loop, WorkerHandle, WorkerShared};
+use crate::runtime::artifact::Manifest;
+use crate::substrate::json::Value;
+use crate::substrate::threadpool::ThreadPool;
+use anyhow::{Context, Result};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+enum Msg {
+    Req(Request, pool::Reply),
+    Shutdown,
+}
+
+/// Handle to a running server (for tests and the serving demo).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    tx: mpsc::Sender<Msg>,
+    stop: Arc<AtomicBool>,
+    dispatch_join: Option<std::thread::JoinHandle<()>>,
+    accept_join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.dispatch_join.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.accept_join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+/// Bind `cfg.addr` (use port 0 for ephemeral) and serve in background
+/// threads. The returned handle reports the bound address. Fails fast if
+/// the config is invalid, the manifest is unreadable, or the placement
+/// policy does not resolve against them (unknown pinned model,
+/// out-of-range worker index).
+pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<ServerHandle> {
+    cfg.validate()?;
+    let manifest = Manifest::load(&manifest_dir).context("loading manifest for serving")?;
+    let placement = placement_for(&cfg.placement, &manifest, cfg.engine_threads).context("resolving placement policy")?;
+    let book = Arc::new(ConvergenceBook::new());
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<Msg>();
+
+    // The shared work pool, then one engine worker thread per shard: each
+    // owns a Router (PJRT state) + Metrics; the placement policy decides
+    // which engines it may end up owning.
+    let loads: Vec<Arc<AtomicUsize>> = (0..cfg.engine_threads).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+    let pool = Arc::new(Pool {
+        state: Mutex::new(PoolState {
+            queues: (0..cfg.engine_threads).map(|_| VecDeque::new()).collect(),
+            executing: vec![None; cfg.engine_threads],
+            routes: HashMap::new(),
+            dead: vec![false; cfg.engine_threads],
+        }),
+        cv: Condvar::new(),
+        shutdown: AtomicBool::new(false),
+        loads: loads.clone(),
+    });
+    let mut workers = Vec::with_capacity(cfg.engine_threads);
+    for w in 0..cfg.engine_threads {
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let engines_loaded = Arc::new(AtomicUsize::new(0));
+        let engine_loads = Arc::new(AtomicUsize::new(0));
+        let evictions = Arc::new(AtomicUsize::new(0));
+        let resident = Arc::new(Mutex::new(Vec::new()));
+        let shared = WorkerShared {
+            load: Arc::clone(&loads[w]),
+            metrics: Arc::clone(&metrics),
+            engines_loaded: Arc::clone(&engines_loaded),
+            engine_loads: Arc::clone(&engine_loads),
+            evictions: Arc::clone(&evictions),
+            resident: Arc::clone(&resident),
+            book: Arc::clone(&book),
+            placement: Arc::clone(&placement),
+        };
+        let man = manifest.clone();
+        let cfg2 = cfg.clone();
+        let pool2 = Arc::clone(&pool);
+        let join = std::thread::Builder::new()
+            .name(format!("predsamp-engine-{w}"))
+            .spawn(move || worker_loop(Router::new(man), cfg2, w, pool2, shared))?;
+        workers.push(WorkerHandle { load: Arc::clone(&loads[w]), metrics, engines_loaded, engine_loads, evictions, resident, join });
+    }
+
+    // Dispatcher: owns the request channel and the group routing table.
+    let pool2 = Arc::clone(&pool);
+    let placement2 = Arc::clone(&placement);
+    let book2 = Arc::clone(&book);
+    let dispatch_join = std::thread::Builder::new()
+        .name("predsamp-dispatch".into())
+        .spawn(move || dispatch_loop(manifest, workers, pool2, rx, placement2, book2))?;
+
+    // Acceptor + connection workers.
+    let conn_pool = ThreadPool::new(cfg.worker_threads);
+    let stop2 = Arc::clone(&stop);
+    let tx2 = tx.clone();
+    let accept_join = std::thread::Builder::new()
+        .name("predsamp-accept".into())
+        .spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx3 = tx2.clone();
+                        let stop3 = Arc::clone(&stop2);
+                        conn_pool.execute(move || handle_conn(stream, tx3, stop3));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        log::warn!("accept error: {e}");
+                        break;
+                    }
+                }
+            }
+            drop(conn_pool); // join workers
+        })?;
+
+    Ok(ServerHandle { addr, tx, stop, dispatch_join: Some(dispatch_join), accept_join: Some(accept_join) })
+}
+
+fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Msg>, stop: Arc<AtomicBool>) {
+    let peer = stream.peer_addr().ok();
+    // Read with a timeout so connection workers can observe shutdown even
+    // while a client holds the socket open (otherwise ServerHandle::stop
+    // would deadlock joining the pool).
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut line = String::new();
+        let n = loop {
+            match reader.read_line(&mut line) {
+                Ok(n) => break n,
+                Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    // line keeps whatever was read; retry for the rest
+                    if line.ends_with('\n') {
+                        break line.len();
+                    }
+                }
+                Err(_) => return,
+            }
+        };
+        if n == 0 || !line.ends_with('\n') {
+            // EOF. A final partial line is *not* a request: drop it rather
+            // than parsing (a truncated frame must not be executed).
+            if !line.trim().is_empty() {
+                log::debug!("dropping {} bytes of unterminated trailing input from {peer:?}", line.len());
+            }
+            break;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = match Request::parse(&line) {
+            Ok(req) => {
+                let (rtx, rrx) = mpsc::channel();
+                if tx.send(Msg::Req(req, rtx)).is_err() {
+                    break;
+                }
+                match rrx.recv_timeout(Duration::from_secs(600)) {
+                    Ok(r) => r,
+                    Err(_) => protocol::err("engine timeout"),
+                }
+            }
+            Err(e) => protocol::err(&e),
+        };
+        if writer.write_all(response.as_bytes()).and_then(|_| writer.write_all(b"\n")).is_err() {
+            break;
+        }
+    }
+    log::debug!("connection closed: {peer:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Dispatcher
+// ---------------------------------------------------------------------------
+
+/// Least-loaded live worker *eligible for `model`* under the placement
+/// policy. Ties break toward workers with the model's engine already
+/// resident (a warm worker serves the group without paying a redundant
+/// lazy engine load), then the fewest loaded engines (an idle fleet
+/// spreads lazy loads instead of serializing them on worker 0), then
+/// round-robin among exact ties. `None` when no eligible worker is
+/// alive.
+fn route_worker(workers: &[WorkerHandle], rr: &mut usize, dead: &[bool], placement: &dyn PlacementPolicy, model: &str) -> Option<usize> {
+    let costs: Vec<(usize, (usize, usize, usize))> = workers
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| !dead[i] && placement.eligible(model, i))
+        .map(|(i, w)| {
+            let cold = if w.hosts(model) { 0 } else { 1 };
+            (i, (w.load.load(Ordering::SeqCst), cold, w.engines_loaded.load(Ordering::SeqCst)))
+        })
+        .collect();
+    let best = costs.iter().map(|&(_, c)| c).min()?;
+    let ties: Vec<usize> = costs.iter().filter(|&&(_, c)| c == best).map(|&(i, _)| i).collect();
+    let pick = ties[*rr % ties.len()];
+    *rr += 1;
+    Some(pick)
+}
+
+/// Why routing found no worker: every worker died, or the live ones are
+/// all ineligible for the model under the placement policy.
+fn route_error(model: &str, dead: &[bool]) -> String {
+    if dead.iter().all(|&d| d) {
+        "engine workers unavailable".to_string()
+    } else {
+        format!("no eligible engine worker for model {model:?} under the placement policy")
+    }
+}
+
+fn dispatch_loop(
+    manifest: Manifest,
+    workers: Vec<WorkerHandle>,
+    pool: Arc<Pool>,
+    rx: mpsc::Receiver<Msg>,
+    placement: Arc<dyn PlacementPolicy>,
+    book: Arc<ConvergenceBook>,
+) {
+    let started = Instant::now();
+    let mut disp = Metrics::new();
+    let mut rr = 0usize; // round-robin cursor for routing ties
+    loop {
+        let msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Req(req, reply) => {
+                disp.record_request();
+                match req {
+                    Request::Ping => {
+                        let _ = reply.send(protocol::ok(vec![("pong", Value::Bool(true))]));
+                    }
+                    Request::Info => {
+                        let _ = reply.send(info_response(&manifest, &workers, &*placement));
+                    }
+                    Request::Metrics => {
+                        let _ = reply.send(metrics_response(&disp, &workers, started.elapsed().as_secs_f64(), &*placement, &book));
+                    }
+                    Request::Eval { model } => {
+                        // Evals need the model's engine too, so they route
+                        // by eligibility like any group — the old "any
+                        // worker owns a full Router" shortcut does not
+                        // survive pinning.
+                        let mut st = pool.state.lock().expect("pool lock");
+                        let Some(w) = route_worker(&workers, &mut rr, &st.dead, &*placement, &model) else {
+                            let msg = route_error(&model, &st.dead);
+                            drop(st);
+                            disp.record_error();
+                            let _ = reply.send(protocol::err(&msg));
+                            continue;
+                        };
+                        workers[w].load.fetch_add(EVAL_LOAD, Ordering::SeqCst);
+                        st.queues[w].push_back(Work::Eval { model, reply, admitted: Instant::now() });
+                        drop(st);
+                        pool.cv.notify_all();
+                    }
+                    Request::Sample { model, method, n, seed, return_samples, decode } => {
+                        // Route under the pool lock: a sticky group follows
+                        // its (possibly stolen) worker, a fresh group goes
+                        // to the least-loaded eligible one, and no steal
+                        // can interleave between the route read and the
+                        // push.
+                        let key = (model.clone(), method);
+                        let mut st = pool.state.lock().expect("pool lock");
+                        let sticky = match st.routes.get(&key) {
+                            Some(g) if g.pending.load(Ordering::SeqCst) > 0 => Some(Arc::clone(g)),
+                            _ => None,
+                        };
+                        let group = match sticky {
+                            Some(g) => g,
+                            None => match route_worker(&workers, &mut rr, &st.dead, &*placement, &key.0) {
+                                Some(w) => {
+                                    let g = Arc::new(GroupSlot { worker: AtomicUsize::new(w), pending: AtomicUsize::new(0) });
+                                    st.routes.insert(key.clone(), Arc::clone(&g));
+                                    g
+                                }
+                                None => {
+                                    let msg = route_error(&key.0, &st.dead);
+                                    drop(st);
+                                    disp.record_error();
+                                    let _ = reply.send(protocol::err(&msg));
+                                    continue;
+                                }
+                            },
+                        };
+                        let mut widx = group.worker.load(Ordering::SeqCst);
+                        if st.dead[widx] {
+                            // The sticky worker died: re-home the group on
+                            // an eligible survivor.
+                            match route_worker(&workers, &mut rr, &st.dead, &*placement, &key.0) {
+                                Some(w) => {
+                                    group.worker.store(w, Ordering::SeqCst);
+                                    widx = w;
+                                }
+                                None => {
+                                    let msg = route_error(&key.0, &st.dead);
+                                    drop(st);
+                                    disp.record_error();
+                                    let _ = reply.send(protocol::err(&msg));
+                                    continue;
+                                }
+                            }
+                        }
+                        group.pending.fetch_add(n, Ordering::SeqCst);
+                        workers[widx].load.fetch_add(n, Ordering::SeqCst);
+                        let ps = PendingSample { model, method, n, seed, return_samples, decode, reply, admitted: Instant::now(), group };
+                        st.queues[widx].push_back(Work::Sample(ps));
+                        if st.routes.len() > 64 {
+                            st.routes.retain(|_, g| g.pending.load(Ordering::SeqCst) > 0);
+                        }
+                        drop(st);
+                        pool.cv.notify_all();
+                    }
+                }
+            }
+        }
+    }
+    pool.shutdown.store(true, Ordering::SeqCst);
+    pool.cv.notify_all();
+    for w in workers {
+        let _ = w.join.join();
+    }
+}
+
+fn info_response(manifest: &Manifest, workers: &[WorkerHandle], placement: &dyn PlacementPolicy) -> String {
+    let models: Vec<Value> = manifest
+        .models
+        .values()
+        .map(|m| {
+            Value::obj(vec![
+                ("name", Value::str(m.name.clone())),
+                ("dim", Value::num(m.dim as f64)),
+                ("categories", Value::num(m.categories as f64)),
+                ("kind", Value::str(format!("{:?}", m.kind))),
+                ("bpd", Value::num(m.bpd)),
+                ("mock", Value::Bool(m.mock.is_some())),
+                (
+                    "eligible_workers",
+                    Value::Arr((0..workers.len()).filter(|&w| placement.eligible(&m.name, w)).map(|w| Value::num(w as f64)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    let warr: Vec<Value> = workers
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            Value::obj(vec![
+                ("id", Value::num(i as f64)),
+                ("queue_depth", Value::num(w.load.load(Ordering::SeqCst) as f64)),
+                ("engines_loaded", Value::num(w.engines_loaded.load(Ordering::SeqCst) as f64)),
+                ("resident_models", Value::Arr(w.resident_models().into_iter().map(Value::str).collect())),
+            ])
+        })
+        .collect();
+    protocol::ok(vec![
+        ("models", Value::Arr(models)),
+        ("engine_workers", Value::num(workers.len() as f64)),
+        ("placement", Value::str(placement.name())),
+        ("workers", Value::Arr(warr)),
+    ])
+}
+
+fn metrics_response(disp: &Metrics, workers: &[WorkerHandle], uptime_s: f64, placement: &dyn PlacementPolicy, book: &ConvergenceBook) -> String {
+    let mut total = Metrics::new();
+    total.merge(disp);
+    let mut warr = Vec::with_capacity(workers.len());
+    let (mut engine_loads, mut evictions) = (0usize, 0usize);
+    for (i, w) in workers.iter().enumerate() {
+        let gauges = WorkerGauges {
+            id: i,
+            queue_depth: w.load.load(Ordering::SeqCst),
+            engines_loaded: w.engines_loaded.load(Ordering::SeqCst),
+            engine_loads: w.engine_loads.load(Ordering::SeqCst),
+            evictions: w.evictions.load(Ordering::SeqCst),
+            resident: w.resident_models(),
+        };
+        engine_loads += gauges.engine_loads;
+        evictions += gauges.evictions;
+        let m = w.metrics.lock().unwrap();
+        total.merge(&m);
+        warr.push(m.worker_value(&gauges));
+    }
+    let Value::Obj(mut obj) = total.snapshot() else {
+        unreachable!("snapshot is an object")
+    };
+    obj.insert("engine_workers".into(), Value::num(workers.len() as f64));
+    obj.insert("uptime_s".into(), Value::num(uptime_s));
+    obj.insert("placement".into(), Value::str(placement.name()));
+    obj.insert("engine_loads".into(), Value::num(engine_loads as f64));
+    obj.insert("evictions".into(), Value::num(evictions as f64));
+    let mut conv = BTreeMap::new();
+    for (key, est, n) in book.entries() {
+        conv.insert(
+            key,
+            Value::obj(vec![
+                ("passes_per_job", Value::num(est.passes_per_job)),
+                ("pass_secs", Value::num(est.pass_secs)),
+                ("schedules", Value::num(n as f64)),
+            ]),
+        );
+    }
+    obj.insert("convergence".into(), Value::Obj(conv));
+    obj.insert("workers".into(), Value::Arr(warr));
+    protocol::ok(vec![("metrics", Value::Obj(obj))])
+}

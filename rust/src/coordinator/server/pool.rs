@@ -1,0 +1,359 @@
+//! The shared work pool: per-worker FIFO queues, the group routing
+//! table, executing markers, and whole-group work stealing — everything
+//! routing-related under one lock, so queueing, routing, and steals are
+//! mutually atomic.
+
+use crate::coordinator::config::Method;
+use crate::coordinator::placement::PlacementPolicy;
+use crate::coordinator::protocol;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+pub(crate) type Reply = mpsc::Sender<String>;
+pub(crate) type GroupKey = (String, Method);
+
+/// Load units an `eval` contributes to a worker's queue depth. eval_bpd
+/// runs a full test-set pass, so it must weigh like a batch of jobs or
+/// least-loaded routing would pile groups behind it.
+pub(crate) const EVAL_LOAD: usize = 8;
+
+/// Shared state of one `(model, method)` batching group. Held by the
+/// routing table and by every queued request of the group, so a steal can
+/// retarget the route atomically under the pool lock.
+pub(crate) struct GroupSlot {
+    /// Worker currently owning the group.
+    pub(crate) worker: AtomicUsize,
+    /// Outstanding jobs; the routing entry dies when this drains to zero.
+    pub(crate) pending: AtomicUsize,
+}
+
+/// A sample request admitted to the serving plane.
+pub(crate) struct PendingSample {
+    pub(crate) model: String,
+    pub(crate) method: Method,
+    pub(crate) n: usize,
+    pub(crate) seed: u64,
+    pub(crate) return_samples: bool,
+    pub(crate) decode: bool,
+    pub(crate) reply: Reply,
+    /// When the dispatcher admitted the request. Batching windows close
+    /// at `admitted + max_wait`, so time spent queued behind other groups
+    /// counts against the window instead of restarting it.
+    pub(crate) admitted: Instant,
+    pub(crate) group: Arc<GroupSlot>,
+}
+
+/// Work queued to one engine worker.
+pub(crate) enum Work {
+    Sample(PendingSample),
+    Eval {
+        model: String,
+        reply: Reply,
+        /// Dispatcher admission time — age-based admission must see a
+        /// queued eval too, or a hot absorbing group could starve it.
+        admitted: Instant,
+    },
+}
+
+/// Everything routing-related under one lock: per-worker FIFO queues, the
+/// group routing table, and what each worker is executing right now —
+/// so queueing, routing, and whole-group steals are mutually atomic.
+pub(crate) struct PoolState {
+    pub(crate) queues: Vec<VecDeque<Work>>,
+    /// Per-worker executing group: its live schedule absorbs its own
+    /// arrivals, so thieves must never take it.
+    pub(crate) executing: Vec<Option<GroupKey>>,
+    /// (model, method) → group slot; sticky while `pending > 0`.
+    pub(crate) routes: HashMap<GroupKey, Arc<GroupSlot>>,
+    /// Workers whose thread has exited (panic included): the dispatcher
+    /// routes around them so requests never queue where nobody drains.
+    pub(crate) dead: Vec<bool>,
+}
+
+/// The shared work pool engine workers and the dispatcher operate on.
+pub(crate) struct Pool {
+    pub(crate) state: Mutex<PoolState>,
+    pub(crate) cv: Condvar,
+    pub(crate) shutdown: AtomicBool,
+    /// Queue depth per worker (jobs routed, not yet answered).
+    pub(crate) loads: Vec<Arc<AtomicUsize>>,
+}
+
+/// Fail one request (shutdown / unknown model / engine error) and release
+/// its load and group accounting.
+pub(crate) fn fail_request(p: PendingSample, load: &AtomicUsize, why: &str) {
+    let _ = p.reply.send(protocol::err(why));
+    p.group.pending.fetch_sub(p.n, Ordering::SeqCst);
+    load.fetch_sub(p.n, Ordering::SeqCst);
+}
+
+/// Fail every queued work item (shutdown) and release its accounting.
+pub(crate) fn abort_queue(queue: VecDeque<Work>, load: &AtomicUsize, why: &str) {
+    for w in queue {
+        match w {
+            Work::Sample(p) => fail_request(p, load, why),
+            Work::Eval { reply, .. } => {
+                let _ = reply.send(protocol::err(why));
+                load.fetch_sub(EVAL_LOAD, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Move every queued request of `key` from `queue` into `group`,
+/// preserving arrival order.
+pub(crate) fn take_group_arrivals(queue: &mut VecDeque<Work>, key: &GroupKey, group: &mut Vec<PendingSample>) {
+    let mut i = 0;
+    while i < queue.len() {
+        let hit = matches!(&queue[i], Work::Sample(p) if p.model == key.0 && p.method == key.1);
+        if hit {
+            let Some(Work::Sample(p)) = queue.remove(i) else { unreachable!("just matched") };
+            group.push(p);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Steal work from a loaded worker into `thief`'s queue. Victims are
+/// tried heaviest-queue first (evals weigh [`EVAL_LOAD`]); from each, the
+/// oldest whole queued `(model, method)` group moves atomically — every
+/// queued request of the key at once, arrival order preserved, and the
+/// route retargeted — all under the pool lock, so sticky batching and
+/// PJRT thread-affinity survive the migration. Groups currently executing
+/// are never stolen (their owner's live schedule is absorbing arrivals),
+/// and neither is any group — or eval — whose model the thief may not
+/// host under the placement policy (a pinned model must never migrate
+/// off its worker subset). A victim with nothing but its executing group
+/// still yields any queued eval the thief is eligible for (evals are not
+/// sticky). Returns whether anything moved.
+pub(crate) fn steal_group(st: &mut PoolState, thief: usize, loads: &[Arc<AtomicUsize>], placement: &dyn PlacementPolicy) -> bool {
+    let mut victims: Vec<(usize, usize)> = st
+        .queues
+        .iter()
+        .enumerate()
+        .filter(|&(w, _)| w != thief)
+        .map(|(w, q)| {
+            let weight: usize = q
+                .iter()
+                .map(|it| match it {
+                    Work::Sample(p) => p.n,
+                    Work::Eval { .. } => EVAL_LOAD,
+                })
+                .sum();
+            (w, weight)
+        })
+        .filter(|&(_, weight)| weight > 0)
+        .collect();
+    victims.sort_by(|a, b| b.1.cmp(&a.1));
+    for (v, _) in victims {
+        let executing = st.executing[v].clone();
+        let key = st.queues[v].iter().find_map(|it| match it {
+            Work::Sample(p) => {
+                let k = (p.model.clone(), p.method);
+                if executing.as_ref() == Some(&k) || !placement.eligible(&k.0, thief) {
+                    None
+                } else {
+                    Some(k)
+                }
+            }
+            Work::Eval { .. } => None,
+        });
+        if let Some(key) = key {
+            let mut moved: Vec<PendingSample> = Vec::new();
+            take_group_arrivals(&mut st.queues[v], &key, &mut moved);
+            if !moved.is_empty() {
+                let jobs: usize = moved.iter().map(|p| p.n).sum();
+                moved[0].group.worker.store(thief, Ordering::SeqCst);
+                loads[v].fetch_sub(jobs, Ordering::SeqCst);
+                loads[thief].fetch_add(jobs, Ordering::SeqCst);
+                for p in moved {
+                    st.queues[thief].push_back(Work::Sample(p));
+                }
+                return true;
+            }
+        }
+        let eval_pos = st.queues[v].iter().position(|it| matches!(it, Work::Eval { model, .. } if placement.eligible(model, thief)));
+        if let Some(pos) = eval_pos {
+            let eval = st.queues[v].remove(pos).expect("just found");
+            loads[v].fetch_sub(EVAL_LOAD, Ordering::SeqCst);
+            loads[thief].fetch_add(EVAL_LOAD, Ordering::SeqCst);
+            st.queues[thief].push_back(eval);
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::placement::ReplicateAll;
+
+    fn sample(model: &str, method: Method, n: usize, widx: usize, routes: &mut HashMap<GroupKey, Arc<GroupSlot>>) -> Work {
+        let group = Arc::clone(
+            routes
+                .entry((model.to_string(), method))
+                .or_insert_with(|| Arc::new(GroupSlot { worker: AtomicUsize::new(widx), pending: AtomicUsize::new(0) })),
+        );
+        group.pending.fetch_add(n, Ordering::SeqCst);
+        let (reply, rx) = mpsc::channel();
+        drop(rx); // replies are discarded in these unit tests
+        let (model, admitted) = (model.to_string(), Instant::now());
+        Work::Sample(PendingSample { model, method, n, seed: 0, return_samples: false, decode: false, reply, admitted, group })
+    }
+
+    fn queued_keys(q: &VecDeque<Work>) -> Vec<(String, Method)> {
+        q.iter()
+            .filter_map(|w| match w {
+                Work::Sample(p) => Some((p.model.clone(), p.method)),
+                Work::Eval { .. } => None,
+            })
+            .collect()
+    }
+
+    fn pool_state(workers: usize) -> PoolState {
+        PoolState {
+            queues: (0..workers).map(|_| VecDeque::new()).collect(),
+            executing: vec![None; workers],
+            routes: HashMap::new(),
+            dead: vec![false; workers],
+        }
+    }
+
+    #[test]
+    fn steal_moves_whole_group_atomically_and_retargets_route() {
+        // Victim (worker 0) queues two groups interleaved; the thief
+        // (worker 1) must take the oldest non-executing group *whole*,
+        // preserve arrival order, retarget its route, and move the load.
+        let mut routes = HashMap::new();
+        let mut st = pool_state(2);
+        st.queues[0].push_back(sample("a", Method::Fpi, 2, 0, &mut routes));
+        st.queues[0].push_back(sample("b", Method::Fpi, 3, 0, &mut routes));
+        st.queues[0].push_back(sample("a", Method::Fpi, 1, 0, &mut routes));
+        let loads = vec![Arc::new(AtomicUsize::new(6)), Arc::new(AtomicUsize::new(0))];
+        assert!(steal_group(&mut st, 1, &loads, &ReplicateAll));
+        // Group "a" (the oldest) moved whole: both its requests, in order.
+        assert_eq!(queued_keys(&st.queues[1]), vec![("a".to_string(), Method::Fpi), ("a".to_string(), Method::Fpi)]);
+        assert_eq!(queued_keys(&st.queues[0]), vec![("b".to_string(), Method::Fpi)]);
+        assert_eq!(routes[&("a".to_string(), Method::Fpi)].worker.load(Ordering::SeqCst), 1, "route must follow the stolen group");
+        assert_eq!(routes[&("b".to_string(), Method::Fpi)].worker.load(Ordering::SeqCst), 0, "unstolen route must not move");
+        assert_eq!(loads[0].load(Ordering::SeqCst), 3);
+        assert_eq!(loads[1].load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn steal_skips_executing_groups() {
+        // The only queued group on the victim is the one it is executing
+        // (mid-flight arrivals owned by its live schedule): no steal. A
+        // second, non-executing group is fair game.
+        let mut routes = HashMap::new();
+        let mut st = pool_state(2);
+        st.queues[0].push_back(sample("a", Method::Fpi, 2, 0, &mut routes));
+        st.executing[0] = Some(("a".to_string(), Method::Fpi));
+        let loads = vec![Arc::new(AtomicUsize::new(2)), Arc::new(AtomicUsize::new(0))];
+        assert!(!steal_group(&mut st, 1, &loads, &ReplicateAll), "executing group must not be stolen");
+        assert_eq!(st.queues[0].len(), 1);
+        st.queues[0].push_back(sample("b", Method::Zeros, 1, 0, &mut routes));
+        assert!(steal_group(&mut st, 1, &loads, &ReplicateAll), "queued group behind an executing one is stealable");
+        assert_eq!(queued_keys(&st.queues[1]), vec![("b".to_string(), Method::Zeros)]);
+        assert_eq!(queued_keys(&st.queues[0]), vec![("a".to_string(), Method::Fpi)]);
+    }
+
+    #[test]
+    fn steal_prefers_most_loaded_victim_and_needs_queued_work() {
+        let mut routes = HashMap::new();
+        let mut st = pool_state(3);
+        let loads = vec![Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(1)), Arc::new(AtomicUsize::new(9))];
+        assert!(!steal_group(&mut st, 0, &loads, &ReplicateAll), "nothing queued, nothing to steal");
+        st.queues[1].push_back(sample("a", Method::Fpi, 1, 1, &mut routes));
+        st.queues[2].push_back(sample("b", Method::Fpi, 9, 2, &mut routes));
+        assert!(steal_group(&mut st, 0, &loads, &ReplicateAll));
+        assert_eq!(queued_keys(&st.queues[0]), vec![("b".to_string(), Method::Fpi)], "steal must come from the most-loaded queue");
+    }
+
+    #[test]
+    fn steal_falls_through_to_lighter_victims_and_evals() {
+        // The heaviest victim's only queued group is executing; the thief
+        // must fall through to the lighter victim's free group rather
+        // than give up (work conservation). Once only an eval remains
+        // queued anywhere, that moves too — evals are not sticky.
+        let mut routes = HashMap::new();
+        let mut st = pool_state(3);
+        st.queues[1].push_back(sample("hot", Method::Fpi, 9, 1, &mut routes));
+        st.executing[1] = Some(("hot".to_string(), Method::Fpi));
+        st.queues[2].push_back(sample("cold", Method::Fpi, 1, 2, &mut routes));
+        let loads = vec![Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(9)), Arc::new(AtomicUsize::new(1))];
+        assert!(steal_group(&mut st, 0, &loads, &ReplicateAll), "a lighter victim with a free group must still be robbed");
+        assert_eq!(queued_keys(&st.queues[0]), vec![("cold".to_string(), Method::Fpi)]);
+        assert_eq!(st.queues[2].len(), 0);
+        // Only the executing group's arrivals and an eval remain: the
+        // eval is the one stealable item.
+        let (reply, rx) = mpsc::channel();
+        drop(rx);
+        st.queues[1].push_back(Work::Eval { model: "hot".into(), reply, admitted: Instant::now() });
+        assert!(steal_group(&mut st, 2, &loads, &ReplicateAll), "a queued eval behind an executing group is stealable");
+        assert!(matches!(st.queues[2].front(), Some(Work::Eval { .. })), "the eval must have moved to the thief");
+        assert_eq!(st.queues[1].len(), 1, "the executing group's queued request must stay");
+    }
+
+    /// Test placement: `model` may only live on `worker`; everything
+    /// else replicates anywhere.
+    struct PinOne {
+        model: &'static str,
+        worker: usize,
+    }
+
+    impl PlacementPolicy for PinOne {
+        fn name(&self) -> &'static str {
+            "pin-one"
+        }
+        fn eligible(&self, model: &str, worker: usize) -> bool {
+            model != self.model || worker == self.worker
+        }
+    }
+
+    #[test]
+    fn steal_respects_group_eligibility() {
+        // THE steal-eligibility gate: the victim's oldest queued group is
+        // pinned away from the thief, so the thief must skip it and take
+        // the next hostable group instead — and with nothing hostable at
+        // all, steal nothing rather than strand a pinned group off its
+        // worker subset.
+        let placement = PinOne { model: "pinned", worker: 0 };
+        let mut routes = HashMap::new();
+        let mut st = pool_state(2);
+        st.queues[0].push_back(sample("pinned", Method::Fpi, 4, 0, &mut routes));
+        st.queues[0].push_back(sample("free", Method::Fpi, 1, 0, &mut routes));
+        let loads = vec![Arc::new(AtomicUsize::new(5)), Arc::new(AtomicUsize::new(0))];
+        assert!(steal_group(&mut st, 1, &loads, &placement), "the hostable group behind the pinned one must still move");
+        assert_eq!(queued_keys(&st.queues[1]), vec![("free".to_string(), Method::Fpi)]);
+        assert_eq!(queued_keys(&st.queues[0]), vec![("pinned".to_string(), Method::Fpi)], "the pinned group must stay home");
+        assert_eq!(routes[&("pinned".to_string(), Method::Fpi)].worker.load(Ordering::SeqCst), 0);
+        assert!(!steal_group(&mut st, 1, &loads, &placement), "nothing hostable left: the thief must come away empty");
+    }
+
+    #[test]
+    fn steal_respects_eval_eligibility() {
+        // An eval needs the model's engine too: a thief outside the
+        // model's pin set must leave the eval queued for an eligible
+        // worker.
+        let placement = PinOne { model: "pinned", worker: 0 };
+        let mut st = pool_state(3);
+        let (reply, rx) = mpsc::channel();
+        drop(rx);
+        st.queues[0].push_back(Work::Eval { model: "pinned".into(), reply, admitted: Instant::now() });
+        let loads = vec![Arc::new(AtomicUsize::new(8)), Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(0))];
+        assert!(!steal_group(&mut st, 1, &loads, &placement), "an ineligible thief must not steal the eval");
+        assert_eq!(st.queues[0].len(), 1, "the eval must stay queued");
+        // A second eval for an unpinned model is fair game.
+        let (reply, rx) = mpsc::channel();
+        drop(rx);
+        st.queues[0].push_back(Work::Eval { model: "free".into(), reply, admitted: Instant::now() });
+        assert!(steal_group(&mut st, 1, &loads, &placement), "the eligible eval behind it must still move");
+        assert!(matches!(st.queues[1].front(), Some(Work::Eval { model, .. }) if model == "free"));
+        assert_eq!(st.queues[0].len(), 1, "the pinned eval must stay");
+    }
+}

@@ -1,0 +1,388 @@
+//! Engine workers: each owns a `Router` (PJRT state is thread-affine)
+//! plus `Metrics`, claims work from the shared pool, runs batching
+//! windows, and keeps the placement plane's residency promises —
+//! enforcing the per-worker engine cap and publishing the resident-model
+//! / engine-load / eviction gauges the dispatcher snapshots.
+
+use crate::coordinator::config::{Method, ServeConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::placement::PlacementPolicy;
+use crate::coordinator::policy::{ConvergenceBook, ConvergencePrior};
+use crate::coordinator::protocol;
+use crate::coordinator::router::Router;
+use crate::coordinator::scheduler;
+use crate::coordinator::server::feed::execute_elastic_group;
+use crate::coordinator::server::pool::{abort_queue, fail_request, steal_group, take_group_arrivals, PendingSample, Pool, Reply, Work, EVAL_LOAD};
+use crate::sampler::noise::JobNoise;
+use crate::sampler::JobResult;
+use crate::substrate::json::Value;
+use crate::substrate::timer::Timer;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Everything one engine worker shares with the dispatcher and the
+/// serving plane: queue-depth accounting, its metrics, the placement
+/// policy, the residency gauges it publishes after every turn, and the
+/// server-level convergence history it observes into.
+pub(crate) struct WorkerShared {
+    /// Jobs routed to this worker and not yet answered (queue depth).
+    pub(crate) load: Arc<AtomicUsize>,
+    pub(crate) metrics: Arc<Mutex<Metrics>>,
+    /// Engines currently resident on this worker.
+    pub(crate) engines_loaded: Arc<AtomicUsize>,
+    /// Cumulative lazy engine loads (reloads after eviction included).
+    pub(crate) engine_loads: Arc<AtomicUsize>,
+    /// Cumulative LRU evictions under a capacity-capped placement.
+    pub(crate) evictions: Arc<AtomicUsize>,
+    /// Names of the engines currently resident (warm-routing + gauges).
+    pub(crate) resident: Arc<Mutex<Vec<String>>>,
+    /// Shared per-(model, method) convergence history.
+    pub(crate) book: Arc<ConvergenceBook>,
+    /// The placement policy the whole fleet runs under.
+    pub(crate) placement: Arc<dyn PlacementPolicy>,
+}
+
+/// Dispatcher-side handle to one engine worker.
+pub(crate) struct WorkerHandle {
+    /// Jobs routed to this worker and not yet completed (queue depth).
+    pub(crate) load: Arc<AtomicUsize>,
+    pub(crate) metrics: Arc<Mutex<Metrics>>,
+    pub(crate) engines_loaded: Arc<AtomicUsize>,
+    pub(crate) engine_loads: Arc<AtomicUsize>,
+    pub(crate) evictions: Arc<AtomicUsize>,
+    pub(crate) resident: Arc<Mutex<Vec<String>>>,
+    pub(crate) join: std::thread::JoinHandle<()>,
+}
+
+impl WorkerHandle {
+    /// Snapshot of the resident-model gauge (dispatcher side).
+    pub(crate) fn resident_models(&self) -> Vec<String> {
+        self.resident.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Whether `model`'s engine is currently resident on this worker —
+    /// the routing hot path's warm check, without cloning the gauge.
+    pub(crate) fn hosts(&self, model: &str) -> bool {
+        self.resident.lock().unwrap_or_else(|e| e.into_inner()).iter().any(|m| m == model)
+    }
+}
+
+/// Under a capacity-capped placement, evict least-recently-used engines
+/// so `model`'s upcoming lazy load fits within the cap. Runs *before*
+/// the worker touches the engine: evicting afterwards would let
+/// residency peak at `cap + 1`, breaking the hard per-worker memory
+/// bound the policy promises.
+pub(crate) fn make_room_for(router: &mut Router, shared: &WorkerShared, model: &str) {
+    if let Some(cap) = shared.placement.max_resident() {
+        router.make_room(model, cap);
+    }
+}
+
+/// Publish the worker's residency gauges after a turn — and, under a
+/// capacity-capped placement, re-assert the cap as a safety net (the
+/// pre-load [`make_room_for`] is what keeps the peak within it).
+fn sync_gauges(router: &mut Router, shared: &WorkerShared) {
+    if let Some(cap) = shared.placement.max_resident() {
+        router.enforce_cap(cap);
+    }
+    shared.engines_loaded.store(router.loaded(), Ordering::SeqCst);
+    shared.engine_loads.store(router.loads() as usize, Ordering::SeqCst);
+    shared.evictions.store(router.evictions() as usize, Ordering::SeqCst);
+    *shared.resident.lock().unwrap_or_else(|e| e.into_inner()) = router.resident_models();
+}
+
+fn handle_eval(router: &mut Router, model: &str, reply: &Reply, metrics: &Mutex<Metrics>, load: &AtomicUsize) {
+    let resp = match router.engine(model).and_then(|e| e.eval_bpd()) {
+        Ok(bpd) => protocol::ok(vec![("model", Value::str(model)), ("bpd", Value::num(bpd))]),
+        Err(e) => {
+            metrics.lock().unwrap().record_error();
+            protocol::err(&format!("{e:#}"))
+        }
+    };
+    let _ = reply.send(resp);
+    load.fetch_sub(EVAL_LOAD, Ordering::SeqCst);
+}
+
+/// Runs on worker-thread exit — panic included: marks the worker dead so
+/// the dispatcher routes around it, and fails whatever is queued on it
+/// (a request must never sit on a queue nobody will drain).
+struct WorkerGuard {
+    pool: Arc<Pool>,
+    widx: usize,
+    load: Arc<AtomicUsize>,
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        let q = {
+            let mut st = self.pool.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.dead[self.widx] = true;
+            std::mem::take(&mut st.queues[self.widx])
+        };
+        abort_queue(q, &self.load, "engine worker unavailable");
+        self.pool.cv.notify_all();
+    }
+}
+
+pub(crate) fn worker_loop(mut router: Router, cfg: ServeConfig, widx: usize, pool: Arc<Pool>, shared: WorkerShared) {
+    let _guard = WorkerGuard { pool: Arc::clone(&pool), widx, load: Arc::clone(&shared.load) };
+    loop {
+        // Claim the oldest work item on our queue, stealing a whole queued
+        // group from the most-loaded worker when ours is empty (only
+        // groups this worker may host under the placement policy).
+        let mut stole = false;
+        let mut st = pool.state.lock().expect("pool lock");
+        let head = loop {
+            if pool.shutdown.load(Ordering::SeqCst) {
+                let q = std::mem::take(&mut st.queues[widx]);
+                drop(st);
+                abort_queue(q, &shared.load, "server shutting down");
+                return;
+            }
+            if let Some(w) = st.queues[widx].pop_front() {
+                break w;
+            }
+            if cfg.steal && steal_group(&mut st, widx, &pool.loads, &*shared.placement) {
+                stole = true;
+                continue;
+            }
+            st = pool.cv.wait_timeout(st, std::time::Duration::from_millis(100)).expect("pool lock poisoned").0;
+        };
+        match head {
+            Work::Eval { model, reply, .. } => {
+                drop(st);
+                if stole {
+                    shared.metrics.lock().unwrap().record_steal();
+                }
+                make_room_for(&mut router, &shared, &model);
+                handle_eval(&mut router, &model, &reply, &shared.metrics, &shared.load);
+                sync_gauges(&mut router, &shared);
+            }
+            Work::Sample(head) => {
+                // Mark the group executing before the window opens, still
+                // under the claim's lock: thieves skip it from here on,
+                // and (on the elastic path) the live schedule owns its
+                // arrivals through to the end of execution.
+                let key = (head.model.clone(), head.method);
+                st.executing[widx] = Some(key.clone());
+                // Batching window, sized off the *oldest admission* of the
+                // head group: a request that already waited its window
+                // while queued behind other groups executes immediately
+                // instead of re-paying max_wait per preceding group.
+                let deadline = head.admitted + cfg.max_wait;
+                let mut group = vec![head];
+                loop {
+                    take_group_arrivals(&mut st.queues[widx], &key, &mut group);
+                    // Evals interleave into the window (otherwise, on a
+                    // single-worker server with no thief to rescue them,
+                    // they'd wait out the whole group execution too).
+                    while let Some(pos) = st.queues[widx].iter().position(|it| matches!(it, Work::Eval { .. })) {
+                        let Some(Work::Eval { model, reply, .. }) = st.queues[widx].remove(pos) else { unreachable!("just matched") };
+                        drop(st);
+                        make_room_for(&mut router, &shared, &model);
+                        handle_eval(&mut router, &model, &reply, &shared.metrics, &shared.load);
+                        sync_gauges(&mut router, &shared);
+                        st = pool.state.lock().expect("pool lock");
+                    }
+                    if pool.shutdown.load(Ordering::SeqCst) {
+                        let q = std::mem::take(&mut st.queues[widx]);
+                        st.executing[widx] = None;
+                        drop(st);
+                        for p in group {
+                            fail_request(p, &shared.load, "server shutting down");
+                        }
+                        abort_queue(q, &shared.load, "server shutting down");
+                        return;
+                    }
+                    let group_jobs: usize = group.iter().map(|p| p.n).sum();
+                    let now = Instant::now();
+                    if group_jobs >= cfg.max_batch || now >= deadline {
+                        break;
+                    }
+                    st = pool.cv.wait_timeout(st, deadline - now).expect("pool lock poisoned").0;
+                }
+                drop(st);
+                {
+                    // The window just closed: sample each request's queue
+                    // age (admission → execution) into the age histogram.
+                    let mut m = shared.metrics.lock().unwrap();
+                    if stole {
+                        m.record_steal();
+                    }
+                    for p in &group {
+                        m.record_admission_age(p.admitted.elapsed());
+                    }
+                }
+                let continuous = cfg.continuous && key.1 != Method::Baseline;
+                make_room_for(&mut router, &shared, &key.0);
+                if continuous && cfg.elastic {
+                    execute_elastic_group(&mut router, &shared, group, &pool, widx, &cfg);
+                } else {
+                    execute_group(&mut router, &shared, group, continuous);
+                }
+                pool.state.lock().expect("pool lock").executing[widx] = None;
+                sync_gauges(&mut router, &shared);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Group execution
+// ---------------------------------------------------------------------------
+
+/// Execute a closed group (synchronous chunking, or continuous batching
+/// with elasticity disabled): run the whole merged queue, then answer
+/// every request with the group-level stats.
+pub(crate) fn execute_group(router: &mut Router, shared: &WorkerShared, group: Vec<PendingSample>, continuous: bool) {
+    if group.is_empty() {
+        return;
+    }
+    let model = group[0].model.clone();
+    let method = group[0].method;
+    let total_jobs: usize = group.iter().map(|p| p.n).sum();
+    let timer = Timer::start();
+
+    // Returns (per-job results in request order, total batched ARM calls,
+    // ARM calls per job under the batched cost model — passes × B / jobs,
+    // matching ScheduleReport::calls_per_job — and the schedule's own
+    // wall-seconds, which exclude the lazy engine load the outer timer
+    // pays on a cold worker).
+    let mut run = || -> Result<(Vec<JobResult>, usize, f64, f64)> {
+        let engine = router.engine(&model)?;
+        let info = &engine.info;
+        if !continuous {
+            // Synchronous path: per request, pick the smallest exe >= n and
+            // run it in chunks. Chunk c covers job ids [done, done + bs):
+            // the offset keys fresh noise per chunk — without it every
+            // chunk would repeat jobs 0..bs and duplicate samples.
+            let mut all = Vec::with_capacity(total_jobs);
+            let mut calls = 0usize;
+            let mut weighted_calls = 0f64;
+            let sched_timer = Timer::start();
+            for p in &group {
+                let bs = engine
+                    .batch_sizes()
+                    .into_iter()
+                    .find(|&b| b >= p.n)
+                    .unwrap_or_else(|| *engine.batch_sizes().last().unwrap());
+                let mut done = 0;
+                while done < p.n {
+                    let res = engine.sample_batch_offset(method, bs, p.seed, done as u64)?;
+                    calls += res.arm_calls;
+                    weighted_calls += (res.arm_calls * bs) as f64;
+                    let take = (p.n - done).min(bs);
+                    all.extend(res.jobs.into_iter().take(take));
+                    done += take;
+                }
+            }
+            Ok((all, calls, weighted_calls / total_jobs as f64, sched_timer.secs()))
+        } else {
+            // Continuous batching over the merged job queue, scheduled
+            // across every exported batch size: the engine starts on the
+            // smallest batch that fits and down-shifts as the queue
+            // drains, so a straggler tail stops paying full-batch passes.
+            let mut noises = Vec::with_capacity(total_jobs);
+            for p in &group {
+                for j in 0..p.n {
+                    noises.push(JobNoise::new(p.seed, j as u64, info.dim, info.categories));
+                }
+            }
+            let rep = engine.sample_continuous(method, noises)?;
+            Ok((rep.results, rep.total_passes, rep.calls_per_job, rep.wall_secs))
+        }
+    };
+
+    match run() {
+        Ok((results, calls, calls_per_job, sched_wall)) => {
+            let wall = timer.secs();
+            let dim = results.first().map(|r| r.x.len()).unwrap_or(1);
+            let calls_pct = scheduler::calls_pct_of(calls_per_job, dim);
+            {
+                let mut m = shared.metrics.lock().unwrap();
+                m.record_batch(total_jobs, calls, calls_pct, wall);
+                // The closed continuous path schedules under the
+                // latency-lean (fit) rule; the chunked path is the
+                // synchronous baseline.
+                m.record_policy(if continuous { "latency" } else { "sync" });
+            }
+            if continuous && calls > 0 {
+                // Feed the server-level convergence history: mean passes
+                // per job, and wall-seconds per pass from the schedule's
+                // own clock (the outer `wall` includes the lazy engine
+                // load, which would inflate a cold worker's first
+                // estimate by orders of magnitude on compiled artifacts).
+                let iters: usize = results.iter().map(|r| r.iterations).sum();
+                let obs = ConvergencePrior { passes_per_job: iters as f64 / total_jobs as f64, pass_secs: sched_wall / calls as f64 };
+                shared.book.observe(&book_key(&model, method), obs);
+            }
+            let mut offset = 0usize;
+            for p in group {
+                let mine = &results[offset..offset + p.n];
+                offset += p.n;
+                let mut fields = sample_fields(&model, method, calls, calls_per_job, calls_pct, wall, p.n);
+                let mut decode_err: Option<String> = None;
+                if p.return_samples {
+                    let xs: Vec<Vec<i32>> = mine.iter().map(|r| r.x.clone()).collect();
+                    fields.push(("samples", protocol::samples_value(&xs)));
+                }
+                if p.decode {
+                    let xs: Vec<Vec<i32>> = mine.iter().map(|r| r.x.clone()).collect();
+                    match router.engine(&model).and_then(|e| e.decode(&xs)) {
+                        Ok(imgs) => fields.push(("images", images_value(&imgs))),
+                        Err(e) => decode_err = Some(format!("decode: {e:#}")),
+                    }
+                }
+                let resp = match decode_err {
+                    Some(msg) => protocol::err(&msg),
+                    None => protocol::ok(fields),
+                };
+                let _ = p.reply.send(resp);
+                p.group.pending.fetch_sub(p.n, Ordering::SeqCst);
+                shared.load.fetch_sub(p.n, Ordering::SeqCst);
+            }
+        }
+        Err(e) => {
+            shared.metrics.lock().unwrap().record_error();
+            let msg = format!("{e:#}");
+            for p in group {
+                fail_request(p, &shared.load, &msg);
+            }
+        }
+    }
+}
+
+/// The `ConvergenceBook` key for one workload: `"model/method"`.
+pub(crate) fn book_key(model: &str, method: Method) -> String {
+    format!("{model}/{}", method.label())
+}
+
+pub(crate) fn sample_fields(
+    model: &str,
+    method: Method,
+    arm_calls: usize,
+    calls_per_job: f64,
+    calls_pct: f64,
+    wall: f64,
+    n: usize,
+) -> Vec<(&'static str, Value)> {
+    vec![
+        ("model", Value::str(model)),
+        ("method", Value::str(method.label())),
+        ("arm_calls", Value::num(arm_calls as f64)),
+        ("calls_per_job", Value::num(calls_per_job)),
+        ("calls_pct", Value::num(calls_pct)),
+        ("wall_secs", Value::num(wall)),
+        ("n", Value::num(n as f64)),
+    ]
+}
+
+pub(crate) fn images_value(imgs: &[Vec<f32>]) -> Value {
+    Value::Arr(
+        imgs.iter()
+            .map(|im| Value::Arr(im.iter().map(|&f| Value::num(f as f64)).collect()))
+            .collect(),
+    )
+}

@@ -10,10 +10,11 @@
 //!   fig3|fig4|fig5|fig6           regenerate the paper's figures
 //!   schedule-ablation             continuous vs synchronous batching
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 use predsamp::bench::{figures, tables};
 use predsamp::coordinator::config::{Method, ServeConfig};
 use predsamp::coordinator::engine::Engine;
+use predsamp::coordinator::placement::PlacementKind;
 use predsamp::coordinator::policy::{AdmissionKind, PolicyKind};
 use predsamp::coordinator::scheduler;
 use predsamp::coordinator::server;
@@ -34,6 +35,8 @@ COMMANDS
   serve    [--addr 127.0.0.1:7199] [--max-batch 32] [--max-wait-ms 20] [--sync]
            [--engine-threads 2] [--worker-threads 4] [--no-elastic] [--no-steal]
            [--policy occupancy|latency|slo] [--slo-ms 50] [--absorb-budget N]
+           [--placement replicate|pinned|capped] [--pin model=0,2 ...]
+           [--max-engines N]
   client   [--addr ...] --json '{\"op\":\"ping\"}'
   table1 | table2 | table3           [--seeds K] [--batches 1,32] [--models a,b]
   fig3 | fig4 | fig5 | fig6          [--seed 10] [--out results/]
@@ -137,6 +140,39 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 Some(n) => AdmissionKind::Budget(n.parse().map_err(|_| anyhow!("--absorb-budget must be a job count"))?),
                 None => AdmissionKind::OldestFirst,
             };
+            // Placement: `--pin` implies pinned, `--max-engines` implies
+            // capped, and `--placement pinned` alone activates the
+            // manifest's own `"pin"` fields.
+            let pins = args
+                .all("pin")
+                .iter()
+                .map(|p| predsamp::coordinator::placement::parse_pin(p))
+                .collect::<Result<Vec<_>>>()?;
+            let max_engines = match args.opt("max-engines") {
+                Some(n) => Some(n.parse::<usize>().map_err(|_| anyhow!("--max-engines must be an engine count"))?),
+                None => None,
+            };
+            if !pins.is_empty() && max_engines.is_some() {
+                bail!("--pin and --max-engines select different placement policies");
+            }
+            let placement_name = args.get("placement", "");
+            let placement = match placement_name.as_str() {
+                "" => match (pins.is_empty(), max_engines) {
+                    (_, Some(cap)) => PlacementKind::CapacityCapped(cap),
+                    (false, None) => PlacementKind::Pinned(pins.clone()),
+                    (true, None) => PlacementKind::ReplicateAll,
+                },
+                "replicate" => {
+                    ensure!(pins.is_empty() && max_engines.is_none(), "--placement replicate conflicts with --pin/--max-engines");
+                    PlacementKind::ReplicateAll
+                }
+                "pinned" => {
+                    ensure!(max_engines.is_none(), "--placement pinned conflicts with --max-engines");
+                    PlacementKind::Pinned(pins.clone())
+                }
+                "capped" => PlacementKind::CapacityCapped(max_engines.ok_or_else(|| anyhow!("--placement capped needs --max-engines N"))?),
+                other => bail!("unknown --placement {other:?} (replicate|pinned|capped)"),
+            };
             let cfg = ServeConfig {
                 addr: args.get("addr", &d.addr),
                 max_batch: args.num::<usize>("max-batch", d.max_batch),
@@ -149,10 +185,12 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 policy,
                 slo: std::time::Duration::from_millis(args.num::<u64>("slo-ms", d.slo.as_millis() as u64)),
                 admission,
+                placement,
             };
             args.finish().map_err(|e| anyhow!(e))?;
             let (engine_threads, batching) = (cfg.engine_threads, if cfg.continuous { "continuous" } else { "sync" });
             let policy_label = cfg.policy.label();
+            let placement_label = cfg.placement.label();
             // No compiled artifacts: serve the pure-rust mock demo pair
             // instead of refusing to start (same fallback as the demo),
             // so the quickstart works on a clean checkout.
@@ -167,7 +205,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             };
             let handle = server::spawn(dir, cfg)?;
             println!(
-                "predsamp serving on {} ({engine_threads} engine workers, {batching} batching, {policy_label} sizing; ctrl-c to stop)",
+                "predsamp serving on {} ({engine_threads} engine workers, {batching} batching, {policy_label} sizing, {placement_label} placement; ctrl-c to stop)",
                 handle.addr
             );
             loop {

@@ -53,6 +53,10 @@ pub struct ModelInfo {
     pub test_n: usize,
     /// Present when the model is backed by the pure-rust mock ARM.
     pub mock: Option<MockSpec>,
+    /// Engine-worker indices this model is pinned to (`"pin": [0, 2]`).
+    /// Consumed by the server's placement plane when it runs under the
+    /// `pinned` policy; `None` means the model may replicate anywhere.
+    pub pin: Option<Vec<usize>>,
 }
 
 impl ModelInfo {
@@ -154,6 +158,23 @@ impl Manifest {
             } else {
                 None
             };
+            // Pin entries parse strictly: a malformed pin must fail the
+            // manifest load, not launder into a valid-looking worker set
+            // (`as_usize` would coerce -1 to 0 and drop strings).
+            let pin = match m.get("pin") {
+                Value::Null => None,
+                Value::Arr(a) => {
+                    let mut ws = Vec::with_capacity(a.len());
+                    for v in a {
+                        match v.as_f64() {
+                            Some(f) if f >= 0.0 && f.fract() == 0.0 => ws.push(f as usize),
+                            _ => bail!("model {name}: pin entries must be non-negative worker indices, got {v}"),
+                        }
+                    }
+                    Some(ws)
+                }
+                other => bail!("model {name}: pin must be an array of worker indices, got {other}"),
+            };
             let info = ModelInfo {
                 name: name.clone(),
                 kind,
@@ -170,6 +191,7 @@ impl Manifest {
                 autoencoder: m.get("autoencoder").as_str().map(String::from),
                 test_n: m.get("test_n").as_usize().unwrap_or(0),
                 mock,
+                pin,
             };
             if info.dim != info.channels * info.pixels {
                 bail!("model {name}: inconsistent dim");
@@ -256,6 +278,8 @@ pub struct MockModelSpec {
     pub strength: f32,
     pub seed: u64,
     pub batches: Vec<usize>,
+    /// Optional worker pin list, written as the manifest `"pin"` field.
+    pub pin: Option<Vec<usize>>,
 }
 
 impl MockModelSpec {
@@ -270,6 +294,7 @@ impl MockModelSpec {
             strength: 2.5,
             seed,
             batches: vec![1, 4],
+            pin: None,
         }
     }
 
@@ -301,7 +326,7 @@ pub fn write_mock_manifest(dir: &Path, models: &[MockModelSpec]) -> Result<()> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
     let mut model_objs = BTreeMap::new();
     for s in models {
-        let entry = Value::obj(vec![
+        let mut entry = Value::obj(vec![
             ("kind", Value::str("explicit")),
             ("channels", Value::num(s.channels as f64)),
             ("height", Value::num(s.pixels as f64)),
@@ -323,6 +348,9 @@ pub fn write_mock_manifest(dir: &Path, models: &[MockModelSpec]) -> Result<()> {
                 ]),
             ),
         ]);
+        if let (Some(pin), Value::Obj(obj)) = (&s.pin, &mut entry) {
+            obj.insert("pin".into(), Value::Arr(pin.iter().map(|&w| Value::num(w as f64)).collect()));
+        }
         model_objs.insert(s.name.clone(), entry);
     }
     let root = Value::obj(vec![
@@ -410,6 +438,36 @@ mod tests {
         assert_eq!(info.step_batch_sizes(), vec![1, 4], "sorted + deduped");
         assert_eq!(info.dim, info.channels * info.pixels);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pin_field_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("predsamp-pinman-{}", std::process::id()));
+        let mut pinned = MockModelSpec::new("pinned_m", 1);
+        pinned.pin = Some(vec![0, 2]);
+        let free = MockModelSpec::new("free_m", 2);
+        write_mock_manifest(&dir, &[pinned, free]).unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.model("pinned_m").unwrap().pin, Some(vec![0, 2]), "manifest pin must survive the roundtrip");
+        assert_eq!(man.model("free_m").unwrap().pin, None, "unpinned models carry no pin");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_pin_fails_manifest_load() {
+        // A typo'd pin must fail the load, not launder into a
+        // valid-looking worker set (as_usize would coerce -1 to 0).
+        for bad in [r#"[-1]"#, r#"["2"]"#, r#"[0, 1.5]"#, r#"2"#] {
+            let mut v = sample_manifest();
+            if let Value::Obj(o) = &mut v {
+                if let Some(Value::Obj(models)) = o.get_mut("models") {
+                    if let Some(Value::Obj(m1)) = models.get_mut("m1") {
+                        m1.insert("pin".into(), json::parse(bad).unwrap());
+                    }
+                }
+            }
+            assert!(Manifest::from_value("/tmp".into(), &v).is_err(), "pin {bad} must be rejected");
+        }
     }
 
     #[test]

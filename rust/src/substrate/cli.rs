@@ -75,6 +75,14 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Every occurrence of a repeatable flag, in argv order, e.g.
+    /// `--pin a=0 --pin b=1,2` → `["a=0", "b=1,2"]`. Empty values (a
+    /// trailing `--pin` with nothing after it) are dropped.
+    pub fn all(&self, key: &str) -> Vec<String> {
+        self.mark(key);
+        self.flags.get(key).map(|v| v.iter().filter(|s| !s.is_empty()).cloned().collect()).unwrap_or_default()
+    }
+
     /// Comma-separated list, e.g. `--models cifar8,svhn8`.
     pub fn list(&self, key: &str) -> Vec<String> {
         self.mark(key);
@@ -131,6 +139,15 @@ mod tests {
         let a = args("--models cifar8,svhn8, mnist_bin");
         // note: space after comma splits the token; only the attached ones count
         assert_eq!(a.list("models"), vec!["cifar8", "svhn8"]);
+    }
+
+    #[test]
+    fn repeated_flags_all_collected() {
+        let a = args("--pin a=0 --pin b=1,2 --other x");
+        assert_eq!(a.all("pin"), vec!["a=0", "b=1,2"]);
+        assert_eq!(a.all("absent"), Vec::<String>::new());
+        let _ = a.get("other", "");
+        assert!(a.finish().is_ok(), "all() must mark the flag as seen");
     }
 
     #[test]

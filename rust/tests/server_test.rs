@@ -4,6 +4,8 @@
 //! real-artifact path and skip when `make artifacts` hasn't run.
 
 use predsamp::coordinator::config::ServeConfig;
+use predsamp::coordinator::placement::PlacementKind;
+use predsamp::coordinator::policy::{AdmissionKind, PolicyKind};
 use predsamp::coordinator::server::{spawn, Client, ServerHandle};
 use predsamp::runtime::artifact::{write_mock_manifest, MockModelSpec};
 use predsamp::substrate::json::Value;
@@ -66,7 +68,7 @@ fn spawn_mock(tag: &str, engine_threads: usize, continuous: bool) -> ServerHandl
 }
 
 /// As [`spawn_mock`], overriding the scheduling-policy knobs.
-fn spawn_mock_policy(tag: &str, policy: predsamp::coordinator::policy::PolicyKind, admission: predsamp::coordinator::policy::AdmissionKind) -> ServerHandle {
+fn spawn_mock_policy(tag: &str, policy: PolicyKind, admission: AdmissionKind) -> ServerHandle {
     let cfg = ServeConfig {
         addr: "127.0.0.1:0".into(),
         max_batch: 8,
@@ -235,7 +237,6 @@ fn sizing_policy_and_admission_choices_preserve_bitwise_exactness() {
     // SLO-hybrid sizing, and the legacy absorb-budget admission must
     // produce bitwise-identical samples — policies move work, never
     // samples.
-    use predsamp::coordinator::policy::{AdmissionKind, PolicyKind};
     let collect = |tag: &str, policy: PolicyKind, admission: AdmissionKind| -> Vec<Vec<Vec<i32>>> {
         let server = spawn_mock_policy(tag, policy, admission);
         let addr = server.addr;
@@ -264,6 +265,173 @@ fn sizing_policy_and_admission_choices_preserve_bitwise_exactness() {
     assert_eq!(occ, slo, "SLO sizing must not change any sample");
     assert_eq!(occ, budget, "admission policy must not change any sample");
     assert!(occ.iter().all(|s| s.len() == 3));
+}
+
+/// As [`spawn_mock`], overriding the placement policy.
+fn spawn_mock_placement(tag: &str, engine_threads: usize, placement: PlacementKind) -> ServerHandle {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+        engine_threads,
+        placement,
+        ..ServeConfig::default()
+    };
+    spawn_mock_with(tag, cfg)
+}
+
+/// Poll the `metrics` op until `pred` holds (worker gauges are published
+/// after a worker's turn ends, so they can lag the reply by a beat).
+/// Returns the last metrics object either way; the caller asserts on it.
+fn metrics_eventually(c: &mut Client, pred: impl Fn(&Value) -> bool) -> Value {
+    let mut m = c.call(r#"{"op":"metrics"}"#).unwrap();
+    for _ in 0..100 {
+        if pred(m.get("metrics")) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        m = c.call(r#"{"op":"metrics"}"#).unwrap();
+    }
+    m
+}
+
+fn worker_resident(metrics: &Value, w: usize) -> Vec<String> {
+    metrics.get("workers").as_arr().unwrap()[w]
+        .get("resident_models")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect()
+}
+
+fn pin_ab() -> PlacementKind {
+    PlacementKind::Pinned(vec![("mock_a".to_string(), vec![0]), ("mock_b".to_string(), vec![1])])
+}
+
+#[test]
+fn placement_policies_preserve_bitwise_exactness() {
+    // THE placement acceptance gate: the same staggered mixed stream
+    // served under replicate-all, per-model pinning, and a capacity cap
+    // of one engine per worker must produce bitwise-identical samples —
+    // placement moves groups between workers (and evicts engines), never
+    // samples.
+    let collect = |tag: &str, placement: PlacementKind| -> Vec<Vec<Vec<i32>>> {
+        let server = spawn_mock_placement(tag, 2, placement);
+        let addr = server.addr;
+        let mut handles = Vec::new();
+        for i in 0..8u64 {
+            handles.push(std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(i * 5));
+                let mut c = Client::connect(&addr).unwrap();
+                let model = if i % 2 == 0 { "mock_a" } else { "mock_b" };
+                let method = if i % 3 == 0 { "fpi" } else { "zeros" };
+                let r = c
+                    .call(&format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":3,"seed":{i}}}"#))
+                    .unwrap();
+                samples_of(&r)
+            }));
+        }
+        let out: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        server.stop();
+        out
+    };
+    let replicated = collect("place-rep", PlacementKind::ReplicateAll);
+    let pinned = collect("place-pin", pin_ab());
+    let capped = collect("place-cap", PlacementKind::CapacityCapped(1));
+    assert_eq!(replicated, pinned, "pinning must not change any sample");
+    assert_eq!(replicated, capped, "capacity capping must not change any sample");
+    assert!(replicated.iter().all(|s| s.len() == 3));
+}
+
+#[test]
+fn pinned_models_stay_on_their_workers() {
+    // Pin mock_a to worker 0 and mock_b to worker 1: after serving both,
+    // each engine must be resident only on its pinned worker, exactly
+    // one lazy load each — the placement plane's whole point.
+    let server = spawn_mock_placement("pin-resident", 2, pin_ab());
+    let mut c = Client::connect(&server.addr).unwrap();
+    for (model, seed) in [("mock_a", 0), ("mock_b", 1), ("mock_a", 2), ("mock_b", 3)] {
+        let r = c
+            .call(&format!(r#"{{"op":"sample","model":"{model}","method":"fpi","n":2,"seed":{seed},"return_samples":false}}"#))
+            .unwrap();
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    }
+    let m = metrics_eventually(&mut c, |m| {
+        worker_resident(m, 0) == vec!["mock_a".to_string()] && worker_resident(m, 1) == vec!["mock_b".to_string()]
+    });
+    let metrics = m.get("metrics");
+    assert_eq!(metrics.get("placement").as_str(), Some("pinned"));
+    assert_eq!(worker_resident(metrics, 0), vec!["mock_a".to_string()], "mock_a must live only on its pinned worker: {m}");
+    assert_eq!(worker_resident(metrics, 1), vec!["mock_b".to_string()], "mock_b must live only on its pinned worker: {m}");
+    assert_eq!(metrics.get("engine_loads").as_i64(), Some(2), "one lazy load per pinned model, ever");
+    assert_eq!(metrics.get("evictions").as_i64(), Some(0));
+    server.stop();
+}
+
+#[test]
+fn eval_routes_to_eligible_worker_under_pinning() {
+    // Regression: evals used to assume any worker owns a full Router.
+    // With mock_a pinned to worker 1, an eval of mock_a must execute on
+    // worker 1 (loading its engine there) — worker 0 must never touch
+    // it. The eval itself errors (mock models have no test set), which
+    // is exactly why residency is the observable: the engine loads
+    // before the bpd pass fails.
+    let placement = PlacementKind::Pinned(vec![("mock_a".to_string(), vec![1])]);
+    let server = spawn_mock_placement("pin-eval", 2, placement);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = c.call(r#"{"op":"eval","model":"mock_a"}"#).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "mock eval still errors: {r}");
+    let m = metrics_eventually(&mut c, |m| worker_resident(m, 1).contains(&"mock_a".to_string()));
+    let metrics = m.get("metrics");
+    assert!(worker_resident(metrics, 1).contains(&"mock_a".to_string()), "the eval must have run on the pinned worker: {m}");
+    assert!(worker_resident(metrics, 0).is_empty(), "the ineligible worker must never load the pinned engine: {m}");
+    server.stop();
+}
+
+#[test]
+fn capacity_cap_evicts_lru_and_reports() {
+    // One worker, one-engine budget, alternating models: every model
+    // switch must evict the previous engine (LRU) and reload on return,
+    // with the `evictions`/`engine_loads` gauges telling the story.
+    let server = spawn_mock_placement("cap-evict", 1, PlacementKind::CapacityCapped(1));
+    let mut c = Client::connect(&server.addr).unwrap();
+    for (model, seed) in [("mock_a", 0), ("mock_b", 1), ("mock_a", 2)] {
+        let r = c
+            .call(&format!(r#"{{"op":"sample","model":"{model}","method":"fpi","n":2,"seed":{seed},"return_samples":false}}"#))
+            .unwrap();
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    }
+    let m = metrics_eventually(&mut c, |m| m.get("evictions").as_i64().unwrap_or(0) >= 2);
+    let metrics = m.get("metrics");
+    assert_eq!(metrics.get("placement").as_str(), Some("capped"));
+    assert_eq!(metrics.get("evictions").as_i64(), Some(2), "a→b and b→a each evict once: {m}");
+    assert_eq!(metrics.get("engine_loads").as_i64(), Some(3), "two loads plus one post-eviction reload: {m}");
+    assert_eq!(worker_resident(metrics, 0), vec!["mock_a".to_string()], "only the engine budget stays resident: {m}");
+    server.stop();
+}
+
+#[test]
+fn convergence_history_reported_and_warms() {
+    // The server-level estimator must accumulate per-(model, method)
+    // history across schedules and expose it through `metrics` — the
+    // observable end of the cold-start seeding path.
+    let server = spawn_mock("convergence", 1, true);
+    let mut c = Client::connect(&server.addr).unwrap();
+    for seed in 0..3 {
+        let r = c
+            .call(&format!(r#"{{"op":"sample","model":"mock_a","method":"fpi","n":2,"seed":{seed},"return_samples":false}}"#))
+            .unwrap();
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    }
+    let m = metrics_eventually(&mut c, |m| m.get("convergence").get("mock_a/fpi").as_obj().is_some());
+    let entry = m.get("metrics").get("convergence").get("mock_a/fpi");
+    assert!(entry.as_obj().is_some(), "fpi schedules must be observed into the book: {m}");
+    let ppj = entry.get("passes_per_job").as_f64().unwrap();
+    assert!(ppj > 0.0, "passes/job estimate must be positive: {ppj}");
+    assert!(entry.get("pass_secs").as_f64().unwrap() > 0.0);
+    assert!(entry.get("schedules").as_i64().unwrap() >= 1);
+    server.stop();
 }
 
 #[test]
