@@ -10,7 +10,13 @@
 //! comparison *is* asserted (it counts work, not time). Results land in
 //! `BENCH_serving_load.json` (uploaded as a CI artifact).
 //!
-//!     cargo bench --bench serving_load [-- --clients 8 --requests 12 --engine-threads 1,4 --out BENCH_serving_load.json]
+//! A high-concurrency edge scenario additionally drives ≥256 concurrent
+//! connections through the single event-loop connection plane and
+//! measures time-to-first-sample for streamed vs group-close delivery
+//! (streaming must win — that one *is* asserted, since the streamed event
+//! fires jobs before the schedule ends by construction).
+//!
+//!     cargo bench --bench serving_load [-- --clients 8 --requests 12 --engine-threads 1,4 --conns 256 --out BENCH_serving_load.json]
 
 use predsamp::coordinator::config::ServeConfig;
 use predsamp::coordinator::placement::PlacementKind;
@@ -42,9 +48,8 @@ fn run_load(dir: std::path::PathBuf, engine_threads: usize, clients: usize, requ
         continuous: true,
         elastic: true,
         steal: true,
-        // Every open connection pins one handler thread, so leave headroom
-        // beyond the measured clients.
-        worker_threads: clients + 2,
+        // All client connections share the single event-loop edge thread;
+        // no per-connection thread sizing is needed.
         engine_threads,
         ..ServeConfig::default()
     };
@@ -102,7 +107,6 @@ fn run_placement(dir: std::path::PathBuf, placement: PlacementKind, big_jobs: us
         addr: "127.0.0.1:0".into(),
         max_batch: 16,
         max_wait: Duration::from_millis(2),
-        worker_threads: 6,
         engine_threads: 2,
         placement,
         ..ServeConfig::default()
@@ -150,6 +154,68 @@ fn run_placement(dir: std::path::PathBuf, placement: PlacementKind, big_jobs: us
     server.stop();
     let outputs = vec![big_samples, parse_samples(rb.get("samples")).expect("samples"), parse_samples(ra.get("samples")).expect("samples")];
     Ok((outputs, engine_loads))
+}
+
+/// High-concurrency edge scenario: `conns` simultaneous connections all
+/// multiplexed onto the single event-loop thread (the old edge needed one
+/// thread per connection), then time-to-first-sample on the same
+/// many-job request delivered streaming vs at group close. Returns
+/// `(wall for the pipelined wave, ttfs streaming, ttfs group-close)`.
+fn run_edge(dir: std::path::PathBuf, conns: usize) -> anyhow::Result<(f64, f64, f64)> {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        max_conns: conns + 8,
+        engine_threads: 2,
+        ..ServeConfig::default()
+    };
+    let server = spawn(dir, cfg)?;
+    {
+        let mut warm = Client::connect(&server.addr)?;
+        let w = warm.call(r#"{"op":"sample","model":"mock_a","method":"fpi","n":1,"return_samples":false}"#)?;
+        anyhow::ensure!(w.get("ok").as_bool() == Some(true), "warmup failed: {w}");
+    }
+
+    // Open every connection up front, pipeline one request down each, and
+    // only then read the replies back — all `conns` sockets are
+    // concurrently open and in flight on the one edge thread.
+    let t0 = Timer::start();
+    let mut clients = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let mut c = Client::connect(&server.addr)?;
+        c.send_line(&format!(
+            r#"{{"op":"sample","model":"mock_a","method":"fpi","n":1,"seed":{i},"return_samples":false,"id":{i}}}"#
+        ))?;
+        clients.push(c);
+    }
+    for (i, c) in clients.iter_mut().enumerate() {
+        let r = c.read_message()?;
+        anyhow::ensure!(r.get("ok").as_bool() == Some(true), "edge request failed: {r}");
+        anyhow::ensure!(r.get("id").as_i64() == Some(i as i64), "reply must echo its request id: {r}");
+    }
+    let wall = t0.secs();
+    drop(clients);
+
+    // Time-to-first-sample on one many-job request: streamed delivery
+    // hands over the first converged job immediately; group-close
+    // delivery pays the whole schedule first.
+    let mut c = Client::connect(&server.addr)?;
+    let t = Timer::start();
+    let mut first = None;
+    let fin = c.call_streamed(r#"{"op":"sample","model":"mock_a","method":"fpi","n":64,"seed":7,"stream":true,"return_samples":false}"#, &mut |_| {
+        if first.is_none() {
+            first = Some(t.secs());
+        }
+    })?;
+    anyhow::ensure!(fin.get("ok").as_bool() == Some(true), "streamed request failed: {fin}");
+    let ttfs_stream = first.expect("streamed request produced no events");
+    let t = Timer::start();
+    let fin = c.call(r#"{"op":"sample","model":"mock_a","method":"fpi","n":64,"seed":7,"return_samples":false}"#)?;
+    anyhow::ensure!(fin.get("ok").as_bool() == Some(true), "group-close request failed: {fin}");
+    let ttfs_close = t.secs();
+    server.stop();
+    Ok((wall, ttfs_stream, ttfs_close))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -222,11 +288,39 @@ fn main() -> anyhow::Result<()> {
         "pinning must pay strictly fewer engine loads than replicate-all: pinned {pin_loads} vs replicated {rep_loads}"
     );
 
+    // Edge scenario: ≥256 concurrent connections on the single event-loop
+    // thread, plus streaming vs group-close time-to-first-sample. The
+    // thread count is structural (one loop regardless of connections), and
+    // streamed delivery must beat waiting for the group to close.
+    let conns = args.num::<usize>("conns", 256);
+    let (edge_wall, ttfs_stream, ttfs_close) = run_edge(dir.clone(), conns)?;
+    println!(
+        "edge: {conns} concurrent connections on 1 event-loop thread ({:.2} threads/1k conns), wave {}",
+        1000.0 / conns as f64,
+        fmt_duration(edge_wall)
+    );
+    println!("      time-to-first-sample (n=64): streaming {} vs group-close {}", fmt_duration(ttfs_stream), fmt_duration(ttfs_close));
+    assert!(
+        ttfs_stream < ttfs_close,
+        "streamed first sample must land strictly before group-close delivery: {ttfs_stream:.4}s vs {ttfs_close:.4}s"
+    );
+
     let mut root = vec![
         ("bench", Value::str("serving_load")),
         ("clients", Value::num(clients as f64)),
         ("requests", Value::num(requests as f64)),
         ("sharding", Value::Arr(shard_values)),
+        (
+            "edge",
+            Value::obj(vec![
+                ("conns", Value::num(conns as f64)),
+                ("conn_plane_threads", Value::num(1.0)),
+                ("threads_per_1k_conns", Value::num(1000.0 / conns as f64)),
+                ("wave_wall_secs", Value::num(edge_wall)),
+                ("ttfs_stream_s", Value::num(ttfs_stream)),
+                ("ttfs_close_s", Value::num(ttfs_close)),
+            ]),
+        ),
         (
             "placement",
             Value::obj(vec![

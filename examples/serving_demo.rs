@@ -78,9 +78,8 @@ fn main() -> anyhow::Result<()> {
             continuous,
             elastic: continuous,
             steal: true,
-            // one handler thread per client plus headroom for the
-            // warm/metrics connection below
-            worker_threads: clients + 2,
+            // All client connections share the single event-loop edge
+            // thread; no per-connection thread sizing is needed.
             engine_threads,
             ..ServeConfig::default()
         };

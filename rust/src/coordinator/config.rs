@@ -76,7 +76,10 @@ pub struct ServeConfig {
     /// thread-affinity are preserved — and samples, as ever, are bitwise
     /// identical either way.
     pub steal: bool,
-    /// Connection-handling threads (cheap; no PJRT state).
+    /// Legacy connection-thread count. The edge is a single nonblocking
+    /// event loop now (`server/conn.rs`), so this no longer sizes
+    /// anything; the knob is kept (and still range-checked) so existing
+    /// configs and flags keep parsing.
     pub worker_threads: usize,
     /// Engine worker shards. Each owns a full `Router` — PJRT handles are
     /// thread-affine, so engines are replicated per worker, lazily — and
@@ -104,6 +107,38 @@ pub struct ServeConfig {
     /// Placement only moves `(model, method)` groups between workers, so
     /// samples are bitwise identical under every policy.
     pub placement: PlacementKind,
+    /// How long the connection plane waits for the engines to answer a
+    /// request before failing it to the client (`--reply-timeout-ms`).
+    /// The engine's eventual reply is logged and counted as orphaned,
+    /// never silently dropped.
+    pub reply_timeout: Duration,
+    /// Maximum request line length in bytes (`--max-line-len`). Enforced
+    /// *while* buffering: a connection that streams an endless line is
+    /// rejected and closed the moment its read buffer crosses the limit,
+    /// long before it could exhaust memory.
+    pub max_line_len: usize,
+    /// Per-connection outbound buffer cap in bytes (`--outbound-cap`).
+    /// Read-side backpressure: the event loop stops *reading* a
+    /// connection whose unflushed write buffer exceeds the cap, so a slow
+    /// reader throttles itself without stalling other connections.
+    pub outbound_cap: usize,
+    /// Per-connection request rate limit in requests/second, token-bucket
+    /// with a one-second burst; 0 disables the limit (`--rate-limit`).
+    /// Over-limit requests get a protocol error and the connection stays
+    /// open.
+    pub rate_limit: u32,
+    /// Maximum simultaneously open connections (`--max-conns`). Excess
+    /// accepts receive a protocol error and are closed immediately.
+    pub max_conns: usize,
+    /// Honor the `"stream": true` request field: push one NDJSON event
+    /// per completed job before the final reply (`--no-stream` clears).
+    /// Delivery timing only — sample payloads stay bitwise identical.
+    pub streaming: bool,
+    /// Honor the `"frame": true` request field: sample payloads travel as
+    /// a length-prefixed binary frame after the JSON header line instead
+    /// of inline JSON arrays (`--no-frame` clears). Same bytes, cheaper
+    /// wire format.
+    pub framing: bool,
 }
 
 impl Default for ServeConfig {
@@ -121,6 +156,13 @@ impl Default for ServeConfig {
             slo: Duration::from_millis(50),
             admission: AdmissionKind::OldestFirst,
             placement: PlacementKind::ReplicateAll,
+            reply_timeout: Duration::from_secs(600),
+            max_line_len: 1 << 20,
+            outbound_cap: 8 << 20,
+            rate_limit: 0,
+            max_conns: 1024,
+            streaming: true,
+            framing: true,
         }
     }
 }
@@ -140,6 +182,19 @@ impl ServeConfig {
         if let AdmissionKind::Budget(b) = self.admission {
             ensure!(b >= 1, "serve config: absorb budget must be >= 1 (or use age-based admission)");
         }
+        ensure!(
+            self.reply_timeout >= Duration::from_millis(10) && self.reply_timeout <= Duration::from_secs(3600),
+            "serve config: reply_timeout must be in [10ms, 1h]"
+        );
+        ensure!(
+            (256..=256 << 20).contains(&self.max_line_len),
+            "serve config: max_line_len must be in [256 B, 256 MiB] (requests are single JSON lines)"
+        );
+        ensure!(self.outbound_cap >= 4096, "serve config: outbound_cap below 4 KiB cannot hold a single response");
+        ensure!(self.rate_limit <= 1_000_000, "serve config: rate_limit above 1M req/s is not a limit");
+        ensure!(self.max_conns >= 1, "serve config: max_conns must be >= 1");
+        // `streaming` / `framing` are plain opt-in switches: every bool
+        // combination is valid, so there is nothing to range-check.
         // Placement knobs (pin lists, engine cap) are validated by
         // `placement::placement_for` at spawn — it is the single
         // authority, since it also sees the manifest's own pins.
@@ -178,6 +233,23 @@ mod tests {
         assert!(ServeConfig { slo: Duration::from_secs(3600), ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { admission: AdmissionKind::Budget(0), ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { admission: AdmissionKind::Budget(8), policy: PolicyKind::Slo, ..ServeConfig::default() }.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_bad_edge_knobs() {
+        assert!(ServeConfig { reply_timeout: Duration::from_millis(1), ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { reply_timeout: Duration::from_secs(86400), ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { reply_timeout: Duration::from_millis(50), ..ServeConfig::default() }.validate().is_ok());
+        assert!(ServeConfig { max_line_len: 16, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { max_line_len: 1 << 30, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { max_line_len: 4096, ..ServeConfig::default() }.validate().is_ok());
+        assert!(ServeConfig { outbound_cap: 128, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { outbound_cap: 4096, ..ServeConfig::default() }.validate().is_ok());
+        assert!(ServeConfig { rate_limit: 2_000_000, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { rate_limit: 0, ..ServeConfig::default() }.validate().is_ok(), "0 means unlimited");
+        assert!(ServeConfig { max_conns: 0, ..ServeConfig::default() }.validate().is_err());
+        // The delivery opt-ins are plain switches: any combination is valid.
+        assert!(ServeConfig { streaming: false, framing: false, ..ServeConfig::default() }.validate().is_ok());
     }
 
     #[test]

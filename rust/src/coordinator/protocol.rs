@@ -10,6 +10,12 @@
 //!
 //! Responses: {"ok":true, ...} or {"ok":false,"error":"..."}.
 //!
+//! Envelope fields on any request ([`RequestMeta`]): `"id"` (echoed on
+//! every response line; required to correlate pipelined requests),
+//! `"stream": true` (one NDJSON event per completed job before the final
+//! reply), and `"frame": true` (sample payloads as length-prefixed
+//! binary frames after the header line — see [`encode_frame`]).
+//!
 //! `info` and `metrics` report the engine-worker pool: `engine_workers`
 //! (shard count) and a `workers` array of per-worker gauges — queue depth,
 //! occupancy, loaded engines, batch/sample/error counters, and the
@@ -43,9 +49,35 @@ pub enum Request {
     },
 }
 
+/// Connection-plane envelope fields of a request, parsed alongside the
+/// operation itself: the client-chosen correlation `id` (echoed on every
+/// response line, required for pipelining), the per-job streaming opt-in,
+/// and the binary-frame opt-in.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RequestMeta {
+    pub id: Option<u64>,
+    pub stream: bool,
+    pub frame: bool,
+}
+
+/// Parse a request line together with its [`RequestMeta`] envelope.
+pub fn parse_with_meta(line: &str) -> Result<(Request, RequestMeta), String> {
+    let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
+    let meta = RequestMeta {
+        id: v.get("id").as_i64().filter(|&i| i >= 0).map(|i| i as u64),
+        stream: v.get("stream").as_bool().unwrap_or(false),
+        frame: v.get("frame").as_bool().unwrap_or(false),
+    };
+    Ok((Request::from_value(&v)?, meta))
+}
+
 impl Request {
     pub fn parse(line: &str) -> Result<Request, String> {
         let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
+        Request::from_value(&v)
+    }
+
+    fn from_value(v: &Value) -> Result<Request, String> {
         let op = v.get("op").as_str().ok_or("missing op")?;
         match op {
             "ping" => Ok(Request::Ping),
@@ -82,6 +114,105 @@ pub fn ok(fields: Vec<(&str, Value)>) -> String {
 
 pub fn err(msg: &str) -> String {
     Value::obj(vec![("ok", Value::Bool(false)), ("error", Value::str(msg))]).to_string()
+}
+
+/// Echo a client correlation id into an already-serialized response line.
+/// Splicing after the opening brace keeps the hot path from re-parsing
+/// the line; every response is a non-empty JSON object, so the inserted
+/// field always lands before an existing one.
+pub fn with_id(line: &str, id: u64) -> String {
+    debug_assert!(line.starts_with('{') && line.len() > 2, "responses are non-empty objects: {line}");
+    format!("{{\"id\":{id},{}", &line[1..])
+}
+
+/// One streamed per-job delivery event (requests with `"stream": true`):
+/// emitted the moment the job completes, before the final reply. With
+/// `framed`, the sample row travels as a one-row binary frame after the
+/// line instead of inline JSON.
+pub fn stream_event(job: usize, sample: &[i32], framed: bool) -> String {
+    let mut fields = vec![("job", Value::num(job as f64)), ("stream", Value::Bool(true))];
+    if framed {
+        fields.push(("frame", Value::Bool(true)));
+    } else {
+        fields.push(("sample", Value::Arr(sample.iter().map(|&v| Value::num(v as f64)).collect())));
+    }
+    Value::obj(fields).to_string()
+}
+
+/// Magic bytes opening every binary sample frame.
+pub const FRAME_MAGIC: &[u8; 4] = b"PSMP";
+/// Frame format version emitted by [`encode_frame`].
+pub const FRAME_VERSION: u8 = 1;
+/// Frame payload kind: row-major i32 sample rows.
+pub const FRAME_KIND_SAMPLES: u8 = 1;
+/// Upper bound on a declared frame payload (decode hardening).
+pub const FRAME_MAX_BYTES: usize = 256 << 20;
+
+/// Encode sample rows as a length-prefixed binary frame (the byte-level
+/// layout is documented in `docs/PROTOCOL.md`):
+///
+/// ```text
+/// u32 LE   payload length (bytes after this prefix)
+/// 4 bytes  magic "PSMP"
+/// u8       version (1)
+/// u8       kind (1 = i32 sample rows)
+/// u16 LE   reserved (0)
+/// u32 LE   rows
+/// u32 LE   cols
+/// rows × cols × i32 LE  row-major sample values
+/// ```
+pub fn encode_frame(samples: &[Vec<i32>]) -> Vec<u8> {
+    let cols = samples.first().map(|r| r.len()).unwrap_or(0);
+    debug_assert!(samples.iter().all(|r| r.len() == cols), "sample rows must be rectangular");
+    let payload_len = 16 + 4 * samples.len() * cols;
+    let mut out = Vec::with_capacity(4 + payload_len);
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    out.extend_from_slice(FRAME_MAGIC);
+    out.push(FRAME_VERSION);
+    out.push(FRAME_KIND_SAMPLES);
+    out.extend_from_slice(&[0, 0]);
+    out.extend_from_slice(&(samples.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(cols as u32).to_le_bytes());
+    for row in samples {
+        for &v in row {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a binary sample frame's payload (the bytes *after* the u32
+/// length prefix, which the transport strips while framing).
+pub fn decode_frame(payload: &[u8]) -> Result<Vec<Vec<i32>>, String> {
+    let u32_at = |off: usize| u32::from_le_bytes(payload[off..off + 4].try_into().expect("4 bytes")) as usize;
+    if payload.len() < 16 {
+        return Err(format!("frame too short: {} bytes", payload.len()));
+    }
+    if &payload[0..4] != FRAME_MAGIC {
+        return Err("bad frame magic".into());
+    }
+    if payload[4] != FRAME_VERSION {
+        return Err(format!("unsupported frame version {}", payload[4]));
+    }
+    if payload[5] != FRAME_KIND_SAMPLES {
+        return Err(format!("unsupported frame kind {}", payload[5]));
+    }
+    let (rows, cols) = (u32_at(8), u32_at(12));
+    let expect = rows.checked_mul(cols).and_then(|c| c.checked_mul(4)).and_then(|b| b.checked_add(16));
+    if expect != Some(payload.len()) {
+        return Err(format!("frame length mismatch: {rows}x{cols} rows/cols vs {} payload bytes", payload.len()));
+    }
+    let mut out = Vec::with_capacity(rows);
+    let mut off = 16;
+    for _ in 0..rows {
+        let mut row = Vec::with_capacity(cols);
+        for _ in 0..cols {
+            row.push(i32::from_le_bytes(payload[off..off + 4].try_into().expect("4 bytes")));
+            off += 4;
+        }
+        out.push(row);
+    }
+    Ok(out)
 }
 
 /// Encode a batch of integer samples.
@@ -154,5 +285,66 @@ mod tests {
         let v = json::parse(&e).unwrap();
         assert_eq!(v.get("ok").as_bool(), Some(false));
         assert_eq!(v.get("error").as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn meta_parsed_alongside_request() {
+        let (r, m) = parse_with_meta(r#"{"op":"ping","id":7,"stream":true,"frame":true}"#).unwrap();
+        assert_eq!(r, Request::Ping);
+        assert_eq!(m, RequestMeta { id: Some(7), stream: true, frame: true });
+        let (_, m) = parse_with_meta(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!(m, RequestMeta::default());
+        // A negative id cannot be echoed as u64: treated as absent.
+        let (_, m) = parse_with_meta(r#"{"op":"ping","id":-3}"#).unwrap();
+        assert_eq!(m.id, None);
+        assert!(parse_with_meta(r#"{"op":"bogus","id":1}"#).is_err());
+    }
+
+    #[test]
+    fn with_id_splices_before_existing_fields() {
+        let line = with_id(&ok(vec![("pong", Value::Bool(true))]), 42);
+        let v = json::parse(&line).unwrap();
+        assert_eq!(v.get("id").as_i64(), Some(42));
+        assert_eq!(v.get("ok").as_bool(), Some(true));
+        assert_eq!(v.get("pong").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn stream_event_shapes() {
+        let v = json::parse(&stream_event(3, &[7, -1], false)).unwrap();
+        assert_eq!(v.get("job").as_i64(), Some(3));
+        assert_eq!(v.get("stream").as_bool(), Some(true));
+        assert_eq!(v.get("sample").as_arr().unwrap().len(), 2);
+        let v = json::parse(&stream_event(0, &[7, -1], true)).unwrap();
+        assert_eq!(v.get("frame").as_bool(), Some(true), "framed events defer the row to the binary frame");
+        assert_eq!(v.get("sample"), &Value::Null);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let samples = vec![vec![1, -2, 300], vec![i32::MAX, 0, i32::MIN]];
+        let wire = encode_frame(&samples);
+        let len = u32::from_le_bytes(wire[0..4].try_into().unwrap()) as usize;
+        assert_eq!(len, wire.len() - 4, "length prefix covers the payload exactly");
+        assert_eq!(decode_frame(&wire[4..]).unwrap(), samples);
+        // Empty batch: a legal 16-byte header-only frame.
+        let empty = encode_frame(&[]);
+        assert_eq!(decode_frame(&empty[4..]).unwrap(), Vec::<Vec<i32>>::new());
+    }
+
+    #[test]
+    fn frame_decode_rejects_corruption() {
+        let wire = encode_frame(&[vec![1, 2]]);
+        let payload = &wire[4..];
+        assert!(decode_frame(&payload[..8]).is_err(), "truncated header");
+        let mut bad = payload.to_vec();
+        bad[0] = b'X';
+        assert!(decode_frame(&bad).is_err(), "bad magic");
+        let mut bad = payload.to_vec();
+        bad[4] = 99;
+        assert!(decode_frame(&bad).is_err(), "unknown version");
+        let mut bad = payload.to_vec();
+        bad[8] = 200; // declares 200 rows the payload does not carry
+        assert!(decode_frame(&bad).is_err(), "row-count mismatch");
     }
 }

@@ -1,8 +1,14 @@
-//! Minimal blocking client for examples, benches and tests.
+//! Minimal blocking client for examples, benches and tests. Speaks the
+//! full wire surface: plain request/response, pipelining by `id` (via
+//! [`Client::send_line`] + [`Client::read_message`]), streamed per-job
+//! events, and length-prefixed binary sample frames — which it decodes
+//! and splices back into the message, so callers see the same `Value`
+//! shape whether or not the payload rode as binary.
 
+use crate::coordinator::protocol;
 use crate::substrate::json::Value;
 use anyhow::Result;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 
 /// One line-delimited-JSON connection to a predsamp server.
@@ -18,16 +24,74 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream), writer })
     }
 
-    /// Send one request line, wait for the response.
-    pub fn call(&mut self, line: &str) -> Result<Value> {
+    /// Send one request line without waiting for anything back — the
+    /// pipelining half; pair with [`Client::read_message`].
+    pub fn send_line(&mut self, line: &str) -> Result<()> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Read one message off the wire: a JSON line, plus — when the line
+    /// carries `"frame": true` — the binary frame that follows it, decoded
+    /// and spliced back in (`"sample"` on a stream event, `"samples"` on a
+    /// final response), so framed and unframed replies look identical.
+    pub fn read_message(&mut self) -> Result<Value> {
         let mut resp = String::new();
         let n = self.reader.read_line(&mut resp)?;
         if n == 0 {
             // A clean EOF is not a malformed response: say what happened.
             anyhow::bail!("connection closed by server");
         }
-        Ok(crate::substrate::json::parse(resp.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?)
+        let msg = crate::substrate::json::parse(resp.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+        if msg.get("frame").as_bool() != Some(true) {
+            return Ok(msg);
+        }
+        let mut len4 = [0u8; 4];
+        self.reader.read_exact(&mut len4)?;
+        let len = u32::from_le_bytes(len4) as usize;
+        if len > protocol::FRAME_MAX_BYTES {
+            anyhow::bail!("frame length {len} exceeds the {} byte cap", protocol::FRAME_MAX_BYTES);
+        }
+        let mut payload = vec![0u8; len];
+        self.reader.read_exact(&mut payload)?;
+        let rows = protocol::decode_frame(&payload).map_err(|e| anyhow::anyhow!("bad frame: {e}"))?;
+        let Value::Obj(mut obj) = msg else {
+            anyhow::bail!("framed message is not an object");
+        };
+        if obj.get("stream").and_then(Value::as_bool) == Some(true) {
+            let row = rows.into_iter().next().unwrap_or_default();
+            obj.insert("sample".into(), Value::Arr(row.into_iter().map(|v| Value::num(v as f64)).collect()));
+        } else {
+            obj.insert("samples".into(), protocol::samples_value(&rows));
+        }
+        Ok(Value::Obj(obj))
+    }
+
+    /// Send one request line, wait for its closing response — skipping
+    /// (discarding) any streamed per-job events along the way, so callers
+    /// that never opted into streaming are unaffected by it.
+    pub fn call(&mut self, line: &str) -> Result<Value> {
+        self.send_line(line)?;
+        loop {
+            let msg = self.read_message()?;
+            if msg.get("stream").as_bool() != Some(true) {
+                return Ok(msg);
+            }
+        }
+    }
+
+    /// Send one request line, hand each streamed per-job event to
+    /// `on_event` as it arrives, and return the closing response.
+    pub fn call_streamed(&mut self, line: &str, on_event: &mut dyn FnMut(&Value)) -> Result<Value> {
+        self.send_line(line)?;
+        loop {
+            let msg = self.read_message()?;
+            if msg.get("stream").as_bool() == Some(true) {
+                on_event(&msg);
+            } else {
+                return Ok(msg);
+            }
+        }
     }
 }

@@ -1,0 +1,555 @@
+//! The connection plane: one event-loop thread owning every client
+//! socket. Nonblocking accept plus a readiness scan over nonblocking
+//! connections, with per-connection read/write buffers, multiple
+//! in-flight requests per connection (pipelined by request `id`), and
+//! replies routed back through the completion channel into
+//! per-connection outbound queues — replacing the old blocking
+//! thread-per-connection edge, whose thread count was the real
+//! concurrency ceiling.
+//!
+//! Edge hardening lives here, all `ServeConfig` knobs:
+//!
+//! * `max_line_len` — enforced *while* buffering, so an endless line is
+//!   rejected long before it can exhaust memory;
+//! * `outbound_cap` — read-side backpressure: a connection whose
+//!   unflushed output exceeds the cap stops being *read* until the peer
+//!   drains it, without stalling any other connection;
+//! * `rate_limit` — per-connection token bucket (one-second burst);
+//! * `max_conns` — excess accepts get an error line and are closed;
+//! * `reply_timeout` — an unanswered request fails to the client, and
+//!   the engine's eventual reply is logged and counted as orphaned
+//!   rather than silently dropped.
+//!
+//! The loop never blocks on any socket: it sleeps on the completion
+//! channel (so engine replies wake it instantly) for at most one tick,
+//! then rescans. std-only nonblocking sockets — no epoll wrapper is
+//! vendored, and a scan over ≤ `max_conns` health-checked fds per tick
+//! is well inside this plane's budget.
+
+use crate::coordinator::config::ServeConfig;
+use crate::coordinator::protocol::{self, Request};
+use crate::coordinator::server::pool::{Completion, Reply};
+use crate::coordinator::server::Msg;
+use crate::substrate::json::Value;
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+/// Idle tick: how long the loop blocks on the completion channel when a
+/// pass over every connection found nothing to do. Completions wake it
+/// immediately; fresh sockets/bytes wait at most one tick.
+const TICK: Duration = Duration::from_millis(5);
+
+/// Connection-plane counters, surfaced as the `edge` section of the
+/// `metrics` response.
+#[derive(Default)]
+pub(crate) struct EdgeStats {
+    pub(crate) open_conns: AtomicUsize,
+    pub(crate) total_conns: AtomicU64,
+    pub(crate) bytes_in: AtomicU64,
+    pub(crate) bytes_out: AtomicU64,
+    pub(crate) overlimit_rejections: AtomicU64,
+    pub(crate) ratelimit_rejections: AtomicU64,
+    pub(crate) conn_cap_rejections: AtomicU64,
+    pub(crate) reply_timeouts: AtomicU64,
+    pub(crate) orphaned_replies: AtomicU64,
+}
+
+impl EdgeStats {
+    pub(crate) fn value(&self) -> Value {
+        Value::obj(vec![
+            ("open_conns", Value::num(self.open_conns.load(Ordering::SeqCst) as f64)),
+            ("total_conns", Value::num(self.total_conns.load(Ordering::SeqCst) as f64)),
+            ("bytes_in", Value::num(self.bytes_in.load(Ordering::SeqCst) as f64)),
+            ("bytes_out", Value::num(self.bytes_out.load(Ordering::SeqCst) as f64)),
+            ("overlimit_rejections", Value::num(self.overlimit_rejections.load(Ordering::SeqCst) as f64)),
+            ("ratelimit_rejections", Value::num(self.ratelimit_rejections.load(Ordering::SeqCst) as f64)),
+            ("conn_cap_rejections", Value::num(self.conn_cap_rejections.load(Ordering::SeqCst) as f64)),
+            ("reply_timeouts", Value::num(self.reply_timeouts.load(Ordering::SeqCst) as f64)),
+            ("orphaned_replies", Value::num(self.orphaned_replies.load(Ordering::SeqCst) as f64)),
+        ])
+    }
+}
+
+/// Per-connection request rate limiter: classic token bucket with a
+/// one-second burst (`rate` tokens), `rate` == 0 disabling the limit.
+struct TokenBucket {
+    rate: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(rate: u32, now: Instant) -> TokenBucket {
+        TokenBucket { rate: rate as f64, tokens: rate as f64, last: now }
+    }
+
+    fn allow(&mut self, now: Instant) -> bool {
+        if self.rate <= 0.0 {
+            return true;
+        }
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.rate);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Split one complete line (newline stripped) off the front of `buf`.
+fn take_line(buf: &mut Vec<u8>) -> Option<Vec<u8>> {
+    let pos = buf.iter().position(|&b| b == b'\n')?;
+    let mut line: Vec<u8> = buf.drain(..=pos).collect();
+    line.pop();
+    Some(line)
+}
+
+/// One client connection's event-loop state.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes received but not yet split into complete request lines.
+    rbuf: Vec<u8>,
+    /// Bytes queued for the peer; `wpos..` is the unflushed tail.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    bucket: TokenBucket,
+    /// Requests dispatched from this connection and not yet answered
+    /// (or timed out) — a half-closed connection stays open for these.
+    inflight: usize,
+    /// Peer sent EOF: stop reading, finish delivering, then close.
+    read_closed: bool,
+    /// Hard close (protocol violation / shutdown): flush `wbuf`, drop.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, cfg: &ServeConfig, now: Instant) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            bucket: TokenBucket::new(cfg.rate_limit, now),
+            inflight: 0,
+            read_closed: false,
+            closing: false,
+        }
+    }
+
+    /// Unflushed outbound bytes (what backpressure measures).
+    fn outstanding(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    fn push_line(&mut self, line: &str) {
+        self.wbuf.extend_from_slice(line.as_bytes());
+        self.wbuf.push(b'\n');
+    }
+}
+
+/// One request awaiting its engine reply: who asked, the reply deadline,
+/// and whether the deadline already fired (late replies then count as
+/// orphaned instead of reaching a client that moved on).
+struct Inflight {
+    conn: u64,
+    id: Option<u64>,
+    deadline: Instant,
+    timed_out: bool,
+}
+
+struct ConnPlane {
+    cfg: ServeConfig,
+    tx: mpsc::Sender<Msg>,
+    ctx: mpsc::Sender<Completion>,
+    edge: Arc<EdgeStats>,
+    conns: HashMap<u64, Conn>,
+    inflight: HashMap<u64, Inflight>,
+    next_conn: u64,
+    next_seq: u64,
+}
+
+/// The connection plane's event loop. Owns the listener, every client
+/// socket, and the receiving end of the completion channel; exits when
+/// `stop` is set, closing every connection.
+pub(crate) fn conn_loop(
+    listener: TcpListener,
+    cfg: ServeConfig,
+    tx: mpsc::Sender<Msg>,
+    crx: mpsc::Receiver<Completion>,
+    ctx: mpsc::Sender<Completion>,
+    stop: Arc<AtomicBool>,
+    edge: Arc<EdgeStats>,
+) {
+    let mut plane = ConnPlane {
+        cfg,
+        tx,
+        ctx,
+        edge,
+        conns: HashMap::new(),
+        inflight: HashMap::new(),
+        next_conn: 0,
+        next_seq: 0,
+    };
+    while !stop.load(Ordering::SeqCst) {
+        let mut busy = plane.accept_new(&listener);
+        while let Ok(c) = crx.try_recv() {
+            plane.deliver(c);
+            busy = true;
+        }
+        busy |= plane.service_all();
+        plane.scan_timeouts();
+        if !busy {
+            // Idle: block on the completion channel — an engine reply
+            // wakes the loop instantly, everything else waits ≤ TICK.
+            // The plane holds a sender clone, so the channel cannot
+            // disconnect; only deliveries and timeouts come out.
+            if let Ok(c) = crx.recv_timeout(TICK) {
+                plane.deliver(c);
+            }
+        }
+    }
+    // Shutdown: every socket closes (clients observe EOF).
+    plane.conns.clear();
+    plane.edge.open_conns.store(0, Ordering::SeqCst);
+}
+
+impl ConnPlane {
+    /// Accept every pending connection (nonblocking). Over `max_conns`,
+    /// the socket gets a best-effort error line and closes immediately.
+    fn accept_new(&mut self, listener: &TcpListener) -> bool {
+        let mut any = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    any = true;
+                    self.edge.total_conns.fetch_add(1, Ordering::SeqCst);
+                    if self.conns.len() >= self.cfg.max_conns {
+                        self.edge.conn_cap_rejections.fetch_add(1, Ordering::SeqCst);
+                        log::warn!("rejecting connection from {peer}: {} already open (max_conns)", self.conns.len());
+                        // Accepted sockets are blocking by default; one
+                        // short error line fits any send buffer.
+                        let mut s = stream;
+                        let _ = s.write_all(protocol::err("connection limit reached").as_bytes());
+                        let _ = s.write_all(b"\n");
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let id = self.next_conn;
+                    self.next_conn += 1;
+                    self.conns.insert(id, Conn::new(stream, &self.cfg, Instant::now()));
+                    self.edge.open_conns.store(self.conns.len(), Ordering::SeqCst);
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    log::warn!("accept error: {e}");
+                    break;
+                }
+            }
+        }
+        any
+    }
+
+    /// Route one completion into its connection's outbound queue — or,
+    /// when the request timed out or its connection is gone, log and
+    /// count the orphaned reply (satellite: never silently dropped).
+    fn deliver(&mut self, c: Completion) {
+        let Some(fl) = self.inflight.get_mut(&c.seq) else {
+            self.edge.orphaned_replies.fetch_add(1, Ordering::SeqCst);
+            log::debug!("orphaned reply for closed connection {} (seq {}, {} bytes)", c.conn, c.seq, c.bytes.len());
+            return;
+        };
+        if fl.timed_out {
+            self.edge.orphaned_replies.fetch_add(1, Ordering::SeqCst);
+            log::warn!("orphaned reply: request seq {} on connection {} already timed out ({} bytes dropped)", c.seq, c.conn, c.bytes.len());
+            if c.last {
+                self.inflight.remove(&c.seq);
+            }
+            return;
+        }
+        if !c.last {
+            // Stream events are visible progress: refresh the deadline.
+            fl.deadline = Instant::now() + self.cfg.reply_timeout;
+        }
+        if c.last {
+            self.inflight.remove(&c.seq);
+        }
+        match self.conns.get_mut(&c.conn) {
+            Some(conn) => {
+                if c.last {
+                    conn.inflight = conn.inflight.saturating_sub(1);
+                }
+                conn.wbuf.extend_from_slice(&c.bytes);
+            }
+            None => {
+                self.edge.orphaned_replies.fetch_add(1, Ordering::SeqCst);
+                log::debug!("orphaned reply for closed connection {} (seq {})", c.conn, c.seq);
+            }
+        }
+    }
+
+    /// One IO pass over every connection; returns whether any bytes
+    /// moved (the loop's idle detector).
+    fn service_all(&mut self) -> bool {
+        let mut busy = false;
+        let ids: Vec<u64> = self.conns.keys().copied().collect();
+        for id in ids {
+            let Some(mut conn) = self.conns.remove(&id) else { continue };
+            let (keep, conn_busy) = self.service(id, &mut conn);
+            busy |= conn_busy;
+            if keep {
+                self.conns.insert(id, conn);
+            } else {
+                self.inflight.retain(|_, fl| fl.conn != id);
+                log::debug!("connection {id} closed");
+            }
+        }
+        self.edge.open_conns.store(self.conns.len(), Ordering::SeqCst);
+        busy
+    }
+
+    /// Flush, read, parse, dispatch for one connection. Returns
+    /// `(keep, busy)`.
+    fn service(&mut self, id: u64, conn: &mut Conn) -> (bool, bool) {
+        let mut busy = false;
+        match self.flush(conn) {
+            Ok(n) => busy |= n > 0,
+            Err(_) => return (false, true),
+        }
+        if !conn.closing && !conn.read_closed && conn.outstanding() < self.cfg.outbound_cap {
+            let mut scratch = [0u8; 16384];
+            loop {
+                match conn.stream.read(&mut scratch) {
+                    Ok(0) => {
+                        conn.read_closed = true;
+                        if !conn.rbuf.is_empty() {
+                            // A final partial line is *not* a request:
+                            // drop it rather than execute a truncated one.
+                            log::debug!("dropping {} bytes of unterminated trailing input on connection {id}", conn.rbuf.len());
+                            conn.rbuf.clear();
+                        }
+                        break;
+                    }
+                    Ok(n) => {
+                        busy = true;
+                        self.edge.bytes_in.fetch_add(n as u64, Ordering::SeqCst);
+                        conn.rbuf.extend_from_slice(&scratch[..n]);
+                        self.drain_lines(id, conn);
+                        // Backpressure check against what this chunk's
+                        // replies (errors, ping) already queued.
+                        if conn.closing || conn.outstanding() >= self.cfg.outbound_cap {
+                            break;
+                        }
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => return (false, true),
+                }
+            }
+        }
+        // Flush again so same-tick answers (ping, protocol errors) leave
+        // without waiting for the next pass.
+        match self.flush(conn) {
+            Ok(n) => busy |= n > 0,
+            Err(_) => return (false, true),
+        }
+        if conn.closing && conn.outstanding() == 0 {
+            return (false, true);
+        }
+        if conn.read_closed && conn.outstanding() == 0 && conn.inflight == 0 {
+            return (false, true);
+        }
+        (true, busy)
+    }
+
+    /// Process every complete line buffered on `conn`, enforcing
+    /// `max_line_len` *while buffering*: a line over the limit — even one
+    /// that never terminates — is rejected and the connection closed the
+    /// moment the buffer crosses the cap.
+    fn drain_lines(&mut self, id: u64, conn: &mut Conn) {
+        loop {
+            match take_line(&mut conn.rbuf) {
+                Some(line) => {
+                    if line.len() > self.cfg.max_line_len {
+                        self.reject_overlimit(conn, line.len());
+                        return;
+                    }
+                    self.handle_line(id, conn, &line);
+                    if conn.closing {
+                        return;
+                    }
+                }
+                None => {
+                    if conn.rbuf.len() > self.cfg.max_line_len {
+                        self.reject_overlimit(conn, conn.rbuf.len());
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    fn reject_overlimit(&self, conn: &mut Conn, len: usize) {
+        self.edge.overlimit_rejections.fetch_add(1, Ordering::SeqCst);
+        conn.push_line(&protocol::err(&format!("request line exceeds max_line_len ({len} > {} bytes)", self.cfg.max_line_len)));
+        conn.closing = true;
+        conn.rbuf = Vec::new();
+    }
+
+    /// Parse one request line and dispatch it to the engines, leaving an
+    /// in-flight entry behind for the reply (and its timeout).
+    fn handle_line(&mut self, id: u64, conn: &mut Conn, line: &[u8]) {
+        let Ok(text) = std::str::from_utf8(line) else {
+            conn.push_line(&protocol::err("request is not valid utf-8"));
+            return;
+        };
+        if text.trim().is_empty() {
+            return;
+        }
+        let (req, meta) = match protocol::parse_with_meta(text) {
+            Ok(x) => x,
+            Err(e) => {
+                conn.push_line(&protocol::err(&e));
+                return;
+            }
+        };
+        let echo = |line: String| match meta.id {
+            Some(id) => protocol::with_id(&line, id),
+            None => line,
+        };
+        let now = Instant::now();
+        if !conn.bucket.allow(now) {
+            self.edge.ratelimit_rejections.fetch_add(1, Ordering::SeqCst);
+            conn.push_line(&echo(protocol::err("rate limit exceeded")));
+            return;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let reply = Reply {
+            tx: self.ctx.clone(),
+            conn: id,
+            seq,
+            id: meta.id,
+            stream: meta.stream && self.cfg.streaming && matches!(req, Request::Sample { .. }),
+            frame: meta.frame && self.cfg.framing,
+        };
+        self.inflight.insert(seq, Inflight { conn: id, id: meta.id, deadline: now + self.cfg.reply_timeout, timed_out: false });
+        conn.inflight += 1;
+        if self.tx.send(Msg::Req(req, reply)).is_err() {
+            self.inflight.remove(&seq);
+            conn.inflight -= 1;
+            conn.push_line(&echo(protocol::err("server shutting down")));
+            conn.closing = true;
+        }
+    }
+
+    /// Fail every in-flight request past its reply deadline to its
+    /// client. The entry stays (flagged) so the engine's eventual answer
+    /// is recognized and logged as orphaned.
+    fn scan_timeouts(&mut self) {
+        let now = Instant::now();
+        let mut expired: Vec<(u64, u64, Option<u64>)> = Vec::new();
+        for (&seq, fl) in self.inflight.iter_mut() {
+            if !fl.timed_out && now >= fl.deadline {
+                fl.timed_out = true;
+                expired.push((seq, fl.conn, fl.id));
+            }
+        }
+        for (seq, cid, rid) in expired {
+            self.edge.reply_timeouts.fetch_add(1, Ordering::SeqCst);
+            log::warn!(
+                "request seq {seq} on connection {cid} unanswered after {:?} (reply_timeout); its eventual reply will be counted as orphaned",
+                self.cfg.reply_timeout
+            );
+            if let Some(conn) = self.conns.get_mut(&cid) {
+                conn.inflight = conn.inflight.saturating_sub(1);
+                let line = protocol::err("reply timeout");
+                conn.push_line(&match rid {
+                    Some(id) => protocol::with_id(&line, id),
+                    None => line,
+                });
+            }
+        }
+    }
+
+    /// Write as much queued output as the socket accepts right now.
+    fn flush(&self, conn: &mut Conn) -> std::io::Result<usize> {
+        let mut wrote = 0usize;
+        while conn.wpos < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => return Err(std::io::Error::from(ErrorKind::WriteZero)),
+                Ok(n) => {
+                    conn.wpos += n;
+                    wrote += n;
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if wrote > 0 {
+            self.edge.bytes_out.fetch_add(wrote as u64, Ordering::SeqCst);
+        }
+        if conn.wpos == conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+        } else if conn.wpos > 1 << 16 {
+            // Compact a part-flushed buffer so backpressured connections
+            // do not hold both the flushed and unflushed halves forever.
+            conn.wbuf.drain(..conn.wpos);
+            conn.wpos = 0;
+        }
+        Ok(wrote)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_bucket_limits_and_refills() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(2, t0);
+        assert!(b.allow(t0));
+        assert!(b.allow(t0));
+        assert!(!b.allow(t0), "burst exhausted");
+        // Half a second refills one token at 2 req/s.
+        assert!(b.allow(t0 + Duration::from_millis(600)));
+        assert!(!b.allow(t0 + Duration::from_millis(600)));
+        // The bucket never banks more than one second of burst.
+        assert!(b.allow(t0 + Duration::from_secs(60)));
+        assert!(b.allow(t0 + Duration::from_secs(60)));
+        assert!(!b.allow(t0 + Duration::from_secs(60)));
+    }
+
+    #[test]
+    fn token_bucket_zero_rate_is_unlimited() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(0, t0);
+        for _ in 0..10_000 {
+            assert!(b.allow(t0));
+        }
+    }
+
+    #[test]
+    fn take_line_splits_and_keeps_partials() {
+        let mut buf = b"{\"op\":\"ping\"}\n{\"op\":\"in".to_vec();
+        assert_eq!(take_line(&mut buf).as_deref(), Some(&b"{\"op\":\"ping\"}"[..]));
+        assert_eq!(take_line(&mut buf), None, "partial line stays buffered");
+        assert_eq!(buf, b"{\"op\":\"in".to_vec());
+        buf.extend_from_slice(b"fo\"}\n\n");
+        assert_eq!(take_line(&mut buf).as_deref(), Some(&b"{\"op\":\"info\"}"[..]));
+        assert_eq!(take_line(&mut buf).as_deref(), Some(&b""[..]), "blank lines pass through for the parser to skip");
+        assert_eq!(take_line(&mut buf), None);
+    }
+}

@@ -14,6 +14,7 @@ use crate::coordinator::server::pool::{fail_request, GroupKey, PendingSample, Po
 use crate::coordinator::server::worker::{book_key, images_value, sample_fields, WorkerShared};
 use crate::sampler::noise::JobNoise;
 use crate::sampler::JobResult;
+use crate::substrate::json::Value;
 use crate::substrate::timer::Timer;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -150,20 +151,38 @@ impl<'a> ServeFeed<'a> {
         } else {
             Vec::new()
         };
+        let framed = req.p.return_samples && req.p.reply.frame;
         if req.p.return_samples {
-            fields.push(("samples", protocol::samples_value(&xs)));
+            if framed {
+                // The payload rides as a binary frame after the JSON
+                // line; the header only marks its presence.
+                fields.push(("frame", Value::Bool(true)));
+            } else {
+                fields.push(("samples", protocol::samples_value(&xs)));
+            }
         }
+        let mut ok = true;
         let resp = match router {
             Some(router) => match router.engine(&self.key.0).and_then(|e| e.decode(&xs)) {
                 Ok(imgs) => {
                     fields.push(("images", images_value(&imgs)));
                     protocol::ok(fields)
                 }
-                Err(e) => protocol::err(&format!("decode: {e:#}")),
+                Err(e) => {
+                    ok = false;
+                    protocol::err(&format!("decode: {e:#}"))
+                }
             },
             None => protocol::ok(fields),
         };
-        let _ = req.p.reply.send(resp);
+        // An error reply never carries the frame: its header lost the
+        // "frame" marker, and a stray binary payload would desync the
+        // wire.
+        if framed && ok {
+            let _ = req.p.reply.send_framed(resp, protocol::encode_frame(&xs));
+        } else {
+            let _ = req.p.reply.send(resp);
+        }
         req.replied = true;
         // Drop the sample payloads now: a live schedule can absorb for a
         // long time, and only the small routing stub must outlive the
@@ -279,6 +298,14 @@ impl JobFeed for ServeFeed<'_> {
         let req = &mut self.reqs[ri];
         req.results[j] = Some(result);
         req.remaining -= 1;
+        if req.p.reply.stream {
+            // Streaming delivery: push this job's sample the moment it
+            // converges, ahead of the request's closing summary.
+            let row = &req.results[j].as_ref().expect("just stored").x;
+            let frame = if req.p.reply.frame { Some(protocol::encode_frame(std::slice::from_ref(row))) } else { None };
+            let framed = frame.is_some();
+            let _ = req.p.reply.send_event(protocol::stream_event(j, row, framed), frame);
+        }
         if req.remaining == 0 {
             if req.p.decode {
                 self.deferred.push(ri);

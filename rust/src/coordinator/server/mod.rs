@@ -1,13 +1,17 @@
-//! TCP serving: line-delimited JSON over a thread pool, dispatched to a
-//! sharded pool of engine workers with elastic batching, work stealing,
-//! and an explicit model-placement plane.
+//! TCP serving: line-delimited JSON over a single-threaded nonblocking
+//! connection plane, dispatched to a sharded pool of engine workers with
+//! elastic batching, work stealing, and an explicit model-placement
+//! plane.
 //!
 //! Topology:
 //!
 //! ```text
-//! clients ──TCP──▶ connection workers (ThreadPool)
-//!                      │ (Request, reply Sender) over mpsc
-//!                      ▼
+//! clients ──TCP──▶ connection plane (one event-loop thread, conn.rs):
+//!                  nonblocking accept + readiness scan, per-connection
+//!                  buffers, pipelining by request id, edge hardening
+//!                      │ (Request, Reply) over mpsc    ▲ completions
+//!                      ▼                               │ (engine replies
+//!                                                      │  + stream events)
 //!                dispatcher: answers ping/info/metrics, routes each
 //!                (model, method) batching group to the least-loaded
 //!                *eligible* engine worker (ties: engine already warm,
@@ -68,6 +72,7 @@
 //! setting (see `rust/tests/server_test.rs`).
 
 mod client;
+mod conn;
 mod feed;
 mod pool;
 mod worker;
@@ -80,20 +85,19 @@ use crate::coordinator::placement::{placement_for, PlacementPolicy};
 use crate::coordinator::policy::ConvergenceBook;
 use crate::coordinator::protocol::{self, Request};
 use crate::coordinator::router::Router;
-use crate::coordinator::server::pool::{GroupSlot, PendingSample, Pool, PoolState, Work, EVAL_LOAD};
+use crate::coordinator::server::conn::EdgeStats;
+use crate::coordinator::server::pool::{Completion, GroupSlot, PendingSample, Pool, PoolState, Work, EVAL_LOAD};
 use crate::coordinator::server::worker::{worker_loop, WorkerHandle, WorkerShared};
 use crate::runtime::artifact::Manifest;
 use crate::substrate::json::Value;
-use crate::substrate::threadpool::ThreadPool;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-enum Msg {
+pub(crate) enum Msg {
     Req(Request, pool::Reply),
     Shutdown,
 }
@@ -185,99 +189,28 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
     }
 
     // Dispatcher: owns the request channel and the group routing table.
+    let edge = Arc::new(EdgeStats::default());
     let pool2 = Arc::clone(&pool);
     let placement2 = Arc::clone(&placement);
     let book2 = Arc::clone(&book);
+    let edge2 = Arc::clone(&edge);
     let dispatch_join = std::thread::Builder::new()
         .name("predsamp-dispatch".into())
-        .spawn(move || dispatch_loop(manifest, workers, pool2, rx, placement2, book2))?;
+        .spawn(move || dispatch_loop(manifest, workers, pool2, rx, placement2, book2, edge2))?;
 
-    // Acceptor + connection workers.
-    let conn_pool = ThreadPool::new(cfg.worker_threads);
+    // The connection plane: one event-loop thread owning every socket
+    // (accept, read, parse, dispatch, write), with engine replies routed
+    // back to it over the completion channel.
+    let (ctx, crx) = mpsc::channel::<Completion>();
     let stop2 = Arc::clone(&stop);
     let tx2 = tx.clone();
+    let cfg2 = cfg.clone();
+    let edge2 = Arc::clone(&edge);
     let accept_join = std::thread::Builder::new()
-        .name("predsamp-accept".into())
-        .spawn(move || {
-            while !stop2.load(Ordering::SeqCst) {
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        let tx3 = tx2.clone();
-                        let stop3 = Arc::clone(&stop2);
-                        conn_pool.execute(move || handle_conn(stream, tx3, stop3));
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(5));
-                    }
-                    Err(e) => {
-                        log::warn!("accept error: {e}");
-                        break;
-                    }
-                }
-            }
-            drop(conn_pool); // join workers
-        })?;
+        .name("predsamp-conn".into())
+        .spawn(move || conn::conn_loop(listener, cfg2, tx2, crx, ctx, stop2, edge2))?;
 
     Ok(ServerHandle { addr, tx, stop, dispatch_join: Some(dispatch_join), accept_join: Some(accept_join) })
-}
-
-fn handle_conn(stream: TcpStream, tx: mpsc::Sender<Msg>, stop: Arc<AtomicBool>) {
-    let peer = stream.peer_addr().ok();
-    // Read with a timeout so connection workers can observe shutdown even
-    // while a client holds the socket open (otherwise ServerHandle::stop
-    // would deadlock joining the pool).
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    loop {
-        let mut line = String::new();
-        let n = loop {
-            match reader.read_line(&mut line) {
-                Ok(n) => break n,
-                Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) => {
-                    if stop.load(Ordering::SeqCst) {
-                        return;
-                    }
-                    // line keeps whatever was read; retry for the rest
-                    if line.ends_with('\n') {
-                        break line.len();
-                    }
-                }
-                Err(_) => return,
-            }
-        };
-        if n == 0 || !line.ends_with('\n') {
-            // EOF. A final partial line is *not* a request: drop it rather
-            // than parsing (a truncated frame must not be executed).
-            if !line.trim().is_empty() {
-                log::debug!("dropping {} bytes of unterminated trailing input from {peer:?}", line.len());
-            }
-            break;
-        }
-        if line.trim().is_empty() {
-            continue;
-        }
-        let response = match Request::parse(&line) {
-            Ok(req) => {
-                let (rtx, rrx) = mpsc::channel();
-                if tx.send(Msg::Req(req, rtx)).is_err() {
-                    break;
-                }
-                match rrx.recv_timeout(Duration::from_secs(600)) {
-                    Ok(r) => r,
-                    Err(_) => protocol::err("engine timeout"),
-                }
-            }
-            Err(e) => protocol::err(&e),
-        };
-        if writer.write_all(response.as_bytes()).and_then(|_| writer.write_all(b"\n")).is_err() {
-            break;
-        }
-    }
-    log::debug!("connection closed: {peer:?}");
 }
 
 // ---------------------------------------------------------------------------
@@ -325,6 +258,7 @@ fn dispatch_loop(
     rx: mpsc::Receiver<Msg>,
     placement: Arc<dyn PlacementPolicy>,
     book: Arc<ConvergenceBook>,
+    edge: Arc<EdgeStats>,
 ) {
     let started = Instant::now();
     let mut disp = Metrics::new();
@@ -346,7 +280,7 @@ fn dispatch_loop(
                         let _ = reply.send(info_response(&manifest, &workers, &*placement));
                     }
                     Request::Metrics => {
-                        let _ = reply.send(metrics_response(&disp, &workers, started.elapsed().as_secs_f64(), &*placement, &book));
+                        let _ = reply.send(metrics_response(&disp, &workers, started.elapsed().as_secs_f64(), &*placement, &book, &edge));
                     }
                     Request::Eval { model } => {
                         // Evals need the model's engine too, so they route
@@ -473,7 +407,7 @@ fn info_response(manifest: &Manifest, workers: &[WorkerHandle], placement: &dyn 
     ])
 }
 
-fn metrics_response(disp: &Metrics, workers: &[WorkerHandle], uptime_s: f64, placement: &dyn PlacementPolicy, book: &ConvergenceBook) -> String {
+fn metrics_response(disp: &Metrics, workers: &[WorkerHandle], uptime_s: f64, placement: &dyn PlacementPolicy, book: &ConvergenceBook, edge: &EdgeStats) -> String {
     let mut total = Metrics::new();
     total.merge(disp);
     let mut warr = Vec::with_capacity(workers.len());
@@ -513,6 +447,7 @@ fn metrics_response(disp: &Metrics, workers: &[WorkerHandle], uptime_s: f64, pla
         );
     }
     obj.insert("convergence".into(), Value::Obj(conv));
+    obj.insert("edge".into(), edge.value());
     obj.insert("workers".into(), Value::Arr(warr));
     protocol::ok(vec![("metrics", Value::Obj(obj))])
 }

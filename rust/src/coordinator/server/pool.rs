@@ -11,8 +11,76 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
-pub(crate) type Reply = mpsc::Sender<String>;
 pub(crate) type GroupKey = (String, Method);
+
+/// One finished (or streamed) piece of a request's answer, routed from
+/// an engine worker or the dispatcher back to the connection plane's
+/// event loop, which appends the bytes to the owning connection's
+/// outbound queue. mpsc FIFO ordering guarantees a request's stream
+/// events hit the wire before its final reply.
+pub(crate) struct Completion {
+    /// Connection the reply belongs to (event-loop connection id).
+    pub(crate) conn: u64,
+    /// The request's globally unique in-flight sequence number.
+    pub(crate) seq: u64,
+    /// Wire bytes: the JSON line (newline included) plus any binary frame.
+    pub(crate) bytes: Vec<u8>,
+    /// Final reply (retires the in-flight entry) vs a stream event.
+    pub(crate) last: bool,
+}
+
+/// Reply handle carried by every queued request: where the answer goes
+/// (connection + sequence number on the completion channel) and how the
+/// client asked for it delivered (id echo, streaming, binary framing).
+/// `send` keeps the old `mpsc::Sender<String>` call shape so the engine
+/// paths read unchanged.
+#[derive(Clone)]
+pub(crate) struct Reply {
+    pub(crate) tx: mpsc::Sender<Completion>,
+    pub(crate) conn: u64,
+    pub(crate) seq: u64,
+    pub(crate) id: Option<u64>,
+    pub(crate) stream: bool,
+    pub(crate) frame: bool,
+}
+
+impl Reply {
+    fn dispatch(&self, line: String, frame: Option<Vec<u8>>, last: bool) -> Result<(), mpsc::SendError<Completion>> {
+        let line = match self.id {
+            Some(id) => protocol::with_id(&line, id),
+            None => line,
+        };
+        let mut bytes = line.into_bytes();
+        bytes.push(b'\n');
+        if let Some(f) = frame {
+            bytes.extend_from_slice(&f);
+        }
+        self.tx.send(Completion { conn: self.conn, seq: self.seq, bytes, last })
+    }
+
+    /// Send the final reply line (id echoed, no binary frame).
+    pub(crate) fn send(&self, line: String) -> Result<(), mpsc::SendError<Completion>> {
+        self.dispatch(line, None, true)
+    }
+
+    /// Send the final reply line followed by its binary sample frame.
+    pub(crate) fn send_framed(&self, line: String, frame: Vec<u8>) -> Result<(), mpsc::SendError<Completion>> {
+        self.dispatch(line, Some(frame), true)
+    }
+
+    /// Send a non-final stream event (optionally with a one-row frame).
+    pub(crate) fn send_event(&self, line: String, frame: Option<Vec<u8>>) -> Result<(), mpsc::SendError<Completion>> {
+        self.dispatch(line, frame, false)
+    }
+
+    /// A reply whose completions go nowhere (unit-test fixture).
+    #[cfg(test)]
+    pub(crate) fn discard() -> Reply {
+        let (tx, rx) = mpsc::channel();
+        drop(rx);
+        Reply { tx, conn: 0, seq: 0, id: None, stream: false, frame: false }
+    }
+}
 
 /// Load units an `eval` contributes to a worker's queue depth. eval_bpd
 /// runs a full test-set pass, so it must weigh like a batch of jobs or
@@ -199,8 +267,7 @@ mod tests {
                 .or_insert_with(|| Arc::new(GroupSlot { worker: AtomicUsize::new(widx), pending: AtomicUsize::new(0) })),
         );
         group.pending.fetch_add(n, Ordering::SeqCst);
-        let (reply, rx) = mpsc::channel();
-        drop(rx); // replies are discarded in these unit tests
+        let reply = Reply::discard(); // replies are discarded in these unit tests
         let (model, admitted) = (model.to_string(), Instant::now());
         Work::Sample(PendingSample { model, method, n, seed: 0, return_samples: false, decode: false, reply, admitted, group })
     }
@@ -291,9 +358,7 @@ mod tests {
         assert_eq!(st.queues[2].len(), 0);
         // Only the executing group's arrivals and an eval remain: the
         // eval is the one stealable item.
-        let (reply, rx) = mpsc::channel();
-        drop(rx);
-        st.queues[1].push_back(Work::Eval { model: "hot".into(), reply, admitted: Instant::now() });
+        st.queues[1].push_back(Work::Eval { model: "hot".into(), reply: Reply::discard(), admitted: Instant::now() });
         assert!(steal_group(&mut st, 2, &loads, &ReplicateAll), "a queued eval behind an executing group is stealable");
         assert!(matches!(st.queues[2].front(), Some(Work::Eval { .. })), "the eval must have moved to the thief");
         assert_eq!(st.queues[1].len(), 1, "the executing group's queued request must stay");
@@ -342,16 +407,12 @@ mod tests {
         // worker.
         let placement = PinOne { model: "pinned", worker: 0 };
         let mut st = pool_state(3);
-        let (reply, rx) = mpsc::channel();
-        drop(rx);
-        st.queues[0].push_back(Work::Eval { model: "pinned".into(), reply, admitted: Instant::now() });
+        st.queues[0].push_back(Work::Eval { model: "pinned".into(), reply: Reply::discard(), admitted: Instant::now() });
         let loads = vec![Arc::new(AtomicUsize::new(8)), Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(0))];
         assert!(!steal_group(&mut st, 1, &loads, &placement), "an ineligible thief must not steal the eval");
         assert_eq!(st.queues[0].len(), 1, "the eval must stay queued");
         // A second eval for an unpinned model is fair game.
-        let (reply, rx) = mpsc::channel();
-        drop(rx);
-        st.queues[0].push_back(Work::Eval { model: "free".into(), reply, admitted: Instant::now() });
+        st.queues[0].push_back(Work::Eval { model: "free".into(), reply: Reply::discard(), admitted: Instant::now() });
         assert!(steal_group(&mut st, 1, &loads, &placement), "the eligible eval behind it must still move");
         assert!(matches!(st.queues[1].front(), Some(Work::Eval { model, .. }) if model == "free"));
         assert_eq!(st.queues[0].len(), 1, "the pinned eval must stay");

@@ -322,11 +322,28 @@ pub(crate) fn execute_group(router: &mut Router, shared: &WorkerShared, group: V
             for p in group {
                 let mine = &results[offset..offset + p.n];
                 offset += p.n;
+                if p.reply.stream {
+                    // Closed schedules deliver at group end, so the events
+                    // land back-to-back just ahead of the summary — the
+                    // same client contract as the elastic path, without
+                    // per-job hooks inside the engine.
+                    for (j, r) in mine.iter().enumerate() {
+                        let frame = if p.reply.frame { Some(protocol::encode_frame(std::slice::from_ref(&r.x))) } else { None };
+                        let framed = frame.is_some();
+                        let _ = p.reply.send_event(protocol::stream_event(j, &r.x, framed), frame);
+                    }
+                }
                 let mut fields = sample_fields(&model, method, calls, calls_per_job, calls_pct, wall, p.n);
                 let mut decode_err: Option<String> = None;
+                let mut frame_payload: Option<Vec<u8>> = None;
                 if p.return_samples {
                     let xs: Vec<Vec<i32>> = mine.iter().map(|r| r.x.clone()).collect();
-                    fields.push(("samples", protocol::samples_value(&xs)));
+                    if p.reply.frame {
+                        fields.push(("frame", Value::Bool(true)));
+                        frame_payload = Some(protocol::encode_frame(&xs));
+                    } else {
+                        fields.push(("samples", protocol::samples_value(&xs)));
+                    }
                 }
                 if p.decode {
                     let xs: Vec<Vec<i32>> = mine.iter().map(|r| r.x.clone()).collect();
@@ -336,10 +353,22 @@ pub(crate) fn execute_group(router: &mut Router, shared: &WorkerShared, group: V
                     }
                 }
                 let resp = match decode_err {
-                    Some(msg) => protocol::err(&msg),
+                    Some(msg) => {
+                        // The error header carries no "frame" marker, so a
+                        // stray binary payload would desync the wire.
+                        frame_payload = None;
+                        protocol::err(&msg)
+                    }
                     None => protocol::ok(fields),
                 };
-                let _ = p.reply.send(resp);
+                match frame_payload {
+                    Some(f) => {
+                        let _ = p.reply.send_framed(resp, f);
+                    }
+                    None => {
+                        let _ = p.reply.send(resp);
+                    }
+                }
                 p.group.pending.fetch_sub(p.n, Ordering::SeqCst);
                 shared.load.fetch_sub(p.n, Ordering::SeqCst);
             }

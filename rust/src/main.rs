@@ -36,8 +36,10 @@ COMMANDS
            [--engine-threads 2] [--worker-threads 4] [--no-elastic] [--no-steal]
            [--policy occupancy|latency|slo] [--slo-ms 50] [--absorb-budget N]
            [--placement replicate|pinned|capped] [--pin model=0,2 ...]
-           [--max-engines N]
-  client   [--addr ...] --json '{\"op\":\"ping\"}'
+           [--max-engines N] [--reply-timeout-ms 600000] [--max-line-len BYTES]
+           [--outbound-cap BYTES] [--rate-limit REQ_PER_S] [--max-conns N]
+           [--no-stream] [--no-frame]
+  client   [--addr ...] --json '{\"op\":\"ping\"}' [--stream]
   table1 | table2 | table3           [--seeds K] [--batches 1,32] [--models a,b]
   fig3 | fig4 | fig5 | fig6          [--seed 10] [--out results/]
   schedule-ablation                  [--model M] [--jobs N] [--seed S]
@@ -186,6 +188,13 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 slo: std::time::Duration::from_millis(args.num::<u64>("slo-ms", d.slo.as_millis() as u64)),
                 admission,
                 placement,
+                reply_timeout: std::time::Duration::from_millis(args.num::<u64>("reply-timeout-ms", d.reply_timeout.as_millis() as u64)),
+                max_line_len: args.num::<usize>("max-line-len", d.max_line_len),
+                outbound_cap: args.num::<usize>("outbound-cap", d.outbound_cap),
+                rate_limit: args.num::<u32>("rate-limit", d.rate_limit),
+                max_conns: args.num::<usize>("max-conns", d.max_conns),
+                streaming: !args.flag("no-stream"),
+                framing: !args.flag("no-frame"),
             };
             args.finish().map_err(|e| anyhow!(e))?;
             let (engine_threads, batching) = (cfg.engine_threads, if cfg.continuous { "continuous" } else { "sync" });
@@ -215,9 +224,17 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "client" => {
             let addr: std::net::SocketAddr = args.get("addr", "127.0.0.1:7199").parse()?;
             let json = args.opt("json").ok_or_else(|| anyhow!("--json required"))?;
+            let stream = args.flag("stream");
             args.finish().map_err(|e| anyhow!(e))?;
             let mut c = server::Client::connect(&addr)?;
-            println!("{}", c.call(&json)?);
+            if stream {
+                // Print each streamed per-job event as it lands, then the
+                // closing response.
+                let fin = c.call_streamed(&json, &mut |ev| println!("{ev}"))?;
+                println!("{fin}");
+            } else {
+                println!("{}", c.call(&json)?);
+            }
             Ok(())
         }
         "table1" | "table2" | "table3" => {

@@ -653,6 +653,386 @@ fn decode_through_server() {
     server.stop();
 }
 
+/// Decode the sample row carried by one streamed per-job event. Framed
+/// events look identical here: the client already spliced the binary row
+/// back in as `"sample"`.
+fn event_row(ev: &Value) -> Vec<i32> {
+    let row = ev.get("sample").as_arr().expect("stream event carries its sample row");
+    row.iter().map(|v| v.as_i64().unwrap() as i32).collect()
+}
+
+#[test]
+fn slow_loris_trickle_does_not_stall_other_connections() {
+    // One peer dribbles a request a byte at a time. On the old blocking
+    // edge this pinned a connection thread; on the event loop it must not
+    // delay anyone else, and the request still completes once the line
+    // finally terminates.
+    let server = spawn_mock("loris", 2, true);
+    let addr = server.addr;
+    let loris = std::thread::spawn(move || {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        for &b in br#"{"op":"ping","id":7}"#.iter() {
+            s.write_all(&[b]).unwrap();
+            std::thread::sleep(Duration::from_millis(4));
+        }
+        s.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        std::io::BufRead::read_line(&mut std::io::BufReader::new(s), &mut resp).unwrap();
+        resp
+    });
+    // While the trickle is in flight (~80 ms), a healthy connection keeps
+    // getting served end to end.
+    let mut c = Client::connect(&server.addr).unwrap();
+    for seed in 0..5 {
+        let r = c
+            .call(&format!(r#"{{"op":"sample","model":"mock_a","method":"fpi","n":1,"seed":{seed},"return_samples":false}}"#))
+            .unwrap();
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    }
+    let resp = loris.join().unwrap();
+    let v = predsamp::substrate::json::parse(resp.trim()).unwrap();
+    assert_eq!(v.get("pong").as_bool(), Some(true), "the dribbled request must still complete: {v}");
+    assert_eq!(v.get("id").as_i64(), Some(7));
+    // A partial line followed by EOF is *not* a request: the server drops
+    // it and closes without replying.
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    std::io::Write::write_all(&mut s, br#"{"op":"ping","#).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut rest = Vec::new();
+    std::io::Read::read_to_end(&mut s, &mut rest).unwrap();
+    assert!(rest.is_empty(), "a truncated trailing line must be dropped, got {:?}", String::from_utf8_lossy(&rest));
+    server.stop();
+}
+
+#[test]
+fn pipelined_requests_are_matched_by_id() {
+    // Several requests on one connection before reading any reply:
+    // replies may complete in any order (different models and engine
+    // queues), and the `id` echo is what lets the client pair them up.
+    let server = spawn_mock("pipeline", 2, true);
+    let req = |i: u64| {
+        let model = if i % 2 == 0 { "mock_a" } else { "mock_b" };
+        let method = if i % 3 == 0 { "fpi" } else { "zeros" };
+        format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":2,"seed":{i},"id":{i}}}"#)
+    };
+    let mut c = Client::connect(&server.addr).unwrap();
+    for i in 0..6 {
+        c.send_line(&req(i)).unwrap();
+    }
+    let mut by_id = std::collections::HashMap::new();
+    for _ in 0..6 {
+        let r = c.read_message().unwrap();
+        let id = r.get("id").as_i64().expect("every pipelined reply must echo its request id");
+        assert!(by_id.insert(id, samples_of(&r)).is_none(), "duplicate reply for id {id}");
+    }
+    // The same requests issued one at a time must agree bitwise: the
+    // pipelined path moves replies, never samples.
+    let mut seq = Client::connect(&server.addr).unwrap();
+    for i in 0..6u64 {
+        let reference = samples_of(&seq.call(&req(i)).unwrap());
+        assert_eq!(by_id[&(i as i64)], reference, "pipelined reply {i} diverged from the sequential path");
+    }
+    server.stop();
+}
+
+#[test]
+fn backpressured_connection_does_not_stall_others() {
+    // A reader that drains nothing while piling up large replies trips
+    // the outbound cap: the event loop stops *reading* that connection
+    // instead of buffering without bound — and every other connection
+    // keeps being served in the meantime.
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        continuous: true,
+        elastic: true,
+        steal: true,
+        engine_threads: 2,
+        outbound_cap: 4096,
+        ..ServeConfig::default()
+    };
+    let server = spawn_mock_with("backpressure", cfg);
+    let req = |i: usize| format!(r#"{{"op":"sample","model":"mock_a","method":"fpi","n":8,"seed":{i},"id":{i}}}"#);
+    let mut slow = Client::connect(&server.addr).unwrap();
+    for i in 0..10 {
+        slow.send_line(&req(i)).unwrap();
+    }
+    // The same calls from a second connection complete while the slow
+    // reader sits on its replies — the liveness proof and the bitwise
+    // reference in one.
+    let mut fast = Client::connect(&server.addr).unwrap();
+    let reference: Vec<_> = (0..10).map(|i| samples_of(&fast.call(&req(i)).unwrap())).collect();
+    let mut by_id = std::collections::HashMap::new();
+    for _ in 0..10 {
+        let r = slow.read_message().unwrap();
+        by_id.insert(r.get("id").as_i64().unwrap(), samples_of(&r));
+    }
+    for (i, want) in reference.iter().enumerate() {
+        assert_eq!(&by_id[&(i as i64)], want, "backpressured reply {i} diverged");
+    }
+    server.stop();
+}
+
+#[test]
+fn many_concurrent_connections_match_sequential_bitwise() {
+    // The many-connections acceptance gate: 256 concurrent clients on the
+    // single event-loop thread, mixing plain, streamed, and framed
+    // delivery, all bitwise-identical to the same requests issued one at
+    // a time over one connection.
+    const N: usize = 256;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        continuous: true,
+        elastic: true,
+        steal: true,
+        engine_threads: 2,
+        ..ServeConfig::default()
+    };
+    let server = spawn_mock_with("many", cfg);
+    let req = |i: usize| {
+        let model = if i % 2 == 0 { "mock_a" } else { "mock_b" };
+        let method = if i % 3 == 0 { "fpi" } else { "zeros" };
+        let opt = match i % 3 {
+            1 => r#","stream":true"#,
+            2 => r#","frame":true"#,
+            _ => "",
+        };
+        format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":2,"seed":{i},"id":{i}{opt}}}"#)
+    };
+    let mut clients: Vec<Client> = (0..N).map(|_| Client::connect(&server.addr).unwrap()).collect();
+    for (i, c) in clients.iter_mut().enumerate() {
+        c.send_line(&req(i)).unwrap();
+    }
+    let mut finals = Vec::with_capacity(N);
+    for (i, c) in clients.iter_mut().enumerate() {
+        loop {
+            let m = c.read_message().unwrap();
+            if m.get("stream").as_bool() == Some(true) {
+                continue;
+            }
+            assert_eq!(m.get("id").as_i64(), Some(i as i64), "reply routed to the wrong connection: {m}");
+            finals.push(samples_of(&m));
+            break;
+        }
+    }
+    drop(clients);
+    let mut c = Client::connect(&server.addr).unwrap();
+    for (i, got) in finals.iter().enumerate() {
+        let reference = samples_of(&c.call(&req(i)).unwrap());
+        assert_eq!(got, &reference, "connection {i} samples diverged from the sequential path");
+    }
+    let m = c.call(r#"{"op":"metrics"}"#).unwrap();
+    let edge = m.get("metrics").get("edge");
+    assert!(edge.get("total_conns").as_i64().unwrap() >= (N as i64) + 1, "{m}");
+    assert!(edge.get("bytes_in").as_i64().unwrap() > 0 && edge.get("bytes_out").as_i64().unwrap() > 0, "{m}");
+    server.stop();
+}
+
+#[test]
+fn streaming_and_framing_are_bitwise_invisible_across_configs() {
+    // Exactness stays load-bearing across every delivery mode: plain,
+    // streamed, framed, and streamed+framed replies must carry the same
+    // bytes on the same seed — under elastic, rigid, sync, SLO-policy,
+    // and capacity-capped placement configs alike.
+    fn run(tag: &str, server: ServerHandle) -> Vec<Vec<i32>> {
+        let mut c = Client::connect(&server.addr).unwrap();
+        let base = r#""op":"sample","model":"mock_a","method":"fpi","n":3,"seed":5"#;
+        let plain = samples_of(&c.call(&format!("{{{base}}}")).unwrap());
+        let mut events: Vec<(usize, Vec<i32>)> = Vec::new();
+        let fin = c
+            .call_streamed(&format!(r#"{{{base},"stream":true}}"#), &mut |ev| {
+                events.push((ev.get("job").as_i64().unwrap() as usize, event_row(ev)));
+            })
+            .unwrap();
+        assert_eq!(samples_of(&fin), plain, "{tag}: streamed final reply diverged");
+        events.sort_by_key(|(j, _)| *j);
+        assert_eq!(events.iter().map(|(j, _)| *j).collect::<Vec<_>>(), vec![0, 1, 2], "{tag}: exactly one event per job");
+        assert_eq!(events.into_iter().map(|(_, row)| row).collect::<Vec<_>>(), plain, "{tag}: streamed rows diverged");
+        let framed = samples_of(&c.call(&format!(r#"{{{base},"frame":true}}"#)).unwrap());
+        assert_eq!(framed, plain, "{tag}: binary-framed payload diverged");
+        let mut rows: Vec<(usize, Vec<i32>)> = Vec::new();
+        let fin = c
+            .call_streamed(&format!(r#"{{{base},"stream":true,"frame":true}}"#), &mut |ev| {
+                rows.push((ev.get("job").as_i64().unwrap() as usize, event_row(ev)));
+            })
+            .unwrap();
+        assert_eq!(samples_of(&fin), plain, "{tag}: streamed+framed final diverged");
+        rows.sort_by_key(|(j, _)| *j);
+        assert_eq!(rows.into_iter().map(|(_, row)| row).collect::<Vec<_>>(), plain, "{tag}: framed event rows diverged");
+        server.stop();
+        plain
+    }
+    let wait = Duration::from_millis(5);
+    let reference = run("elastic", spawn_mock_cfg("edge-elastic", 2, true, true, true, wait));
+    for (tag, server) in [
+        ("rigid", spawn_mock_cfg("edge-rigid", 2, true, false, false, wait)),
+        ("sync", spawn_mock_cfg("edge-sync", 2, false, false, false, wait)),
+        ("slo", spawn_mock_policy("edge-slo", PolicyKind::Slo, AdmissionKind::OldestFirst)),
+        ("capped", spawn_mock_placement("edge-capped", 2, PlacementKind::CapacityCapped(1))),
+    ] {
+        assert_eq!(run(tag, server), reference, "{tag}: serving config changed the payload");
+    }
+}
+
+#[test]
+fn oversized_request_rejected_before_buffering() {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+        engine_threads: 1,
+        max_line_len: 512,
+        ..ServeConfig::default()
+    };
+    let server = spawn_mock_with("overlimit", cfg);
+    // An unterminated flood crosses the cap mid-buffer: rejected the
+    // moment the buffer passes the limit, no newline ever required.
+    let mut s = std::net::TcpStream::connect(server.addr).unwrap();
+    std::io::Write::write_all(&mut s, &[b'x'; 600]).unwrap();
+    let mut reader = std::io::BufReader::new(s);
+    let mut resp = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut resp).unwrap();
+    let v = predsamp::substrate::json::parse(resp.trim()).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(false), "{v}");
+    assert!(v.get("error").as_str().unwrap().contains("max_line_len"), "{v}");
+    let mut rest = String::new();
+    assert_eq!(std::io::BufRead::read_line(&mut reader, &mut rest).unwrap(), 0, "over-limit connections must be closed");
+    // A complete-but-oversized line is rejected the same way.
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = c.call(&format!(r#"{{"op":"ping","pad":"{}"}}"#, "y".repeat(600))).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "{r}");
+    assert!(r.get("error").as_str().unwrap().contains("max_line_len"), "{r}");
+    // Both rejections happened before parse/dispatch and are counted in
+    // the edge section.
+    let mut c2 = Client::connect(&server.addr).unwrap();
+    let m = c2.call(r#"{"op":"metrics"}"#).unwrap();
+    assert!(m.get("metrics").get("edge").get("overlimit_rejections").as_i64().unwrap() >= 2, "{m}");
+    server.stop();
+}
+
+#[test]
+fn per_connection_rate_limit_rejects_excess() {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        engine_threads: 1,
+        rate_limit: 1,
+        ..ServeConfig::default()
+    };
+    let server = spawn_mock_with("ratelimit", cfg);
+    let mut c = Client::connect(&server.addr).unwrap();
+    for i in 0..6u64 {
+        c.send_line(&format!(r#"{{"op":"ping","id":{i}}}"#)).unwrap();
+    }
+    let (mut ok, mut limited) = (0, 0);
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..6 {
+        let r = c.read_message().unwrap();
+        assert!(seen.insert(r.get("id").as_i64().unwrap()), "duplicate reply: {r}");
+        if r.get("ok").as_bool() == Some(true) {
+            ok += 1;
+        } else {
+            assert!(r.get("error").as_str().unwrap().contains("rate limit"), "{r}");
+            limited += 1;
+        }
+    }
+    assert!(ok >= 1, "the burst token must admit at least one request");
+    assert!(limited >= 1, "six pipelined pings at 1 req/s must trip the limit");
+    // The limited connection stays open, and a token refills within a second.
+    std::thread::sleep(Duration::from_millis(1100));
+    let pong = c.call(r#"{"op":"ping"}"#).unwrap();
+    assert_eq!(pong.get("ok").as_bool(), Some(true), "{pong}");
+    // Counted in the edge section (read from a fresh bucket's connection).
+    let mut c2 = Client::connect(&server.addr).unwrap();
+    let m = c2.call(r#"{"op":"metrics"}"#).unwrap();
+    assert!(m.get("metrics").get("edge").get("ratelimit_rejections").as_i64().unwrap() >= 1, "{m}");
+    server.stop();
+}
+
+#[test]
+fn reply_timeout_fails_the_request_and_counts_the_orphan() {
+    // A lone request sits in its 400 ms batching window, so a 50 ms
+    // reply_timeout fires first: the client gets a prompt id-tagged
+    // error, and the engine's eventual answer is counted as orphaned —
+    // never delivered to a caller that already moved on.
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 64,
+        max_wait: Duration::from_millis(400),
+        continuous: true,
+        elastic: true,
+        steal: true,
+        engine_threads: 1,
+        reply_timeout: Duration::from_millis(50),
+        ..ServeConfig::default()
+    };
+    let server = spawn_mock_with("replytimeout", cfg);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = c.call(r#"{"op":"sample","model":"mock_a","method":"fpi","n":1,"seed":0,"id":9}"#).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "{r}");
+    assert!(r.get("error").as_str().unwrap().contains("reply timeout"), "{r}");
+    assert_eq!(r.get("id").as_i64(), Some(9), "the timeout error must still carry the request id");
+    // The connection survives, and once the batching window closes the
+    // late reply shows up as orphaned in the edge counters.
+    let m = metrics_eventually(&mut c, |m| m.get("edge").get("orphaned_replies").as_i64().unwrap_or(0) >= 1);
+    let edge = m.get("metrics").get("edge");
+    assert!(edge.get("reply_timeouts").as_i64().unwrap() >= 1, "{m}");
+    assert!(edge.get("orphaned_replies").as_i64().unwrap() >= 1, "{m}");
+    server.stop();
+}
+
+#[test]
+fn connection_cap_rejects_excess_connections() {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        engine_threads: 1,
+        max_conns: 2,
+        ..ServeConfig::default()
+    };
+    let server = spawn_mock_with("conncap", cfg);
+    let mut c1 = Client::connect(&server.addr).unwrap();
+    let c2 = {
+        let mut c2 = Client::connect(&server.addr).unwrap();
+        assert_eq!(c1.call(r#"{"op":"ping"}"#).unwrap().get("ok").as_bool(), Some(true));
+        assert_eq!(c2.call(r#"{"op":"ping"}"#).unwrap().get("ok").as_bool(), Some(true));
+        c2
+    };
+    // Both slots taken: the third connection gets an error line and EOF.
+    let s = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = std::io::BufReader::new(s);
+    let mut resp = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut resp).unwrap();
+    let v = predsamp::substrate::json::parse(resp.trim()).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(false), "{v}");
+    assert!(v.get("error").as_str().unwrap().contains("connection limit"), "{v}");
+    let mut rest = String::new();
+    assert_eq!(std::io::BufRead::read_line(&mut reader, &mut rest).unwrap(), 0, "a rejected connection must be closed");
+    let m = c1.call(r#"{"op":"metrics"}"#).unwrap();
+    let edge = m.get("metrics").get("edge");
+    assert!(edge.get("conn_cap_rejections").as_i64().unwrap() >= 1, "{m}");
+    assert!(edge.get("open_conns").as_i64().unwrap() <= 2, "the gauge must never exceed max_conns: {m}");
+    // Closing a connection frees its slot (once the loop notices the EOF).
+    drop(c2);
+    let mut admitted = false;
+    for _ in 0..100 {
+        let mut c3 = Client::connect(&server.addr).unwrap();
+        if c3.call(r#"{"op":"ping"}"#).map(|r| r.get("ok").as_bool() == Some(true)).unwrap_or(false) {
+            admitted = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(admitted, "closing a connection must free a slot under max_conns");
+    server.stop();
+}
+
 #[test]
 fn malformed_requests_get_errors() {
     let Some(server) = server() else { return };
