@@ -11,12 +11,19 @@
 //! `BENCH_serving_load.json` (uploaded as a CI artifact).
 //!
 //! A high-concurrency edge scenario additionally drives ≥256 concurrent
-//! connections through the single event-loop connection plane and
-//! measures time-to-first-sample for streamed vs group-close delivery
-//! (streaming must win — that one *is* asserted, since the streamed event
-//! fires jobs before the schedule ends by construction).
+//! connections through the connection plane and measures
+//! time-to-first-sample for streamed vs group-close delivery (streaming
+//! must win — that one *is* asserted, since the streamed event fires jobs
+//! before the schedule ends by construction).
 //!
-//!     cargo bench --bench serving_load [-- --clients 8 --requests 12 --engine-threads 1,4 --conns 256 --out BENCH_serving_load.json]
+//! An edge-*scale* scenario then parks thousands of mostly-idle
+//! connections on the plane and serves a small active set through the
+//! crowd, once per readiness backend. The per-tick edge cost
+//! (ready events / tick, summed over shards) for epoll must come in
+//! strictly below scan — O(ready) vs O(conns) is a structural gap, not a
+//! wall-clock race — at bitwise-equal outputs. Both gates are asserted.
+//!
+//!     cargo bench --bench serving_load [-- --clients 8 --requests 12 --engine-threads 1,4 --conns 256 --idle-conns 4096 --out BENCH_serving_load.json]
 
 use predsamp::coordinator::config::ServeConfig;
 use predsamp::coordinator::placement::PlacementKind;
@@ -25,6 +32,7 @@ use predsamp::coordinator::server::{spawn, Client};
 use predsamp::runtime::artifact::{write_mock_manifest, MockModelSpec};
 use predsamp::substrate::cli::Args;
 use predsamp::substrate::json::Value;
+use predsamp::substrate::readiness::{raise_nofile_limit, ReadinessKind};
 use predsamp::substrate::stats::{percentile, Summary};
 use predsamp::substrate::timer::{fmt_duration, Timer};
 use std::sync::{Arc, Mutex};
@@ -48,8 +56,8 @@ fn run_load(dir: std::path::PathBuf, engine_threads: usize, clients: usize, requ
         continuous: true,
         elastic: true,
         steal: true,
-        // All client connections share the single event-loop edge thread;
-        // no per-connection thread sizing is needed.
+        // All client connections share the default single-shard edge; no
+        // per-connection thread sizing is needed.
         engine_threads,
         ..ServeConfig::default()
     };
@@ -218,6 +226,100 @@ fn run_edge(dir: std::path::PathBuf, conns: usize) -> anyhow::Result<(f64, f64, 
     Ok((wall, ttfs_stream, ttfs_close))
 }
 
+/// The fleet's `open_conns` edge gauge, via an existing connection.
+fn open_conns(c: &mut Client) -> anyhow::Result<i64> {
+    Ok(c.call(r#"{"op":"metrics"}"#)?.get("metrics").get("edge").get("open_conns").as_i64().unwrap_or(0))
+}
+
+/// Sum the per-shard `(ticks, ready_events)` counters across the plane.
+fn edge_shard_totals(c: &mut Client) -> anyhow::Result<(u64, u64)> {
+    let m = c.call(r#"{"op":"metrics"}"#)?;
+    let shards = m.get("metrics").get("edge").get("shards").as_arr().expect("edge.shards gauge");
+    let (mut ticks, mut events) = (0u64, 0u64);
+    for s in shards {
+        ticks += s.get("ticks").as_i64().unwrap_or(0) as u64;
+        events += s.get("ready_events").as_i64().unwrap_or(0) as u64;
+    }
+    Ok((ticks, events))
+}
+
+/// Edge-scale scenario: park `idle` connections that never send a byte,
+/// then serve `active` clients × `rounds` requests through the crowd on
+/// the given readiness backend (2 shards). Returns the active clients'
+/// sample outputs (the bitwise A/B payload), the per-tick edge cost
+/// (ready events per tick over the active window, summed across shards),
+/// and the raw `(ticks, events)` deltas behind it. Scan reports every
+/// registered connection every tick, so its cost tracks the herd size;
+/// epoll reports only what's actually readable.
+fn run_edge_scale(
+    dir: std::path::PathBuf,
+    kind: ReadinessKind,
+    idle: usize,
+    active: usize,
+    rounds: usize,
+) -> anyhow::Result<(Vec<Vec<Vec<i32>>>, f64, u64, u64)> {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        max_conns: idle + active + 16,
+        engine_threads: 2,
+        conn_threads: 2,
+        readiness: kind,
+        ..ServeConfig::default()
+    };
+    let server = spawn(dir, cfg)?;
+    let mut metrics_client = Client::connect(&server.addr)?;
+    let w = metrics_client.call(r#"{"op":"sample","model":"mock_a","method":"fpi","n":1,"return_samples":false}"#)?;
+    anyhow::ensure!(w.get("ok").as_bool() == Some(true), "warmup failed: {w}");
+
+    // Open the idle herd in chunks: the listener's accept backlog is
+    // finite, so wait for the edge to adopt each chunk (visible in the
+    // `open_conns` gauge) before piling on the next.
+    let mut herd = Vec::with_capacity(idle);
+    while herd.len() < idle {
+        let chunk = (idle - herd.len()).min(100);
+        for _ in 0..chunk {
+            herd.push(std::net::TcpStream::connect(server.addr)?);
+        }
+        let want = (herd.len() + 1) as i64; // + the metrics connection
+        for _ in 0..500 {
+            if open_conns(&mut metrics_client)? >= want {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let adopted = open_conns(&mut metrics_client)?;
+    anyhow::ensure!(adopted >= (idle + 1) as i64, "idle herd did not fully connect: {adopted} of {}", idle + 1);
+
+    let (t0, e0) = edge_shard_totals(&mut metrics_client)?;
+    let mut handles = Vec::new();
+    for a in 0..active {
+        let addr = server.addr;
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<Vec<Vec<i32>>>> {
+            let mut c = Client::connect(&addr)?;
+            let mut out = Vec::with_capacity(rounds);
+            for r in 0..rounds {
+                let (model, method) = MIX[(a + r) % MIX.len()];
+                let resp = c.call(&format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":2,"seed":{}}}"#, a * 100 + r))?;
+                anyhow::ensure!(resp.get("ok").as_bool() == Some(true), "active request failed: {resp}");
+                out.push(parse_samples(resp.get("samples")).expect("samples"));
+            }
+            Ok(out)
+        }));
+    }
+    let mut outputs = Vec::with_capacity(active * rounds);
+    for h in handles {
+        outputs.extend(h.join().expect("active client thread")?);
+    }
+    let (t1, e1) = edge_shard_totals(&mut metrics_client)?;
+    server.stop();
+    drop(herd);
+    let (dt, de) = (t1.saturating_sub(t0).max(1), e1.saturating_sub(e0));
+    Ok((outputs, de as f64 / dt as f64, dt, de))
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let clients = args.num::<usize>("clients", 8);
@@ -305,6 +407,54 @@ fn main() -> anyhow::Result<()> {
         "streamed first sample must land strictly before group-close delivery: {ttfs_stream:.4}s vs {ttfs_close:.4}s"
     );
 
+    // Edge-scale scenario: thousands of mostly-idle connections, served
+    // through on every supported readiness backend. The process holds both
+    // ends of every socket, so the herd is clamped to half the open-file
+    // limit (raised to the hard cap first) minus slack.
+    let limit = raise_nofile_limit();
+    let idle_req = args.num::<usize>("idle-conns", 4096);
+    let idle = idle_req.min(((limit / 2).saturating_sub(256)) as usize).max(64);
+    if idle < idle_req {
+        println!("edge-scale: clamped idle connections {idle_req} -> {idle} (open-file limit {limit})");
+    }
+    let (active, rounds) = (16usize, 4usize);
+    let mut scale_results = Vec::new();
+    for kind in [ReadinessKind::Scan, ReadinessKind::Epoll] {
+        if !kind.supported() {
+            continue;
+        }
+        let (outputs, cost, ticks, events) = run_edge_scale(dir.clone(), kind, idle, active, rounds)?;
+        println!(
+            "edge-scale [{}]: {idle} idle + {active} active conns, {cost:.1} ready events/tick ({events} events over {ticks} ticks)",
+            kind.label()
+        );
+        scale_results.push((kind, outputs, cost, ticks, events));
+    }
+    let mut edge_scale_fields = vec![
+        ("idle_conns", Value::num(idle as f64)),
+        ("active_conns", Value::num(active as f64)),
+        ("rounds", Value::num(rounds as f64)),
+        ("outputs_bitwise_equal", Value::Bool(scale_results.len() == 2)),
+    ];
+    for (kind, _, cost, ticks, events) in &scale_results {
+        edge_scale_fields.push((
+            kind.label(),
+            Value::obj(vec![
+                ("ticks", Value::num(*ticks as f64)),
+                ("ready_events", Value::num(*events as f64)),
+                ("ready_per_tick", Value::num(*cost)),
+            ]),
+        ));
+    }
+    if let [(_, scan_out, scan_cost, ..), (_, epoll_out, epoll_cost, ..)] = &scale_results[..] {
+        assert_eq!(scan_out, epoll_out, "readiness backend must not change any sample");
+        assert!(
+            epoll_cost < scan_cost,
+            "epoll per-tick edge cost must be strictly below scan with {idle} idle connections: {epoll_cost:.1} vs {scan_cost:.1}"
+        );
+        println!("edge-scale: epoll {epoll_cost:.1} ready/tick vs scan {scan_cost:.1} — O(ready) beats O(conns), outputs bitwise equal");
+    }
+
     let mut root = vec![
         ("bench", Value::str("serving_load")),
         ("clients", Value::num(clients as f64)),
@@ -321,6 +471,7 @@ fn main() -> anyhow::Result<()> {
                 ("ttfs_close_s", Value::num(ttfs_close)),
             ]),
         ),
+        ("edge_scale", Value::obj(edge_scale_fields)),
         (
             "placement",
             Value::obj(vec![

@@ -4,6 +4,7 @@
 
 use crate::coordinator::placement::PlacementKind;
 use crate::coordinator::policy::{AdmissionKind, PolicyKind};
+use crate::substrate::readiness::ReadinessKind;
 use anyhow::{ensure, Result};
 use std::time::Duration;
 
@@ -76,11 +77,20 @@ pub struct ServeConfig {
     /// thread-affinity are preserved — and samples, as ever, are bitwise
     /// identical either way.
     pub steal: bool,
-    /// Legacy connection-thread count. The edge is a single nonblocking
-    /// event loop now (`server/conn.rs`), so this no longer sizes
-    /// anything; the knob is kept (and still range-checked) so existing
-    /// configs and flags keep parsing.
-    pub worker_threads: usize,
+    /// Connection-plane shards (`--conn-threads`): event-loop threads
+    /// the edge is split across. Shard 0 owns the listener and
+    /// round-robins accepted sockets; each shard owns its connections'
+    /// buffers, token buckets, and in-flight maps outright (no shared
+    /// state on the hot path). The default of 1 is exactly the
+    /// single-loop topology; delivery semantics — and samples — are
+    /// shard-invariant. (Replaces the retired `worker_threads` knob,
+    /// which had been parsed-but-dead since the nonblocking edge landed.)
+    pub conn_threads: usize,
+    /// Readiness backend for the connection shards (`--readiness`):
+    /// `auto` (default; epoll on Linux, scan elsewhere), `scan` (the
+    /// portable every-socket-every-tick fallback), or `epoll` (Linux
+    /// only; O(ready) per tick instead of O(open connections)).
+    pub readiness: ReadinessKind,
     /// Engine worker shards. Each owns a full `Router` — PJRT handles are
     /// thread-affine, so engines are replicated per worker, lazily — and
     /// the dispatcher assigns each `(model, method)` batching group to the
@@ -150,7 +160,8 @@ impl Default for ServeConfig {
             continuous: true,
             elastic: true,
             steal: true,
-            worker_threads: 4,
+            conn_threads: 1,
+            readiness: ReadinessKind::Auto,
             engine_threads: 2,
             policy: PolicyKind::Occupancy,
             slo: Duration::from_millis(50),
@@ -172,7 +183,15 @@ impl ServeConfig {
     pub fn validate(&self) -> Result<()> {
         ensure!(!self.addr.is_empty(), "serve config: empty addr");
         ensure!(self.max_batch >= 1, "serve config: max_batch must be >= 1");
-        ensure!(self.worker_threads >= 1, "serve config: worker_threads must be >= 1");
+        ensure!(
+            (1..=64).contains(&self.conn_threads),
+            "serve config: conn_threads must be in [1, 64] (connection-plane event-loop shards)"
+        );
+        ensure!(
+            self.readiness.supported(),
+            "serve config: readiness backend {:?} is not supported on this platform (use scan or auto)",
+            self.readiness.label()
+        );
         ensure!(
             (1..=256).contains(&self.engine_threads),
             "serve config: engine_threads must be in [1, 256] (each worker replicates engines)"
@@ -228,7 +247,15 @@ mod tests {
         assert!(ServeConfig { engine_threads: 0, ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { engine_threads: 1000, ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { max_batch: 0, ..ServeConfig::default() }.validate().is_err());
-        assert!(ServeConfig { worker_threads: 0, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { conn_threads: 0, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { conn_threads: 65, ..ServeConfig::default() }.validate().is_err());
+        assert!(ServeConfig { conn_threads: 4, ..ServeConfig::default() }.validate().is_ok());
+        assert!(ServeConfig { readiness: ReadinessKind::Scan, ..ServeConfig::default() }.validate().is_ok());
+        assert_eq!(
+            ServeConfig { readiness: ReadinessKind::Epoll, ..ServeConfig::default() }.validate().is_ok(),
+            cfg!(target_os = "linux"),
+            "epoll must validate exactly on linux"
+        );
         assert!(ServeConfig { max_wait: Duration::from_secs(3600), ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { slo: Duration::from_secs(3600), ..ServeConfig::default() }.validate().is_err());
         assert!(ServeConfig { admission: AdmissionKind::Budget(0), ..ServeConfig::default() }.validate().is_err());

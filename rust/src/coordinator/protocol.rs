@@ -181,6 +181,18 @@ pub fn encode_frame(samples: &[Vec<i32>]) -> Vec<u8> {
     out
 }
 
+/// Validate a frame's u32 length prefix *before* any payload allocation:
+/// both transport ends call this on the raw 4-byte prefix so an absurd
+/// declared length is rejected without reserving a buffer for it. The
+/// [`FRAME_MAX_BYTES`] cap itself is accepted — the boundary is inclusive.
+pub fn frame_payload_len(prefix: [u8; 4]) -> Result<usize, String> {
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > FRAME_MAX_BYTES {
+        return Err(format!("frame length {len} exceeds the {FRAME_MAX_BYTES} byte cap"));
+    }
+    Ok(len)
+}
+
 /// Decode a binary sample frame's payload (the bytes *after* the u32
 /// length prefix, which the transport strips while framing).
 pub fn decode_frame(payload: &[u8]) -> Result<Vec<Vec<i32>>, String> {
@@ -329,6 +341,35 @@ mod tests {
         assert_eq!(decode_frame(&wire[4..]).unwrap(), samples);
         // Empty batch: a legal 16-byte header-only frame.
         let empty = encode_frame(&[]);
+        assert_eq!(decode_frame(&empty[4..]).unwrap(), Vec::<Vec<i32>>::new());
+    }
+
+    #[test]
+    fn frame_length_cap_is_inclusive() {
+        // Exactly at the cap: accepted. One byte over: rejected from the
+        // 4-byte prefix alone — no 256 MiB buffer is ever allocated.
+        assert_eq!(frame_payload_len((FRAME_MAX_BYTES as u32).to_le_bytes()), Ok(FRAME_MAX_BYTES));
+        let over = frame_payload_len((FRAME_MAX_BYTES as u32 + 1).to_le_bytes());
+        assert!(over.is_err(), "cap + 1 must be rejected");
+        assert!(over.unwrap_err().contains("cap"));
+        assert_eq!(frame_payload_len(0u32.to_le_bytes()), Ok(0));
+    }
+
+    #[test]
+    fn zero_row_frames_decode_cleanly() {
+        // rows=0 with nonzero cols is a legal header-only frame: a batch
+        // that produced no sample rows still frames without special-casing.
+        let mut payload = Vec::new();
+        payload.extend_from_slice(FRAME_MAGIC);
+        payload.push(FRAME_VERSION);
+        payload.push(FRAME_KIND_SAMPLES);
+        payload.extend_from_slice(&[0, 0]);
+        payload.extend_from_slice(&0u32.to_le_bytes()); // rows
+        payload.extend_from_slice(&5u32.to_le_bytes()); // cols
+        assert_eq!(decode_frame(&payload).unwrap(), Vec::<Vec<i32>>::new());
+        // And the encoder's own zero-row form agrees with the decoder.
+        let empty = encode_frame(&[]);
+        assert_eq!(frame_payload_len(empty[0..4].try_into().unwrap()), Ok(16));
         assert_eq!(decode_frame(&empty[4..]).unwrap(), Vec::<Vec<i32>>::new());
     }
 

@@ -49,10 +49,8 @@ impl Client {
         }
         let mut len4 = [0u8; 4];
         self.reader.read_exact(&mut len4)?;
-        let len = u32::from_le_bytes(len4) as usize;
-        if len > protocol::FRAME_MAX_BYTES {
-            anyhow::bail!("frame length {len} exceeds the {} byte cap", protocol::FRAME_MAX_BYTES);
-        }
+        // Validate the declared length before allocating for it.
+        let len = protocol::frame_payload_len(len4).map_err(|e| anyhow::anyhow!(e))?;
         let mut payload = vec![0u8; len];
         self.reader.read_exact(&mut payload)?;
         let rows = protocol::decode_frame(&payload).map_err(|e| anyhow::anyhow!("bad frame: {e}"))?;

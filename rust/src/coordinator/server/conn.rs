@@ -1,11 +1,28 @@
-//! The connection plane: one event-loop thread owning every client
-//! socket. Nonblocking accept plus a readiness scan over nonblocking
-//! connections, with per-connection read/write buffers, multiple
-//! in-flight requests per connection (pipelined by request `id`), and
-//! replies routed back through the completion channel into
-//! per-connection outbound queues — replacing the old blocking
-//! thread-per-connection edge, whose thread count was the real
-//! concurrency ceiling.
+//! The connection plane: `conn_threads` event-loop shards, each owning
+//! its connections' sockets, buffers, token buckets, and in-flight maps
+//! outright — no shared state and no locks on the hot path. Shard 0
+//! owns the listener and round-robins accepted sockets to the shards
+//! over per-shard handoff channels; engine replies travel each shard's
+//! own completion channel. Which sockets a shard services per tick
+//! comes from a [`ReadinessSource`] (`substrate::readiness`):
+//!
+//! * `scan` — every registered socket every tick, bit-for-bit the
+//!   pre-sharding nonblocking scan (portable fallback);
+//! * `epoll` (Linux, the `auto` default there) — only sockets the
+//!   kernel flagged, edge-triggered with explicit rearm, so a tick
+//!   costs O(ready) instead of O(open connections). The shard's waker
+//!   is an eventfd registered like any other fd: an engine completion
+//!   interrupts the wait instantly instead of waiting out the idle
+//!   tick.
+//!
+//! Per-connection state and the request state machine are unchanged
+//! from the single-threaded edge: per-connection read/write buffers,
+//! multiple in-flight requests per connection (pipelined by request
+//! `id`), and replies routed back through the owning shard's completion
+//! channel into per-connection outbound queues. Delivery semantics are
+//! shard-invariant — a connection lives its whole life on one shard,
+//! and completions are FIFO per shard — so bitwise exactness holds
+//! under every `{scan, epoll} × conn_threads` combination.
 //!
 //! Edge hardening lives here, all `ServeConfig` knobs:
 //!
@@ -15,22 +32,20 @@
 //!   unflushed output exceeds the cap stops being *read* until the peer
 //!   drains it, without stalling any other connection;
 //! * `rate_limit` — per-connection token bucket (one-second burst);
-//! * `max_conns` — excess accepts get an error line and are closed;
+//! * `max_conns` — excess accepts get an error line and are closed
+//!   (enforced at accept against the fleet-wide open-connection gauge);
 //! * `reply_timeout` — an unanswered request fails to the client, and
 //!   the engine's eventual reply is logged and counted as orphaned
-//!   rather than silently dropped.
-//!
-//! The loop never blocks on any socket: it sleeps on the completion
-//! channel (so engine replies wake it instantly) for at most one tick,
-//! then rescans. std-only nonblocking sockets — no epoll wrapper is
-//! vendored, and a scan over ≤ `max_conns` health-checked fds per tick
-//! is well inside this plane's budget.
+//!   rather than silently dropped. The timeout scan is deadline-gated:
+//!   each shard tracks its earliest pending deadline and skips the scan
+//!   entirely until it is due.
 
 use crate::coordinator::config::ServeConfig;
 use crate::coordinator::protocol::{self, Request};
-use crate::coordinator::server::pool::{Completion, Reply};
+use crate::coordinator::server::pool::{Completion, CompletionTx, Reply};
 use crate::coordinator::server::Msg;
 use crate::substrate::json::Value;
+use crate::substrate::readiness::{self, Interest, ReadinessSource, Token, Waker};
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -38,15 +53,37 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-/// Idle tick: how long the loop blocks on the completion channel when a
-/// pass over every connection found nothing to do. Completions wake it
-/// immediately; fresh sockets/bytes wait at most one tick.
+/// Idle tick: the longest a shard blocks in `wait` when nothing is
+/// ready. Completions and handoffs wake it immediately through the
+/// shard waker; anything else waits at most one tick.
 const TICK: Duration = Duration::from_millis(5);
 
-/// Connection-plane counters, surfaced as the `edge` section of the
-/// `metrics` response.
+/// Readiness token for the listener on the shard that owns it.
+/// (`Token::MAX` itself is reserved by the readiness source's waker.)
+const LISTENER_TOKEN: Token = Token::MAX - 1;
+
+/// Per-shard connection-plane gauges, one entry per shard in the `edge`
+/// metrics section.
 #[derive(Default)]
+pub(crate) struct ShardStats {
+    /// Connections currently owned by this shard.
+    pub(crate) conns: AtomicUsize,
+    /// Loop iterations (each one `wait` + service pass).
+    pub(crate) ticks: AtomicU64,
+    /// Connection readiness events reported across all ticks. Divided
+    /// by `ticks` this is the per-tick edge cost: ≈ open connections
+    /// under `scan`, ≈ the active fraction under `epoll`.
+    pub(crate) ready_events: AtomicU64,
+    /// Waker fires (engine completions, socket handoffs, shutdown).
+    pub(crate) wakeups: AtomicU64,
+}
+
+/// Connection-plane counters, surfaced as the `edge` section of the
+/// `metrics` response: fleet-wide totals plus per-shard gauges and the
+/// resolved readiness-backend label.
 pub(crate) struct EdgeStats {
+    /// Resolved readiness backend label (`"scan"` / `"epoll"`).
+    pub(crate) backend: &'static str,
     pub(crate) open_conns: AtomicUsize,
     pub(crate) total_conns: AtomicU64,
     pub(crate) bytes_in: AtomicU64,
@@ -56,11 +93,45 @@ pub(crate) struct EdgeStats {
     pub(crate) conn_cap_rejections: AtomicU64,
     pub(crate) reply_timeouts: AtomicU64,
     pub(crate) orphaned_replies: AtomicU64,
+    pub(crate) shards: Vec<ShardStats>,
 }
 
 impl EdgeStats {
+    pub(crate) fn new(backend: &'static str, conn_threads: usize) -> EdgeStats {
+        EdgeStats {
+            backend,
+            open_conns: AtomicUsize::new(0),
+            total_conns: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            overlimit_rejections: AtomicU64::new(0),
+            ratelimit_rejections: AtomicU64::new(0),
+            conn_cap_rejections: AtomicU64::new(0),
+            reply_timeouts: AtomicU64::new(0),
+            orphaned_replies: AtomicU64::new(0),
+            shards: (0..conn_threads.max(1)).map(|_| ShardStats::default()).collect(),
+        }
+    }
+
     pub(crate) fn value(&self) -> Value {
+        let shards: Vec<Value> = self
+            .shards
+            .iter()
+            .map(|s| {
+                let ticks = s.ticks.load(Ordering::SeqCst);
+                let ready = s.ready_events.load(Ordering::SeqCst);
+                Value::obj(vec![
+                    ("conns", Value::num(s.conns.load(Ordering::SeqCst) as f64)),
+                    ("ticks", Value::num(ticks as f64)),
+                    ("ready_events", Value::num(ready as f64)),
+                    ("ready_per_tick", Value::num(ready as f64 / ticks.max(1) as f64)),
+                    ("wakeups", Value::num(s.wakeups.load(Ordering::SeqCst) as f64)),
+                ])
+            })
+            .collect();
         Value::obj(vec![
+            ("readiness", Value::str(self.backend)),
+            ("conn_threads", Value::num(self.shards.len() as f64)),
             ("open_conns", Value::num(self.open_conns.load(Ordering::SeqCst) as f64)),
             ("total_conns", Value::num(self.total_conns.load(Ordering::SeqCst) as f64)),
             ("bytes_in", Value::num(self.bytes_in.load(Ordering::SeqCst) as f64)),
@@ -70,7 +141,23 @@ impl EdgeStats {
             ("conn_cap_rejections", Value::num(self.conn_cap_rejections.load(Ordering::SeqCst) as f64)),
             ("reply_timeouts", Value::num(self.reply_timeouts.load(Ordering::SeqCst) as f64)),
             ("orphaned_replies", Value::num(self.orphaned_replies.load(Ordering::SeqCst) as f64)),
+            ("shards", Value::Arr(shards)),
         ])
+    }
+}
+
+/// Shard waker that counts fires into its shard's `wakeups` gauge
+/// before delegating to the readiness source's real waker.
+struct CountingWaker {
+    inner: Arc<dyn Waker>,
+    edge: Arc<EdgeStats>,
+    shard: usize,
+}
+
+impl Waker for CountingWaker {
+    fn wake(&self) {
+        self.edge.shards[self.shard].wakeups.fetch_add(1, Ordering::Relaxed);
+        self.inner.wake();
     }
 }
 
@@ -103,11 +190,15 @@ impl TokenBucket {
     }
 }
 
-/// Split one complete line (newline stripped) off the front of `buf`.
+/// Split one complete line off the front of `buf`, stripping the `\n`
+/// terminator and, when present, a preceding `\r` (CRLF clients).
 fn take_line(buf: &mut Vec<u8>) -> Option<Vec<u8>> {
     let pos = buf.iter().position(|&b| b == b'\n')?;
     let mut line: Vec<u8> = buf.drain(..=pos).collect();
     line.pop();
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
     Some(line)
 }
 
@@ -164,75 +255,115 @@ struct Inflight {
     timed_out: bool,
 }
 
-struct ConnPlane {
-    cfg: ServeConfig,
-    tx: mpsc::Sender<Msg>,
-    ctx: mpsc::Sender<Completion>,
-    edge: Arc<EdgeStats>,
-    conns: HashMap<u64, Conn>,
-    inflight: HashMap<u64, Inflight>,
-    next_conn: u64,
-    next_seq: u64,
+/// Everything one shard loop is handed at spawn. Built by
+/// [`spawn_shards`]; consumed by [`shard_loop`].
+pub(crate) struct ShardCtx {
+    pub(crate) shard: usize,
+    pub(crate) cfg: ServeConfig,
+    /// Request channel into the dispatcher (shared by all shards).
+    pub(crate) tx: mpsc::Sender<Msg>,
+    /// Receiving end of this shard's completion channel.
+    pub(crate) crx: mpsc::Receiver<Completion>,
+    /// Its sender half (cloned into every `Reply` this shard creates).
+    pub(crate) ctx: CompletionTx,
+    /// The listener; `Some` on exactly one shard (shard 0).
+    pub(crate) listener: Option<TcpListener>,
+    /// Sockets round-robined to this shard by the listener shard.
+    pub(crate) handoff_rx: mpsc::Receiver<TcpStream>,
+    /// All shards' handoff senders + wakers; non-empty only on the
+    /// listener shard.
+    pub(crate) handoffs: Vec<(mpsc::Sender<TcpStream>, Arc<dyn Waker>)>,
+    pub(crate) source: Box<dyn ReadinessSource>,
+    pub(crate) stop: Arc<AtomicBool>,
+    pub(crate) edge: Arc<EdgeStats>,
 }
 
-/// The connection plane's event loop. Owns the listener, every client
-/// socket, and the receiving end of the completion channel; exits when
-/// `stop` is set, closing every connection.
-pub(crate) fn conn_loop(
+/// Raw fd for readiness registration. Only the epoll backend reads it,
+/// so the non-Unix placeholder never reaches a syscall.
+#[cfg(unix)]
+fn raw_fd<T: std::os::fd::AsRawFd>(t: &T) -> readiness::RawFd {
+    t.as_raw_fd()
+}
+#[cfg(not(unix))]
+fn raw_fd<T>(_t: &T) -> readiness::RawFd {
+    -1
+}
+
+/// Spawn the sharded connection plane: `cfg.conn_threads` event-loop
+/// threads, each with its own readiness source and completion channel.
+/// Returns the shard join handles and the per-shard wakers (which
+/// `ServerHandle::stop` fires so every shard notices shutdown at once).
+pub(crate) fn spawn_shards(
     listener: TcpListener,
-    cfg: ServeConfig,
-    tx: mpsc::Sender<Msg>,
-    crx: mpsc::Receiver<Completion>,
-    ctx: mpsc::Sender<Completion>,
-    stop: Arc<AtomicBool>,
-    edge: Arc<EdgeStats>,
-) {
-    let mut plane = ConnPlane {
-        cfg,
-        tx,
-        ctx,
-        edge,
-        conns: HashMap::new(),
-        inflight: HashMap::new(),
-        next_conn: 0,
-        next_seq: 0,
-    };
-    while !stop.load(Ordering::SeqCst) {
-        let mut busy = plane.accept_new(&listener);
-        while let Ok(c) = crx.try_recv() {
-            plane.deliver(c);
-            busy = true;
-        }
-        busy |= plane.service_all();
-        plane.scan_timeouts();
-        if !busy {
-            // Idle: block on the completion channel — an engine reply
-            // wakes the loop instantly, everything else waits ≤ TICK.
-            // The plane holds a sender clone, so the channel cannot
-            // disconnect; only deliveries and timeouts come out.
-            if let Ok(c) = crx.recv_timeout(TICK) {
-                plane.deliver(c);
-            }
-        }
+    cfg: &ServeConfig,
+    tx: &mpsc::Sender<Msg>,
+    stop: &Arc<AtomicBool>,
+    edge: &Arc<EdgeStats>,
+) -> std::io::Result<(Vec<std::thread::JoinHandle<()>>, Vec<Arc<dyn Waker>>)> {
+    let n = cfg.conn_threads.max(1);
+    let kind = cfg.readiness.resolve();
+    let mut sources: Vec<Box<dyn ReadinessSource>> = Vec::with_capacity(n);
+    let mut wakers: Vec<Arc<dyn Waker>> = Vec::with_capacity(n);
+    for shard in 0..n {
+        let source = readiness::source(kind)?;
+        wakers.push(Arc::new(CountingWaker { inner: source.waker(), edge: Arc::clone(edge), shard }));
+        sources.push(source);
     }
-    // Shutdown: every socket closes (clients observe EOF).
-    plane.conns.clear();
-    plane.edge.open_conns.store(0, Ordering::SeqCst);
+    let mut handoff_txs = Vec::with_capacity(n);
+    let mut handoff_rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (htx, hrx) = mpsc::channel::<TcpStream>();
+        handoff_txs.push(htx);
+        handoff_rxs.push(hrx);
+    }
+    let handoffs: Vec<(mpsc::Sender<TcpStream>, Arc<dyn Waker>)> = handoff_txs.into_iter().zip(wakers.iter().cloned()).collect();
+    let mut listener = Some(listener);
+    let mut joins = Vec::with_capacity(n);
+    for (shard, (source, handoff_rx)) in sources.into_iter().zip(handoff_rxs).enumerate() {
+        let (ctx_tx, crx) = mpsc::channel::<Completion>();
+        let sctx = ShardCtx {
+            shard,
+            cfg: cfg.clone(),
+            tx: tx.clone(),
+            crx,
+            ctx: CompletionTx { tx: ctx_tx, waker: Arc::clone(&wakers[shard]) },
+            listener: if shard == 0 { listener.take() } else { None },
+            handoff_rx,
+            handoffs: if shard == 0 { handoffs.clone() } else { Vec::new() },
+            source,
+            stop: Arc::clone(stop),
+            edge: Arc::clone(edge),
+        };
+        joins.push(std::thread::Builder::new().name(format!("predsamp-conn-{shard}")).spawn(move || shard_loop(sctx))?);
+    }
+    Ok((joins, wakers))
 }
 
-impl ConnPlane {
+/// Accept-side state on the listener-owning shard: round-robin cursor
+/// over every shard's handoff channel (its own included, so adoption is
+/// uniform).
+struct Acceptor {
+    listener: TcpListener,
+    handoffs: Vec<(mpsc::Sender<TcpStream>, Arc<dyn Waker>)>,
+    rr: usize,
+}
+
+impl Acceptor {
     /// Accept every pending connection (nonblocking). Over `max_conns`,
-    /// the socket gets a best-effort error line and closes immediately.
-    fn accept_new(&mut self, listener: &TcpListener) -> bool {
+    /// the socket gets a best-effort error line and closes immediately;
+    /// otherwise its `open_conns` slot is reserved here and the socket
+    /// is handed to the next shard in rotation.
+    fn accept_new(&mut self, cfg: &ServeConfig, edge: &EdgeStats) -> bool {
         let mut any = false;
         loop {
-            match listener.accept() {
+            match self.listener.accept() {
                 Ok((stream, peer)) => {
                     any = true;
-                    self.edge.total_conns.fetch_add(1, Ordering::SeqCst);
-                    if self.conns.len() >= self.cfg.max_conns {
-                        self.edge.conn_cap_rejections.fetch_add(1, Ordering::SeqCst);
-                        log::warn!("rejecting connection from {peer}: {} already open (max_conns)", self.conns.len());
+                    edge.total_conns.fetch_add(1, Ordering::SeqCst);
+                    let open = edge.open_conns.load(Ordering::SeqCst);
+                    if open >= cfg.max_conns {
+                        edge.conn_cap_rejections.fetch_add(1, Ordering::SeqCst);
+                        log::warn!("rejecting connection from {peer}: {open} already open (max_conns)");
                         // Accepted sockets are blocking by default; one
                         // short error line fits any send buffer.
                         let mut s = stream;
@@ -244,10 +375,16 @@ impl ConnPlane {
                         continue;
                     }
                     let _ = stream.set_nodelay(true);
-                    let id = self.next_conn;
-                    self.next_conn += 1;
-                    self.conns.insert(id, Conn::new(stream, &self.cfg, Instant::now()));
-                    self.edge.open_conns.store(self.conns.len(), Ordering::SeqCst);
+                    edge.open_conns.fetch_add(1, Ordering::SeqCst);
+                    let target = self.rr % self.handoffs.len();
+                    self.rr += 1;
+                    let (htx, waker) = &self.handoffs[target];
+                    if htx.send(stream).is_ok() {
+                        waker.wake();
+                    } else {
+                        // Target shard already exited (shutdown race).
+                        edge.open_conns.fetch_sub(1, Ordering::SeqCst);
+                    }
                 }
                 Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(e) => {
@@ -258,15 +395,152 @@ impl ConnPlane {
         }
         any
     }
+}
+
+struct Shard {
+    idx: usize,
+    cfg: ServeConfig,
+    tx: mpsc::Sender<Msg>,
+    ctx: CompletionTx,
+    edge: Arc<EdgeStats>,
+    conns: HashMap<u64, Conn>,
+    inflight: HashMap<u64, Inflight>,
+    /// Next connection id: starts at the shard index, steps by
+    /// `conn_threads`, so ids are globally unique without coordination.
+    next_conn: u64,
+    /// Next in-flight sequence number (same striping; unique per shard
+    /// is all correctness needs, globally unique helps the logs).
+    next_seq: u64,
+    /// Id stride == `conn_threads`.
+    stride: u64,
+    /// Lower bound on the earliest pending reply deadline; `None` means
+    /// no request is in flight and the timeout scan can be skipped.
+    next_deadline: Option<Instant>,
+}
+
+/// One shard's event loop. Owns its connections and the receiving ends
+/// of its completion and handoff channels; the shard holding the
+/// listener also accepts. Exits when `stop` is set, closing every owned
+/// connection.
+pub(crate) fn shard_loop(sctx: ShardCtx) {
+    let ShardCtx { shard: idx, cfg, tx, crx, ctx, listener, handoff_rx, handoffs, mut source, stop, edge } = sctx;
+    let stride = cfg.conn_threads.max(1) as u64;
+    let mut acceptor = listener.map(|l| {
+        if let Err(e) = source.register(raw_fd(&l), LISTENER_TOKEN, Interest::READ) {
+            log::warn!("failed to register listener with {} readiness: {e}", source.backend());
+        }
+        Acceptor { listener: l, handoffs, rr: 0 }
+    });
+    let mut shard = Shard {
+        idx,
+        cfg,
+        tx,
+        ctx,
+        edge: Arc::clone(&edge),
+        conns: HashMap::new(),
+        inflight: HashMap::new(),
+        next_conn: idx as u64,
+        next_seq: idx as u64,
+        stride,
+        next_deadline: None,
+    };
+    let mut ready: Vec<Token> = Vec::new();
+    let mut dirty: Vec<u64> = Vec::new();
+    let mut busy = true;
+    while !stop.load(Ordering::SeqCst) {
+        let timeout = if busy { Duration::ZERO } else { shard.idle_timeout(Instant::now()) };
+        if source.wait(timeout, &mut ready).is_err() {
+            // A broken readiness source would spin the loop; degrade to
+            // a plain sleep tick and service everything we own.
+            std::thread::sleep(TICK);
+            ready.clear();
+            ready.extend(shard.conns.keys().copied());
+            if acceptor.is_some() {
+                ready.push(LISTENER_TOKEN);
+            }
+        }
+        let stats = &edge.shards[idx];
+        stats.ticks.fetch_add(1, Ordering::Relaxed);
+        busy = false;
+        dirty.clear();
+        let mut accept_ready = false;
+        for &token in &ready {
+            if token == LISTENER_TOKEN {
+                accept_ready = true;
+            } else {
+                dirty.push(token);
+            }
+        }
+        stats.ready_events.fetch_add(dirty.len() as u64, Ordering::Relaxed);
+        if accept_ready {
+            if let Some(a) = acceptor.as_mut() {
+                busy |= a.accept_new(&shard.cfg, &edge);
+                let _ = source.rearm(raw_fd(&a.listener), LISTENER_TOKEN, Interest::READ);
+            }
+        }
+        // Adopt sockets round-robined here by the listener shard.
+        while let Ok(stream) = handoff_rx.try_recv() {
+            busy = true;
+            if let Some(id) = shard.adopt(stream, source.as_mut()) {
+                dirty.push(id);
+            }
+        }
+        // Engine replies → owning connections' outbound queues.
+        while let Ok(c) = crx.try_recv() {
+            busy = true;
+            if let Some(id) = shard.deliver(c) {
+                dirty.push(id);
+            }
+        }
+        shard.scan_timeouts(&mut dirty);
+        busy |= shard.service_dirty(&mut dirty, source.as_mut());
+    }
+    // Shutdown: every owned socket closes (clients observe EOF), and
+    // cap reservations for sockets still queued for adoption release.
+    let open = shard.conns.len();
+    shard.conns.clear();
+    edge.open_conns.fetch_sub(open, Ordering::SeqCst);
+    edge.shards[idx].conns.store(0, Ordering::SeqCst);
+    while handoff_rx.try_recv().is_ok() {
+        edge.open_conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Shard {
+    /// How long `wait` may block when the previous pass was idle: one
+    /// tick, shortened to the earliest pending reply deadline.
+    fn idle_timeout(&self, now: Instant) -> Duration {
+        match self.next_deadline {
+            Some(d) => d.saturating_duration_since(now).min(TICK),
+            None => TICK,
+        }
+    }
+
+    /// Take ownership of a handed-off socket: assign its id, register it
+    /// with this shard's readiness source, and start servicing it.
+    fn adopt(&mut self, stream: TcpStream, source: &mut dyn ReadinessSource) -> Option<u64> {
+        let id = self.next_conn;
+        self.next_conn += self.stride;
+        if let Err(e) = source.register(raw_fd(&stream), id, Interest::READ) {
+            log::warn!("failed to register connection {id} with {} readiness: {e}", source.backend());
+            self.edge.open_conns.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        self.conns.insert(id, Conn::new(stream, &self.cfg, Instant::now()));
+        self.edge.shards[self.idx].conns.fetch_add(1, Ordering::Relaxed);
+        Some(id)
+    }
 
     /// Route one completion into its connection's outbound queue — or,
     /// when the request timed out or its connection is gone, log and
-    /// count the orphaned reply (satellite: never silently dropped).
-    fn deliver(&mut self, c: Completion) {
+    /// count the orphaned reply (never silently dropped). Returns the
+    /// connection id when bytes were queued to a live connection.
+    fn deliver(&mut self, c: Completion) -> Option<u64> {
+        debug_assert_eq!(c.shard, self.idx, "completion routed to the wrong shard");
         let Some(fl) = self.inflight.get_mut(&c.seq) else {
             self.edge.orphaned_replies.fetch_add(1, Ordering::SeqCst);
             log::debug!("orphaned reply for closed connection {} (seq {}, {} bytes)", c.conn, c.seq, c.bytes.len());
-            return;
+            return None;
         };
         if fl.timed_out {
             self.edge.orphaned_replies.fetch_add(1, Ordering::SeqCst);
@@ -274,10 +548,12 @@ impl ConnPlane {
             if c.last {
                 self.inflight.remove(&c.seq);
             }
-            return;
+            return None;
         }
         if !c.last {
             // Stream events are visible progress: refresh the deadline.
+            // `next_deadline` stays a valid lower bound (the deadline
+            // only moved later), costing at most one early scan.
             fl.deadline = Instant::now() + self.cfg.reply_timeout;
         }
         if c.last {
@@ -289,31 +565,45 @@ impl ConnPlane {
                     conn.inflight = conn.inflight.saturating_sub(1);
                 }
                 conn.wbuf.extend_from_slice(&c.bytes);
+                Some(c.conn)
             }
             None => {
                 self.edge.orphaned_replies.fetch_add(1, Ordering::SeqCst);
                 log::debug!("orphaned reply for closed connection {} (seq {})", c.conn, c.seq);
+                None
             }
         }
     }
 
-    /// One IO pass over every connection; returns whether any bytes
-    /// moved (the loop's idle detector).
-    fn service_all(&mut self) -> bool {
+    /// One IO pass over every connection in `dirty` (deduplicated):
+    /// ready sockets, fresh adoptions, completion targets, and timeout
+    /// victims. Under `scan` readiness this is every owned connection —
+    /// exactly the pre-sharding full pass. Kept connections are rearmed
+    /// with their current interest; closed ones are deregistered.
+    /// Returns whether any bytes moved (the loop's idle detector).
+    fn service_dirty(&mut self, dirty: &mut Vec<u64>, source: &mut dyn ReadinessSource) -> bool {
         let mut busy = false;
-        let ids: Vec<u64> = self.conns.keys().copied().collect();
-        for id in ids {
+        dirty.sort_unstable();
+        dirty.dedup();
+        for &id in dirty.iter() {
             let Some(mut conn) = self.conns.remove(&id) else { continue };
             let (keep, conn_busy) = self.service(id, &mut conn);
             busy |= conn_busy;
             if keep {
+                let interest = Interest {
+                    read: !conn.closing && !conn.read_closed && conn.outstanding() < self.cfg.outbound_cap,
+                    write: conn.outstanding() > 0,
+                };
+                let _ = source.rearm(raw_fd(&conn.stream), id, interest);
                 self.conns.insert(id, conn);
             } else {
+                let _ = source.deregister(raw_fd(&conn.stream), id);
                 self.inflight.retain(|_, fl| fl.conn != id);
+                self.edge.open_conns.fetch_sub(1, Ordering::SeqCst);
+                self.edge.shards[self.idx].conns.fetch_sub(1, Ordering::Relaxed);
                 log::debug!("connection {id} closed");
             }
         }
-        self.edge.open_conns.store(self.conns.len(), Ordering::SeqCst);
         busy
     }
 
@@ -433,16 +723,22 @@ impl ConnPlane {
             return;
         }
         let seq = self.next_seq;
-        self.next_seq += 1;
+        self.next_seq += self.stride;
         let reply = Reply {
             tx: self.ctx.clone(),
+            shard: self.idx,
             conn: id,
             seq,
             id: meta.id,
             stream: meta.stream && self.cfg.streaming && matches!(req, Request::Sample { .. }),
             frame: meta.frame && self.cfg.framing,
         };
-        self.inflight.insert(seq, Inflight { conn: id, id: meta.id, deadline: now + self.cfg.reply_timeout, timed_out: false });
+        let deadline = now + self.cfg.reply_timeout;
+        self.inflight.insert(seq, Inflight { conn: id, id: meta.id, deadline, timed_out: false });
+        self.next_deadline = Some(match self.next_deadline {
+            Some(d) => d.min(deadline),
+            None => deadline,
+        });
         conn.inflight += 1;
         if self.tx.send(Msg::Req(req, reply)).is_err() {
             self.inflight.remove(&seq);
@@ -454,9 +750,17 @@ impl ConnPlane {
 
     /// Fail every in-flight request past its reply deadline to its
     /// client. The entry stays (flagged) so the engine's eventual answer
-    /// is recognized and logged as orphaned.
-    fn scan_timeouts(&mut self) {
+    /// is recognized and logged as orphaned. Deadline-gated: the pass
+    /// over the in-flight map is skipped entirely until the tracked
+    /// earliest deadline is due, then the exact minimum is recomputed.
+    /// Affected connections are pushed into `dirty` so the error line
+    /// flushes this tick even under epoll readiness.
+    fn scan_timeouts(&mut self, dirty: &mut Vec<u64>) {
         let now = Instant::now();
+        match self.next_deadline {
+            Some(d) if now >= d => {}
+            _ => return,
+        }
         let mut expired: Vec<(u64, u64, Option<u64>)> = Vec::new();
         for (&seq, fl) in self.inflight.iter_mut() {
             if !fl.timed_out && now >= fl.deadline {
@@ -464,6 +768,7 @@ impl ConnPlane {
                 expired.push((seq, fl.conn, fl.id));
             }
         }
+        self.next_deadline = self.inflight.values().filter(|fl| !fl.timed_out).map(|fl| fl.deadline).min();
         for (seq, cid, rid) in expired {
             self.edge.reply_timeouts.fetch_add(1, Ordering::SeqCst);
             log::warn!(
@@ -477,6 +782,7 @@ impl ConnPlane {
                     Some(id) => protocol::with_id(&line, id),
                     None => line,
                 });
+                dirty.push(cid);
             }
         }
     }
@@ -551,5 +857,35 @@ mod tests {
         assert_eq!(take_line(&mut buf).as_deref(), Some(&b"{\"op\":\"info\"}"[..]));
         assert_eq!(take_line(&mut buf).as_deref(), Some(&b""[..]), "blank lines pass through for the parser to skip");
         assert_eq!(take_line(&mut buf), None);
+    }
+
+    #[test]
+    fn take_line_strips_crlf_terminators() {
+        // CRLF clients (telnet, windows netcat) terminate with \r\n: the
+        // \r must not reach the JSON parser or the byte-length checks.
+        let mut buf = b"{\"op\":\"ping\"}\r\n{\"op\":\"info\"}\npartial\r".to_vec();
+        assert_eq!(take_line(&mut buf).as_deref(), Some(&b"{\"op\":\"ping\"}"[..]));
+        assert_eq!(take_line(&mut buf).as_deref(), Some(&b"{\"op\":\"info\"}"[..]), "LF-only lines are untouched");
+        assert_eq!(take_line(&mut buf), None, "a trailing \\r without \\n stays buffered");
+        assert_eq!(buf, b"partial\r".to_vec());
+        buf.extend_from_slice(b"\n\r\n");
+        assert_eq!(take_line(&mut buf).as_deref(), Some(&b"partial"[..]));
+        assert_eq!(take_line(&mut buf).as_deref(), Some(&b""[..]), "a bare CRLF is a blank line");
+        // Only a *terminal* \r is stripped: interior ones survive.
+        let mut buf = b"a\rb\r\n".to_vec();
+        assert_eq!(take_line(&mut buf).as_deref(), Some(&b"a\rb"[..]));
+    }
+
+    #[test]
+    fn edge_stats_value_reports_backend_and_shards() {
+        let edge = EdgeStats::new("scan", 3);
+        edge.shards[1].ticks.store(10, Ordering::SeqCst);
+        edge.shards[1].ready_events.store(25, Ordering::SeqCst);
+        let v = edge.value();
+        assert_eq!(v.get("readiness").as_str(), Some("scan"));
+        assert_eq!(v.get("conn_threads").as_f64(), Some(3.0));
+        let shards = v.get("shards").as_arr().expect("shards array");
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards[1].get("ready_per_tick").as_f64(), Some(2.5));
     }
 }

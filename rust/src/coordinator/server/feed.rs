@@ -1,8 +1,10 @@
 //! The live-schedule bridge: `ServeFeed` connects an executing group's
 //! elastic schedule to the serving plane — absorbing the group's own
 //! mid-flight arrivals under the admission policy, answering each
-//! request the moment its last job converges, and observing the finished
-//! schedule into the server-level convergence history.
+//! request the moment its last job converges (each delivery rides the
+//! request's `Reply` handle onto — and wakes — the connection shard
+//! owning that socket), and observing the finished schedule into the
+//! server-level convergence history.
 
 use crate::coordinator::config::ServeConfig;
 use crate::coordinator::metrics::Metrics;

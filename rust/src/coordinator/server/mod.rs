@@ -1,4 +1,4 @@
-//! TCP serving: line-delimited JSON over a single-threaded nonblocking
+//! TCP serving: line-delimited JSON over a sharded nonblocking
 //! connection plane, dispatched to a sharded pool of engine workers with
 //! elastic batching, work stealing, and an explicit model-placement
 //! plane.
@@ -6,11 +6,16 @@
 //! Topology:
 //!
 //! ```text
-//! clients ──TCP──▶ connection plane (one event-loop thread, conn.rs):
-//!                  nonblocking accept + readiness scan, per-connection
-//!                  buffers, pipelining by request id, edge hardening
-//!                      │ (Request, Reply) over mpsc    ▲ completions
-//!                      ▼                               │ (engine replies
+//! clients ──TCP──▶ connection plane (cfg.conn_threads event-loop
+//!                  shards, conn.rs): shard 0 accepts and round-robins
+//!                  sockets; each shard owns its connections outright
+//!                  and learns readiness from substrate::readiness
+//!                  (epoll on Linux, portable scan elsewhere), with
+//!                  per-connection buffers, pipelining by request id,
+//!                  and edge hardening
+//!                      │ (Request, Reply) over mpsc    ▲ per-shard
+//!                      ▼                               │ completions
+//!                                                      │ (engine replies
 //!                                                      │  + stream events)
 //!                dispatcher: answers ping/info/metrics, routes each
 //!                (model, method) batching group to the least-loaded
@@ -86,10 +91,11 @@ use crate::coordinator::policy::ConvergenceBook;
 use crate::coordinator::protocol::{self, Request};
 use crate::coordinator::router::Router;
 use crate::coordinator::server::conn::EdgeStats;
-use crate::coordinator::server::pool::{Completion, GroupSlot, PendingSample, Pool, PoolState, Work, EVAL_LOAD};
+use crate::coordinator::server::pool::{GroupSlot, PendingSample, Pool, PoolState, Work, EVAL_LOAD};
 use crate::coordinator::server::worker::{worker_loop, WorkerHandle, WorkerShared};
 use crate::runtime::artifact::Manifest;
 use crate::substrate::json::Value;
+use crate::substrate::readiness::Waker;
 use anyhow::{Context, Result};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener};
@@ -108,17 +114,24 @@ pub struct ServerHandle {
     tx: mpsc::Sender<Msg>,
     stop: Arc<AtomicBool>,
     dispatch_join: Option<std::thread::JoinHandle<()>>,
-    accept_join: Option<std::thread::JoinHandle<()>>,
+    conn_joins: Vec<std::thread::JoinHandle<()>>,
+    /// Per-shard readiness wakers: fired after `stop` is set so every
+    /// shard's `wait` returns immediately instead of sleeping out its
+    /// idle tick.
+    conn_wakers: Vec<Arc<dyn Waker>>,
 }
 
 impl ServerHandle {
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         let _ = self.tx.send(Msg::Shutdown);
+        for w in &self.conn_wakers {
+            w.wake();
+        }
         if let Some(j) = self.dispatch_join.take() {
             let _ = j.join();
         }
-        if let Some(j) = self.accept_join.take() {
+        for j in self.conn_joins.drain(..) {
             let _ = j.join();
         }
     }
@@ -128,6 +141,9 @@ impl Drop for ServerHandle {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
         let _ = self.tx.send(Msg::Shutdown);
+        for w in &self.conn_wakers {
+            w.wake();
+        }
     }
 }
 
@@ -189,7 +205,7 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
     }
 
     // Dispatcher: owns the request channel and the group routing table.
-    let edge = Arc::new(EdgeStats::default());
+    let edge = Arc::new(EdgeStats::new(cfg.readiness.resolve().label(), cfg.conn_threads));
     let pool2 = Arc::clone(&pool);
     let placement2 = Arc::clone(&placement);
     let book2 = Arc::clone(&book);
@@ -198,19 +214,12 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
         .name("predsamp-dispatch".into())
         .spawn(move || dispatch_loop(manifest, workers, pool2, rx, placement2, book2, edge2))?;
 
-    // The connection plane: one event-loop thread owning every socket
-    // (accept, read, parse, dispatch, write), with engine replies routed
-    // back to it over the completion channel.
-    let (ctx, crx) = mpsc::channel::<Completion>();
-    let stop2 = Arc::clone(&stop);
-    let tx2 = tx.clone();
-    let cfg2 = cfg.clone();
-    let edge2 = Arc::clone(&edge);
-    let accept_join = std::thread::Builder::new()
-        .name("predsamp-conn".into())
-        .spawn(move || conn::conn_loop(listener, cfg2, tx2, crx, ctx, stop2, edge2))?;
+    // The connection plane: `cfg.conn_threads` event-loop shards, each
+    // owning its connections, readiness source, and completion channel;
+    // shard 0 accepts and round-robins sockets to the fleet.
+    let (conn_joins, conn_wakers) = conn::spawn_shards(listener, &cfg, &tx, &stop, &edge).context("spawning connection shards")?;
 
-    Ok(ServerHandle { addr, tx, stop, dispatch_join: Some(dispatch_join), accept_join: Some(accept_join) })
+    Ok(ServerHandle { addr, tx, stop, dispatch_join: Some(dispatch_join), conn_joins, conn_wakers })
 }
 
 // ---------------------------------------------------------------------------

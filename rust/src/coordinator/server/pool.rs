@@ -6,6 +6,7 @@
 use crate::coordinator::config::Method;
 use crate::coordinator::placement::PlacementPolicy;
 use crate::coordinator::protocol;
+use crate::substrate::readiness::Waker;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -14,14 +15,18 @@ use std::time::Instant;
 pub(crate) type GroupKey = (String, Method);
 
 /// One finished (or streamed) piece of a request's answer, routed from
-/// an engine worker or the dispatcher back to the connection plane's
-/// event loop, which appends the bytes to the owning connection's
-/// outbound queue. mpsc FIFO ordering guarantees a request's stream
-/// events hit the wire before its final reply.
+/// an engine worker or the dispatcher back to the connection shard that
+/// owns the request's connection, which appends the bytes to that
+/// connection's outbound queue. mpsc FIFO ordering guarantees a
+/// request's stream events hit the wire before its final reply.
 pub(crate) struct Completion {
-    /// Connection the reply belongs to (event-loop connection id).
+    /// Connection shard that owns `conn`. The channel the completion
+    /// travels on already targets that shard; the index rides along for
+    /// logs and delivery assertions.
+    pub(crate) shard: usize,
+    /// Connection the reply belongs to (shard-assigned connection id).
     pub(crate) conn: u64,
-    /// The request's globally unique in-flight sequence number.
+    /// The request's in-flight sequence number (unique per shard).
     pub(crate) seq: u64,
     /// Wire bytes: the JSON line (newline included) plus any binary frame.
     pub(crate) bytes: Vec<u8>,
@@ -29,14 +34,34 @@ pub(crate) struct Completion {
     pub(crate) last: bool,
 }
 
+/// Sender half of one shard's completion channel, paired with that
+/// shard's readiness waker: a completion sent from an engine thread
+/// interrupts the shard's `wait` instantly instead of waiting out the
+/// idle tick. The message is enqueued before the wake fires, so a woken
+/// shard always finds it.
+#[derive(Clone)]
+pub(crate) struct CompletionTx {
+    pub(crate) tx: mpsc::Sender<Completion>,
+    pub(crate) waker: Arc<dyn Waker>,
+}
+
+impl CompletionTx {
+    pub(crate) fn send(&self, c: Completion) -> Result<(), mpsc::SendError<Completion>> {
+        self.tx.send(c)?;
+        self.waker.wake();
+        Ok(())
+    }
+}
+
 /// Reply handle carried by every queued request: where the answer goes
-/// (connection + sequence number on the completion channel) and how the
-/// client asked for it delivered (id echo, streaming, binary framing).
-/// `send` keeps the old `mpsc::Sender<String>` call shape so the engine
-/// paths read unchanged.
+/// (shard + connection + sequence number on the owning shard's
+/// completion channel) and how the client asked for it delivered (id
+/// echo, streaming, binary framing). `send` keeps the old
+/// `mpsc::Sender<String>` call shape so the engine paths read unchanged.
 #[derive(Clone)]
 pub(crate) struct Reply {
-    pub(crate) tx: mpsc::Sender<Completion>,
+    pub(crate) tx: CompletionTx,
+    pub(crate) shard: usize,
     pub(crate) conn: u64,
     pub(crate) seq: u64,
     pub(crate) id: Option<u64>,
@@ -55,7 +80,7 @@ impl Reply {
         if let Some(f) = frame {
             bytes.extend_from_slice(&f);
         }
-        self.tx.send(Completion { conn: self.conn, seq: self.seq, bytes, last })
+        self.tx.send(Completion { shard: self.shard, conn: self.conn, seq: self.seq, bytes, last })
     }
 
     /// Send the final reply line (id echoed, no binary frame).
@@ -78,7 +103,8 @@ impl Reply {
     pub(crate) fn discard() -> Reply {
         let (tx, rx) = mpsc::channel();
         drop(rx);
-        Reply { tx, conn: 0, seq: 0, id: None, stream: false, frame: false }
+        let tx = CompletionTx { tx, waker: Arc::new(crate::substrate::readiness::NoopWaker) };
+        Reply { tx, shard: 0, conn: 0, seq: 0, id: None, stream: false, frame: false }
     }
 }
 

@@ -2,7 +2,9 @@
 //! plus `Metrics`, claims work from the shared pool, runs batching
 //! windows, and keeps the placement plane's residency promises —
 //! enforcing the per-worker engine cap and publishing the resident-model
-//! / engine-load / eviction gauges the dispatcher snapshots.
+//! / engine-load / eviction gauges the dispatcher snapshots. Replies go
+//! out through each request's [`Reply`] handle, which targets (and
+//! wakes) the connection shard that owns the requesting socket.
 
 use crate::coordinator::config::{Method, ServeConfig};
 use crate::coordinator::metrics::Metrics;

@@ -21,6 +21,7 @@ use predsamp::coordinator::server;
 use predsamp::runtime::artifact::Manifest;
 use predsamp::sampler::forecast;
 use predsamp::substrate::cli::Args;
+use predsamp::substrate::readiness::ReadinessKind;
 use predsamp::substrate::timer::fmt_duration;
 
 const USAGE: &str = "predsamp — Predictive Sampling with Forecasting Autoregressive Models (ICML 2020)
@@ -33,7 +34,8 @@ COMMANDS
   sample   --model M [--method fpi|baseline|zeros|last|forecast|noreparam]
            [--batch N] [--seed S] [--t-use T] [--ppm out.ppm]
   serve    [--addr 127.0.0.1:7199] [--max-batch 32] [--max-wait-ms 20] [--sync]
-           [--engine-threads 2] [--worker-threads 4] [--no-elastic] [--no-steal]
+           [--engine-threads 2] [--conn-threads 1] [--readiness auto|scan|epoll]
+           [--no-elastic] [--no-steal]
            [--policy occupancy|latency|slo] [--slo-ms 50] [--absorb-budget N]
            [--placement replicate|pinned|capped] [--pin model=0,2 ...]
            [--max-engines N] [--reply-timeout-ms 600000] [--max-line-len BYTES]
@@ -136,6 +138,15 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         }
         "serve" => {
             let d = ServeConfig::default();
+            // `worker_threads` used to be accepted (and silently ignored by
+            // the single-threaded edge); now that the connection plane really
+            // is multi-threaded the knob has an honest name.
+            if args.flag("worker-threads") {
+                bail!("--worker-threads was retired: the edge is a sharded event loop now; use --conn-threads N (connection shards) and --engine-threads N (engine workers)");
+            }
+            let readiness_name = args.get("readiness", d.readiness.label());
+            let readiness =
+                ReadinessKind::parse(&readiness_name).ok_or_else(|| anyhow!("unknown --readiness {readiness_name:?} (auto|scan|epoll)"))?;
             let policy_name = args.get("policy", d.policy.label());
             let policy = PolicyKind::parse(&policy_name).ok_or_else(|| anyhow!("unknown --policy {policy_name:?} (occupancy|latency|slo)"))?;
             let admission = match args.opt("absorb-budget") {
@@ -182,7 +193,8 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 continuous: !args.flag("sync"),
                 elastic: !args.flag("no-elastic"),
                 steal: !args.flag("no-steal"),
-                worker_threads: args.num::<usize>("worker-threads", d.worker_threads),
+                conn_threads: args.num::<usize>("conn-threads", d.conn_threads),
+                readiness,
                 engine_threads: args.num::<usize>("engine-threads", d.engine_threads),
                 policy,
                 slo: std::time::Duration::from_millis(args.num::<u64>("slo-ms", d.slo.as_millis() as u64)),

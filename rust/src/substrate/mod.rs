@@ -5,14 +5,16 @@
 //! at the scale this project needs: [`rng`] (rand), [`json`] (serde_json),
 //! [`cli`] (clap), [`stats`]/[`timer`] (criterion internals),
 //! [`threadpool`] (tokio's blocking pool), [`proptest_lite`] (proptest),
-//! plus domain substrates [`gumbel`] (reparametrization noise) and
-//! [`image`] (PPM figure output).
+//! [`readiness`] (mio's poll/epoll core, as inline FFI), plus domain
+//! substrates [`gumbel`] (reparametrization noise) and [`image`] (PPM
+//! figure output).
 
 pub mod cli;
 pub mod gumbel;
 pub mod image;
 pub mod json;
 pub mod proptest_lite;
+pub mod readiness;
 pub mod rng;
 pub mod stats;
 pub mod tensor;

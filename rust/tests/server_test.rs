@@ -9,6 +9,7 @@ use predsamp::coordinator::policy::{AdmissionKind, PolicyKind};
 use predsamp::coordinator::server::{spawn, Client, ServerHandle};
 use predsamp::runtime::artifact::{write_mock_manifest, MockModelSpec};
 use predsamp::substrate::json::Value;
+use predsamp::substrate::readiness::ReadinessKind;
 use std::time::Duration;
 
 fn server() -> Option<ServerHandle> {
@@ -24,7 +25,6 @@ fn server() -> Option<ServerHandle> {
         continuous: true,
         elastic: true,
         steal: true,
-        worker_threads: 4,
         engine_threads: 2,
         ..ServeConfig::default()
     };
@@ -56,7 +56,6 @@ fn spawn_mock_cfg(tag: &str, engine_threads: usize, continuous: bool, elastic: b
         continuous,
         elastic,
         steal,
-        worker_threads: 4,
         engine_threads,
         ..ServeConfig::default()
     };
@@ -777,22 +776,12 @@ fn backpressured_connection_does_not_stall_others() {
 
 #[test]
 fn many_concurrent_connections_match_sequential_bitwise() {
-    // The many-connections acceptance gate: 256 concurrent clients on the
-    // single event-loop thread, mixing plain, streamed, and framed
-    // delivery, all bitwise-identical to the same requests issued one at
-    // a time over one connection.
+    // The many-connections acceptance gate, run over the full readiness ×
+    // sharding matrix: 256 concurrent clients, mixing plain, streamed,
+    // and framed delivery, must be bitwise-identical to the same requests
+    // issued one at a time over one connection — under every supported
+    // readiness backend and under both 1 and 4 connection shards.
     const N: usize = 256;
-    let cfg = ServeConfig {
-        addr: "127.0.0.1:0".into(),
-        max_batch: 16,
-        max_wait: Duration::from_millis(2),
-        continuous: true,
-        elastic: true,
-        steal: true,
-        engine_threads: 2,
-        ..ServeConfig::default()
-    };
-    let server = spawn_mock_with("many", cfg);
     let req = |i: usize| {
         let model = if i % 2 == 0 { "mock_a" } else { "mock_b" };
         let method = if i % 3 == 0 { "fpi" } else { "zeros" };
@@ -803,32 +792,78 @@ fn many_concurrent_connections_match_sequential_bitwise() {
         };
         format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":2,"seed":{i},"id":{i}{opt}}}"#)
     };
-    let mut clients: Vec<Client> = (0..N).map(|_| Client::connect(&server.addr).unwrap()).collect();
-    for (i, c) in clients.iter_mut().enumerate() {
-        c.send_line(&req(i)).unwrap();
-    }
-    let mut finals = Vec::with_capacity(N);
-    for (i, c) in clients.iter_mut().enumerate() {
-        loop {
-            let m = c.read_message().unwrap();
-            if m.get("stream").as_bool() == Some(true) {
-                continue;
+    let mut reference: Option<Vec<Vec<Vec<i32>>>> = None;
+    for kind in [ReadinessKind::Scan, ReadinessKind::Epoll] {
+        if !kind.supported() {
+            continue;
+        }
+        for conn_threads in [1usize, 4] {
+            let combo = format!("{}x{conn_threads}", kind.label());
+            let cfg = ServeConfig {
+                addr: "127.0.0.1:0".into(),
+                max_batch: 16,
+                max_wait: Duration::from_millis(2),
+                continuous: true,
+                elastic: true,
+                steal: true,
+                engine_threads: 2,
+                conn_threads,
+                readiness: kind,
+                ..ServeConfig::default()
+            };
+            let server = spawn_mock_with(&format!("many-{combo}"), cfg);
+            let mut clients: Vec<Client> = (0..N).map(|_| Client::connect(&server.addr).unwrap()).collect();
+            for (i, c) in clients.iter_mut().enumerate() {
+                c.send_line(&req(i)).unwrap();
             }
-            assert_eq!(m.get("id").as_i64(), Some(i as i64), "reply routed to the wrong connection: {m}");
-            finals.push(samples_of(&m));
-            break;
+            let mut finals = Vec::with_capacity(N);
+            for (i, c) in clients.iter_mut().enumerate() {
+                loop {
+                    let m = c.read_message().unwrap();
+                    if m.get("stream").as_bool() == Some(true) {
+                        continue;
+                    }
+                    assert_eq!(m.get("id").as_i64(), Some(i as i64), "[{combo}] reply routed to the wrong connection: {m}");
+                    finals.push(samples_of(&m));
+                    break;
+                }
+            }
+            drop(clients);
+            let mut c = Client::connect(&server.addr).unwrap();
+            // The sequential reference is computed once (first combo) and
+            // shared: every backend/shard topology must agree with it.
+            let reference = reference.get_or_insert_with(|| (0..N).map(|i| samples_of(&c.call(&req(i)).unwrap())).collect());
+            for (i, got) in finals.iter().enumerate() {
+                assert_eq!(got, &reference[i], "[{combo}] connection {i} samples diverged from the sequential path");
+            }
+            let m = c.call(r#"{"op":"metrics"}"#).unwrap();
+            let edge = m.get("metrics").get("edge");
+            assert_eq!(edge.get("readiness").as_str(), Some(kind.label()), "{m}");
+            assert_eq!(edge.get("conn_threads").as_i64(), Some(conn_threads as i64), "{m}");
+            assert_eq!(edge.get("shards").as_arr().unwrap().len(), conn_threads, "{m}");
+            assert!(edge.get("total_conns").as_i64().unwrap() >= (N as i64) + 1, "{m}");
+            assert!(edge.get("bytes_in").as_i64().unwrap() > 0 && edge.get("bytes_out").as_i64().unwrap() > 0, "{m}");
+            server.stop();
         }
     }
-    drop(clients);
-    let mut c = Client::connect(&server.addr).unwrap();
-    for (i, got) in finals.iter().enumerate() {
-        let reference = samples_of(&c.call(&req(i)).unwrap());
-        assert_eq!(got, &reference, "connection {i} samples diverged from the sequential path");
-    }
-    let m = c.call(r#"{"op":"metrics"}"#).unwrap();
-    let edge = m.get("metrics").get("edge");
-    assert!(edge.get("total_conns").as_i64().unwrap() >= (N as i64) + 1, "{m}");
-    assert!(edge.get("bytes_in").as_i64().unwrap() > 0 && edge.get("bytes_out").as_i64().unwrap() > 0, "{m}");
+    assert!(reference.is_some(), "at least the scan backend must have run");
+}
+
+#[test]
+fn crlf_terminated_requests_are_served() {
+    // Windows-style line endings: a `\r\n`-terminated request must parse
+    // exactly like its `\n` twin — the edge strips the `\r` before the
+    // JSON parser ever sees it.
+    let server = spawn_mock("crlf", 1, true);
+    let mut s = std::net::TcpStream::connect(server.addr).unwrap();
+    std::io::Write::write_all(&mut s, b"{\"op\":\"ping\",\"id\":3}\r\n").unwrap();
+    let mut reader = std::io::BufReader::new(s);
+    let mut resp = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut resp).unwrap();
+    let v = predsamp::substrate::json::parse(resp.trim()).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(true), "CRLF request must be served: {v}");
+    assert_eq!(v.get("pong").as_bool(), Some(true), "{v}");
+    assert_eq!(v.get("id").as_i64(), Some(3), "{v}");
     server.stop();
 }
 

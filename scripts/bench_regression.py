@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Bench-regression check: diff fresh bench JSON against checked-in baselines.
+
+Usage:
+    python3 scripts/bench_regression.py [--fresh-dir DIR] [--baseline-dir DIR]
+                                        [--proposed-dir DIR]
+
+For each benchmark result (BENCH_sampler_hotpath.json,
+BENCH_serving_load.json), freshly written by the bench steps:
+
+* Baseline missing, or a ``{"bootstrap": true}`` placeholder -> print a
+  notice and pass. The fresh JSON is staged under the proposed dir either
+  way (CI uploads it as the ``bench-baselines-proposed`` artifact);
+  committing a proposed file over the placeholder blesses it as the real
+  baseline.
+* Real baseline -> the fresh result must be a *structural superset*: every
+  key path present in the baseline must exist in the fresh run, with the
+  same JSON type. A scenario or gauge that silently vanished fails the
+  job. Every shared numeric leaf is printed as a delta table; wall-clock
+  and throughput numbers are informational only (CI machines are far too
+  noisy to gate on time) -- the hard perf gates live *inside* the benches
+  as structural assertions (pinning loads < replicate loads, epoll
+  ready/tick < scan ready/tick, streamed TTFS < group-close).
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+BENCHES = ["BENCH_sampler_hotpath.json", "BENCH_serving_load.json"]
+
+
+def flatten(value, prefix=""):
+    """Yield (path, leaf) pairs; lists index by position."""
+    if isinstance(value, dict):
+        for key in sorted(value):
+            yield from flatten(value[key], f"{prefix}.{key}" if prefix else key)
+    elif isinstance(value, list):
+        for i, item in enumerate(value):
+            yield from flatten(item, f"{prefix}[{i}]")
+    else:
+        yield prefix, value
+
+
+def json_type(leaf):
+    if isinstance(leaf, bool):
+        return "bool"
+    if isinstance(leaf, (int, float)):
+        return "number"
+    if leaf is None:
+        return "null"
+    return "string"
+
+
+def compare(name, baseline, fresh):
+    """Return the number of structural regressions, printing as it goes."""
+    base_leaves = dict(flatten(baseline))
+    fresh_leaves = dict(flatten(fresh))
+    regressions = 0
+    for path, base_leaf in base_leaves.items():
+        if path not in fresh_leaves:
+            print(f"  REGRESSION {name}: baseline path {path!r} missing from the fresh run")
+            regressions += 1
+        elif json_type(base_leaf) != json_type(fresh_leaves[path]):
+            print(
+                f"  REGRESSION {name}: {path!r} changed type "
+                f"{json_type(base_leaf)} -> {json_type(fresh_leaves[path])}"
+            )
+            regressions += 1
+    shown = 0
+    for path, base_leaf in base_leaves.items():
+        fresh_leaf = fresh_leaves.get(path)
+        if isinstance(base_leaf, (int, float)) and not isinstance(base_leaf, bool) and isinstance(fresh_leaf, (int, float)):
+            delta = fresh_leaf - base_leaf
+            pct = f"{100.0 * delta / base_leaf:+.1f}%" if base_leaf else "n/a"
+            print(f"  {name}: {path:<60} {base_leaf:>14.6g} -> {fresh_leaf:>14.6g}  ({pct})")
+            shown += 1
+    if not shown:
+        print(f"  {name}: no shared numeric leaves to diff")
+    return regressions
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh-dir", default=".", help="where the bench steps wrote their JSON")
+    ap.add_argument("--baseline-dir", default="benches/baselines", help="checked-in baselines")
+    ap.add_argument("--proposed-dir", default="bench-baselines-proposed", help="staging dir for fresh results")
+    args = ap.parse_args()
+
+    os.makedirs(args.proposed_dir, exist_ok=True)
+    failures = 0
+    for bench in BENCHES:
+        fresh_path = os.path.join(args.fresh_dir, bench)
+        baseline_path = os.path.join(args.baseline_dir, bench)
+        if not os.path.exists(fresh_path):
+            print(f"  REGRESSION {bench}: fresh result was never written (bench step failed?)")
+            failures += 1
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        shutil.copy(fresh_path, os.path.join(args.proposed_dir, bench))
+        if not os.path.exists(baseline_path):
+            print(f"  NOTICE {bench}: no baseline at {baseline_path}; staged the fresh run as a proposed baseline")
+            continue
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+        if baseline.get("bootstrap") is True:
+            print(f"  NOTICE {bench}: baseline is a bootstrap placeholder; commit the proposed file to bless it")
+            continue
+        failures += compare(bench, baseline, fresh)
+    if failures:
+        print(f"bench regression check: {failures} structural regression(s)")
+        return 1
+    print(f"bench regression check: ok ({len(BENCHES)} benches; proposed baselines staged in {args.proposed_dir}/)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
