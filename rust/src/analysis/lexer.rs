@@ -1,0 +1,324 @@
+//! A lightweight Rust lexer for static analysis.
+//!
+//! This is *not* a full Rust lexer — it is exactly enough tokenizer to
+//! make lexical lint passes sound: identifiers never match inside string
+//! literals, `unsafe` inside a doc comment is a comment token, nested
+//! block comments terminate where rustc says they do, and `'a` (lifetime)
+//! is distinguished from `'a'` (char literal). Everything the passes key
+//! on — identifier sequences, punctuation, comment text — survives with
+//! line numbers attached; everything else (numeric suffixes, keyword
+//! classification) is deliberately left coarse.
+
+/// What kind of lexeme a [`Tok`] is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `HashMap`, `foo`).
+    Ident,
+    /// Numeric literal (coarse: digits plus trailing alphanumerics).
+    Num,
+    /// String literal — plain, raw, byte, or raw-byte. Text excludes quotes.
+    Str,
+    /// Character literal, escapes included (text excludes quotes).
+    Char,
+    /// Lifetime such as `'a` (text excludes the tick).
+    Lifetime,
+    /// `//`-style comment; text is everything after the slashes, trimmed.
+    LineComment,
+    /// `/* */`-style comment (nesting handled); text excludes delimiters.
+    BlockComment,
+    /// Single punctuation character (`.`, `:`, `{`, `!`, ...).
+    Punct(char),
+}
+
+/// One token with its 1-indexed source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Lexeme class.
+    pub kind: TokKind,
+    /// Lexeme text (see [`TokKind`] for what is included per kind).
+    pub text: String,
+    /// 1-indexed line the token *starts* on.
+    pub line: u32,
+}
+
+impl Tok {
+    /// True if this token is an identifier with exactly this text.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// True if this token is the given punctuation character.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+
+    /// True for either comment kind.
+    pub fn is_comment(&self) -> bool {
+        matches!(self.kind, TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+/// Tokenize `src`. Never fails: unterminated literals and stray bytes
+/// degrade to best-effort tokens so a half-edited file still lints.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { chars: src.chars().collect(), pos: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    out: Vec<Tok>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, kind: TokKind, text: String, line: u32) {
+        self.out.push(Tok { kind, text, line });
+    }
+
+    fn run(mut self) -> Vec<Tok> {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            match c {
+                c if c.is_whitespace() => {
+                    self.bump();
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(line),
+                '/' if self.peek(1) == Some('*') => self.block_comment(line),
+                '"' => self.string(line),
+                '\'' => self.char_or_lifetime(line),
+                'r' | 'b' if self.string_prefix_len() > 0 => {
+                    let skip = self.string_prefix_len();
+                    let raw = (0..skip).any(|i| self.peek(i) == Some('r'));
+                    for _ in 0..skip {
+                        self.bump();
+                    }
+                    if raw {
+                        self.raw_string(line); // raw strings have no escapes, `#`-delimited or not
+                    } else {
+                        self.string(line); // b"..." escapes like a plain string
+                    }
+                }
+                c if c.is_alphabetic() || c == '_' => self.ident(line),
+                c if c.is_ascii_digit() => self.number(line),
+                _ => {
+                    self.bump();
+                    self.push(TokKind::Punct(c), c.to_string(), line);
+                }
+            }
+        }
+        self.out
+    }
+
+    /// Length of a string-literal prefix (`r`, `b`, `br`, `rb`) at the
+    /// cursor, counting only the letters — 0 if the letters start a plain
+    /// identifier instead. `r#"` raw strings keep their hashes for
+    /// [`raw_string`] to count.
+    fn string_prefix_len(&self) -> usize {
+        let mut n = 0;
+        while let Some(c) = self.peek(n) {
+            if (c == 'r' || c == 'b') && n < 2 {
+                n += 1;
+            } else {
+                break;
+            }
+        }
+        let mut after = n;
+        let saw_raw = (0..n).any(|i| self.peek(i) == Some('r'));
+        if saw_raw {
+            while self.peek(after) == Some('#') {
+                after += 1;
+            }
+        }
+        if n > 0 && self.peek(after) == Some('"') && (saw_raw || after == n) {
+            n
+        } else {
+            0
+        }
+    }
+
+    fn line_comment(&mut self, line: u32) {
+        self.bump();
+        self.bump();
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.push(TokKind::LineComment, text.trim().to_string(), line);
+    }
+
+    fn block_comment(&mut self, line: u32) {
+        self.bump();
+        self.bump();
+        let mut depth = 1usize;
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                text.push_str("/*");
+                self.bump();
+                self.bump();
+            } else if c == '*' && self.peek(1) == Some('/') {
+                self.bump();
+                self.bump();
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+                text.push_str("*/");
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.push(TokKind::BlockComment, text.trim().to_string(), line);
+    }
+
+    fn string(&mut self, line: u32) {
+        self.bump(); // opening quote
+        let mut text = String::new();
+        while let Some(c) = self.bump() {
+            match c {
+                '\\' => {
+                    text.push(c);
+                    if let Some(e) = self.bump() {
+                        text.push(e);
+                    }
+                }
+                '"' => break,
+                _ => text.push(c),
+            }
+        }
+        self.push(TokKind::Str, text, line);
+    }
+
+    fn raw_string(&mut self, line: u32) {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        let mut text = String::new();
+        'outer: while let Some(c) = self.bump() {
+            if c == '"' {
+                // A raw string ends at `"` followed by exactly `hashes` `#`s.
+                for i in 0..hashes {
+                    if self.peek(i) != Some('#') {
+                        text.push('"');
+                        continue 'outer;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            text.push(c);
+        }
+        self.push(TokKind::Str, text, line);
+    }
+
+    fn char_or_lifetime(&mut self, line: u32) {
+        self.bump(); // tick
+        match self.peek(0) {
+            Some('\\') => {
+                // Escaped char literal: consume through the closing tick.
+                let mut text = String::new();
+                while let Some(c) = self.bump() {
+                    if c == '\\' {
+                        text.push(c);
+                        if let Some(e) = self.bump() {
+                            text.push(e);
+                        }
+                    } else if c == '\'' {
+                        break;
+                    } else {
+                        text.push(c);
+                    }
+                }
+                self.push(TokKind::Char, text, line);
+            }
+            Some(c) if c.is_alphanumeric() || c == '_' => {
+                let mut name = String::new();
+                let mut n = 0;
+                while let Some(k) = self.peek(n) {
+                    if k.is_alphanumeric() || k == '_' {
+                        name.push(k);
+                        n += 1;
+                    } else {
+                        break;
+                    }
+                }
+                if self.peek(n) == Some('\'') {
+                    // 'x' — char literal (single scalar, then closing tick).
+                    self.bump();
+                    for _ in 0..n {
+                        self.bump();
+                    }
+                    self.push(TokKind::Char, name, line);
+                } else {
+                    // 'a — lifetime (no closing tick).
+                    for _ in 0..n {
+                        self.bump();
+                    }
+                    self.push(TokKind::Lifetime, name, line);
+                }
+            }
+            Some(other) => {
+                // `'{' `-style single-char literal with punctuation inside.
+                self.bump();
+                if self.peek(0) == Some('\'') {
+                    self.bump();
+                }
+                self.push(TokKind::Char, other.to_string(), line);
+            }
+            None => self.push(TokKind::Punct('\''), "'".to_string(), line),
+        }
+    }
+
+    fn ident(&mut self, line: u32) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(TokKind::Ident, text, line);
+    }
+
+    fn number(&mut self, line: u32) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                text.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(TokKind::Num, text, line);
+    }
+}

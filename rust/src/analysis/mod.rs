@@ -1,0 +1,52 @@
+//! # `predsamp-lint` — repo-aware static analysis
+//!
+//! The repo's invariants (bitwise exactness, quarantined `unsafe`,
+//! panic-free shard/worker loops, one global lock order, docs that match
+//! the code) were policed dynamically — by A/B tests — or by eyeball.
+//! This module encodes them as five lexical lint passes that run offline
+//! with zero dependencies beyond `std`, via `cargo run --bin lint`:
+//!
+//! * [`passes::unsafe_audit`] — `unsafe` only in allowlisted FFI modules,
+//!   every site justified by a `// SAFETY:` comment.
+//! * [`passes::nondet`] — no `HashMap`/`HashSet`, wall-clock reads, or
+//!   ambient RNG in exactness-critical modules.
+//! * [`passes::panic_guard`] — no `.unwrap()`/`.expect(...)`/`panic!` in
+//!   the connection plane or worker loops.
+//! * [`passes::lock_order`] — nested acquisitions respect the declared
+//!   lock-order manifest.
+//! * [`passes::doc_parity`] — `ServeConfig` fields are in the
+//!   ARCHITECTURE.md knob table *and* parsed by the CLI; emitted
+//!   `metrics`/`edge` keys are in PROTOCOL.md.
+//!
+//! Deliberate violations are escaped inline with
+//! `// lint:allow(<pass>): <reason>` on or directly above the offending
+//! line; the allow-hygiene check rejects escapes with no written reason.
+//! `docs/ANALYSIS.md` documents each pass, the escape grammar, and how
+//! to add a pass.
+//!
+//! The machinery is deliberately layered so fixture tests can drive each
+//! piece alone: [`lexer`] (tokens that never match inside strings or
+//! comments), [`source`] (a lexed file plus its annotations and test
+//! regions), [`walker`] (deterministic file discovery), [`passes`] (the
+//! rules), [`report`] (text + JSON rendering).
+
+pub mod lexer;
+pub mod passes;
+pub mod report;
+pub mod source;
+pub mod walker;
+
+use passes::Ctx;
+use report::Report;
+use std::path::Path;
+
+/// Lint the repo rooted at `root`: walk `rust/src`, run every pass, and
+/// return the sorted report.
+pub fn lint_repo(root: &Path) -> Report {
+    let files = walker::rust_sources(root);
+    let mut findings = Vec::new();
+    passes::run_all(&Ctx { files: &files, root }, &mut findings);
+    let mut report = Report { findings, files_scanned: files.len(), passes: passes::PASS_NAMES.to_vec() };
+    report.sort();
+    report
+}

@@ -1,0 +1,120 @@
+//! **doc-parity** — the documented surface and the code surface are the
+//! same surface.
+//!
+//! Three checks, replacing the sed/grep gate that used to live inline in
+//! `ci.yml`:
+//!
+//! 1. Every `ServeConfig` field (parsed from
+//!    `rust/src/coordinator/config.rs`) appears backticked in
+//!    `docs/ARCHITECTURE.md`'s knob table.
+//! 2. Every `ServeConfig` field is actually parsed by the CLI — it must
+//!    appear as an identifier in `rust/src/main.rs` (the `serve` arm
+//!    builds the struct field-by-field, so a field the CLI forgot shows
+//!    up as a missing identifier, not a silent default).
+//! 3. Every `metrics`/`edge` key the server can emit — string keys in
+//!    `Metrics::snapshot`, `Metrics::worker_value` (`metrics.rs`),
+//!    `EdgeStats::value` (`conn.rs`), and `metrics_response` (`mod.rs`)
+//!    — appears in `docs/PROTOCOL.md`, quoted or backticked.
+//!
+//! Key extraction is lexical: a string literal directly after `(` and
+//! followed by `,` (the `("key", Value::...)` tuple idiom) or directly
+//! after `insert(` (the `obj.insert("key".into(), ...)` idiom), scanned
+//! only inside the named function bodies.
+
+use crate::analysis::lexer::TokKind;
+use crate::analysis::passes::Ctx;
+use crate::analysis::report::Finding;
+use crate::analysis::source::SourceFile;
+use std::fs;
+
+/// Pass name, as used in `lint:allow(...)`.
+pub const NAME: &str = "doc-parity";
+
+const CONFIG: &str = "rust/src/coordinator/config.rs";
+const MAIN: &str = "rust/src/main.rs";
+/// (file, functions whose bodies emit metrics/edge keys)
+const KEY_SOURCES: &[(&str, &[&str])] = &[
+    ("rust/src/coordinator/metrics.rs", &["snapshot", "worker_value"]),
+    ("rust/src/coordinator/server/conn.rs", &["value"]),
+    ("rust/src/coordinator/server/mod.rs", &["metrics_response"]),
+];
+
+/// Run the pass.
+pub fn run(ctx: &Ctx, out: &mut Vec<Finding>) {
+    let find = |path: &str| ctx.files.iter().find(|f| f.path == path);
+
+    let arch = fs::read_to_string(ctx.root.join("docs/ARCHITECTURE.md")).unwrap_or_default();
+    let proto = fs::read_to_string(ctx.root.join("docs/PROTOCOL.md")).unwrap_or_default();
+
+    // 1 + 2: ServeConfig fields vs knob table and CLI.
+    if let Some(cfg) = find(CONFIG) {
+        let fields = cfg.struct_fields("ServeConfig");
+        if fields.is_empty() {
+            out.push(Finding::new(NAME, CONFIG, 1, "could not extract any ServeConfig fields — doc-parity is blind"));
+        }
+        let main_idents: Vec<&str> = find(MAIN)
+            .map(|m| m.toks.iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str()).collect())
+            .unwrap_or_default();
+        for (field, line) in fields {
+            if cfg.allowed(NAME, line) {
+                continue;
+            }
+            if !arch.contains(&format!("`{field}`")) {
+                out.push(Finding::new(NAME, CONFIG, line, format!("ServeConfig::{field} is not documented in docs/ARCHITECTURE.md's knob table")));
+            }
+            if !main_idents.contains(&field.as_str()) {
+                out.push(Finding::new(NAME, CONFIG, line, format!("ServeConfig::{field} is never parsed by the CLI (rust/src/main.rs)")));
+            }
+        }
+    } else {
+        out.push(Finding::new(NAME, CONFIG, 1, "config.rs not found — doc-parity is blind"));
+    }
+
+    // 3: emitted metrics/edge keys vs PROTOCOL.md.
+    for &(path, fns) in KEY_SOURCES {
+        let Some(file) = find(path) else {
+            out.push(Finding::new(NAME, path, 1, "metrics key source not found — doc-parity is blind"));
+            continue;
+        };
+        for &func in fns {
+            let Some((lo, hi)) = file.fn_body(func) else {
+                out.push(Finding::new(NAME, path, 1, format!("fn {func} not found — doc-parity is blind")));
+                continue;
+            };
+            for (key, line) in emitted_keys(file, lo, hi) {
+                if file.allowed(NAME, line) {
+                    continue;
+                }
+                if !proto.contains(&format!("\"{key}\"")) && !proto.contains(&format!("`{key}`")) {
+                    let msg = format!("metrics key \"{key}\" (emitted by {func}) is not documented in docs/PROTOCOL.md");
+                    out.push(Finding::new(NAME, path, line, msg));
+                }
+            }
+        }
+    }
+}
+
+/// String keys emitted between sig-token indices `lo..hi`: `("key",` and
+/// `insert("key"` patterns.
+fn emitted_keys(file: &SourceFile, lo: usize, hi: usize) -> Vec<(String, u32)> {
+    let sig = file.sig();
+    let mut out = Vec::new();
+    for k in lo..hi {
+        let t = &file.toks[sig[k]];
+        if t.kind != TokKind::Str {
+            continue;
+        }
+        let prev = k.checked_sub(1).map(|p| &file.toks[sig[p]]);
+        let prev2 = k.checked_sub(2).map(|p| &file.toks[sig[p]]);
+        let next = sig.get(k + 1).map(|&j| &file.toks[j]);
+        // Keys are snake_case identifiers; that excludes format strings
+        // and message literals that also sit in `(... ,` position.
+        let key_shaped = !t.text.is_empty() && t.text.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+        let tuple_key = prev.is_some_and(|p| p.is_punct('(')) && next.is_some_and(|n| n.is_punct(','));
+        let insert_key = prev.is_some_and(|p| p.is_punct('(')) && prev2.is_some_and(|p| p.is_ident("insert"));
+        if key_shaped && (tuple_key || insert_key) {
+            out.push((t.text.clone(), t.line));
+        }
+    }
+    out
+}

@@ -1,0 +1,170 @@
+//! **lock-discipline** — nested lock acquisitions follow the declared
+//! order.
+//!
+//! The serving stack has a small, fixed set of mutexes; deadlock freedom
+//! rests on every thread acquiring them in one global order. That order
+//! is declared here as a manifest (field name → rank):
+//!
+//! | rank | lock field | owner |
+//! |------|-----------|-------|
+//! | 0 | `state`    | `EnginePool` — queues, routes, generation |
+//! | 1 | `metrics`  | per-worker / dispatcher `Mutex<Metrics>` |
+//! | 2 | `resident` | per-worker resident-model list |
+//! | 3 | `inner`    | `ConvergenceBook` EWMA table |
+//!
+//! The pass tracks, *within one function body*, which manifest locks are
+//! held — `let g = x.state.lock()...` holds `state` until `drop(g)` or
+//! the end of `g`'s enclosing block; an unbound `x.metrics.lock()...`
+//! holds `metrics` until the end of the statement — and flags any
+//! acquisition of a lock ranked **above** one already held (e.g. taking
+//! `state` while holding `metrics`).
+//!
+//! Known limits, by design (this is a lexical tool, not a borrow
+//! checker): tracking is intraprocedural, so a helper that locks `state`
+//! called while `metrics` is held is not seen; guards stored into structs
+//! are treated as dropped at end of statement; `Condvar::wait_timeout`
+//! consuming and re-yielding a guard under the same name is treated as
+//! the same hold. The fixture tests pin the supported shapes.
+
+use crate::analysis::lexer::TokKind;
+use crate::analysis::passes::Ctx;
+use crate::analysis::report::Finding;
+use crate::analysis::source::SourceFile;
+
+/// Pass name, as used in `lint:allow(...)`.
+pub const NAME: &str = "lock-discipline";
+
+/// Lock-order manifest: acquiring `MANIFEST[i]` while holding
+/// `MANIFEST[j]` for `j > i` is a violation.
+pub const MANIFEST: &[&str] = &["state", "metrics", "resident", "inner"];
+
+/// Modules the discipline applies to (where the manifest locks live).
+pub const SCOPED_MODULES: &[&str] = &["rust/src/coordinator/server/", "rust/src/coordinator/policy.rs"];
+
+fn rank(name: &str) -> Option<usize> {
+    MANIFEST.iter().position(|&m| m == name)
+}
+
+#[derive(Debug)]
+struct Held {
+    rank: usize,
+    /// `let` binding name the guard lives in, if any.
+    guard: Option<String>,
+    /// Brace depth at binding time — popped when the block closes.
+    depth: usize,
+    /// Unbound temporaries are released at the end of the statement.
+    stmt_scoped: bool,
+}
+
+/// Run the pass.
+pub fn run(ctx: &Ctx, out: &mut Vec<Finding>) {
+    for file in ctx.files {
+        if !SCOPED_MODULES.iter().any(|m| file.path.starts_with(m)) {
+            continue;
+        }
+        scan_file(file, out);
+    }
+}
+
+fn scan_file(file: &SourceFile, out: &mut Vec<Finding>) {
+    let sig = file.sig();
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth = 0usize;
+    let mut stmt_start = 0usize; // sig index where the current statement began
+    let mut k = 0usize;
+    while k < sig.len() {
+        let t = &file.toks[sig[k]];
+        match t.kind {
+            TokKind::Punct('{') => {
+                depth += 1;
+                stmt_start = k + 1;
+            }
+            TokKind::Punct('}') => {
+                depth = depth.saturating_sub(1);
+                // A function body closed: its bindings die with it.
+                held.retain(|h| h.depth <= depth);
+                // Treat a fully-closed file region as a hard reset so one
+                // function's unmatched braces cannot leak holds into the next.
+                if depth == 0 {
+                    held.clear();
+                }
+                stmt_start = k + 1;
+            }
+            TokKind::Punct(';') => {
+                held.retain(|h| !h.stmt_scoped);
+                stmt_start = k + 1;
+            }
+            TokKind::Ident => {
+                // drop(guard) releases the named hold.
+                if t.text == "drop" && matches(file, &sig, k + 1, &["("]) {
+                    if let Some(g) = sig.get(k + 2).map(|&j| &file.toks[j]) {
+                        if g.kind == TokKind::Ident {
+                            held.retain(|h| h.guard.as_deref() != Some(g.text.as_str()));
+                        }
+                    }
+                }
+                // An acquisition: `<manifest-name> . lock (`.
+                if let Some(r) = rank(&t.text) {
+                    if matches(file, &sig, k + 1, &[".", "lock", "("]) {
+                        if !file.in_test(t.line) && !file.allowed(NAME, t.line) {
+                            for h in &held {
+                                if h.rank > r {
+                                    out.push(Finding::new(
+                                        NAME,
+                                        &file.path,
+                                        t.line,
+                                        format!(
+                                            "lock `{}` acquired while `{}` is held — declared order is {}",
+                                            t.text,
+                                            MANIFEST[h.rank],
+                                            MANIFEST.join(" -> ")
+                                        ),
+                                    ));
+                                }
+                            }
+                        }
+                        let guard = let_binding(file, &sig, stmt_start, k);
+                        held.push(Held { rank: r, stmt_scoped: guard.is_none(), guard, depth });
+                    }
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+}
+
+/// Does the token at `sig[k]` start this sequence of idents/puncts?
+fn matches(file: &SourceFile, sig: &[usize], k: usize, pat: &[&str]) -> bool {
+    pat.iter().enumerate().all(|(i, p)| {
+        sig.get(k + i).is_some_and(|&j| {
+            let t = &file.toks[j];
+            match t.kind {
+                TokKind::Punct(c) => p.len() == 1 && p.starts_with(c),
+                TokKind::Ident => t.text == *p,
+                _ => false,
+            }
+        })
+    })
+}
+
+/// If the statement beginning at `sig[stmt_start]` is `let [mut] NAME = ...`
+/// (or `let (NAME, ...) = ...`), the guard binding name.
+fn let_binding(file: &SourceFile, sig: &[usize], stmt_start: usize, upto: usize) -> Option<String> {
+    if stmt_start >= upto {
+        return None;
+    }
+    let first = &file.toks[*sig.get(stmt_start)?];
+    if !first.is_ident("let") {
+        return None;
+    }
+    let mut k = stmt_start + 1;
+    if file.toks[*sig.get(k)?].is_punct('(') {
+        k += 1; // tuple pattern: take the first element as the guard name
+    }
+    if file.toks[*sig.get(k)?].is_ident("mut") {
+        k += 1;
+    }
+    let name = &file.toks[*sig.get(k)?];
+    (name.kind == TokKind::Ident).then(|| name.text.clone())
+}

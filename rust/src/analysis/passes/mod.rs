@@ -1,0 +1,60 @@
+//! The five project-specific lint passes, plus the allow-hygiene check
+//! that keeps the escape hatch honest.
+
+pub mod doc_parity;
+pub mod lock_order;
+pub mod nondet;
+pub mod panic_guard;
+pub mod unsafe_audit;
+
+use super::report::Finding;
+use super::source::SourceFile;
+use std::path::Path;
+
+/// Everything a pass gets to look at: the lexed sources plus the repo
+/// root (for the docs files doc-parity reads).
+pub struct Ctx<'a> {
+    /// Lexed repo sources, sorted by path.
+    pub files: &'a [SourceFile],
+    /// Repo root directory.
+    pub root: &'a Path,
+}
+
+/// The registered pass names, in execution order.
+pub const PASS_NAMES: &[&str] =
+    &[unsafe_audit::NAME, nondet::NAME, panic_guard::NAME, lock_order::NAME, doc_parity::NAME];
+
+/// Run every pass plus allow hygiene; findings land in `out`.
+pub fn run_all(ctx: &Ctx, out: &mut Vec<Finding>) {
+    unsafe_audit::run(ctx, out);
+    nondet::run(ctx, out);
+    panic_guard::run(ctx, out);
+    lock_order::run(ctx, out);
+    doc_parity::run(ctx, out);
+    allow_hygiene(ctx, out);
+}
+
+/// The escape hatch polices itself: every `lint:allow` must name a real
+/// pass and carry a written reason. (Without this, escapes rot into
+/// unexplained suppressions.)
+pub fn allow_hygiene(ctx: &Ctx, out: &mut Vec<Finding>) {
+    for file in ctx.files {
+        for a in &file.allows {
+            if !PASS_NAMES.contains(&a.pass.as_str()) {
+                out.push(Finding::new(
+                    "allow-hygiene",
+                    &file.path,
+                    a.line,
+                    format!("lint:allow names unknown pass {:?} (known: {})", a.pass, PASS_NAMES.join(", ")),
+                ));
+            } else if a.reason.is_empty() {
+                out.push(Finding::new(
+                    "allow-hygiene",
+                    &file.path,
+                    a.line,
+                    format!("lint:allow({}) without a written reason — escapes must say why", a.pass),
+                ));
+            }
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! **nondet-guard** — nothing nondeterministic in the exactness-critical
+//! modules.
+//!
+//! The repo's load-bearing invariant is bitwise exactness: noise is keyed
+//! by `(seed, job index)` and every serving configuration must produce
+//! identical bytes. This pass bans the lexical sources of hidden
+//! nondeterminism on the modules whose state can reach sampled or
+//! serialized output:
+//!
+//! * `HashMap` / `HashSet` — iteration order varies run to run; use
+//!   `BTreeMap` / `BTreeSet` or sort before anything observable.
+//! * `Instant::now` / `SystemTime::now` — wall-clock reads.
+//! * ambient RNG identifiers (`thread_rng`, `from_entropy`, `random`) —
+//!   all noise must come from the seeded substrate PRNG.
+//!
+//! Test code (`#[cfg(test)]` / `#[test]`) is exempt; deliberate uses are
+//! escaped inline with `// lint:allow(nondet-guard): <reason>`.
+
+use crate::analysis::passes::Ctx;
+use crate::analysis::report::Finding;
+
+/// Pass name, as used in `lint:allow(...)`.
+pub const NAME: &str = "nondet-guard";
+
+/// Exactness-critical path prefixes (a trailing `/` scopes a directory).
+pub const CRITICAL_MODULES: &[&str] = &[
+    "rust/src/sampler/",
+    "rust/src/coordinator/scheduler.rs",
+    "rust/src/coordinator/policy.rs",
+    "rust/src/coordinator/router.rs",
+    "rust/src/coordinator/server/pool.rs",
+    "rust/src/coordinator/server/feed.rs",
+];
+
+const BANNED_TYPES: &[&str] = &["HashMap", "HashSet"];
+const BANNED_CLOCKS: &[&str] = &["Instant", "SystemTime"];
+const BANNED_RNG: &[&str] = &["thread_rng", "from_entropy", "random"];
+
+/// Run the pass.
+pub fn run(ctx: &Ctx, out: &mut Vec<Finding>) {
+    for file in ctx.files {
+        if !CRITICAL_MODULES.iter().any(|m| file.path.starts_with(m)) {
+            continue;
+        }
+        let sig = file.sig();
+        for (k, &i) in sig.iter().enumerate() {
+            let t = &file.toks[i];
+            if t.kind != crate::analysis::lexer::TokKind::Ident || file.in_test(t.line) || file.allowed(NAME, t.line) {
+                continue;
+            }
+            if BANNED_TYPES.contains(&t.text.as_str()) {
+                out.push(Finding::new(
+                    NAME,
+                    &file.path,
+                    t.line,
+                    format!("`{}` in an exactness-critical module — iteration order is nondeterministic; use BTree{} or sort", t.text, &t.text[4..]),
+                ));
+            } else if BANNED_CLOCKS.contains(&t.text.as_str()) && is_path_call(file, &sig, k, "now") {
+                out.push(Finding::new(
+                    NAME,
+                    &file.path,
+                    t.line,
+                    format!("`{}::now` in an exactness-critical module — wall-clock reads cannot feed exact output", t.text),
+                ));
+            } else if BANNED_RNG.contains(&t.text.as_str()) {
+                out.push(Finding::new(
+                    NAME,
+                    &file.path,
+                    t.line,
+                    format!("`{}` in an exactness-critical module — all noise must come from the seeded substrate PRNG", t.text),
+                ));
+            }
+        }
+    }
+}
+
+/// Does `sig[k]` start the token sequence `X :: method`?
+fn is_path_call(file: &crate::analysis::source::SourceFile, sig: &[usize], k: usize, method: &str) -> bool {
+    k + 3 < sig.len()
+        && file.toks[sig[k + 1]].is_punct(':')
+        && file.toks[sig[k + 2]].is_punct(':')
+        && file.toks[sig[k + 3]].is_ident(method)
+}

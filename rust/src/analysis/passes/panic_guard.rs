@@ -1,0 +1,54 @@
+//! **panic-guard** — no panics where a panic kills a shard or a worker.
+//!
+//! A panicking `.unwrap()` in a connection-plane event loop takes every
+//! connection on that shard down with it; one in an engine-worker loop
+//! strands the worker's queued groups. In those modules, errors must be
+//! handled as degraded modes (log + error reply + keep serving), so this
+//! pass bans `.unwrap()`, `.expect(...)`, and `panic!` in non-test code.
+//!
+//! Deliberately *not* banned: `unwrap_or`, `unwrap_or_else`,
+//! `unwrap_or_default` (they are the degraded handling — the poison
+//! recovery idiom is `.lock().unwrap_or_else(|e| e.into_inner())`),
+//! `unreachable!` (a statically-argued invariant, reviewed case by case),
+//! and anything under `#[cfg(test)]`.
+
+use crate::analysis::passes::Ctx;
+use crate::analysis::report::Finding;
+
+/// Pass name, as used in `lint:allow(...)`.
+pub const NAME: &str = "panic-guard";
+
+/// Modules where a panic is an availability incident, not a bug report.
+pub const GUARDED_MODULES: &[&str] = &["rust/src/coordinator/server/", "rust/src/substrate/readiness.rs"];
+
+/// Run the pass.
+pub fn run(ctx: &Ctx, out: &mut Vec<Finding>) {
+    for file in ctx.files {
+        if !GUARDED_MODULES.iter().any(|m| file.path.starts_with(m)) {
+            continue;
+        }
+        let sig = file.sig();
+        for (k, &i) in sig.iter().enumerate() {
+            let t = &file.toks[i];
+            if file.in_test(t.line) || file.allowed(NAME, t.line) {
+                continue;
+            }
+            let method_call = |name: &str| {
+                k > 0
+                    && file.toks[sig[k - 1]].is_punct('.')
+                    && t.is_ident(name)
+                    && sig.get(k + 1).is_some_and(|&j| file.toks[j].is_punct('('))
+            };
+            if method_call("unwrap") || method_call("expect") {
+                out.push(Finding::new(
+                    NAME,
+                    &file.path,
+                    t.line,
+                    format!("`.{}(...)` in a shard/worker loop — a panic here kills the shard; handle degraded instead", t.text),
+                ));
+            } else if t.is_ident("panic") && sig.get(k + 1).is_some_and(|&j| file.toks[j].is_punct('!')) {
+                out.push(Finding::new(NAME, &file.path, t.line, "`panic!` in a shard/worker loop — handle degraded instead"));
+            }
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! **unsafe-audit** — `unsafe` is quarantined and justified.
+//!
+//! Two rules, both over real `unsafe` tokens only (the lexer guarantees
+//! occurrences inside strings and comments never match):
+//!
+//! 1. `unsafe` may appear only in the allowlisted FFI modules — today
+//!    exactly `rust/src/substrate/readiness.rs` (raw epoll/eventfd).
+//!    Growing the allowlist is a reviewed change to this file.
+//! 2. Every `unsafe` token must have a `// SAFETY:` comment on its line
+//!    or within the three lines above, stating the invariant the block
+//!    relies on.
+
+use crate::analysis::passes::Ctx;
+use crate::analysis::report::Finding;
+
+/// Pass name, as used in `lint:allow(...)`.
+pub const NAME: &str = "unsafe-audit";
+
+/// Modules where `unsafe` is permitted at all.
+pub const ALLOWED_MODULES: &[&str] = &["rust/src/substrate/readiness.rs"];
+
+/// How many lines above an `unsafe` token a `SAFETY:` comment may sit.
+const SAFETY_WINDOW: u32 = 3;
+
+/// Run the pass.
+pub fn run(ctx: &Ctx, out: &mut Vec<Finding>) {
+    for file in ctx.files {
+        for &i in &file.sig() {
+            let t = &file.toks[i];
+            if !t.is_ident("unsafe") {
+                continue;
+            }
+            if file.allowed(NAME, t.line) {
+                continue;
+            }
+            if !ALLOWED_MODULES.contains(&file.path.as_str()) {
+                out.push(Finding::new(
+                    NAME,
+                    &file.path,
+                    t.line,
+                    format!("`unsafe` outside the allowlisted FFI modules ({})", ALLOWED_MODULES.join(", ")),
+                ));
+                continue;
+            }
+            if !file.has_safety_comment(t.line, SAFETY_WINDOW) {
+                out.push(Finding::new(NAME, &file.path, t.line, "`unsafe` without a `// SAFETY:` comment stating its invariant"));
+            }
+        }
+    }
+}

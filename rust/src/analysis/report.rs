@@ -1,0 +1,96 @@
+//! Findings and the two report renderings: human `path:line` text for the
+//! terminal, and machine-readable JSON for the CI artifact.
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Which pass produced it (`unsafe-audit`, `nondet-guard`, ...).
+    pub pass: &'static str,
+    /// Repo-relative file path.
+    pub path: String,
+    /// 1-indexed line.
+    pub line: u32,
+    /// Human-readable statement of the violation.
+    pub msg: String,
+}
+
+impl Finding {
+    /// Build a finding.
+    pub fn new(pass: &'static str, path: &str, line: u32, msg: impl Into<String>) -> Self {
+        Finding { pass, path: path.to_string(), line, msg: msg.into() }
+    }
+}
+
+/// A full lint run: every finding plus scan metadata.
+#[derive(Debug)]
+pub struct Report {
+    /// Findings in file/line order.
+    pub findings: Vec<Finding>,
+    /// How many source files were scanned.
+    pub files_scanned: usize,
+    /// Pass names that ran.
+    pub passes: Vec<&'static str>,
+}
+
+impl Report {
+    /// Sort findings by (path, line, pass) so output is deterministic.
+    pub fn sort(&mut self) {
+        self.findings.sort_by(|a, b| (&a.path, a.line, a.pass).cmp(&(&b.path, b.line, b.pass)));
+    }
+
+    /// Terminal rendering: one `path:line: [pass] message` per finding and
+    /// a one-line summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: [{}] {}\n", f.path, f.line, f.pass, f.msg));
+        }
+        out.push_str(&format!(
+            "lint: {} finding{} across {} file{} ({} passes)\n",
+            self.findings.len(),
+            if self.findings.len() == 1 { "" } else { "s" },
+            self.files_scanned,
+            if self.files_scanned == 1 { "" } else { "s" },
+            self.passes.len()
+        ));
+        out
+    }
+
+    /// JSON rendering for the CI artifact: `{"ok", "files_scanned",
+    /// "passes", "findings": [{"pass", "path", "line", "msg"}]}`.
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{");
+        out.push_str(&format!("\"ok\":{},", self.findings.is_empty()));
+        out.push_str(&format!("\"files_scanned\":{},", self.files_scanned));
+        out.push_str("\"passes\":[");
+        out.push_str(&self.passes.iter().map(|p| format!("\"{p}\"")).collect::<Vec<_>>().join(","));
+        out.push_str("],\"findings\":[");
+        let items: Vec<String> = self
+            .findings
+            .iter()
+            .map(|f| {
+                format!("{{\"pass\":\"{}\",\"path\":\"{}\",\"line\":{},\"msg\":\"{}\"}}", f.pass, escape_json(&f.path), f.line, escape_json(&f.msg))
+            })
+            .collect();
+        out.push_str(&items.join(","));
+        out.push_str("]}");
+        out.push('\n');
+        out
+    }
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

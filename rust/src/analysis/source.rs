@@ -1,0 +1,218 @@
+//! A lexed source file plus the repo-lint annotations parsed out of it:
+//! `// lint:allow(<pass>): <reason>` escapes, `// SAFETY:` comments, and
+//! the `#[cfg(test)]` / `#[test]` regions that non-test-only passes skip.
+
+use super::lexer::{lex, Tok, TokKind};
+
+/// One `lint:allow` escape annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    /// Line the annotation comment sits on.
+    pub line: u32,
+    /// The pass name inside the parentheses.
+    pub pass: String,
+    /// The written reason after the colon (may be empty — that is itself
+    /// a finding, see the allow-hygiene check in [`crate::analysis::run_passes`]).
+    pub reason: String,
+}
+
+/// A lexed file ready for the lint passes.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes (`rust/src/...`). Passes
+    /// scope themselves by prefix-matching this.
+    pub path: String,
+    /// Raw text (doc-parity greps docs against it).
+    pub text: String,
+    /// Token stream, comments included.
+    pub toks: Vec<Tok>,
+    /// Parsed `lint:allow` annotations.
+    pub allows: Vec<Allow>,
+    test_ranges: Vec<(u32, u32)>,
+}
+
+impl SourceFile {
+    /// Lex `text` under the given repo-relative path label. The label —
+    /// not the filesystem location — is what passes scope on, so fixture
+    /// tests can present a file as living anywhere in the tree.
+    pub fn from_source(path: impl Into<String>, text: impl Into<String>) -> Self {
+        let text = text.into();
+        let toks = lex(&text);
+        let allows = parse_allows(&toks);
+        let test_ranges = find_test_ranges(&toks);
+        SourceFile { path: path.into(), text, toks, allows, test_ranges }
+    }
+
+    /// Is `line` inside a `#[cfg(test)]` module/item or a `#[test]` fn?
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| a <= line && line <= b)
+    }
+
+    /// Is a finding for `pass` on `line` excused by a `lint:allow`
+    /// annotation on the same line or the line directly above?
+    pub fn allowed(&self, pass: &str, line: u32) -> bool {
+        self.allows.iter().any(|a| a.pass == pass && (a.line == line || a.line + 1 == line))
+    }
+
+    /// Does a comment containing `SAFETY:` appear on `line` or within the
+    /// `window` lines above it?
+    pub fn has_safety_comment(&self, line: u32, window: u32) -> bool {
+        let lo = line.saturating_sub(window);
+        self.toks.iter().any(|t| t.is_comment() && t.text.contains("SAFETY:") && t.line >= lo && t.line <= line)
+    }
+
+    /// Indices of non-comment tokens, in order — the stream passes match
+    /// identifier/punctuation sequences against.
+    pub fn sig(&self) -> Vec<usize> {
+        (0..self.toks.len()).filter(|&i| !self.toks[i].is_comment()).collect()
+    }
+
+    /// Token-index range (over [`Self::sig`] indices) of the brace-balanced
+    /// body of `fn name`, excluding the braces themselves.
+    pub fn fn_body(&self, name: &str) -> Option<(usize, usize)> {
+        let sig = self.sig();
+        let mut i = 0;
+        while i + 1 < sig.len() {
+            if self.toks[sig[i]].is_ident("fn") && self.toks[sig[i + 1]].is_ident(name) {
+                // Skip to the opening brace (signatures contain no braces).
+                let mut j = i + 2;
+                while j < sig.len() && !self.toks[sig[j]].is_punct('{') {
+                    if self.toks[sig[j]].is_punct(';') {
+                        return None; // declaration without a body
+                    }
+                    j += 1;
+                }
+                let open = j;
+                let mut depth = 0usize;
+                while j < sig.len() {
+                    if self.toks[sig[j]].is_punct('{') {
+                        depth += 1;
+                    } else if self.toks[sig[j]].is_punct('}') {
+                        depth -= 1;
+                        if depth == 0 {
+                            return Some((open + 1, j));
+                        }
+                    }
+                    j += 1;
+                }
+                return None;
+            }
+            i += 1;
+        }
+        None
+    }
+
+    /// `pub` field names (with their lines) of `struct name { ... }`.
+    pub fn struct_fields(&self, name: &str) -> Vec<(String, u32)> {
+        let sig = self.sig();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + 2 < sig.len() {
+            if self.toks[sig[i]].is_ident("struct") && self.toks[sig[i + 1]].is_ident(name) && self.toks[sig[i + 2]].is_punct('{') {
+                let mut depth = 1usize;
+                let mut j = i + 3;
+                while j < sig.len() && depth > 0 {
+                    let t = &self.toks[sig[j]];
+                    if t.is_punct('{') {
+                        depth += 1;
+                    } else if t.is_punct('}') {
+                        depth -= 1;
+                    } else if depth == 1 && t.is_ident("pub") {
+                        if let (Some(n), Some(c)) = (sig.get(j + 1), sig.get(j + 2)) {
+                            if self.toks[*c].is_punct(':') && self.toks[*n].kind == TokKind::Ident {
+                                out.push((self.toks[*n].text.clone(), self.toks[*n].line));
+                            }
+                        }
+                    }
+                    j += 1;
+                }
+                return out;
+            }
+            i += 1;
+        }
+        out
+    }
+}
+
+fn parse_allows(toks: &[Tok]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for t in toks {
+        if !t.is_comment() {
+            continue;
+        }
+        // The annotation must open the comment (`// lint:allow(...)`) —
+        // a mention elsewhere in a sentence (like this one) is prose, not
+        // an escape.
+        let head = t.text.trim_start_matches(['/', '*', '!']).trim_start();
+        let Some(rest) = head.strip_prefix("lint:allow") else { continue };
+        let (pass, reason) = match rest.strip_prefix('(').and_then(|r| r.split_once(')')) {
+            Some((p, tail)) => (p.trim().to_string(), tail.trim_start().strip_prefix(':').unwrap_or("").trim().to_string()),
+            None => (String::new(), String::new()), // malformed — caught by allow hygiene
+        };
+        out.push(Allow { line: t.line, pass, reason });
+    }
+    out
+}
+
+/// Line ranges covered by `#[cfg(test)]` items and `#[test]` functions:
+/// from the attribute to the close of the item's brace-balanced body (or
+/// its terminating `;`).
+fn find_test_ranges(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let sig: Vec<usize> = (0..toks.len()).filter(|&i| !toks[i].is_comment()).collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < sig.len() {
+        if toks[sig[i]].is_punct('#') && sig.get(i + 1).is_some_and(|&j| toks[j].is_punct('[')) {
+            // Collect the attribute's tokens up to the matching `]`.
+            let start_line = toks[sig[i]].line;
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut words = Vec::new();
+            while j < sig.len() {
+                let t = &toks[sig[j]];
+                if t.is_punct('[') {
+                    depth += 1;
+                } else if t.is_punct(']') {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if t.kind == TokKind::Ident {
+                    words.push(t.text.as_str());
+                }
+                j += 1;
+            }
+            let is_test_attr =
+                words.first() == Some(&"test") || (words.contains(&"cfg") && words.contains(&"test") && !words.contains(&"not"));
+            if is_test_attr {
+                // Mark through the end of the annotated item: first `;` at
+                // brace depth 0, or the close of the first brace block.
+                let mut k = j + 1;
+                let mut bdepth = 0usize;
+                let mut end_line = start_line;
+                while k < sig.len() {
+                    let t = &toks[sig[k]];
+                    end_line = t.line;
+                    if t.is_punct('{') {
+                        bdepth += 1;
+                    } else if t.is_punct('}') {
+                        bdepth -= 1;
+                        if bdepth == 0 {
+                            break;
+                        }
+                    } else if t.is_punct(';') && bdepth == 0 {
+                        break;
+                    }
+                    k += 1;
+                }
+                out.push((start_line, end_line));
+                i = k + 1;
+                continue;
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}

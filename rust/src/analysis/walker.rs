@@ -1,0 +1,56 @@
+//! Deterministic file walker: collects the `.rs` sources under a repo
+//! root's `rust/src/` tree, sorted by path so every lint run visits files
+//! (and therefore reports findings) in the same order.
+
+use super::source::SourceFile;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// All `.rs` files under `root/rust/src`, sorted, as repo-relative
+/// forward-slash paths paired with their contents. Unreadable entries are
+/// skipped (a file deleted mid-walk must not kill the linter).
+pub fn rust_sources(root: &Path) -> Vec<SourceFile> {
+    let src = root.join("rust").join("src");
+    let mut paths = Vec::new();
+    collect(&src, &mut paths);
+    paths.sort();
+    paths
+        .into_iter()
+        .filter_map(|p| {
+            let text = fs::read_to_string(&p).ok()?;
+            Some(SourceFile::from_source(relative_label(root, &p), text))
+        })
+        .collect()
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// `root`-relative path with forward slashes — the label passes scope on.
+pub fn relative_label(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components().map(|c| c.as_os_str().to_string_lossy()).collect::<Vec<_>>().join("/")
+}
+
+/// Walk upward from `start` to the first directory containing
+/// `Cargo.toml` — the repo root the lint binary analyzes.
+pub fn find_repo_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    loop {
+        if dir.join("Cargo.toml").exists() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! `predsamp-lint` driver: `cargo run --bin lint [-- --json PATH] [ROOT]`.
+//!
+//! Lints the repo (found by walking up from the current directory to the
+//! nearest `Cargo.toml`, or rooted at `ROOT` if given), prints findings
+//! as `path:line: [pass] message`, writes the machine-readable report to
+//! `target/lint-report.json` (or `--json PATH`), and exits nonzero iff
+//! there are findings — so CI can gate on it directly.
+
+use predsamp::analysis::{lint_repo, walker};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut json_path: Option<PathBuf> = None;
+    let mut root_arg: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json_path = args.next().map(PathBuf::from),
+            "--help" | "-h" => {
+                println!("usage: lint [--json PATH] [ROOT]\nruns the predsamp repo lint passes; exits nonzero on findings");
+                return ExitCode::SUCCESS;
+            }
+            other => root_arg = Some(PathBuf::from(other)),
+        }
+    }
+
+    let cwd = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    let Some(root) = root_arg.or_else(|| walker::find_repo_root(&cwd)) else {
+        eprintln!("lint: no Cargo.toml above {} — pass the repo root explicitly", cwd.display());
+        return ExitCode::FAILURE;
+    };
+
+    let report = lint_repo(&root);
+    print!("{}", report.render_text());
+
+    let json = json_path.unwrap_or_else(|| root.join("target").join("lint-report.json"));
+    if let Some(dir) = json.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(&json, report.render_json()) {
+        Ok(()) => println!("lint: wrote {}", json.display()),
+        Err(e) => eprintln!("lint: could not write {}: {e}", json.display()),
+    }
+
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

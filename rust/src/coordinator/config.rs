@@ -9,8 +9,11 @@ use anyhow::{ensure, Result};
 use std::time::Duration;
 
 /// Sampling method selector (maps 1:1 to the paper's table rows).
-/// `Hash`/`Eq` because `(model, method)` keys the server's batching groups.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// `Hash`/`Eq` because `(model, method)` keys the server's batching groups;
+/// `Ord` because those groups live in ordered maps (iteration order must be
+/// deterministic wherever it can reach serialized output — see nondet-guard
+/// in `docs/ANALYSIS.md`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Method {
     /// Naive ancestral sampling: d ARM calls (the paper's baseline).
     Baseline,

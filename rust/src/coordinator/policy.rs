@@ -31,7 +31,7 @@
 //! [`crate::coordinator::scheduler::run_elastic_family_policy`].
 #![deny(missing_docs)]
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -324,7 +324,7 @@ const BOOK_ALPHA: f64 = 0.3;
 /// any prior, like every other policy decision.
 #[derive(Debug, Default)]
 pub struct ConvergenceBook {
-    inner: Mutex<HashMap<String, (ConvergencePrior, u64)>>,
+    inner: Mutex<BTreeMap<String, (ConvergencePrior, u64)>>,
 }
 
 impl ConvergenceBook {
@@ -340,7 +340,7 @@ impl ConvergenceBook {
         if !(obs.passes_per_job.is_finite() && obs.passes_per_job > 0.0 && obs.pass_secs.is_finite() && obs.pass_secs > 0.0) {
             return;
         }
-        let mut inner = self.inner.lock().expect("book lock");
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let slot = inner.entry(key.to_string()).or_insert((obs, 0));
         if slot.1 > 0 {
             slot.0.passes_per_job += BOOK_ALPHA * (obs.passes_per_job - slot.0.passes_per_job);
@@ -351,15 +351,15 @@ impl ConvergenceBook {
 
     /// The current estimate for `key`, if any schedule has completed.
     pub fn prior(&self, key: &str) -> Option<ConvergencePrior> {
-        self.inner.lock().expect("book lock").get(key).map(|(est, _)| *est)
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).get(key).map(|(est, _)| *est)
     }
 
-    /// Every estimate with its observation count (metrics snapshot).
+    /// Every estimate with its observation count (metrics snapshot),
+    /// in key order — the `BTreeMap` iterates sorted, so the serialized
+    /// `convergence` object is byte-stable however schedules interleaved.
     pub fn entries(&self) -> Vec<(String, ConvergencePrior, u64)> {
-        let inner = self.inner.lock().expect("book lock");
-        let mut out: Vec<(String, ConvergencePrior, u64)> = inner.iter().map(|(k, (est, n))| (k.clone(), *est, *n)).collect();
-        out.sort_by(|a, b| a.0.cmp(&b.0));
-        out
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.iter().map(|(k, (est, n))| (k.clone(), *est, *n)).collect()
     }
 }
 

@@ -46,7 +46,7 @@ use crate::coordinator::server::pool::{Completion, CompletionTx, Reply};
 use crate::coordinator::server::Msg;
 use crate::substrate::json::Value;
 use crate::substrate::readiness::{self, Interest, ReadinessSource, Token, Waker};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -403,8 +403,8 @@ struct Shard {
     tx: mpsc::Sender<Msg>,
     ctx: CompletionTx,
     edge: Arc<EdgeStats>,
-    conns: HashMap<u64, Conn>,
-    inflight: HashMap<u64, Inflight>,
+    conns: BTreeMap<u64, Conn>,
+    inflight: BTreeMap<u64, Inflight>,
     /// Next connection id: starts at the shard index, steps by
     /// `conn_threads`, so ids are globally unique without coordination.
     next_conn: u64,
@@ -437,8 +437,8 @@ pub(crate) fn shard_loop(sctx: ShardCtx) {
         tx,
         ctx,
         edge: Arc::clone(&edge),
-        conns: HashMap::new(),
-        inflight: HashMap::new(),
+        conns: BTreeMap::new(),
+        inflight: BTreeMap::new(),
         next_conn: idx as u64,
         next_seq: idx as u64,
         stride,

@@ -101,7 +101,7 @@ impl<'a> ServeFeed<'a> {
         let calls_per_job = slot_passes as f64 / jobs as f64;
         let wall = self.window_timer.secs();
         {
-            let mut m = self.metrics.lock().expect("metrics lock");
+            let mut m = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
             m.record_batch(jobs, passes, scheduler::calls_pct_of(calls_per_job, self.dim), wall);
             m.record_policy(self.policy_label);
         }
@@ -135,12 +135,24 @@ impl<'a> ServeFeed<'a> {
     /// schedule ended and the router is borrowable again).
     fn reply_request(&mut self, ri: usize, stats: &LiveStats, router: Option<&mut Router>) {
         let req = &mut self.reqs[ri];
+        // Only fully-completed requests are replied (remaining == 0 gates
+        // every call site); if that accounting ever breaks, answer the
+        // client degraded instead of panicking the whole engine worker.
+        if req.results.iter().any(|r| r.is_none()) {
+            log::error!("request {}/{:?} answered with job results missing — failing it degraded", self.key.0, self.key.1);
+            let _ = req.p.reply.send(protocol::err("internal: job results incomplete"));
+            req.replied = true;
+            req.results = Vec::new();
+            req.p.group.pending.fetch_sub(req.p.n, Ordering::SeqCst);
+            self.load.fetch_sub(req.p.n, Ordering::SeqCst);
+            return;
+        }
         // Per-request cost: each job owns its slot for exactly its pass
         // count, so slot-passes per job = mean iterations — exact under
         // occupancy sizing (every pass runs a full batch), and never
         // inflated by capacity other jobs are still consuming the way a
         // running schedule-wide ratio would be.
-        let iters: usize = req.results.iter().map(|r| r.as_ref().expect("request complete").iterations).sum();
+        let iters: usize = req.results.iter().flatten().map(|r| r.iterations).sum();
         let calls_per_job = iters as f64 / req.p.n.max(1) as f64;
         let calls_pct = scheduler::calls_pct_of(calls_per_job, self.dim);
         // Wall time is this request's serving latency (queue + schedule),
@@ -149,7 +161,7 @@ impl<'a> ServeFeed<'a> {
         let wall = req.p.admitted.elapsed().as_secs_f64();
         let mut fields = sample_fields(&self.key.0, self.key.1, stats.passes, calls_per_job, calls_pct, wall, req.p.n);
         let xs: Vec<Vec<i32>> = if req.p.return_samples || router.is_some() {
-            req.results.iter().map(|r| r.as_ref().expect("request complete").x.clone()).collect()
+            req.results.iter().flatten().map(|r| r.x.clone()).collect()
         } else {
             Vec::new()
         };
@@ -228,7 +240,7 @@ impl JobFeed for ServeFeed<'_> {
         let mut fresh: Vec<PendingSample> = Vec::new();
         let mut denied = false;
         {
-            let mut st = self.pool.state.lock().expect("pool lock");
+            let mut st = self.pool.state.lock().unwrap_or_else(|e| e.into_inner());
             // The oldest admission among work of *other* groups queued on
             // this worker — whatever absorption would starve. Evals count
             // too: without them, an endlessly-absorbing group could hold
@@ -276,7 +288,7 @@ impl JobFeed for ServeFeed<'_> {
             }
         }
         if !fresh.is_empty() || denied {
-            let mut m = self.metrics.lock().expect("metrics lock");
+            let mut m = self.metrics.lock().unwrap_or_else(|e| e.into_inner());
             for p in &fresh {
                 m.record_absorbed(p.n);
                 m.record_admission_age(p.admitted.elapsed());
@@ -298,16 +310,17 @@ impl JobFeed for ServeFeed<'_> {
         self.last_stats = Some(*stats);
         let (ri, j) = ((tag >> 32) as usize, (tag & 0xffff_ffff) as usize);
         let req = &mut self.reqs[ri];
-        req.results[j] = Some(result);
-        req.remaining -= 1;
         if req.p.reply.stream {
             // Streaming delivery: push this job's sample the moment it
-            // converges, ahead of the request's closing summary.
-            let row = &req.results[j].as_ref().expect("just stored").x;
+            // converges, ahead of the request's closing summary. Sent
+            // before the result is stored so the row needs no re-borrow.
+            let row = &result.x;
             let frame = if req.p.reply.frame { Some(protocol::encode_frame(std::slice::from_ref(row))) } else { None };
             let framed = frame.is_some();
             let _ = req.p.reply.send_event(protocol::stream_event(j, row, framed), frame);
         }
+        req.results[j] = Some(result);
+        req.remaining -= 1;
         if req.remaining == 0 {
             if req.p.decode {
                 self.deferred.push(ri);
@@ -344,7 +357,7 @@ pub(crate) fn execute_elastic_group(
     let (dim, categories) = match shape {
         Ok(s) => s,
         Err(e) => {
-            shared.metrics.lock().unwrap().record_error();
+            shared.metrics.lock().unwrap_or_else(|e| e.into_inner()).record_error();
             let msg = format!("{e:#}");
             for p in group {
                 fail_request(p, &shared.load, &msg);
@@ -397,7 +410,7 @@ pub(crate) fn execute_elastic_group(
             }
         }
         Err(e) => {
-            shared.metrics.lock().unwrap().record_error();
+            shared.metrics.lock().unwrap_or_else(|e| e.into_inner()).record_error();
             feed.fail_rest(&format!("{e:#}"));
         }
     }

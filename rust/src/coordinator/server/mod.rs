@@ -97,7 +97,7 @@ use crate::runtime::artifact::Manifest;
 use crate::substrate::json::Value;
 use crate::substrate::readiness::Waker;
 use anyhow::{Context, Result};
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -171,7 +171,7 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
         state: Mutex::new(PoolState {
             queues: (0..cfg.engine_threads).map(|_| VecDeque::new()).collect(),
             executing: vec![None; cfg.engine_threads],
-            routes: HashMap::new(),
+            routes: BTreeMap::new(),
             dead: vec![false; cfg.engine_threads],
         }),
         cv: Condvar::new(),
@@ -296,7 +296,7 @@ fn dispatch_loop(
                         // by eligibility like any group — the old "any
                         // worker owns a full Router" shortcut does not
                         // survive pinning.
-                        let mut st = pool.state.lock().expect("pool lock");
+                        let mut st = pool.state.lock().unwrap_or_else(|e| e.into_inner());
                         let Some(w) = route_worker(&workers, &mut rr, &st.dead, &*placement, &model) else {
                             let msg = route_error(&model, &st.dead);
                             drop(st);
@@ -316,7 +316,7 @@ fn dispatch_loop(
                         // can interleave between the route read and the
                         // push.
                         let key = (model.clone(), method);
-                        let mut st = pool.state.lock().expect("pool lock");
+                        let mut st = pool.state.lock().unwrap_or_else(|e| e.into_inner());
                         let sticky = match st.routes.get(&key) {
                             Some(g) if g.pending.load(Ordering::SeqCst) > 0 => Some(Arc::clone(g)),
                             _ => None,
@@ -432,7 +432,7 @@ fn metrics_response(disp: &Metrics, workers: &[WorkerHandle], uptime_s: f64, pla
         };
         engine_loads += gauges.engine_loads;
         evictions += gauges.evictions;
-        let m = w.metrics.lock().unwrap();
+        let m = w.metrics.lock().unwrap_or_else(|e| e.into_inner());
         total.merge(&m);
         warr.push(m.worker_value(&gauges));
     }

@@ -7,7 +7,7 @@ use crate::coordinator::config::Method;
 use crate::coordinator::placement::PlacementPolicy;
 use crate::coordinator::protocol;
 use crate::substrate::readiness::Waker;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -160,7 +160,7 @@ pub(crate) struct PoolState {
     /// arrivals, so thieves must never take it.
     pub(crate) executing: Vec<Option<GroupKey>>,
     /// (model, method) → group slot; sticky while `pending > 0`.
-    pub(crate) routes: HashMap<GroupKey, Arc<GroupSlot>>,
+    pub(crate) routes: BTreeMap<GroupKey, Arc<GroupSlot>>,
     /// Workers whose thread has exited (panic included): the dispatcher
     /// routes around them so requests never queue where nobody drains.
     pub(crate) dead: Vec<bool>,
@@ -270,8 +270,7 @@ pub(crate) fn steal_group(st: &mut PoolState, thief: usize, loads: &[Arc<AtomicU
             }
         }
         let eval_pos = st.queues[v].iter().position(|it| matches!(it, Work::Eval { model, .. } if placement.eligible(model, thief)));
-        if let Some(pos) = eval_pos {
-            let eval = st.queues[v].remove(pos).expect("just found");
+        if let Some(eval) = eval_pos.and_then(|pos| st.queues[v].remove(pos)) {
             loads[v].fetch_sub(EVAL_LOAD, Ordering::SeqCst);
             loads[thief].fetch_add(EVAL_LOAD, Ordering::SeqCst);
             st.queues[thief].push_back(eval);
@@ -286,7 +285,7 @@ mod tests {
     use super::*;
     use crate::coordinator::placement::ReplicateAll;
 
-    fn sample(model: &str, method: Method, n: usize, widx: usize, routes: &mut HashMap<GroupKey, Arc<GroupSlot>>) -> Work {
+    fn sample(model: &str, method: Method, n: usize, widx: usize, routes: &mut BTreeMap<GroupKey, Arc<GroupSlot>>) -> Work {
         let group = Arc::clone(
             routes
                 .entry((model.to_string(), method))
@@ -311,7 +310,7 @@ mod tests {
         PoolState {
             queues: (0..workers).map(|_| VecDeque::new()).collect(),
             executing: vec![None; workers],
-            routes: HashMap::new(),
+            routes: BTreeMap::new(),
             dead: vec![false; workers],
         }
     }
@@ -321,7 +320,7 @@ mod tests {
         // Victim (worker 0) queues two groups interleaved; the thief
         // (worker 1) must take the oldest non-executing group *whole*,
         // preserve arrival order, retarget its route, and move the load.
-        let mut routes = HashMap::new();
+        let mut routes = BTreeMap::new();
         let mut st = pool_state(2);
         st.queues[0].push_back(sample("a", Method::Fpi, 2, 0, &mut routes));
         st.queues[0].push_back(sample("b", Method::Fpi, 3, 0, &mut routes));
@@ -342,7 +341,7 @@ mod tests {
         // The only queued group on the victim is the one it is executing
         // (mid-flight arrivals owned by its live schedule): no steal. A
         // second, non-executing group is fair game.
-        let mut routes = HashMap::new();
+        let mut routes = BTreeMap::new();
         let mut st = pool_state(2);
         st.queues[0].push_back(sample("a", Method::Fpi, 2, 0, &mut routes));
         st.executing[0] = Some(("a".to_string(), Method::Fpi));
@@ -357,7 +356,7 @@ mod tests {
 
     #[test]
     fn steal_prefers_most_loaded_victim_and_needs_queued_work() {
-        let mut routes = HashMap::new();
+        let mut routes = BTreeMap::new();
         let mut st = pool_state(3);
         let loads = vec![Arc::new(AtomicUsize::new(0)), Arc::new(AtomicUsize::new(1)), Arc::new(AtomicUsize::new(9))];
         assert!(!steal_group(&mut st, 0, &loads, &ReplicateAll), "nothing queued, nothing to steal");
@@ -373,7 +372,7 @@ mod tests {
         // must fall through to the lighter victim's free group rather
         // than give up (work conservation). Once only an eval remains
         // queued anywhere, that moves too — evals are not sticky.
-        let mut routes = HashMap::new();
+        let mut routes = BTreeMap::new();
         let mut st = pool_state(3);
         st.queues[1].push_back(sample("hot", Method::Fpi, 9, 1, &mut routes));
         st.executing[1] = Some(("hot".to_string(), Method::Fpi));
@@ -414,7 +413,7 @@ mod tests {
         // all, steal nothing rather than strand a pinned group off its
         // worker subset.
         let placement = PinOne { model: "pinned", worker: 0 };
-        let mut routes = HashMap::new();
+        let mut routes = BTreeMap::new();
         let mut st = pool_state(2);
         st.queues[0].push_back(sample("pinned", Method::Fpi, 4, 0, &mut routes));
         st.queues[0].push_back(sample("free", Method::Fpi, 1, 0, &mut routes));

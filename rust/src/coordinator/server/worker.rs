@@ -99,7 +99,7 @@ fn handle_eval(router: &mut Router, model: &str, reply: &Reply, metrics: &Mutex<
     let resp = match router.engine(model).and_then(|e| e.eval_bpd()) {
         Ok(bpd) => protocol::ok(vec![("model", Value::str(model)), ("bpd", Value::num(bpd))]),
         Err(e) => {
-            metrics.lock().unwrap().record_error();
+            metrics.lock().unwrap_or_else(|e| e.into_inner()).record_error();
             protocol::err(&format!("{e:#}"))
         }
     };
@@ -135,7 +135,7 @@ pub(crate) fn worker_loop(mut router: Router, cfg: ServeConfig, widx: usize, poo
         // group from the most-loaded worker when ours is empty (only
         // groups this worker may host under the placement policy).
         let mut stole = false;
-        let mut st = pool.state.lock().expect("pool lock");
+        let mut st = pool.state.lock().unwrap_or_else(|e| e.into_inner());
         let head = loop {
             if pool.shutdown.load(Ordering::SeqCst) {
                 let q = std::mem::take(&mut st.queues[widx]);
@@ -150,13 +150,13 @@ pub(crate) fn worker_loop(mut router: Router, cfg: ServeConfig, widx: usize, poo
                 stole = true;
                 continue;
             }
-            st = pool.cv.wait_timeout(st, std::time::Duration::from_millis(100)).expect("pool lock poisoned").0;
+            st = pool.cv.wait_timeout(st, std::time::Duration::from_millis(100)).unwrap_or_else(|e| e.into_inner()).0;
         };
         match head {
             Work::Eval { model, reply, .. } => {
                 drop(st);
                 if stole {
-                    shared.metrics.lock().unwrap().record_steal();
+                    shared.metrics.lock().unwrap_or_else(|e| e.into_inner()).record_steal();
                 }
                 make_room_for(&mut router, &shared, &model);
                 handle_eval(&mut router, &model, &reply, &shared.metrics, &shared.load);
@@ -186,7 +186,7 @@ pub(crate) fn worker_loop(mut router: Router, cfg: ServeConfig, widx: usize, poo
                         make_room_for(&mut router, &shared, &model);
                         handle_eval(&mut router, &model, &reply, &shared.metrics, &shared.load);
                         sync_gauges(&mut router, &shared);
-                        st = pool.state.lock().expect("pool lock");
+                        st = pool.state.lock().unwrap_or_else(|e| e.into_inner());
                     }
                     if pool.shutdown.load(Ordering::SeqCst) {
                         let q = std::mem::take(&mut st.queues[widx]);
@@ -203,13 +203,13 @@ pub(crate) fn worker_loop(mut router: Router, cfg: ServeConfig, widx: usize, poo
                     if group_jobs >= cfg.max_batch || now >= deadline {
                         break;
                     }
-                    st = pool.cv.wait_timeout(st, deadline - now).expect("pool lock poisoned").0;
+                    st = pool.cv.wait_timeout(st, deadline - now).unwrap_or_else(|e| e.into_inner()).0;
                 }
                 drop(st);
                 {
                     // The window just closed: sample each request's queue
                     // age (admission → execution) into the age histogram.
-                    let mut m = shared.metrics.lock().unwrap();
+                    let mut m = shared.metrics.lock().unwrap_or_else(|e| e.into_inner());
                     if stole {
                         m.record_steal();
                     }
@@ -224,7 +224,7 @@ pub(crate) fn worker_loop(mut router: Router, cfg: ServeConfig, widx: usize, poo
                 } else {
                     execute_group(&mut router, &shared, group, continuous);
                 }
-                pool.state.lock().expect("pool lock").executing[widx] = None;
+                pool.state.lock().unwrap_or_else(|e| e.into_inner()).executing[widx] = None;
                 sync_gauges(&mut router, &shared);
             }
         }
@@ -265,11 +265,15 @@ pub(crate) fn execute_group(router: &mut Router, shared: &WorkerShared, group: V
             let mut weighted_calls = 0f64;
             let sched_timer = Timer::start();
             for p in &group {
+                // Degraded fallback: an engine exporting no batch sizes
+                // (broken artifact) chunks at the request size instead of
+                // panicking the worker.
                 let bs = engine
                     .batch_sizes()
                     .into_iter()
                     .find(|&b| b >= p.n)
-                    .unwrap_or_else(|| *engine.batch_sizes().last().unwrap());
+                    .or_else(|| engine.batch_sizes().into_iter().max())
+                    .unwrap_or(p.n.max(1));
                 let mut done = 0;
                 while done < p.n {
                     let res = engine.sample_batch_offset(method, bs, p.seed, done as u64)?;
@@ -303,7 +307,7 @@ pub(crate) fn execute_group(router: &mut Router, shared: &WorkerShared, group: V
             let dim = results.first().map(|r| r.x.len()).unwrap_or(1);
             let calls_pct = scheduler::calls_pct_of(calls_per_job, dim);
             {
-                let mut m = shared.metrics.lock().unwrap();
+                let mut m = shared.metrics.lock().unwrap_or_else(|e| e.into_inner());
                 m.record_batch(total_jobs, calls, calls_pct, wall);
                 // The closed continuous path schedules under the
                 // latency-lean (fit) rule; the chunked path is the
@@ -376,7 +380,7 @@ pub(crate) fn execute_group(router: &mut Router, shared: &WorkerShared, group: V
             }
         }
         Err(e) => {
-            shared.metrics.lock().unwrap().record_error();
+            shared.metrics.lock().unwrap_or_else(|e| e.into_inner()).record_error();
             let msg = format!("{e:#}");
             for p in group {
                 fail_request(p, &shared.load, &msg);

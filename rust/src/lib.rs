@@ -24,7 +24,12 @@
 //!   environment has no crates.io access beyond the `xla` closure.
 //! * [`bench`] — criterion-lite harness + printers that regenerate every
 //!   table and figure of the paper's evaluation section.
+//! * [`analysis`] — `predsamp-lint`: repo-aware static analysis
+//!   (`cargo run --bin lint`) machine-checking the exactness, unsafe-FFI,
+//!   no-panic, lock-order, and doc-parity invariants
+//!   (`docs/ANALYSIS.md`).
 
+pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod runtime;

@@ -333,6 +333,8 @@ impl Waker for EventFdWaker {
         let one: u64 = 1;
         // A full eventfd counter (EAGAIN) already guarantees a pending
         // wakeup, so the result is ignorable.
+        // SAFETY: `self.fd` is the eventfd this waker owns (open until our
+        // Drop), and the buffer is a valid, live 8-byte u64 on this stack.
         unsafe { sys::write(self.fd, (&one as *const u64).cast(), 8) };
     }
 }
@@ -340,6 +342,9 @@ impl Waker for EventFdWaker {
 #[cfg(target_os = "linux")]
 impl Drop for EventFdWaker {
     fn drop(&mut self) {
+        // SAFETY: `self.fd` is the eventfd opened in `EpollSource::new`,
+        // owned uniquely by this waker; nothing closes it before Drop, so
+        // this cannot double-close or hit a recycled descriptor.
         unsafe { sys::close(self.fd) };
     }
 }
@@ -363,10 +368,16 @@ pub struct EpollSource {
 impl EpollSource {
     /// Create the epoll instance and its eventfd waker.
     pub fn new() -> io::Result<EpollSource> {
+        // SAFETY: epoll_create1 takes no pointers; flags are a valid flag
+        // set and the return value is error-checked by `cvt`.
         let epfd = sys::cvt(unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) })?;
+        // SAFETY: eventfd takes no pointers; initval/flags are valid and
+        // the return value is error-checked by `cvt`.
         let efd = match sys::cvt(unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) }) {
             Ok(fd) => fd,
             Err(e) => {
+                // SAFETY: `epfd` was just opened above, is owned by this
+                // function, and nothing else has closed it on this path.
                 unsafe { sys::close(epfd) };
                 return Err(e);
             }
@@ -376,6 +387,9 @@ impl EpollSource {
         // Level-triggered is fine for the waker: it is drained to zero
         // every time it is seen, and a write after the drain re-raises.
         if let Err(e) = src.ctl(sys::EPOLL_CTL_ADD, efd, sys::EPOLLIN, WAKER_TOKEN) {
+            // SAFETY: `epfd` is still open (only this function owns it);
+            // `efd` is left to the waker's Drop, so no fd leaks or
+            // double-closes on this error path.
             unsafe { sys::close(epfd) };
             return Err(e);
         }
@@ -384,6 +398,9 @@ impl EpollSource {
 
     fn ctl(&mut self, op: std::os::raw::c_int, fd: RawFd, events: u32, token: Token) -> io::Result<()> {
         let mut ev = sys::EpollEvent { events, data: token };
+        // SAFETY: `self.epfd` is the live epoll fd this source owns; `ev`
+        // is a valid, `#[repr(C, packed)]`-compatible event struct that
+        // outlives the call (the kernel copies it before returning).
         sys::cvt(unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) })?;
         Ok(())
     }
@@ -402,6 +419,8 @@ impl EpollSource {
     fn drain_waker(&self) {
         let mut buf = [0u8; 8];
         // One read zeroes a (non-semaphore) eventfd counter.
+        // SAFETY: the waker's eventfd is open for our lifetime (the Arc
+        // keeps it alive) and `buf` is a live 8-byte buffer on this stack.
         unsafe { sys::read(self.wake.fd, buf.as_mut_ptr().cast(), 8) };
     }
 }
@@ -409,6 +428,9 @@ impl EpollSource {
 #[cfg(target_os = "linux")]
 impl Drop for EpollSource {
     fn drop(&mut self) {
+        // SAFETY: `self.epfd` was opened in `new` and is owned uniquely by
+        // this source (the waker holds only the eventfd), so this is the
+        // single close of a still-open descriptor.
         unsafe { sys::close(self.epfd) };
     }
 }
@@ -440,6 +462,9 @@ impl ReadinessSource for EpollSource {
         // cannot degenerate into a busy spin.
         let ms = if timeout.is_zero() { 0 } else { timeout.as_millis().clamp(1, i32::MAX as u128) as std::os::raw::c_int };
         loop {
+            // SAFETY: `self.epfd` is live; the events pointer/len describe
+            // our owned, correctly-sized buffer, which the kernel fills
+            // with at most `len` entries before returning.
             let n = unsafe { sys::epoll_wait(self.epfd, self.events.as_mut_ptr(), self.events.len() as std::os::raw::c_int, ms) };
             if n < 0 {
                 let err = io::Error::last_os_error();
@@ -493,11 +518,15 @@ pub fn raise_nofile_limit() -> u64 {
         }
         const RLIMIT_NOFILE: c_int = 7;
         let mut lim = RLimit { cur: 0, max: 0 };
+        // SAFETY: `lim` is a live, `#[repr(C)]` rlimit-shaped struct the
+        // kernel writes both fields of; the resource id is a valid constant.
         if unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) } != 0 {
             return 1024;
         }
         if lim.cur < lim.max {
             let raised = RLimit { cur: lim.max, max: lim.max };
+            // SAFETY: `raised` is a live `#[repr(C)]` rlimit-shaped struct
+            // read (never written) by the kernel for the duration of the call.
             if unsafe { setrlimit(RLIMIT_NOFILE, &raised) } == 0 {
                 return lim.max;
             }

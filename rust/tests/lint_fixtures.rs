@@ -1,0 +1,402 @@
+//! Self-tests for the `predsamp-lint` static-analysis pass
+//! (`rust/src/analysis/`): lexer soundness, annotation parsing, and —
+//! for every pass — a violating fixture, a clean fixture, and a
+//! `lint:allow` escape fixture. The final test lints the repo itself
+//! and requires zero findings, which is the acceptance gate CI runs.
+//!
+//! Fixtures are plain source strings handed to [`SourceFile::from_source`]
+//! under a synthetic repo-relative path label — the label, not the
+//! filesystem, is what scopes a pass, so one test can present the same
+//! text as living inside or outside a pass's jurisdiction.
+
+use predsamp::analysis::lexer::{lex, TokKind};
+use predsamp::analysis::passes::{self, doc_parity, lock_order, nondet, panic_guard, unsafe_audit, Ctx};
+use predsamp::analysis::report::{Finding, Report};
+use predsamp::analysis::source::SourceFile;
+use predsamp::analysis::{lint_repo, walker};
+use std::path::Path;
+
+/// Run one pass over a single fixture file presented under `path`.
+fn findings_for(run: fn(&Ctx, &mut Vec<Finding>), path: &str, src: &str) -> Vec<Finding> {
+    let files = vec![SourceFile::from_source(path, src)];
+    let mut out = Vec::new();
+    run(&Ctx { files: &files, root: Path::new(".") }, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lexer_strings_hide_keywords() {
+    let toks = lex(r#"let s = "unsafe { HashMap::new() }"; call(s);"#);
+    assert!(!toks.iter().any(|t| t.is_ident("unsafe")));
+    assert!(!toks.iter().any(|t| t.is_ident("HashMap")));
+    assert!(toks.iter().any(|t| t.kind == TokKind::Str && t.text.contains("unsafe")));
+    assert!(toks.iter().any(|t| t.is_ident("call")));
+}
+
+#[test]
+fn lexer_comments_hide_keywords_and_nest() {
+    let toks = lex("/* outer /* unsafe */ still comment */ fn x() {}");
+    assert!(!toks.iter().any(|t| t.is_ident("unsafe")));
+    let comments: Vec<_> = toks.iter().filter(|t| t.is_comment()).collect();
+    assert_eq!(comments.len(), 1, "nested block comment must lex as one token");
+    assert_eq!(comments[0].text, "outer /* unsafe */ still comment");
+    assert!(toks.iter().any(|t| t.is_ident("fn")));
+    assert!(toks.iter().any(|t| t.is_ident("x")));
+
+    let toks = lex("// line comment with unwrap() and panic!\nreal();");
+    assert!(!toks.iter().any(|t| t.is_ident("unwrap")));
+    assert!(toks.iter().any(|t| t.is_ident("real")));
+}
+
+#[test]
+fn lexer_raw_strings() {
+    // Hashed raw string: embedded quote and backslash stay inside the literal.
+    let toks = lex(r###"let s = r#"quote " and \ unsafe"#; done(s);"###);
+    let strs: Vec<_> = toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+    assert_eq!(strs.len(), 1);
+    assert_eq!(strs[0].text, r#"quote " and \ unsafe"#);
+    assert!(!toks.iter().any(|t| t.is_ident("unsafe")));
+    assert!(toks.iter().any(|t| t.is_ident("done")));
+
+    // Hash-less raw string: no escape processing, ends at the first quote.
+    let toks = lex(r#"let s = r"no \escape here"; done(s);"#);
+    let strs: Vec<_> = toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+    assert_eq!(strs.len(), 1);
+    assert_eq!(strs[0].text, r"no \escape here");
+
+    // Byte string lexes as a string; `break`-style identifiers starting
+    // with prefix letters stay identifiers.
+    let toks = lex(r#"let b = b"bytes"; break range;"#);
+    assert!(toks.iter().any(|t| t.kind == TokKind::Str && t.text == "bytes"));
+    assert!(toks.iter().any(|t| t.is_ident("break")));
+    assert!(toks.iter().any(|t| t.is_ident("range")));
+}
+
+#[test]
+fn lexer_char_vs_lifetime() {
+    let toks = lex("fn f<'a>(x: &'a str) { let c = 'q'; let n = '\\n'; }");
+    let lifetimes: Vec<_> = toks.iter().filter(|t| t.kind == TokKind::Lifetime).map(|t| t.text.as_str()).collect();
+    assert_eq!(lifetimes, ["a", "a"]);
+    let chars: Vec<_> = toks.iter().filter(|t| t.kind == TokKind::Char).map(|t| t.text.as_str()).collect();
+    assert_eq!(chars, ["q", "\\n"]);
+}
+
+#[test]
+fn lexer_tracks_lines() {
+    let toks = lex("alpha\nbeta\n\n  gamma");
+    let at = |name: &str| toks.iter().find(|t| t.is_ident(name)).unwrap().line;
+    assert_eq!(at("alpha"), 1);
+    assert_eq!(at("beta"), 2);
+    assert_eq!(at("gamma"), 4);
+}
+
+// ---------------------------------------------------------------------------
+// SourceFile: allows, test regions
+// ---------------------------------------------------------------------------
+
+#[test]
+fn allows_parse_and_scope() {
+    let src = "fn a() {\n    // lint:allow(nondet-guard): seeded elsewhere\n    let x = wall_clock();\n}\n// prose mentioning lint:allow(bogus): x is not an annotation\n";
+    let f = SourceFile::from_source("rust/src/x.rs", src);
+    assert_eq!(f.allows.len(), 1, "prose mention must not parse as an escape");
+    assert_eq!(f.allows[0].pass, "nondet-guard");
+    assert_eq!(f.allows[0].reason, "seeded elsewhere");
+    assert!(f.allowed("nondet-guard", 2), "same line");
+    assert!(f.allowed("nondet-guard", 3), "line directly below");
+    assert!(!f.allowed("nondet-guard", 4), "two lines below is out of reach");
+    assert!(!f.allowed("panic-guard", 3), "other passes are not excused");
+}
+
+#[test]
+fn test_regions_detected() {
+    let src = "fn live() { x(); }\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { y(); }\n}\n#[cfg(not(test))]\nfn also_live() { z(); }\n";
+    let f = SourceFile::from_source("rust/src/x.rs", src);
+    assert!(!f.in_test(1));
+    assert!(f.in_test(3));
+    assert!(f.in_test(5));
+    assert!(!f.in_test(8), "cfg(not(test)) is live code, not a test region");
+}
+
+// ---------------------------------------------------------------------------
+// unsafe-audit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unsafe_audit_flags_unsafe_outside_allowlist() {
+    let out = findings_for(unsafe_audit::run, "rust/src/sampler/mod.rs", "fn f() { unsafe { q() } }");
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].pass, "unsafe-audit");
+    assert_eq!(out[0].line, 1);
+    assert!(out[0].msg.contains("allowlisted"));
+}
+
+#[test]
+fn unsafe_audit_requires_safety_comment_in_allowlisted_module() {
+    let allowed_path = unsafe_audit::ALLOWED_MODULES[0];
+    let bad = "fn f() { unsafe { q() } }";
+    let out = findings_for(unsafe_audit::run, allowed_path, bad);
+    assert_eq!(out.len(), 1);
+    assert!(out[0].msg.contains("SAFETY"));
+
+    let good = "fn f() {\n    // SAFETY: q only reads fds this struct owns.\n    unsafe { q() }\n}";
+    assert!(findings_for(unsafe_audit::run, allowed_path, good).is_empty());
+
+    let too_far = "fn f() {\n    // SAFETY: too far above to count.\n\n\n\n    unsafe { q() }\n}";
+    assert_eq!(findings_for(unsafe_audit::run, allowed_path, too_far).len(), 1);
+}
+
+#[test]
+fn unsafe_audit_ignores_masked_tokens_and_honors_allows() {
+    let masked = "// unsafe in a comment\nfn f() { let s = \"unsafe\"; g(s); }";
+    assert!(findings_for(unsafe_audit::run, "rust/src/sampler/mod.rs", masked).is_empty());
+
+    let escaped = "// lint:allow(unsafe-audit): fixture proving the escape hatch\nfn f() { unsafe { q() } }";
+    assert!(findings_for(unsafe_audit::run, "rust/src/sampler/mod.rs", escaped).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// nondet-guard
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nondet_guard_flags_hashmap_clock_and_rng_in_critical_modules() {
+    let src = "use std::collections::HashMap;\nfn f() { let t = Instant::now(); let r = thread_rng(); }";
+    let out = findings_for(nondet::run, "rust/src/sampler/noise.rs", src);
+    assert_eq!(out.len(), 3, "{out:?}");
+    assert!(out.iter().all(|f| f.pass == "nondet-guard"));
+    assert!(out.iter().any(|f| f.msg.contains("HashMap") && f.msg.contains("BTreeMap")));
+    assert!(out.iter().any(|f| f.msg.contains("Instant::now")));
+    assert!(out.iter().any(|f| f.msg.contains("thread_rng")));
+}
+
+#[test]
+fn nondet_guard_is_scoped_and_precise() {
+    // Outside the critical modules: no jurisdiction.
+    let src = "use std::collections::HashMap;\nfn f() {}";
+    assert!(findings_for(nondet::run, "rust/src/coordinator/server/mod.rs", src).is_empty());
+
+    // Test-only code is exempt.
+    let test_only = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn t() { let _: HashMap<u8, u8> = HashMap::new(); }\n}";
+    assert!(findings_for(nondet::run, "rust/src/sampler/mod.rs", test_only).is_empty());
+
+    // `Instant` as a type (no `::now`) is fine — storing admission times
+    // for relative ages is deterministic-output-safe.
+    let typed = "pub struct S {\n    pub admitted: Instant,\n}\nfn f(s: &S) { let age = s.admitted.elapsed(); use_it(age); }";
+    assert!(findings_for(nondet::run, "rust/src/sampler/mod.rs", typed).is_empty());
+
+    // BTreeMap is the blessed replacement.
+    let clean = "use std::collections::BTreeMap;\nfn f(m: &BTreeMap<u8, u8>) { m.len(); }";
+    assert!(findings_for(nondet::run, "rust/src/sampler/mod.rs", clean).is_empty());
+
+    // The escape hatch works on the same line.
+    let escaped = "fn f() {\n    let t = Instant::now(); // lint:allow(nondet-guard): latency gauge only, never serialized\n    use_it(t);\n}";
+    assert!(findings_for(nondet::run, "rust/src/sampler/mod.rs", escaped).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// panic-guard
+// ---------------------------------------------------------------------------
+
+#[test]
+fn panic_guard_flags_unwrap_expect_panic() {
+    let src = "fn f() { x.unwrap(); y.expect(\"msg\"); panic!(\"boom\"); }";
+    let out = findings_for(panic_guard::run, "rust/src/coordinator/server/conn.rs", src);
+    assert_eq!(out.len(), 3, "{out:?}");
+    assert!(out.iter().all(|f| f.pass == "panic-guard"));
+}
+
+#[test]
+fn panic_guard_permits_degraded_idioms_tests_and_allows() {
+    // The degraded-handling idioms are exactly what the pass pushes
+    // toward — they must never be flagged.
+    let degraded = "fn f() {\n    let g = a.lock().unwrap_or_else(|e| e.into_inner());\n    let v = b.unwrap_or(0);\n    let w = c.unwrap_or_default();\n    unreachable!(\"statically matched above\");\n}";
+    assert!(findings_for(panic_guard::run, "rust/src/coordinator/server/conn.rs", degraded).is_empty());
+
+    // Outside the guarded modules: no jurisdiction.
+    assert!(findings_for(panic_guard::run, "rust/src/sampler/mod.rs", "fn f() { x.unwrap(); }").is_empty());
+
+    // Test code may panic freely.
+    let test_only = "#[test]\nfn t() { x.unwrap(); }";
+    assert!(findings_for(panic_guard::run, "rust/src/coordinator/server/conn.rs", test_only).is_empty());
+
+    // Escape on the line above.
+    let escaped = "fn f() {\n    // lint:allow(panic-guard): fixture proving the escape hatch\n    x.unwrap();\n}";
+    assert!(findings_for(panic_guard::run, "rust/src/coordinator/server/conn.rs", escaped).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// lock-discipline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lock_discipline_flags_reverse_nesting() {
+    let src = "fn f(p: &P) {\n    let m = p.metrics.lock().unwrap_or_else(|e| e.into_inner());\n    let s = p.state.lock().unwrap_or_else(|e| e.into_inner());\n    use_both(m, s);\n}";
+    let out = findings_for(lock_order::run, "rust/src/coordinator/server/worker.rs", src);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert_eq!(out[0].pass, "lock-discipline");
+    assert_eq!(out[0].line, 3);
+    assert!(out[0].msg.contains("`state`") && out[0].msg.contains("`metrics`"));
+}
+
+#[test]
+fn lock_discipline_accepts_declared_order_drop_and_scopes() {
+    // Declared order: state before metrics.
+    let ordered = "fn f(p: &P) {\n    let s = p.state.lock().unwrap_or_else(|e| e.into_inner());\n    let m = p.metrics.lock().unwrap_or_else(|e| e.into_inner());\n    use_both(s, m);\n}";
+    assert!(findings_for(lock_order::run, "rust/src/coordinator/server/worker.rs", ordered).is_empty());
+
+    // An explicit drop releases the hold.
+    let dropped = "fn f(p: &P) {\n    let m = p.metrics.lock().unwrap_or_else(|e| e.into_inner());\n    drop(m);\n    let s = p.state.lock().unwrap_or_else(|e| e.into_inner());\n    use_it(s);\n}";
+    assert!(findings_for(lock_order::run, "rust/src/coordinator/server/worker.rs", dropped).is_empty());
+
+    // A block-scoped guard dies with its block.
+    let scoped = "fn f(p: &P) {\n    {\n        let m = p.metrics.lock().unwrap_or_else(|e| e.into_inner());\n        use_it(m);\n    }\n    let s = p.state.lock().unwrap_or_else(|e| e.into_inner());\n    use_it(s);\n}";
+    assert!(findings_for(lock_order::run, "rust/src/coordinator/server/worker.rs", scoped).is_empty());
+
+    // An unbound temporary guard is released at end of statement.
+    let stmt_temp = "fn f(p: &P) {\n    p.metrics.lock().unwrap_or_else(|e| e.into_inner()).record_error();\n    let s = p.state.lock().unwrap_or_else(|e| e.into_inner());\n    use_it(s);\n}";
+    assert!(findings_for(lock_order::run, "rust/src/coordinator/server/worker.rs", stmt_temp).is_empty());
+
+    // Out of the scoped modules: no jurisdiction.
+    let src = "fn f(p: &P) {\n    let m = p.metrics.lock().unwrap();\n    let s = p.state.lock().unwrap();\n    use_both(m, s);\n}";
+    assert!(findings_for(lock_order::run, "rust/src/sampler/mod.rs", src).is_empty());
+
+    // The escape hatch.
+    let escaped = "fn f(p: &P) {\n    let m = p.metrics.lock().unwrap_or_else(|e| e.into_inner());\n    // lint:allow(lock-discipline): shutdown path, all other threads joined\n    let s = p.state.lock().unwrap_or_else(|e| e.into_inner());\n    use_both(m, s);\n}";
+    assert!(findings_for(lock_order::run, "rust/src/coordinator/server/worker.rs", escaped).is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// doc-parity
+// ---------------------------------------------------------------------------
+
+/// A scratch docs dir for doc-parity fixtures (it reads ARCHITECTURE.md /
+/// PROTOCOL.md from disk). Distinct per test so parallel runs don't race.
+fn docs_root(tag: &str, arch: &str, proto: &str) -> std::path::PathBuf {
+    let root = std::env::temp_dir().join(format!("predsamp-lint-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(root.join("docs")).unwrap();
+    std::fs::write(root.join("docs/ARCHITECTURE.md"), arch).unwrap();
+    std::fs::write(root.join("docs/PROTOCOL.md"), proto).unwrap();
+    root
+}
+
+#[test]
+fn doc_parity_cross_checks_docs_cli_and_keys() {
+    let root = docs_root("parity", "knob table: `port` documented\n", "keys: \"requests\" documented\n");
+    let files = vec![
+        SourceFile::from_source(
+            "rust/src/coordinator/config.rs",
+            "pub struct ServeConfig {\n    pub port: u16,\n    pub max_batch: usize,\n}",
+        ),
+        // The CLI parses `port` and `max_batch` — so `max_batch` is only
+        // missing from the knob table, not from the CLI.
+        SourceFile::from_source("rust/src/main.rs", "fn main() { let cfg = ServeConfig { port: 1, max_batch: 2 }; }"),
+        SourceFile::from_source(
+            "rust/src/coordinator/metrics.rs",
+            "impl Metrics {\n    pub fn snapshot(&self) -> Value {\n        Value::obj(vec![(\"requests\", Value::num(1.0)), (\"mystery_key\", Value::num(2.0))])\n    }\n    pub fn worker_value(&self) -> Value {\n        Value::obj(vec![])\n    }\n}",
+        ),
+        SourceFile::from_source("rust/src/coordinator/server/conn.rs", "fn value() {}"),
+        SourceFile::from_source("rust/src/coordinator/server/mod.rs", "fn metrics_response() {}"),
+    ];
+    let mut out = Vec::new();
+    doc_parity::run(&Ctx { files: &files, root: &root }, &mut out);
+    let msgs: Vec<&str> = out.iter().map(|f| f.msg.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("max_batch") && m.contains("ARCHITECTURE")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("mystery_key") && m.contains("PROTOCOL")), "{msgs:?}");
+    assert!(!msgs.iter().any(|m| m.contains("ServeConfig::port")), "documented+parsed field must be clean: {msgs:?}");
+    assert!(!msgs.iter().any(|m| m.contains("\"requests\"")), "documented key must be clean: {msgs:?}");
+    assert!(!msgs.iter().any(|m| m.contains("max_batch") && m.contains("CLI")), "parsed field must pass the CLI check: {msgs:?}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn doc_parity_reports_blind_spots_instead_of_passing_silently() {
+    let root = docs_root("blind", "", "");
+    let files: Vec<SourceFile> = Vec::new();
+    let mut out = Vec::new();
+    doc_parity::run(&Ctx { files: &files, root: &root }, &mut out);
+    assert!(!out.is_empty());
+    assert!(out.iter().all(|f| f.msg.contains("blind")), "{out:?}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// allow-hygiene
+// ---------------------------------------------------------------------------
+
+#[test]
+fn allow_hygiene_polices_escapes() {
+    let files = vec![SourceFile::from_source(
+        "rust/src/x.rs",
+        "// lint:allow(no-such-pass): whatever\n// lint:allow(panic-guard):\n// lint:allow(nondet-guard): a real written reason\nfn f() {}",
+    )];
+    let mut out = Vec::new();
+    passes::allow_hygiene(&Ctx { files: &files, root: Path::new(".") }, &mut out);
+    assert_eq!(out.len(), 2, "{out:?}");
+    assert!(out[0].msg.contains("unknown pass"));
+    assert_eq!(out[0].line, 1);
+    assert!(out[1].msg.contains("without a written reason"));
+    assert_eq!(out[1].line, 2);
+}
+
+// ---------------------------------------------------------------------------
+// Report rendering and walker determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn report_renders_text_and_json() {
+    let mut r = Report {
+        findings: vec![
+            Finding::new("panic-guard", "b.rs", 2, "second in sort order"),
+            Finding::new("unsafe-audit", "a.rs", 9, "needs \"quotes\" escaped"),
+        ],
+        files_scanned: 2,
+        passes: vec!["unsafe-audit", "panic-guard"],
+    };
+    r.sort();
+    assert_eq!(r.findings[0].path, "a.rs", "findings sort by path first");
+    let text = r.render_text();
+    assert!(text.contains("a.rs:9: [unsafe-audit]"), "{text}");
+    assert!(text.contains("2 findings across 2 files"), "{text}");
+    let json = r.render_json();
+    assert!(json.contains("\"ok\":false"), "{json}");
+    assert!(json.contains("needs \\\"quotes\\\" escaped"), "{json}");
+
+    let empty = Report { findings: Vec::new(), files_scanned: 1, passes: vec!["unsafe-audit"] };
+    assert!(empty.render_json().contains("\"ok\":true"));
+    assert!(empty.render_text().contains("0 findings"));
+}
+
+#[test]
+fn walker_is_sorted_and_repo_relative() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let files = walker::rust_sources(root);
+    assert!(files.len() > 10, "expected a real source tree, got {} files", files.len());
+    assert!(files.iter().all(|f| f.path.starts_with("rust/src/")));
+    assert!(files.iter().any(|f| f.path == "rust/src/lib.rs"));
+    let paths: Vec<&String> = files.iter().map(|f| &f.path).collect();
+    let mut sorted = paths.clone();
+    sorted.sort();
+    assert_eq!(paths, sorted, "walker output must be deterministic");
+}
+
+#[test]
+fn find_repo_root_walks_up() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let nested = root.join("rust").join("src").join("analysis");
+    assert_eq!(walker::find_repo_root(&nested), Some(root.to_path_buf()));
+}
+
+// ---------------------------------------------------------------------------
+// The gate: the repo passes its own linter
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repo_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint_repo(root);
+    assert!(report.findings.is_empty(), "repo lint findings:\n{}", report.render_text());
+}

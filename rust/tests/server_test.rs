@@ -1087,3 +1087,59 @@ fn malformed_requests_get_errors() {
     assert_eq!(pong.get("ok").as_bool(), Some(true));
     server.stop();
 }
+
+// ---------------------------------------------------------------------------
+// Serialization byte-stability (regression tests for the BTreeMap audit:
+// no map with nondeterministic iteration order may reach serialized
+// metrics output)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn metrics_snapshot_is_byte_stable_across_insertion_order() {
+    use predsamp::coordinator::metrics::Metrics;
+    // Two metrics fed the same multiset of events, with policy labels
+    // recorded in different interleavings — as two identical runs would
+    // under different thread schedules. The rendered snapshots must be
+    // byte-identical.
+    let mut a = Metrics::new();
+    let mut b = Metrics::new();
+    for name in ["slo", "occupancy", "slo", "latency"] {
+        a.record_policy(name);
+    }
+    for name in ["latency", "slo", "occupancy", "slo"] {
+        b.record_policy(name);
+    }
+    for m in [&mut a, &mut b] {
+        m.record_request();
+        m.record_batch(4, 16, 12.5, 0.25);
+        m.record_absorbed(3);
+        m.record_absorb_denial();
+        m.record_admission_age(Duration::from_millis(7));
+    }
+    assert_eq!(a.snapshot().to_string(), b.snapshot().to_string());
+}
+
+#[test]
+fn convergence_book_is_byte_stable_across_observation_order() {
+    use predsamp::coordinator::policy::{ConvergenceBook, ConvergencePrior};
+    let obs = |p: f64, s: f64| ConvergencePrior { passes_per_job: p, pass_secs: s };
+    // Same observations per key; only the cross-key interleaving differs
+    // (per-key order must match — the estimate is an EWMA).
+    let a = ConvergenceBook::new();
+    a.observe("mnist/forecast", obs(3.0, 0.01));
+    a.observe("cifar/aux", obs(7.0, 0.05));
+    a.observe("mnist/forecast", obs(5.0, 0.02));
+    let b = ConvergenceBook::new();
+    b.observe("cifar/aux", obs(7.0, 0.05));
+    b.observe("mnist/forecast", obs(3.0, 0.01));
+    b.observe("mnist/forecast", obs(5.0, 0.02));
+    let render = |book: &ConvergenceBook| {
+        book.entries()
+            .into_iter()
+            .map(|(k, est, n)| format!("{k}={}/{}/{n}", est.passes_per_job, est.pass_secs))
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    assert_eq!(render(&a), render(&b));
+    assert!(render(&a).starts_with("cifar/aux="), "entries must iterate in key order: {}", render(&a));
+}
