@@ -23,12 +23,19 @@
 //! strictly below scan — O(ready) vs O(conns) is a structural gap, not a
 //! wall-clock race — at bitwise-equal outputs. Both gates are asserted.
 //!
-//!     cargo bench --bench serving_load [-- --clients 8 --requests 12 --engine-threads 1,4 --conns 256 --idle-conns 4096 --out BENCH_serving_load.json]
+//! A federation scenario runs the mixed stream one tier up — through a
+//! front-tier router over three backend coordinators — asserting the
+//! routed outputs bitwise-equal the single-process reference, then stops
+//! the backend owning `mock_a` and times the failover (link-error
+//! detection + namespace re-home + replay) as one client-visible call.
+//!
+//!     cargo bench --bench serving_load [-- --clients 8 --requests 12 --engine-threads 1,4 --conns 256 --idle-conns 4096 --fed-requests 16 --out BENCH_serving_load.json]
 
 use predsamp::coordinator::config::ServeConfig;
+use predsamp::coordinator::federation::{spawn_router, RouterConfig};
 use predsamp::coordinator::placement::PlacementKind;
 use predsamp::coordinator::protocol::parse_samples;
-use predsamp::coordinator::server::{spawn, Client};
+use predsamp::coordinator::server::{spawn, Client, ServerHandle};
 use predsamp::runtime::artifact::{write_mock_manifest, MockModelSpec};
 use predsamp::substrate::cli::Args;
 use predsamp::substrate::json::Value;
@@ -320,6 +327,116 @@ fn run_edge_scale(
     Ok((outputs, de as f64 / dt as f64, dt, de))
 }
 
+/// Federation scenario: the mixed stream through a front-tier router
+/// over `n` backend coordinators, bitwise-compared against one process
+/// serving the same stream directly — then the backend owning `mock_a`
+/// stops, and the next `mock_a` request times the whole failover (link
+/// error detection, namespace re-home, replay on a survivor) as one
+/// client-visible latency. Returns the `federation` result object.
+fn run_federation(dir: std::path::PathBuf, n: usize, requests: usize) -> anyhow::Result<Value> {
+    fn backend(dir: std::path::PathBuf) -> anyhow::Result<ServerHandle> {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            continuous: true,
+            elastic: true,
+            steal: true,
+            engine_threads: 2,
+            ..ServeConfig::default()
+        };
+        spawn(dir, cfg)
+    }
+    let stream = |addr: &std::net::SocketAddr| -> anyhow::Result<(Vec<Vec<Vec<i32>>>, f64)> {
+        let mut c = Client::connect(addr)?;
+        let t = Timer::start();
+        let mut out = Vec::with_capacity(requests);
+        for i in 0..requests {
+            let (model, method) = MIX[i % MIX.len()];
+            let r = c.call(&format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":2,"seed":{i}}}"#))?;
+            anyhow::ensure!(r.get("ok").as_bool() == Some(true), "request failed: {r}");
+            out.push(parse_samples(r.get("samples")).expect("samples"));
+        }
+        Ok((out, t.secs()))
+    };
+
+    let direct = backend(dir.clone())?;
+    let (reference, direct_wall) = stream(&direct.addr)?;
+    direct.stop();
+
+    let mut backends: Vec<Option<ServerHandle>> =
+        (0..n).map(|_| backend(dir.clone()).map(Some)).collect::<anyhow::Result<_>>()?;
+    let router = spawn_router(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: backends.iter().map(|b| b.as_ref().unwrap().addr.to_string()).collect(),
+        probe_interval: Duration::from_millis(100),
+        ..RouterConfig::default()
+    })?;
+    let (routed, routed_wall) = stream(&router.addr)?;
+    anyhow::ensure!(routed == reference, "federated outputs diverged from the single process");
+
+    // Find `mock_a`'s owner: the per-backend forward counter that moves
+    // when one more mock_a request goes through.
+    let mut c = Client::connect(&router.addr)?;
+    let counts = |c: &mut Client| -> anyhow::Result<Vec<i64>> {
+        Ok(c.call(r#"{"op":"metrics"}"#)?
+            .get("metrics")
+            .get("fleet")
+            .get("backends")
+            .as_arr()
+            .expect("fleet.backends gauge")
+            .iter()
+            .map(|b| b.get("forwarded").as_i64().unwrap_or(0))
+            .collect())
+    };
+    let before = counts(&mut c)?;
+    let r = c.call(r#"{"op":"sample","model":"mock_a","method":"fpi","n":1,"seed":9000,"return_samples":false}"#)?;
+    anyhow::ensure!(r.get("ok").as_bool() == Some(true), "owner probe failed: {r}");
+    let after = counts(&mut c)?;
+    let owner = after.iter().zip(&before).position(|(a, b)| a > b).expect("the owner's forward counter moved");
+
+    // Stop the owner and time the next mock_a request end to end: the
+    // router detects the dead link, re-homes the namespace, and replays
+    // on a survivor — all inside this one client-visible call.
+    backends[owner].take().expect("owner still running").stop();
+    let t = Timer::start();
+    let r = c.call(r#"{"op":"sample","model":"mock_a","method":"fpi","n":2,"seed":0}"#)?;
+    let rehome_latency = t.secs();
+    anyhow::ensure!(r.get("ok").as_bool() == Some(true), "post-failover request failed: {r}");
+    anyhow::ensure!(
+        parse_samples(r.get("samples")).expect("samples") == reference[0],
+        "failover changed the payload"
+    );
+    let fleet = c.call(r#"{"op":"metrics"}"#)?.get("metrics").get("fleet").clone();
+    router.stop();
+    for b in backends.into_iter().flatten() {
+        b.stop();
+    }
+
+    println!(
+        "federation: {n} backends behind 1 router, {requests} mixed requests routed in {} (direct {}), outputs bitwise equal",
+        fmt_duration(routed_wall),
+        fmt_duration(direct_wall)
+    );
+    println!(
+        "            failover: owner stopped, next request re-homed + replayed in {} ({} re-homes, {} forwards)",
+        fmt_duration(rehome_latency),
+        fleet.get("re_homes").as_i64().unwrap_or(0),
+        fleet.get("forwards").as_i64().unwrap_or(0)
+    );
+    Ok(Value::obj(vec![
+        ("backends", Value::num(n as f64)),
+        ("requests", Value::num(requests as f64)),
+        ("direct_wall_secs", Value::num(direct_wall)),
+        ("routed_wall_secs", Value::num(routed_wall)),
+        ("routed_overhead", Value::num(routed_wall / direct_wall.max(1e-9))),
+        ("rehome_latency_s", Value::num(rehome_latency)),
+        ("re_homes", Value::num(fleet.get("re_homes").as_i64().unwrap_or(0) as f64)),
+        ("forwards", Value::num(fleet.get("forwards").as_i64().unwrap_or(0) as f64)),
+        ("outputs_bitwise_equal", Value::Bool(true)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let clients = args.num::<usize>("clients", 8);
@@ -455,6 +572,11 @@ fn main() -> anyhow::Result<()> {
         println!("edge-scale: epoll {epoll_cost:.1} ready/tick vs scan {scan_cost:.1} — O(ready) beats O(conns), outputs bitwise equal");
     }
 
+    // Federation scenario: the same stream one tier up, through a router
+    // over three backend coordinators, including a timed failover.
+    let fed_requests = args.num::<usize>("fed-requests", 16);
+    let federation = run_federation(dir.clone(), 3, fed_requests)?;
+
     let mut root = vec![
         ("bench", Value::str("serving_load")),
         ("clients", Value::num(clients as f64)),
@@ -481,6 +603,7 @@ fn main() -> anyhow::Result<()> {
                 ("outputs_bitwise_equal", Value::Bool(true)),
             ]),
         ),
+        ("federation", federation),
     ];
     if let Some(s) = speedup {
         root.push(("sharding_speedup", Value::num(s)));

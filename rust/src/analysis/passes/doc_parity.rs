@@ -4,17 +4,20 @@
 //! Three checks, replacing the sed/grep gate that used to live inline in
 //! `ci.yml`:
 //!
-//! 1. Every `ServeConfig` field (parsed from
-//!    `rust/src/coordinator/config.rs`) appears backticked in
-//!    `docs/ARCHITECTURE.md`'s knob table.
-//! 2. Every `ServeConfig` field is actually parsed by the CLI — it must
-//!    appear as an identifier in `rust/src/main.rs` (the `serve` arm
-//!    builds the struct field-by-field, so a field the CLI forgot shows
-//!    up as a missing identifier, not a silent default).
-//! 3. Every `metrics`/`edge` key the server can emit — string keys in
-//!    `Metrics::snapshot`, `Metrics::worker_value` (`metrics.rs`),
-//!    `EdgeStats::value` (`conn.rs`), and `metrics_response` (`mod.rs`)
-//!    — appears in `docs/PROTOCOL.md`, quoted or backticked.
+//! 1. Every config-struct field — `ServeConfig` in
+//!    `rust/src/coordinator/config.rs` and `RouterConfig` in
+//!    `rust/src/coordinator/federation.rs` — appears backticked in
+//!    `docs/ARCHITECTURE.md`'s knob tables.
+//! 2. Every such field is actually parsed by the CLI — it must appear
+//!    as an identifier in `rust/src/main.rs` (the `serve`/`route` arms
+//!    build their structs field-by-field, so a field the CLI forgot
+//!    shows up as a missing identifier, not a silent default).
+//! 3. Every `metrics`/`edge`/`fleet` key the server or router can emit
+//!    — string keys in `Metrics::snapshot`, `Metrics::worker_value`
+//!    (`metrics.rs`), `EdgeStats::value` (`conn.rs`),
+//!    `metrics_response` (`mod.rs`), and `fleet_value` /
+//!    `router_metrics_response` (`federation.rs`) — appears in
+//!    `docs/PROTOCOL.md`, quoted or backticked.
 //!
 //! Key extraction is lexical: a string literal directly after `(` and
 //! followed by `,` (the `("key", Value::...)` tuple idiom) or directly
@@ -30,13 +33,18 @@ use std::fs;
 /// Pass name, as used in `lint:allow(...)`.
 pub const NAME: &str = "doc-parity";
 
-const CONFIG: &str = "rust/src/coordinator/config.rs";
 const MAIN: &str = "rust/src/main.rs";
-/// (file, functions whose bodies emit metrics/edge keys)
+/// (file, config struct whose fields the knob tables and CLI must cover)
+const CONFIG_SOURCES: &[(&str, &str)] = &[
+    ("rust/src/coordinator/config.rs", "ServeConfig"),
+    ("rust/src/coordinator/federation.rs", "RouterConfig"),
+];
+/// (file, functions whose bodies emit metrics/edge/fleet keys)
 const KEY_SOURCES: &[(&str, &[&str])] = &[
     ("rust/src/coordinator/metrics.rs", &["snapshot", "worker_value"]),
     ("rust/src/coordinator/server/conn.rs", &["value"]),
     ("rust/src/coordinator/server/mod.rs", &["metrics_response"]),
+    ("rust/src/coordinator/federation.rs", &["fleet_value", "router_metrics_response"]),
 ];
 
 /// Run the pass.
@@ -46,28 +54,30 @@ pub fn run(ctx: &Ctx, out: &mut Vec<Finding>) {
     let arch = fs::read_to_string(ctx.root.join("docs/ARCHITECTURE.md")).unwrap_or_default();
     let proto = fs::read_to_string(ctx.root.join("docs/PROTOCOL.md")).unwrap_or_default();
 
-    // 1 + 2: ServeConfig fields vs knob table and CLI.
-    if let Some(cfg) = find(CONFIG) {
-        let fields = cfg.struct_fields("ServeConfig");
+    // 1 + 2: config-struct fields vs knob tables and CLI.
+    let main_idents: Vec<&str> = find(MAIN)
+        .map(|m| m.toks.iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str()).collect())
+        .unwrap_or_default();
+    for &(path, strukt) in CONFIG_SOURCES {
+        let Some(cfg) = find(path) else {
+            out.push(Finding::new(NAME, path, 1, format!("{strukt} source not found — doc-parity is blind")));
+            continue;
+        };
+        let fields = cfg.struct_fields(strukt);
         if fields.is_empty() {
-            out.push(Finding::new(NAME, CONFIG, 1, "could not extract any ServeConfig fields — doc-parity is blind"));
+            out.push(Finding::new(NAME, path, 1, format!("could not extract any {strukt} fields — doc-parity is blind")));
         }
-        let main_idents: Vec<&str> = find(MAIN)
-            .map(|m| m.toks.iter().filter(|t| t.kind == TokKind::Ident).map(|t| t.text.as_str()).collect())
-            .unwrap_or_default();
         for (field, line) in fields {
             if cfg.allowed(NAME, line) {
                 continue;
             }
             if !arch.contains(&format!("`{field}`")) {
-                out.push(Finding::new(NAME, CONFIG, line, format!("ServeConfig::{field} is not documented in docs/ARCHITECTURE.md's knob table")));
+                out.push(Finding::new(NAME, path, line, format!("{strukt}::{field} is not documented in docs/ARCHITECTURE.md's knob table")));
             }
             if !main_idents.contains(&field.as_str()) {
-                out.push(Finding::new(NAME, CONFIG, line, format!("ServeConfig::{field} is never parsed by the CLI (rust/src/main.rs)")));
+                out.push(Finding::new(NAME, path, line, format!("{strukt}::{field} is never parsed by the CLI (rust/src/main.rs)")));
             }
         }
-    } else {
-        out.push(Finding::new(NAME, CONFIG, 1, "config.rs not found — doc-parity is blind"));
     }
 
     // 3: emitted metrics/edge keys vs PROTOCOL.md.

@@ -19,7 +19,10 @@ use crate::analysis::report::Finding;
 pub const NAME: &str = "panic-guard";
 
 /// Modules where a panic is an availability incident, not a bug report.
-pub const GUARDED_MODULES: &[&str] = &["rust/src/coordinator/server/", "rust/src/substrate/readiness.rs"];
+/// The federation router counts: a panic in its route loop or a backend
+/// reader thread takes the whole front tier's fleet state down.
+pub const GUARDED_MODULES: &[&str] =
+    &["rust/src/coordinator/server/", "rust/src/coordinator/federation.rs", "rust/src/substrate/readiness.rs"];
 
 /// Run the pass.
 pub fn run(ctx: &Ctx, out: &mut Vec<Finding>) {

@@ -52,6 +52,21 @@ impl Method {
             Method::NoReparam => "fpi_noreparam".into(),
         }
     }
+
+    /// Wire form of the method: the `(method, t_use)` request-field pair
+    /// that [`Method::parse`] maps back to this variant. The federation
+    /// router serializes forwarded requests through this; `label()` is
+    /// for humans (`forecast(T=5)`) and does not round-trip.
+    pub fn wire_name(&self) -> (&'static str, usize) {
+        match self {
+            Method::Baseline => ("baseline", 1),
+            Method::Zeros => ("zeros", 1),
+            Method::PredictLast => ("predict_last", 1),
+            Method::Fpi => ("fpi", 1),
+            Method::Forecast { t_use } => ("forecast", *t_use),
+            Method::NoReparam => ("fpi_noreparam", 1),
+        }
+    }
 }
 
 /// Server/engine configuration.
@@ -242,6 +257,21 @@ mod tests {
     fn labels_stable() {
         assert_eq!(Method::Forecast { t_use: 5 }.label(), "forecast(T=5)");
         assert_eq!(Method::Fpi.label(), "fpi");
+    }
+
+    #[test]
+    fn wire_names_roundtrip_through_parse() {
+        for m in [
+            Method::Baseline,
+            Method::Zeros,
+            Method::PredictLast,
+            Method::Fpi,
+            Method::Forecast { t_use: 7 },
+            Method::NoReparam,
+        ] {
+            let (name, t_use) = m.wire_name();
+            assert_eq!(Method::parse(name, t_use), Some(m), "wire_name must invert parse for {name}");
+        }
     }
 
     #[test]

@@ -1,0 +1,1187 @@
+//! Federation: a front-tier router that fans the serving protocol
+//! across N backend coordinator *processes*.
+//!
+//! This is the placement plane generalized one level up — process =
+//! worker. The router accepts the existing wire protocol on its own
+//! sharded connection plane (the same `conn.rs` event loops the server
+//! uses), maps each model namespace to a backend via [`FleetPlacement`]
+//! (reusing [`PlacementKind`] semantics: replicate / pinned /
+//! capacity-capped), and proxies requests over one persistent pipelined
+//! client connection per backend:
+//!
+//! ```text
+//! clients ──TCP──▶ router connection plane (conn.rs shards)
+//!                      │ (Request, Reply)            ▲ completions
+//!                      ▼                             │
+//!                route loop (single thread, owns all fleet state):
+//!                  hop guard → FleetPlacement (sticky per model)
+//!                  → re-striped upstream ids → PendingProxy table
+//!                      │ one pipelined TCP conn     ▲ reader thread
+//!                      │ per backend                │ per backend
+//!        ┌─────────────┼─────────────┐              │
+//!        ▼             ▼             ▼              │
+//!   coordinator 0  coordinator 1  coordinator 2   (predsamp serve)
+//!        ▲  periodic `info` probes (prober thread) ─┘
+//! ```
+//!
+//! Requests are forwarded verbatim apart from the envelope: the router
+//! re-stripes correlation ids per backend (each tier owns its own id
+//! space), advances the `hop` count, and forwards streamed events and
+//! binary frames byte-for-byte. Backends are health-checked two ways —
+//! a periodic `info` probe (healthy → suspect → dead after
+//! `probe_fails` misses) and connection-error detection on the
+//! forwarding link itself. When a backend dies, every model namespace
+//! it owned is re-homed to an eligible live backend and its in-flight
+//! requests are re-submitted from their stored job manifests — the same
+//! dead-worker re-homing `server/pool.rs` does inside one process,
+//! lifted across a socket. Streamed events the client already received
+//! are deduplicated by job index on replay.
+//!
+//! Exactness survives federation: job noise is keyed by `(seed, job
+//! index)` — never by process, backend, or arrival — so a federated
+//! fleet produces bitwise-identical samples to a single process, even
+//! with a backend killed mid-stream (`rust/tests/federation_test.rs`).
+
+use crate::coordinator::config::ServeConfig;
+use crate::coordinator::placement::PlacementKind;
+use crate::coordinator::protocol::{self, Request, RequestMeta};
+use crate::coordinator::server::conn::EdgeStats;
+use crate::coordinator::server::pool::Reply;
+use crate::coordinator::server::{conn, Msg};
+use crate::substrate::json::{self, Value};
+use crate::substrate::readiness::{ReadinessKind, Waker};
+use anyhow::{ensure, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Front-tier router configuration (`predsamp route`). Every knob is
+/// documented in `docs/ARCHITECTURE.md`'s federation table; the
+/// doc-parity lint pass keeps that table and the CLI in sync with this
+/// struct.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Listen address for the router's own connection plane (`--addr`;
+    /// port 0 binds ephemeral).
+    pub addr: String,
+    /// Backend coordinator addresses (`--backend host:port`, repeatable;
+    /// at least one). Backend index = position in this list.
+    pub backends: Vec<String>,
+    /// Fleet placement policy (`--fleet-placement`, `--fleet-pin`,
+    /// `--fleet-max-backends`): which backends may own which model
+    /// namespaces, with [`PlacementKind`] semantics one level up
+    /// (process = worker).
+    pub fleet_placement: PlacementKind,
+    /// Delay between health-probe rounds (`--probe-interval-ms`).
+    pub probe_interval: Duration,
+    /// Per-probe connect/read deadline, also used when dialing a
+    /// forwarding link (`--probe-timeout-ms`).
+    pub probe_timeout: Duration,
+    /// Consecutive failed probes before a backend is declared dead and
+    /// its namespaces re-homed (`--probe-fails`). Connection errors on
+    /// the forwarding link kill immediately regardless.
+    pub probe_fails: u32,
+    /// Requests whose envelope `hop` count has reached this limit are
+    /// rejected instead of forwarded (`--max-hops`) — a routing cycle
+    /// dies with an error, not a forwarding storm.
+    pub max_hops: u32,
+    /// Connection-plane shards for the router's own edge
+    /// (`--conn-threads`), exactly as on `predsamp serve`.
+    pub conn_threads: usize,
+    /// Readiness backend for those shards (`--readiness`).
+    pub readiness: ReadinessKind,
+    /// Maximum client request line length (`--max-line-len`).
+    pub max_line_len: usize,
+    /// Per-connection outbound buffer cap (`--outbound-cap`).
+    pub outbound_cap: usize,
+    /// Per-connection request rate limit, 0 = unlimited (`--rate-limit`).
+    pub rate_limit: u32,
+    /// Maximum simultaneously open client connections (`--max-conns`).
+    pub max_conns: usize,
+    /// How long a client request may stay unanswered before the edge
+    /// fails it (`--reply-timeout-ms`) — covers the full proxied round
+    /// trip, re-homing included.
+    pub reply_timeout: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        let edge = ServeConfig::default();
+        RouterConfig {
+            addr: "127.0.0.1:7190".into(),
+            backends: Vec::new(),
+            fleet_placement: PlacementKind::ReplicateAll,
+            probe_interval: Duration::from_millis(200),
+            probe_timeout: Duration::from_secs(1),
+            probe_fails: 3,
+            max_hops: 4,
+            conn_threads: 1,
+            readiness: ReadinessKind::Auto,
+            max_line_len: edge.max_line_len,
+            outbound_cap: edge.outbound_cap,
+            rate_limit: edge.rate_limit,
+            max_conns: edge.max_conns,
+            reply_timeout: edge.reply_timeout,
+        }
+    }
+}
+
+impl RouterConfig {
+    /// Sanity-check knob ranges before spinning up threads. Edge knobs
+    /// ride the [`ServeConfig`] rules via [`RouterConfig::serve_cfg`];
+    /// fleet-placement pins are checked by [`FleetPlacement::new`].
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.backends.is_empty(), "router config: at least one --backend is required");
+        ensure!(self.backends.len() <= 64, "router config: more than 64 backends is not a front tier");
+        for (i, a) in self.backends.iter().enumerate() {
+            ensure!(!a.is_empty(), "router config: backend {i} has an empty address");
+            ensure!(
+                self.backends[..i].iter().all(|b| b != a),
+                "router config: duplicate backend address {a:?} (each backend is one process)"
+            );
+        }
+        ensure!((1..=16).contains(&self.max_hops), "router config: max_hops must be in [1, 16]");
+        ensure!((1..=100).contains(&self.probe_fails), "router config: probe_fails must be in [1, 100]");
+        ensure!(
+            self.probe_interval >= Duration::from_millis(10) && self.probe_interval <= Duration::from_secs(60),
+            "router config: probe_interval must be in [10ms, 60s]"
+        );
+        ensure!(
+            self.probe_timeout >= Duration::from_millis(10) && self.probe_timeout <= Duration::from_secs(60),
+            "router config: probe_timeout must be in [10ms, 60s]"
+        );
+        FleetPlacement::new(self.fleet_placement.clone(), self.backends.len())?;
+        self.serve_cfg().validate()
+    }
+
+    /// The [`ServeConfig`] the router's own connection plane runs under:
+    /// the shared edge knobs carried over, engine knobs left at their
+    /// defaults (the router has no engines), streaming and framing
+    /// always on (delivery modes are the backend's call to honor and the
+    /// router's job to forward).
+    pub fn serve_cfg(&self) -> ServeConfig {
+        ServeConfig {
+            addr: self.addr.clone(),
+            conn_threads: self.conn_threads,
+            readiness: self.readiness,
+            max_line_len: self.max_line_len,
+            outbound_cap: self.outbound_cap,
+            rate_limit: self.rate_limit,
+            max_conns: self.max_conns,
+            reply_timeout: self.reply_timeout,
+            streaming: true,
+            framing: true,
+            ..ServeConfig::default()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet placement
+// ---------------------------------------------------------------------------
+
+/// The placement plane one level up: which backend *process* owns which
+/// model namespace. Reuses [`PlacementKind`] semantics with backend
+/// index in place of worker index — replicate-all (any live backend),
+/// pinned (explicit backend subsets per model), capacity-capped (a soft
+/// per-backend namespace budget). Routing is sticky per model: once a
+/// namespace lands on a backend it stays until that backend dies, and a
+/// re-admitted backend does not pull its old namespaces back (stability
+/// over perfect balance). Fresh picks use rendezvous hashing over the
+/// model name, so they are deterministic and stable under backend
+/// removal: only the dead backend's namespaces move.
+#[derive(Clone, Debug)]
+pub struct FleetPlacement {
+    kind: PlacementKind,
+    n: usize,
+}
+
+impl FleetPlacement {
+    /// Resolve a placement kind against the backend count, rejecting
+    /// out-of-range pins and a zero capacity budget up front.
+    pub fn new(kind: PlacementKind, n: usize) -> Result<FleetPlacement> {
+        ensure!(n >= 1, "fleet placement: at least one backend");
+        match &kind {
+            PlacementKind::ReplicateAll => {}
+            PlacementKind::Pinned(pins) => {
+                for (model, backends) in pins {
+                    ensure!(!backends.is_empty(), "fleet placement: model {model:?} is pinned to no backend");
+                    for &b in backends {
+                        ensure!(b < n, "fleet placement: model {model:?} pinned to backend {b}, but only {n} configured");
+                    }
+                }
+            }
+            PlacementKind::CapacityCapped(cap) => {
+                ensure!(*cap >= 1, "fleet placement: --fleet-max-backends capacity must be >= 1");
+            }
+        }
+        Ok(FleetPlacement { kind, n })
+    }
+
+    /// Number of backends this placement routes over.
+    pub fn backends(&self) -> usize {
+        self.n
+    }
+
+    /// The canonical `--fleet-placement` spelling.
+    pub fn label(&self) -> &'static str {
+        self.kind.label()
+    }
+
+    /// May backend `b` own model namespace `model`? Pinned models are
+    /// restricted to their pin set; everything else (and every model
+    /// under replicate/capped) is eligible anywhere.
+    pub fn eligible(&self, model: &str, b: usize) -> bool {
+        if b >= self.n {
+            return false;
+        }
+        match &self.kind {
+            PlacementKind::Pinned(pins) => pins
+                .iter()
+                .find(|(m, _)| m == model)
+                .map(|(_, backends)| backends.contains(&b))
+                .unwrap_or(true),
+            _ => true,
+        }
+    }
+
+    /// Pick the backend for `model`: the sticky owner if it is still
+    /// live and eligible, otherwise a fresh rendezvous-hash pick over
+    /// the live eligible backends (capacity-capped placements prefer
+    /// backends under their namespace budget, falling back to all
+    /// eligible when every one is at capacity — a soft cap, so routing
+    /// stays total). `None` only when no live backend is eligible.
+    pub fn route(&self, model: &str, live: &[bool], owned: &BTreeMap<String, usize>) -> Option<usize> {
+        if let Some(&b) = owned.get(model) {
+            if b < live.len() && live[b] && self.eligible(model, b) {
+                return Some(b);
+            }
+        }
+        let candidates: Vec<usize> = (0..self.n).filter(|&b| live.get(b) == Some(&true) && self.eligible(model, b)).collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        let pool = match self.kind {
+            PlacementKind::CapacityCapped(cap) => {
+                let within: Vec<usize> = candidates
+                    .iter()
+                    .copied()
+                    .filter(|&b| owned.values().filter(|&&o| o == b).count() < cap)
+                    .collect();
+                if within.is_empty() {
+                    candidates
+                } else {
+                    within
+                }
+            }
+            _ => candidates,
+        };
+        pool.into_iter().max_by_key(|&b| rendezvous_weight(model, b))
+    }
+}
+
+/// FNV-1a rendezvous weight for `(model, backend)` — deterministic (no
+/// ambient RNG) and independent across backends, which is exactly what
+/// makes highest-random-weight routing stable under removal.
+fn rendezvous_weight(model: &str, b: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &byte in model.as_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    for byte in (b as u64).to_le_bytes() {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Probe state machine
+// ---------------------------------------------------------------------------
+
+/// A backend's health as the prober sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Health {
+    /// Last probe succeeded.
+    Healthy,
+    /// Probes are failing but the miss budget is not exhausted; the
+    /// backend keeps receiving traffic.
+    Suspect,
+    /// Probe budget exhausted or a connection error on the forwarding
+    /// link: namespaces re-homed, no traffic until a probe succeeds.
+    Dead,
+}
+
+impl Health {
+    /// Metrics label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Suspect => "suspect",
+            Health::Dead => "dead",
+        }
+    }
+}
+
+/// Pure per-backend probe state machine: healthy → suspect → dead after
+/// `threshold` consecutive misses → re-admitted on the next successful
+/// probe. Connection errors on the forwarding link skip straight to
+/// dead — a peer that actively refuses bytes needs no second opinion.
+/// Re-admission makes the backend eligible for *fresh* namespaces only;
+/// the router never moves re-homed namespaces back (stability).
+#[derive(Clone, Debug)]
+pub struct ProbeState {
+    health: Health,
+    fails: u32,
+    threshold: u32,
+}
+
+impl ProbeState {
+    /// A healthy backend with a miss budget of `threshold` probes.
+    pub fn new(threshold: u32) -> ProbeState {
+        ProbeState { health: Health::Healthy, fails: 0, threshold: threshold.max(1) }
+    }
+
+    /// A probe succeeded. Returns true when this re-admitted a dead
+    /// backend.
+    pub fn on_ok(&mut self) -> bool {
+        let readmitted = self.health == Health::Dead;
+        self.health = Health::Healthy;
+        self.fails = 0;
+        readmitted
+    }
+
+    /// A probe failed. Returns true when this crossed the miss budget
+    /// and killed the backend.
+    pub fn on_err(&mut self) -> bool {
+        if self.health == Health::Dead {
+            return false;
+        }
+        self.fails += 1;
+        if self.fails >= self.threshold {
+            self.health = Health::Dead;
+            true
+        } else {
+            self.health = Health::Suspect;
+            false
+        }
+    }
+
+    /// The forwarding link itself errored: immediately dead. Returns
+    /// true when the backend was not already dead.
+    pub fn on_conn_error(&mut self) -> bool {
+        let killed = self.health != Health::Dead;
+        self.health = Health::Dead;
+        self.fails = self.fails.max(self.threshold);
+        killed
+    }
+
+    /// Current health.
+    pub fn health(&self) -> Health {
+        self.health
+    }
+
+    /// Live = not dead: suspect backends keep their traffic until the
+    /// miss budget runs out.
+    pub fn is_live(&self) -> bool {
+        self.health != Health::Dead
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Router runtime
+// ---------------------------------------------------------------------------
+
+/// Everything that can wake the route loop.
+enum RouterMsg {
+    /// A client request off the router's own connection plane.
+    Client(Request, Reply),
+    /// One response line (plus optional binary frame, prefix included)
+    /// read from a backend link. `gen` guards against a stale reader
+    /// racing a reconnect.
+    Upstream { backend: usize, gen: u64, line: String, frame: Option<Vec<u8>> },
+    /// A backend link hit EOF or a read error.
+    BackendDown { backend: usize, gen: u64 },
+    /// One health-probe result from the prober thread.
+    Probe { backend: usize, ok: bool, latency_s: f64 },
+    /// Stop routing.
+    Shutdown,
+}
+
+/// One client request in flight on a backend: the reply handle back to
+/// the client's connection shard, the serialized request line (no id —
+/// re-submission splices a fresh one), the model namespace (`None` for
+/// forwarded `info`, which cannot be re-homed), and the job indices
+/// already streamed to the client (replayed events deduplicate against
+/// this after a re-home; exactness makes the replayed bytes identical).
+struct PendingProxy {
+    reply: Reply,
+    wire: String,
+    model: Option<String>,
+    delivered: BTreeSet<u64>,
+}
+
+/// A live forwarding link to one backend: the write half plus the
+/// reader thread draining the read half. `gen` increments per
+/// (re)connect so messages from a replaced reader are discarded.
+struct Link {
+    gen: u64,
+    writer: TcpStream,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+/// Per-backend routing state.
+struct Backend {
+    addr: String,
+    probe: ProbeState,
+    link: Option<Link>,
+    gen: u64,
+    in_flight: BTreeMap<u64, PendingProxy>,
+    forwarded: u64,
+    probe_latency_s: f64,
+}
+
+/// The route loop's single-threaded state: one thread owns the fleet
+/// table, the sticky namespace map, and the upstream id counter
+/// outright, so the router adds no locks (see lock-discipline in
+/// `docs/ANALYSIS.md`).
+struct RouteState {
+    cfg: RouterConfig,
+    placement: FleetPlacement,
+    backends: Vec<Backend>,
+    /// Sticky namespace ownership: model → backend index.
+    owned: BTreeMap<String, usize>,
+    /// Monotonic upstream correlation ids, re-striped across every
+    /// backend (each tier owns its own id space).
+    next_uid: u64,
+    forwards: u64,
+    re_homes: u64,
+    hop_rejections: u64,
+    orphaned: u64,
+    rtx: mpsc::Sender<RouterMsg>,
+    edge: Arc<EdgeStats>,
+    started: Instant,
+}
+
+impl RouteState {
+    fn handle_client(&mut self, req: Request, reply: Reply) {
+        if reply.hop >= self.cfg.max_hops {
+            self.hop_rejections += 1;
+            let _ = reply.send(protocol::err(&format!("federation hop limit reached ({} hops)", self.cfg.max_hops)));
+            return;
+        }
+        match &req {
+            Request::Ping => {
+                let _ = reply.send(protocol::ok(vec![("pong", Value::Bool(true))]));
+                return;
+            }
+            Request::Metrics => {
+                let line = router_metrics_response(self, self.started.elapsed().as_secs_f64());
+                let _ = reply.send(line);
+                return;
+            }
+            _ => {}
+        }
+        let model = match &req {
+            Request::Eval { model } => Some(model.clone()),
+            Request::Sample { model, .. } => Some(model.clone()),
+            _ => None,
+        };
+        let meta = RequestMeta { id: None, stream: reply.stream, frame: reply.frame, hop: reply.hop + 1 };
+        let wire = protocol::request_line(&req, &meta);
+        self.submit(PendingProxy { reply, wire, model, delivered: BTreeSet::new() });
+    }
+
+    /// Route and forward one pending request, marking backends dead and
+    /// retrying until it lands on a live backend or none remains. The
+    /// `fail_backend` recursion inside the retry loop is bounded by the
+    /// backend count: every iteration kills one.
+    fn submit(&mut self, mut pending: PendingProxy) {
+        loop {
+            let live: Vec<bool> = self.backends.iter().map(|b| b.probe.is_live()).collect();
+            let target = match &pending.model {
+                Some(m) => self.placement.route(m, &live, &self.owned),
+                // Model-less forwards (info) go to the healthiest
+                // backend available; they are not namespace-sticky.
+                None => self
+                    .backends
+                    .iter()
+                    .position(|b| b.probe.health() == Health::Healthy)
+                    .or_else(|| live.iter().position(|&l| l)),
+            };
+            let Some(b) = target else {
+                let _ = pending.reply.send(protocol::err("no live backend is eligible for this request"));
+                return;
+            };
+            if let Some(m) = &pending.model {
+                self.owned.insert(m.clone(), b);
+            }
+            match self.forward_to(b, pending) {
+                Ok(()) => return,
+                Err(p) => {
+                    pending = p;
+                    self.fail_backend(b);
+                }
+            }
+        }
+    }
+
+    /// Write one pending request to backend `b` with a fresh upstream
+    /// id, dialing the link first if needed. On failure the pending is
+    /// handed back so the caller can re-route it.
+    fn forward_to(&mut self, b: usize, pending: PendingProxy) -> Result<(), PendingProxy> {
+        if self.backends[b].link.is_none() {
+            let gen = self.backends[b].gen + 1;
+            match open_link(&self.backends[b].addr, b, gen, self.cfg.probe_timeout, &self.rtx) {
+                Ok(link) => {
+                    self.backends[b].gen = gen;
+                    self.backends[b].link = Some(link);
+                }
+                Err(e) => {
+                    log::warn!("federation: dialing backend {b} ({}): {e}", self.backends[b].addr);
+                    return Err(pending);
+                }
+            }
+        }
+        let uid = self.next_uid;
+        let line = protocol::with_id(&pending.wire, uid);
+        let Some(link) = self.backends[b].link.as_mut() else {
+            return Err(pending);
+        };
+        if let Err(e) = write_line(&mut link.writer, &line) {
+            log::warn!("federation: writing to backend {b} ({}): {e}", self.backends[b].addr);
+            return Err(pending);
+        }
+        self.next_uid += 1;
+        self.forwards += 1;
+        self.backends[b].forwarded += 1;
+        self.backends[b].in_flight.insert(uid, pending);
+        Ok(())
+    }
+
+    /// Declare backend `b` dead, tear down its link, and re-home its
+    /// in-flight requests: each is re-routed and re-submitted from its
+    /// stored manifest line with a fresh upstream id. Already-streamed
+    /// jobs replay on the new backend and deduplicate against
+    /// `delivered` — exactness makes the replayed bytes identical, so
+    /// the client sees every job exactly once. Model-less forwards
+    /// (info) cannot be re-homed and fail to the client.
+    fn fail_backend(&mut self, b: usize) {
+        let newly = self.backends[b].probe.on_conn_error();
+        drop_link(&mut self.backends[b]);
+        let pendings: Vec<PendingProxy> = std::mem::take(&mut self.backends[b].in_flight).into_values().collect();
+        if newly || !pendings.is_empty() {
+            log::warn!("federation: backend {b} ({}) is dead; re-homing {} in-flight request(s)", self.backends[b].addr, pendings.len());
+        }
+        for p in pendings {
+            if p.model.is_some() {
+                self.re_homes += 1;
+                self.submit(p);
+            } else {
+                let _ = p.reply.send(protocol::err("backend connection lost while forwarding"));
+            }
+        }
+    }
+
+    /// One line (and optional frame) read off a backend link: match it
+    /// to its pending proxy by upstream id and forward it to the client
+    /// verbatim — stream events via `send_event` (deduplicated by job
+    /// index after a re-home replay), finals via `send`/`send_framed`,
+    /// which also retires the pending entry.
+    fn handle_upstream(&mut self, backend: usize, gen: u64, line: String, frame: Option<Vec<u8>>) {
+        if self.backends[backend].link.as_ref().map(|l| l.gen) != Some(gen) {
+            return; // stale reader from before a reconnect
+        }
+        let (uid, tail) = protocol::strip_id(&line);
+        let Some(uid) = uid else {
+            self.orphaned += 1;
+            log::warn!("federation: unmatched line from backend {backend}: {line}");
+            return;
+        };
+        let body = protocol::reopen(tail);
+        let parsed = json::parse(&body).unwrap_or(Value::Null);
+        if parsed.get("stream").as_bool() == Some(true) {
+            let Some(p) = self.backends[backend].in_flight.get_mut(&uid) else {
+                self.orphaned += 1;
+                return;
+            };
+            let fresh = match parsed.get("job").as_i64().filter(|&j| j >= 0) {
+                Some(j) => p.delivered.insert(j as u64),
+                None => true,
+            };
+            if fresh {
+                let _ = p.reply.send_event(body, frame);
+            }
+        } else {
+            let Some(p) = self.backends[backend].in_flight.remove(&uid) else {
+                self.orphaned += 1;
+                return;
+            };
+            match frame {
+                Some(f) => {
+                    let _ = p.reply.send_framed(body, f);
+                }
+                None => {
+                    let _ = p.reply.send(body);
+                }
+            }
+        }
+    }
+
+    fn handle_down(&mut self, backend: usize, gen: u64) {
+        if self.backends[backend].link.as_ref().map(|l| l.gen) != Some(gen) {
+            return; // a reconnect already replaced this link
+        }
+        self.fail_backend(backend);
+    }
+
+    fn handle_probe(&mut self, backend: usize, ok: bool, latency_s: f64) {
+        self.backends[backend].probe_latency_s = latency_s;
+        if ok {
+            if self.backends[backend].probe.on_ok() {
+                log::info!("federation: backend {backend} ({}) re-admitted after a successful probe", self.backends[backend].addr);
+            }
+        } else if self.backends[backend].probe.on_err() {
+            log::warn!("federation: backend {backend} ({}) exhausted its probe budget", self.backends[backend].addr);
+            self.fail_backend(backend);
+        }
+    }
+
+    /// Tear everything down: links closed, readers joined, any still
+    /// in-flight request failed to its client.
+    fn shutdown(mut self) {
+        for b in &mut self.backends {
+            drop_link(b);
+            for (_, p) in std::mem::take(&mut b.in_flight) {
+                let _ = p.reply.send(protocol::err("router shutting down"));
+            }
+        }
+    }
+}
+
+/// The `fleet` metrics section: per-backend health gauges plus the
+/// router-level counters. (The doc-parity lint pass scans this function
+/// — every key here must be documented in `docs/PROTOCOL.md`.)
+fn fleet_value(st: &RouteState, uptime_s: f64) -> Value {
+    let backends: Vec<Value> = st
+        .backends
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            Value::obj(vec![
+                ("id", Value::num(i as f64)),
+                ("addr", Value::str(b.addr.clone())),
+                ("health", Value::str(b.probe.health().label())),
+                ("in_flight", Value::num(b.in_flight.len() as f64)),
+                ("forwarded", Value::num(b.forwarded as f64)),
+                ("probe_latency_s", Value::num(b.probe_latency_s)),
+            ])
+        })
+        .collect();
+    Value::obj(vec![
+        ("backends", Value::Arr(backends)),
+        ("fleet_placement", Value::str(st.placement.label())),
+        ("live_backends", Value::num(st.backends.iter().filter(|b| b.probe.is_live()).count() as f64)),
+        ("forwards", Value::num(st.forwards as f64)),
+        ("re_homes", Value::num(st.re_homes as f64)),
+        ("hop_rejections", Value::num(st.hop_rejections as f64)),
+        ("orphaned", Value::num(st.orphaned as f64)),
+        ("uptime_s", Value::num(uptime_s)),
+    ])
+}
+
+/// The router's local `metrics` answer: its own edge section plus the
+/// `fleet` section. Backend engine metrics stay one hop away — ask a
+/// backend directly (or via `info`) for engine-level gauges.
+fn router_metrics_response(st: &RouteState, uptime_s: f64) -> String {
+    protocol::ok(vec![(
+        "metrics",
+        Value::obj(vec![("edge", st.edge.value()), ("fleet", fleet_value(st, uptime_s))]),
+    )])
+}
+
+fn route_loop(cfg: RouterConfig, placement: FleetPlacement, rrx: mpsc::Receiver<RouterMsg>, rtx: mpsc::Sender<RouterMsg>, edge: Arc<EdgeStats>) {
+    let backends = cfg
+        .backends
+        .iter()
+        .map(|addr| Backend {
+            addr: addr.clone(),
+            probe: ProbeState::new(cfg.probe_fails),
+            link: None,
+            gen: 0,
+            in_flight: BTreeMap::new(),
+            forwarded: 0,
+            probe_latency_s: 0.0,
+        })
+        .collect();
+    let mut st = RouteState {
+        cfg,
+        placement,
+        backends,
+        owned: BTreeMap::new(),
+        next_uid: 1,
+        forwards: 0,
+        re_homes: 0,
+        hop_rejections: 0,
+        orphaned: 0,
+        rtx,
+        edge,
+        started: Instant::now(),
+    };
+    loop {
+        match rrx.recv() {
+            Err(_) | Ok(RouterMsg::Shutdown) => break,
+            Ok(RouterMsg::Client(req, reply)) => st.handle_client(req, reply),
+            Ok(RouterMsg::Upstream { backend, gen, line, frame }) => st.handle_upstream(backend, gen, line, frame),
+            Ok(RouterMsg::BackendDown { backend, gen }) => st.handle_down(backend, gen),
+            Ok(RouterMsg::Probe { backend, ok, latency_s }) => st.handle_probe(backend, ok, latency_s),
+        }
+    }
+    st.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Backend links, reader threads, prober
+// ---------------------------------------------------------------------------
+
+/// Resolve and dial `addr` with a connect deadline; tries each resolved
+/// address in order.
+fn connect(addr: &str, timeout: Duration) -> std::io::Result<TcpStream> {
+    let mut last = std::io::Error::new(std::io::ErrorKind::NotFound, format!("no address resolves for {addr}"));
+    for a in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&a, timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+fn write_line(w: &mut TcpStream, line: &str) -> std::io::Result<()> {
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()
+}
+
+/// Dial one backend and start its reader thread.
+fn open_link(addr: &str, backend: usize, gen: u64, timeout: Duration, rtx: &mpsc::Sender<RouterMsg>) -> std::io::Result<Link> {
+    let writer = connect(addr, timeout)?;
+    let _ = writer.set_nodelay(true);
+    let read_half = writer.try_clone()?;
+    let reader_rtx = rtx.clone();
+    let reader = std::thread::Builder::new()
+        .name(format!("predsamp-fed-read-{backend}"))
+        .spawn(move || backend_reader(read_half, backend, gen, reader_rtx))?;
+    Ok(Link { gen, writer, reader: Some(reader) })
+}
+
+/// Close a backend link (shutting the socket down unblocks the reader)
+/// and join its reader thread.
+fn drop_link(b: &mut Backend) {
+    if let Some(mut link) = b.link.take() {
+        let _ = link.writer.shutdown(Shutdown::Both);
+        if let Some(j) = link.reader.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Reader half of a backend link: one response line per iteration, with
+/// the binary frame (length prefix included, validated before
+/// allocation) slurped off the same stream when the line declares one.
+/// EOF or a read error reports `BackendDown` and exits.
+fn backend_reader(stream: TcpStream, backend: usize, gen: u64, rtx: mpsc::Sender<RouterMsg>) {
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match r.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let text = line.trim_end_matches(['\r', '\n']);
+        if text.is_empty() {
+            continue;
+        }
+        let framed = json::parse(text).map(|v| v.get("frame").as_bool() == Some(true)).unwrap_or(false);
+        let frame = if framed {
+            match read_frame(&mut r) {
+                Ok(f) => Some(f),
+                Err(e) => {
+                    log::warn!("federation: bad frame from backend {backend}: {e}");
+                    break;
+                }
+            }
+        } else {
+            None
+        };
+        if rtx.send(RouterMsg::Upstream { backend, gen, line: text.to_string(), frame }).is_err() {
+            return; // router gone; no point reporting the link down
+        }
+    }
+    let _ = rtx.send(RouterMsg::BackendDown { backend, gen });
+}
+
+/// Read one length-prefixed binary frame, returning prefix + payload
+/// verbatim (the client-forwarding path appends these bytes as-is). The
+/// prefix is validated via [`protocol::frame_payload_len`] before any
+/// payload allocation.
+fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, String> {
+    let mut prefix = [0u8; 4];
+    r.read_exact(&mut prefix).map_err(|e| e.to_string())?;
+    let len = protocol::frame_payload_len(prefix)?;
+    let mut buf = vec![0u8; 4 + len];
+    buf[..4].copy_from_slice(&prefix);
+    r.read_exact(&mut buf[4..]).map_err(|e| e.to_string())?;
+    Ok(buf)
+}
+
+/// Health prober: rounds of one `info` call per backend over a fresh
+/// short-lived connection (never the pipelined forwarding link, so a
+/// wedged link cannot mask itself), each under `timeout`. Results go to
+/// the route loop as messages — the prober holds no fleet state.
+fn probe_loop(backends: Vec<String>, interval: Duration, timeout: Duration, stop: Arc<AtomicBool>, rtx: mpsc::Sender<RouterMsg>) {
+    while !stop.load(Ordering::SeqCst) {
+        for (i, addr) in backends.iter().enumerate() {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let t0 = Instant::now();
+            let ok = probe_once(addr, timeout).is_ok();
+            if rtx.send(RouterMsg::Probe { backend: i, ok, latency_s: t0.elapsed().as_secs_f64() }).is_err() {
+                return;
+            }
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// One `info` round trip with connect/read/write deadlines.
+fn probe_once(addr: &str, timeout: Duration) -> Result<(), String> {
+    let stream = connect(addr, timeout).map_err(|e| e.to_string())?;
+    stream.set_read_timeout(Some(timeout)).map_err(|e| e.to_string())?;
+    stream.set_write_timeout(Some(timeout)).map_err(|e| e.to_string())?;
+    let mut w = stream.try_clone().map_err(|e| e.to_string())?;
+    w.write_all(b"{\"op\":\"info\"}\n").map_err(|e| e.to_string())?;
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    r.read_line(&mut line).map_err(|e| e.to_string())?;
+    let v = json::parse(line.trim()).map_err(|e| e.to_string())?;
+    if v.get("ok").as_bool() == Some(true) {
+        Ok(())
+    } else {
+        Err("probe answered not-ok".into())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spawning
+// ---------------------------------------------------------------------------
+
+/// Handle to a running router (tests, benches, and the `route` CLI).
+pub struct RouterHandle {
+    /// Bound listen address (ephemeral ports resolved).
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conn_tx: mpsc::Sender<Msg>,
+    rtx: mpsc::Sender<RouterMsg>,
+    route_join: Option<std::thread::JoinHandle<()>>,
+    pipe_join: Option<std::thread::JoinHandle<()>>,
+    probe_join: Option<std::thread::JoinHandle<()>>,
+    conn_joins: Vec<std::thread::JoinHandle<()>>,
+    conn_wakers: Vec<Arc<dyn Waker>>,
+}
+
+impl RouterHandle {
+    /// Stop the router and join every thread it spawned.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.conn_tx.send(Msg::Shutdown);
+        let _ = self.rtx.send(RouterMsg::Shutdown);
+        for w in &self.conn_wakers {
+            w.wake();
+        }
+        if let Some(j) = self.route_join.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.pipe_join.take() {
+            let _ = j.join();
+        }
+        if let Some(j) = self.probe_join.take() {
+            let _ = j.join();
+        }
+        for j in self.conn_joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for RouterHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.conn_tx.send(Msg::Shutdown);
+        let _ = self.rtx.send(RouterMsg::Shutdown);
+        for w in &self.conn_wakers {
+            w.wake();
+        }
+    }
+}
+
+/// Bind `cfg.addr` (port 0 for ephemeral) and route in background
+/// threads: the sharded connection plane, a pipe thread feeding its
+/// requests to the single-threaded route loop, and the health prober.
+/// Fails fast on an invalid config. Backends are dialed lazily on first
+/// forward, so the fleet may come up in any order.
+pub fn spawn_router(cfg: RouterConfig) -> Result<RouterHandle> {
+    cfg.validate().context("validating router config")?;
+    let placement = FleetPlacement::new(cfg.fleet_placement.clone(), cfg.backends.len())?;
+    let serve_cfg = cfg.serve_cfg();
+    let listener = TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let edge = Arc::new(EdgeStats::new(serve_cfg.readiness.resolve().label(), serve_cfg.conn_threads));
+    let (conn_tx, conn_rx) = mpsc::channel::<Msg>();
+    let (rtx, rrx) = mpsc::channel::<RouterMsg>();
+
+    // Pipe: adapts the connection plane's Msg channel onto the route
+    // loop's own message type (readers and the prober share the latter).
+    let pipe_rtx = rtx.clone();
+    let pipe_join = std::thread::Builder::new().name("predsamp-fed-pipe".into()).spawn(move || loop {
+        match conn_rx.recv() {
+            Ok(Msg::Req(req, reply)) => {
+                if pipe_rtx.send(RouterMsg::Client(req, reply)).is_err() {
+                    break;
+                }
+            }
+            Ok(Msg::Shutdown) | Err(_) => {
+                let _ = pipe_rtx.send(RouterMsg::Shutdown);
+                break;
+            }
+        }
+    })?;
+
+    let probe_rtx = rtx.clone();
+    let probe_stop = Arc::clone(&stop);
+    let (probe_backends, probe_interval, probe_timeout) = (cfg.backends.clone(), cfg.probe_interval, cfg.probe_timeout);
+    let probe_join = std::thread::Builder::new()
+        .name("predsamp-fed-probe".into())
+        .spawn(move || probe_loop(probe_backends, probe_interval, probe_timeout, probe_stop, probe_rtx))?;
+
+    let route_rtx = rtx.clone();
+    let route_edge = Arc::clone(&edge);
+    let route_cfg = cfg.clone();
+    let route_join = std::thread::Builder::new()
+        .name("predsamp-fed-route".into())
+        .spawn(move || route_loop(route_cfg, placement, rrx, route_rtx, route_edge))?;
+
+    let (conn_joins, conn_wakers) = conn::spawn_shards(listener, &serve_cfg, &conn_tx, &stop, &edge).context("spawning router connection shards")?;
+
+    Ok(RouterHandle {
+        addr,
+        stop,
+        conn_tx,
+        rtx,
+        route_join: Some(route_join),
+        pipe_join: Some(pipe_join),
+        probe_join: Some(probe_join),
+        conn_joins,
+        conn_wakers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::substrate::proptest_lite::{check, Gen};
+
+    #[test]
+    fn probe_state_walks_healthy_suspect_dead_readmitted() {
+        let mut p = ProbeState::new(3);
+        assert_eq!(p.health(), Health::Healthy);
+        assert!(p.is_live());
+        assert!(!p.on_err());
+        assert_eq!(p.health(), Health::Suspect);
+        assert!(p.is_live(), "suspect backends keep their traffic");
+        assert!(!p.on_err());
+        assert!(p.on_err(), "third miss crosses the threshold");
+        assert_eq!(p.health(), Health::Dead);
+        assert!(!p.is_live());
+        assert!(!p.on_err(), "a dead backend cannot die again");
+        assert!(p.on_ok(), "a successful probe re-admits");
+        assert_eq!(p.health(), Health::Healthy);
+        assert!(!p.on_ok(), "re-admission reports only on the transition");
+    }
+
+    #[test]
+    fn probe_ok_resets_the_miss_budget() {
+        let mut p = ProbeState::new(2);
+        assert!(!p.on_err());
+        assert!(!p.on_ok());
+        assert_eq!(p.health(), Health::Healthy);
+        // The budget is consecutive misses: it takes two fresh ones.
+        assert!(!p.on_err());
+        assert!(p.on_err());
+    }
+
+    #[test]
+    fn conn_error_kills_immediately() {
+        let mut p = ProbeState::new(5);
+        assert!(p.on_conn_error());
+        assert_eq!(p.health(), Health::Dead);
+        assert!(!p.on_conn_error(), "already dead");
+        assert!(p.on_ok());
+        assert!(p.is_live());
+    }
+
+    #[test]
+    fn placement_validates_pins_and_caps() {
+        assert!(FleetPlacement::new(PlacementKind::ReplicateAll, 3).is_ok());
+        assert!(FleetPlacement::new(PlacementKind::ReplicateAll, 0).is_err());
+        assert!(FleetPlacement::new(PlacementKind::CapacityCapped(0), 3).is_err());
+        assert!(FleetPlacement::new(PlacementKind::CapacityCapped(1), 3).is_ok());
+        let pin = |ws: Vec<usize>| PlacementKind::Pinned(vec![("m".into(), ws)]);
+        assert!(FleetPlacement::new(pin(vec![0, 2]), 3).is_ok());
+        assert!(FleetPlacement::new(pin(vec![3]), 3).is_err(), "pin out of range");
+        assert!(FleetPlacement::new(pin(vec![]), 3).is_err(), "pin to nothing");
+    }
+
+    #[test]
+    fn pinned_models_route_inside_their_pin_set() {
+        let fp = FleetPlacement::new(PlacementKind::Pinned(vec![("a".into(), vec![1])]), 3).unwrap();
+        let live = vec![true, true, true];
+        let owned = BTreeMap::new();
+        assert_eq!(fp.route("a", &live, &owned), Some(1));
+        assert!(fp.eligible("unpinned", 0) && fp.eligible("unpinned", 2), "unpinned models go anywhere");
+        // Pinned backend dead: routing is total only over eligible live
+        // backends, so the pinned model has nowhere to go.
+        let live = vec![true, false, true];
+        assert_eq!(fp.route("a", &live, &owned), None);
+    }
+
+    #[test]
+    fn sticky_owner_holds_until_death_and_does_not_return() {
+        let fp = FleetPlacement::new(PlacementKind::ReplicateAll, 3).unwrap();
+        let mut owned = BTreeMap::new();
+        let all = vec![true, true, true];
+        let first = fp.route("m", &all, &owned).unwrap();
+        owned.insert("m".to_string(), first);
+        assert_eq!(fp.route("m", &all, &owned), Some(first), "sticky while live");
+        // Owner dies: the namespace moves to a survivor...
+        let mut live = all.clone();
+        live[first] = false;
+        let rehomed = fp.route("m", &live, &owned).unwrap();
+        assert_ne!(rehomed, first);
+        owned.insert("m".to_string(), rehomed);
+        // ...and stays there after the old owner is re-admitted.
+        assert_eq!(fp.route("m", &all, &owned), Some(rehomed), "re-admission does not pull namespaces back");
+    }
+
+    #[test]
+    fn capacity_cap_is_soft() {
+        let fp = FleetPlacement::new(PlacementKind::CapacityCapped(1), 2).unwrap();
+        let live = vec![true, true];
+        let mut owned = BTreeMap::new();
+        let a = fp.route("a", &live, &owned).unwrap();
+        owned.insert("a".to_string(), a);
+        let b = fp.route("b", &live, &owned).unwrap();
+        assert_ne!(a, b, "under-budget backend preferred");
+        owned.insert("b".to_string(), b);
+        // Both at capacity: the cap is soft, routing stays total.
+        assert!(fp.route("c", &live, &owned).is_some());
+    }
+
+    fn gen_placement(g: &mut Gen, n: usize) -> FleetPlacement {
+        let kind = match g.usize_in(0, 3) {
+            0 => PlacementKind::ReplicateAll,
+            1 => PlacementKind::CapacityCapped(g.usize_in(1, 4)),
+            _ => {
+                let pins = (0..g.usize_in(0, 4))
+                    .map(|k| {
+                        let mut ws: Vec<usize> = (0..n).filter(|_| g.bool()).collect();
+                        if ws.is_empty() {
+                            ws.push(g.usize_in(0, n));
+                        }
+                        (format!("m{k}"), ws)
+                    })
+                    .collect();
+                PlacementKind::Pinned(pins)
+            }
+        };
+        FleetPlacement::new(kind, n).unwrap()
+    }
+
+    #[test]
+    fn prop_route_is_total_deterministic_and_stable_under_removal() {
+        check("fleet_route_properties", 300, |g| {
+            let n = g.usize_in(1, 9);
+            let fp = gen_placement(g, n);
+            let mut live = vec![false; n];
+            for slot in live.iter_mut() {
+                *slot = g.bool();
+            }
+            if !live.iter().any(|&l| l) {
+                live[g.usize_in(0, n)] = true;
+            }
+            let mut owned = BTreeMap::new();
+            for k in 0..g.usize_in(0, 6) {
+                owned.insert(format!("m{k}"), g.usize_in(0, n));
+            }
+            let model = format!("m{}", g.usize_in(0, 8));
+            let r1 = fp.route(&model, &live, &owned);
+            // Deterministic: same inputs, same pick.
+            crate::prop_assert_eq!(r1, fp.route(&model, &live, &owned));
+            // Total: a pick exists iff some live backend is eligible,
+            // and the pick itself is live and eligible.
+            let any = (0..n).any(|b| live[b] && fp.eligible(&model, b));
+            crate::prop_assert_eq!(r1.is_some(), any);
+            if let Some(b) = r1 {
+                crate::prop_assert!(live[b] && fp.eligible(&model, b));
+            }
+            // Stable under removal: killing any backend other than the
+            // pick leaves the pick unchanged — only the dead backend's
+            // namespaces move.
+            let others: Vec<usize> = (0..n).filter(|&i| live[i] && Some(i) != r1).collect();
+            if let (Some(pick), false) = (r1, others.is_empty()) {
+                let dead = others[g.usize_in(0, others.len())];
+                let mut live2 = live.clone();
+                live2[dead] = false;
+                crate::prop_assert_eq!(fp.route(&model, &live2, &owned), Some(pick));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn router_config_validation() {
+        let base = RouterConfig { backends: vec!["127.0.0.1:1".into()], ..RouterConfig::default() };
+        assert!(base.validate().is_ok());
+        assert!(RouterConfig::default().validate().is_err(), "no backends");
+        assert!(RouterConfig { backends: vec!["a:1".into(), "a:1".into()], ..base.clone() }.validate().is_err(), "duplicate backend");
+        assert!(RouterConfig { max_hops: 0, ..base.clone() }.validate().is_err());
+        assert!(RouterConfig { max_hops: 17, ..base.clone() }.validate().is_err());
+        assert!(RouterConfig { probe_fails: 0, ..base.clone() }.validate().is_err());
+        assert!(RouterConfig { probe_interval: Duration::from_millis(1), ..base.clone() }.validate().is_err());
+        assert!(RouterConfig { probe_timeout: Duration::from_secs(120), ..base.clone() }.validate().is_err());
+        assert!(RouterConfig { fleet_placement: PlacementKind::Pinned(vec![("m".into(), vec![5])]), ..base.clone() }.validate().is_err());
+        assert!(RouterConfig { max_line_len: 1, ..base.clone() }.validate().is_err(), "edge knobs ride ServeConfig rules");
+        let sc = base.serve_cfg();
+        assert!(sc.streaming && sc.framing, "the router always honors delivery opt-ins");
+        assert_eq!(sc.addr, base.addr);
+    }
+
+    #[test]
+    fn rendezvous_weight_is_deterministic_and_spreads() {
+        assert_eq!(rendezvous_weight("m", 0), rendezvous_weight("m", 0));
+        assert_ne!(rendezvous_weight("m", 0), rendezvous_weight("m", 1));
+        assert_ne!(rendezvous_weight("a", 0), rendezvous_weight("b", 0));
+    }
+}

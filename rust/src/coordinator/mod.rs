@@ -30,9 +30,15 @@
 //! * [`metrics`] — request/latency/ARM-call accounting, per worker,
 //!   aggregated into one snapshot with queue-depth/occupancy/steal
 //!   gauges plus the placement plane's residency gauges.
+//! * [`federation`] — the placement plane one level up: a front-tier
+//!   router (`predsamp route`) that fans model namespaces across N
+//!   backend coordinator *processes* over persistent pipelined
+//!   connections, health-checks them, and re-homes a dead process's
+//!   namespaces exactly like the pool re-homes a dead worker's groups.
 
 pub mod config;
 pub mod engine;
+pub mod federation;
 pub mod metrics;
 pub mod placement;
 pub mod policy;

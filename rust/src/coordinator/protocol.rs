@@ -52,12 +52,16 @@ pub enum Request {
 /// Connection-plane envelope fields of a request, parsed alongside the
 /// operation itself: the client-chosen correlation `id` (echoed on every
 /// response line, required for pipelining), the per-job streaming opt-in,
-/// and the binary-frame opt-in.
+/// the binary-frame opt-in, and the federation `hop` count (0 for a
+/// direct client; each router tier forwards `hop + 1` and rejects lines
+/// whose hop count reached its `max_hops`, so a routing cycle dies with
+/// an error instead of a forwarding storm).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RequestMeta {
     pub id: Option<u64>,
     pub stream: bool,
     pub frame: bool,
+    pub hop: u32,
 }
 
 /// Parse a request line together with its [`RequestMeta`] envelope.
@@ -67,6 +71,7 @@ pub fn parse_with_meta(line: &str) -> Result<(Request, RequestMeta), String> {
         id: v.get("id").as_i64().filter(|&i| i >= 0).map(|i| i as u64),
         stream: v.get("stream").as_bool().unwrap_or(false),
         frame: v.get("frame").as_bool().unwrap_or(false),
+        hop: v.get("hop").as_i64().filter(|&h| h >= 0).map(|h| h as u32).unwrap_or(0),
     };
     Ok((Request::from_value(&v)?, meta))
 }
@@ -123,6 +128,72 @@ pub fn err(msg: &str) -> String {
 pub fn with_id(line: &str, id: u64) -> String {
     debug_assert!(line.starts_with('{') && line.len() > 2, "responses are non-empty objects: {line}");
     format!("{{\"id\":{id},{}", &line[1..])
+}
+
+/// Inverse of [`with_id`] for the federation proxy: pull a spliced-first
+/// `"id"` field off a response line, returning the id (if present) and
+/// the line without it. Because [`with_id`] always lands the id as the
+/// first field, a prefix scan suffices — no JSON re-parse on the proxy
+/// hot path. Lines whose first field is not `"id"` come back unchanged.
+pub fn strip_id(line: &str) -> (Option<u64>, &str) {
+    let Some(rest) = line.strip_prefix("{\"id\":") else {
+        return (None, line);
+    };
+    let digits: usize = rest.bytes().take_while(|b| b.is_ascii_digit()).count();
+    if digits == 0 || !rest[digits..].starts_with(',') {
+        return (None, line);
+    }
+    match rest[..digits].parse::<u64>() {
+        Ok(id) => (Some(id), &rest[digits..]),
+        Err(_) => (None, line),
+    }
+}
+
+/// Re-open a stripped tail from [`strip_id`] as a standalone object line
+/// (the tail starts at the `,` after the removed id field).
+pub fn reopen(tail: &str) -> String {
+    debug_assert!(tail.starts_with(','), "strip_id tails start at the comma: {tail}");
+    format!("{{{}", &tail[1..])
+}
+
+/// Serialize a request plus its envelope back to one wire line — the
+/// federation router re-emits client requests to backends through this
+/// (with its own upstream `id` spliced via [`with_id`] and the hop count
+/// advanced), and re-submits a dead backend's in-flight manifests from
+/// the same serialization. The correlation id is deliberately *not*
+/// serialized here: each tier owns its own id space.
+pub fn request_line(req: &Request, meta: &RequestMeta) -> String {
+    let mut fields: Vec<(&str, Value)> = Vec::new();
+    match req {
+        Request::Ping => fields.push(("op", Value::str("ping"))),
+        Request::Info => fields.push(("op", Value::str("info"))),
+        Request::Metrics => fields.push(("op", Value::str("metrics"))),
+        Request::Eval { model } => {
+            fields.push(("op", Value::str("eval")));
+            fields.push(("model", Value::str(model)));
+        }
+        Request::Sample { model, method, n, seed, return_samples, decode } => {
+            fields.push(("op", Value::str("sample")));
+            fields.push(("model", Value::str(model)));
+            let (name, t_use) = method.wire_name();
+            fields.push(("method", Value::str(name)));
+            fields.push(("t_use", Value::num(t_use as f64)));
+            fields.push(("n", Value::num(*n as f64)));
+            fields.push(("seed", Value::num(*seed as f64)));
+            fields.push(("return_samples", Value::Bool(*return_samples)));
+            fields.push(("decode", Value::Bool(*decode)));
+        }
+    }
+    if meta.stream {
+        fields.push(("stream", Value::Bool(true)));
+    }
+    if meta.frame {
+        fields.push(("frame", Value::Bool(true)));
+    }
+    if meta.hop > 0 {
+        fields.push(("hop", Value::num(meta.hop as f64)));
+    }
+    Value::obj(fields).to_string()
 }
 
 /// One streamed per-job delivery event (requests with `"stream": true`):
@@ -303,13 +374,75 @@ mod tests {
     fn meta_parsed_alongside_request() {
         let (r, m) = parse_with_meta(r#"{"op":"ping","id":7,"stream":true,"frame":true}"#).unwrap();
         assert_eq!(r, Request::Ping);
-        assert_eq!(m, RequestMeta { id: Some(7), stream: true, frame: true });
+        assert_eq!(m, RequestMeta { id: Some(7), stream: true, frame: true, hop: 0 });
         let (_, m) = parse_with_meta(r#"{"op":"ping"}"#).unwrap();
         assert_eq!(m, RequestMeta::default());
         // A negative id cannot be echoed as u64: treated as absent.
         let (_, m) = parse_with_meta(r#"{"op":"ping","id":-3}"#).unwrap();
         assert_eq!(m.id, None);
         assert!(parse_with_meta(r#"{"op":"bogus","id":1}"#).is_err());
+    }
+
+    #[test]
+    fn hop_count_rides_the_envelope() {
+        let (_, m) = parse_with_meta(r#"{"op":"ping","hop":2}"#).unwrap();
+        assert_eq!(m.hop, 2);
+        // Absent or negative hops are a direct client (hop 0).
+        let (_, m) = parse_with_meta(r#"{"op":"ping","hop":-1}"#).unwrap();
+        assert_eq!(m.hop, 0);
+        let line = request_line(&Request::Ping, &RequestMeta { hop: 3, ..RequestMeta::default() });
+        let (_, m) = parse_with_meta(&line).unwrap();
+        assert_eq!(m.hop, 3);
+        // hop 0 is the wire default and is not serialized.
+        assert!(!request_line(&Request::Ping, &RequestMeta::default()).contains("hop"));
+    }
+
+    #[test]
+    fn strip_id_inverts_with_id() {
+        let line = ok(vec![("pong", Value::Bool(true))]);
+        let tagged = with_id(&line, 42);
+        let (id, tail) = strip_id(&tagged);
+        assert_eq!(id, Some(42));
+        assert_eq!(reopen(tail), line);
+        // Untagged lines come back whole with no id.
+        let (id, tail) = strip_id(&line);
+        assert_eq!(id, None);
+        assert_eq!(tail, line);
+        // A non-numeric or malformed id field is not stripped.
+        let odd = r#"{"id":"x","ok":true}"#;
+        assert_eq!(strip_id(odd), (None, odd));
+    }
+
+    #[test]
+    fn request_line_roundtrips_every_op() {
+        let metas = [
+            RequestMeta::default(),
+            RequestMeta { id: Some(9), stream: true, frame: true, hop: 1 },
+        ];
+        let reqs = [
+            Request::Ping,
+            Request::Info,
+            Request::Metrics,
+            Request::Eval { model: "mock_a".into() },
+            Request::Sample {
+                model: "mock_b".into(),
+                method: Method::Forecast { t_use: 5 },
+                n: 4,
+                seed: 77,
+                return_samples: false,
+                decode: true,
+            },
+        ];
+        for req in &reqs {
+            for meta in &metas {
+                let line = request_line(req, meta);
+                let (parsed, pm) = parse_with_meta(&line).unwrap();
+                assert_eq!(&parsed, req, "roundtrip {line}");
+                // The id never travels in the body: each tier re-stripes.
+                assert_eq!(pm.id, None, "ids are per-tier: {line}");
+                assert_eq!((pm.stream, pm.frame, pm.hop), (meta.stream, meta.frame, meta.hop), "envelope roundtrip {line}");
+            }
+        }
     }
 
     #[test]

@@ -732,6 +732,7 @@ impl Shard {
             id: meta.id,
             stream: meta.stream && self.cfg.streaming && matches!(req, Request::Sample { .. }),
             frame: meta.frame && self.cfg.framing,
+            hop: meta.hop,
         };
         let deadline = now + self.cfg.reply_timeout;
         self.inflight.insert(seq, Inflight { conn: id, id: meta.id, deadline, timed_out: false });

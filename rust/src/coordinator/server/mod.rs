@@ -77,9 +77,9 @@
 //! setting (see `rust/tests/server_test.rs`).
 
 mod client;
-mod conn;
+pub(crate) mod conn;
 mod feed;
-mod pool;
+pub(crate) mod pool;
 mod worker;
 
 pub use client::Client;

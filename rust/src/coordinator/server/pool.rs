@@ -67,6 +67,10 @@ pub(crate) struct Reply {
     pub(crate) id: Option<u64>,
     pub(crate) stream: bool,
     pub(crate) frame: bool,
+    /// Federation hop count from the request envelope. The engine pool
+    /// ignores it; the front-tier router reads it to refuse forwarding
+    /// loops (`hop >= max_hops`) and to advance it on the next tier.
+    pub(crate) hop: u32,
 }
 
 impl Reply {
@@ -104,7 +108,7 @@ impl Reply {
         let (tx, rx) = mpsc::channel();
         drop(rx);
         let tx = CompletionTx { tx, waker: Arc::new(crate::substrate::readiness::NoopWaker) };
-        Reply { tx, shard: 0, conn: 0, seq: 0, id: None, stream: false, frame: false }
+        Reply { tx, shard: 0, conn: 0, seq: 0, id: None, stream: false, frame: false, hop: 0 }
     }
 }
 

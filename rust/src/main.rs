@@ -5,6 +5,7 @@
 //!   eval    --model M             test-set bits/dim through the artifact
 //!   sample  --model M --method X  sample a batch, print stats (+ppm)
 //!   serve   --addr HOST:PORT      TCP serving (line-delimited JSON)
+//!   route   --backend HOST:PORT   front-tier fleet router over N servers
 //!   client  --addr --json '...'   one-shot request against a server
 //!   table1|table2|table3          regenerate the paper's tables
 //!   fig3|fig4|fig5|fig6           regenerate the paper's figures
@@ -14,6 +15,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use predsamp::bench::{figures, tables};
 use predsamp::coordinator::config::{Method, ServeConfig};
 use predsamp::coordinator::engine::Engine;
+use predsamp::coordinator::federation::{self, RouterConfig};
 use predsamp::coordinator::placement::PlacementKind;
 use predsamp::coordinator::policy::{AdmissionKind, PolicyKind};
 use predsamp::coordinator::scheduler;
@@ -41,6 +43,13 @@ COMMANDS
            [--max-engines N] [--reply-timeout-ms 600000] [--max-line-len BYTES]
            [--outbound-cap BYTES] [--rate-limit REQ_PER_S] [--max-conns N]
            [--no-stream] [--no-frame]
+  route    --backend HOST:PORT [--backend ...] [--addr 127.0.0.1:7190]
+           [--fleet-placement replicate|pinned|capped] [--fleet-pin model=0,2 ...]
+           [--fleet-max-backends N] [--probe-interval-ms 200] [--probe-timeout-ms 1000]
+           [--probe-fails 3] [--max-hops 4] [--conn-threads 1]
+           [--readiness auto|scan|epoll] [--reply-timeout-ms 600000]
+           [--max-line-len BYTES] [--outbound-cap BYTES] [--rate-limit REQ_PER_S]
+           [--max-conns N]
   client   [--addr ...] --json '{\"op\":\"ping\"}' [--stream]
   table1 | table2 | table3           [--seeds K] [--batches 1,32] [--models a,b]
   fig3 | fig4 | fig5 | fig6          [--seed 10] [--out results/]
@@ -227,6 +236,73 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
             let handle = server::spawn(dir, cfg)?;
             println!(
                 "predsamp serving on {} ({engine_threads} engine workers, {batching} batching, {policy_label} sizing, {placement_label} placement; ctrl-c to stop)",
+                handle.addr
+            );
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "route" => {
+            let d = RouterConfig::default();
+            let readiness_name = args.get("readiness", d.readiness.label());
+            let readiness =
+                ReadinessKind::parse(&readiness_name).ok_or_else(|| anyhow!("unknown --readiness {readiness_name:?} (auto|scan|epoll)"))?;
+            let backends = args.all("backend");
+            ensure!(!backends.is_empty(), "route needs at least one --backend host:port");
+            // Fleet placement mirrors the serve arm's dispatch:
+            // `--fleet-pin` implies pinned, `--fleet-max-backends` implies
+            // capped, `--fleet-placement` spells it out explicitly.
+            let pins = args
+                .all("fleet-pin")
+                .iter()
+                .map(|p| predsamp::coordinator::placement::parse_pin(p))
+                .collect::<Result<Vec<_>>>()?;
+            let max_backends = match args.opt("fleet-max-backends") {
+                Some(n) => Some(n.parse::<usize>().map_err(|_| anyhow!("--fleet-max-backends must be a namespace budget"))?),
+                None => None,
+            };
+            if !pins.is_empty() && max_backends.is_some() {
+                bail!("--fleet-pin and --fleet-max-backends select different fleet placements");
+            }
+            let placement_name = args.get("fleet-placement", "");
+            let fleet_placement = match placement_name.as_str() {
+                "" => match (pins.is_empty(), max_backends) {
+                    (_, Some(cap)) => PlacementKind::CapacityCapped(cap),
+                    (false, None) => PlacementKind::Pinned(pins.clone()),
+                    (true, None) => PlacementKind::ReplicateAll,
+                },
+                "replicate" => {
+                    ensure!(pins.is_empty() && max_backends.is_none(), "--fleet-placement replicate conflicts with --fleet-pin/--fleet-max-backends");
+                    PlacementKind::ReplicateAll
+                }
+                "pinned" => {
+                    ensure!(max_backends.is_none(), "--fleet-placement pinned conflicts with --fleet-max-backends");
+                    PlacementKind::Pinned(pins.clone())
+                }
+                "capped" => PlacementKind::CapacityCapped(max_backends.ok_or_else(|| anyhow!("--fleet-placement capped needs --fleet-max-backends N"))?),
+                other => bail!("unknown --fleet-placement {other:?} (replicate|pinned|capped)"),
+            };
+            let cfg = RouterConfig {
+                addr: args.get("addr", &d.addr),
+                backends,
+                fleet_placement,
+                probe_interval: std::time::Duration::from_millis(args.num::<u64>("probe-interval-ms", d.probe_interval.as_millis() as u64)),
+                probe_timeout: std::time::Duration::from_millis(args.num::<u64>("probe-timeout-ms", d.probe_timeout.as_millis() as u64)),
+                probe_fails: args.num::<u32>("probe-fails", d.probe_fails),
+                max_hops: args.num::<u32>("max-hops", d.max_hops),
+                conn_threads: args.num::<usize>("conn-threads", d.conn_threads),
+                readiness,
+                max_line_len: args.num::<usize>("max-line-len", d.max_line_len),
+                outbound_cap: args.num::<usize>("outbound-cap", d.outbound_cap),
+                rate_limit: args.num::<u32>("rate-limit", d.rate_limit),
+                max_conns: args.num::<usize>("max-conns", d.max_conns),
+                reply_timeout: std::time::Duration::from_millis(args.num::<u64>("reply-timeout-ms", d.reply_timeout.as_millis() as u64)),
+            };
+            args.finish().map_err(|e| anyhow!(e))?;
+            let (n_backends, placement_label) = (cfg.backends.len(), cfg.fleet_placement.label());
+            let handle = federation::spawn_router(cfg)?;
+            println!(
+                "predsamp routing on {} ({n_backends} backends, {placement_label} fleet placement; ctrl-c to stop)",
                 handle.addr
             );
             loop {

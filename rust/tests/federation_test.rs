@@ -1,0 +1,566 @@
+//! Federation end-to-end tests: real coordinator *child processes*
+//! behind an in-process front-tier router, with deterministic
+//! process-level fault injection.
+//!
+//! The harness spawns `predsamp serve` children (the same binary under
+//! test, via `CARGO_BIN_EXE_predsamp`) on ephemeral loopback ports over
+//! a shared mock manifest, parses each child's "serving on" banner to
+//! learn its address, captures its logs, and kills it on drop. A
+//! [`FaultPlan`] scripts the failure: after `kill_after_jobs` streamed
+//! job events have reached the client, the victim process is killed —
+//! and optionally restarted on its old port to exercise re-admission.
+//!
+//! The acceptance gate mirrors the worker pool's: a fleet of three
+//! processes must be bitwise-identical to a single process, including
+//! with a backend killed mid-stream — re-homed requests replay on a
+//! survivor, replayed events deduplicate, and the client sees zero
+//! failures.
+
+use predsamp::coordinator::config::ServeConfig;
+use predsamp::coordinator::federation::{spawn_router, RouterConfig, RouterHandle};
+use predsamp::coordinator::server::{spawn, Client, ServerHandle};
+use predsamp::runtime::artifact::{write_mock_manifest, MockModelSpec};
+use predsamp::substrate::json::Value;
+use std::collections::BTreeMap;
+use std::io::BufRead;
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Write the shared two-model mock manifest (the same family
+/// `server_test.rs` serves, so results are comparable across suites)
+/// into a per-test temp dir and return it.
+fn mock_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("predsamp-fed-{tag}-{}", std::process::id()));
+    let mut a = MockModelSpec::new("mock_a", 11);
+    a.batches = vec![1, 4];
+    let mut b = MockModelSpec::new("mock_b", 7);
+    b.channels = 1;
+    b.pixels = 16;
+    b.categories = 4;
+    b.strength = 1.5;
+    b.batches = vec![1, 4];
+    write_mock_manifest(&dir, &[a, b]).unwrap();
+    dir
+}
+
+// ---------------------------------------------------------------------------
+// Child-process harness
+// ---------------------------------------------------------------------------
+
+/// One `predsamp serve` coordinator child process: spawned on a loopback
+/// address, banner-parsed for the bound port, logs captured, killed on
+/// drop so a panicking test never leaks a serving process.
+struct ChildServer {
+    child: Child,
+    addr: SocketAddr,
+    log: Arc<Mutex<Vec<String>>>,
+    drains: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ChildServer {
+    /// Spawn a child on `addr` (`127.0.0.1:0` for ephemeral) over the
+    /// mock manifest in `dir`. Returns the captured log on failure so a
+    /// child that dies at startup explains itself.
+    fn spawn(dir: &Path, addr: &str) -> Result<ChildServer, String> {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_predsamp"))
+            .args(["serve", "--addr", addr, "--engine-threads", "2", "--max-wait-ms", "5"])
+            .env("PREDSAMP_ARTIFACTS", dir)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .map_err(|e| format!("spawning predsamp serve: {e}"))?;
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mut out = std::io::BufReader::new(child.stdout.take().expect("stdout piped"));
+        // The banner is the readiness signal: everything before it is
+        // startup chatter, and EOF before it means the child died (e.g.
+        // its port was taken on a restart).
+        let mut bound = None;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match out.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            log.lock().unwrap().push(line.trim_end().to_string());
+            if let Some(rest) = line.split("serving on ").nth(1) {
+                bound = rest.split_whitespace().next().and_then(|a| a.parse::<SocketAddr>().ok());
+                break;
+            }
+        }
+        let Some(addr) = bound else {
+            let _ = child.kill();
+            let _ = child.wait();
+            return Err(format!("child exited before its serving banner; log: {:?}", log.lock().unwrap()));
+        };
+        // Keep both pipes drained so the child never blocks on a full
+        // pipe; every line lands in the shared captured log.
+        let mut drains = Vec::new();
+        for reader in [Box::new(out) as Box<dyn BufRead + Send>, Box::new(std::io::BufReader::new(child.stderr.take().expect("stderr piped")))] {
+            let log = Arc::clone(&log);
+            drains.push(std::thread::spawn(move || {
+                for l in reader.lines() {
+                    match l {
+                        Ok(l) => log.lock().unwrap().push(l),
+                        Err(_) => break,
+                    }
+                }
+            }));
+        }
+        Ok(ChildServer { child, addr, log, drains })
+    }
+
+    /// Kill the process outright (SIGKILL — no graceful shutdown, this
+    /// is the fault being injected) and reap it.
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    fn logs(&self) -> Vec<String> {
+        self.log.lock().unwrap().clone()
+    }
+}
+
+impl Drop for ChildServer {
+    fn drop(&mut self) {
+        self.kill();
+        for j in self.drains.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet harness + fault plan
+// ---------------------------------------------------------------------------
+
+/// Deterministic process-level fault script for one scenario: kill the
+/// victim backend once `kill_after_jobs` streamed job events have
+/// reached the client, then (optionally) restart it on its old port so
+/// the prober can re-admit it.
+struct FaultPlan {
+    kill_after_jobs: usize,
+    restart: bool,
+}
+
+/// A federation under test: N coordinator child processes and the
+/// in-process router fronting them (fast probe cadence so death and
+/// re-admission are observed within test timeouts).
+struct Fleet {
+    dir: PathBuf,
+    children: Vec<Option<ChildServer>>,
+    router: Option<RouterHandle>,
+}
+
+/// Spawn `n` child coordinators plus a router over them.
+fn spawn_fleet(tag: &str, n: usize) -> Fleet {
+    spawn_fleet_cfg(tag, n, |_| {})
+}
+
+/// As [`spawn_fleet`], letting the test adjust the router config (the
+/// backend list is filled in after the children have bound).
+fn spawn_fleet_cfg(tag: &str, n: usize, tweak: impl FnOnce(&mut RouterConfig)) -> Fleet {
+    let dir = mock_dir(tag);
+    let children: Vec<Option<ChildServer>> = (0..n).map(|_| Some(ChildServer::spawn(&dir, "127.0.0.1:0").expect("child spawns"))).collect();
+    let mut cfg = RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: children.iter().map(|c| c.as_ref().unwrap().addr.to_string()).collect(),
+        probe_interval: Duration::from_millis(50),
+        probe_timeout: Duration::from_secs(2),
+        probe_fails: 2,
+        ..RouterConfig::default()
+    };
+    tweak(&mut cfg);
+    let router = spawn_router(cfg).expect("router spawns");
+    Fleet { dir, children, router: Some(router) }
+}
+
+impl Fleet {
+    fn addr(&self) -> SocketAddr {
+        self.router.as_ref().unwrap().addr
+    }
+
+    /// Inject the fault: SIGKILL backend `i`.
+    fn kill(&mut self, i: usize) {
+        if let Some(mut c) = self.children[i].take() {
+            c.kill();
+        }
+    }
+
+    /// Restart backend `i` on the port it had before the kill (retried:
+    /// the OS may briefly hold the port after the SIGKILL).
+    fn restart(&mut self, i: usize, addr: SocketAddr) {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match ChildServer::spawn(&self.dir, &addr.to_string()) {
+                Ok(c) => {
+                    self.children[i] = Some(c);
+                    return;
+                }
+                Err(e) if Instant::now() < deadline => {
+                    eprintln!("restart of backend {i} on {addr} not up yet: {e}");
+                    std::thread::sleep(Duration::from_millis(200));
+                }
+                Err(e) => panic!("backend {i} never came back on {addr}: {e}"),
+            }
+        }
+    }
+
+    fn stop(mut self) {
+        if let Some(r) = self.router.take() {
+            r.stop();
+        }
+        self.children.clear();
+    }
+}
+
+/// Poll the router's `metrics` op until `pred` holds on the `fleet`
+/// section (probe results land asynchronously). Returns the last fleet
+/// object either way; the caller asserts on it.
+fn fleet_eventually(addr: &SocketAddr, pred: impl Fn(&Value) -> bool) -> Value {
+    let mut last = Value::Null;
+    for _ in 0..200 {
+        let mut c = Client::connect(addr).unwrap();
+        let m = c.call(r#"{"op":"metrics"}"#).unwrap();
+        last = m.get("metrics").get("fleet").clone();
+        if pred(&last) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    last
+}
+
+/// Backend index currently owning `model`, observed through the fleet
+/// metrics after a warm-up request (probes never touch the forwarding
+/// counters, so exactly one backend has forwarded anything).
+fn owner_of(addr: &SocketAddr, model: &str) -> usize {
+    let mut c = Client::connect(addr).unwrap();
+    let r = c.call(&format!(r#"{{"op":"sample","model":"{model}","method":"fpi","n":1,"seed":900,"return_samples":false}}"#)).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(true), "warm-up request must succeed: {r}");
+    let fleet = c.call(r#"{"op":"metrics"}"#).unwrap().get("metrics").get("fleet").clone();
+    let backends = fleet.get("backends").as_arr().unwrap();
+    backends
+        .iter()
+        .position(|b| b.get("forwarded").as_i64().unwrap_or(0) >= 1)
+        .expect("the warm-up forward must be counted somewhere")
+}
+
+// ---------------------------------------------------------------------------
+// Reference + request mix
+// ---------------------------------------------------------------------------
+
+/// A single-process reference server over the same mock manifest: the
+/// bitwise ground truth every fleet topology must reproduce.
+fn single_process(tag: &str) -> ServerHandle {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(5),
+        engine_threads: 2,
+        ..ServeConfig::default()
+    };
+    spawn(mock_dir(tag), cfg).expect("reference server spawns")
+}
+
+fn samples_of(v: &Value) -> Vec<Vec<i32>> {
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{v}");
+    predsamp::coordinator::protocol::parse_samples(v.get("samples")).expect("samples field")
+}
+
+/// The mixed request set used for every A/B comparison: both models,
+/// two methods, and all three delivery modes (plain / streamed /
+/// framed) across distinct seeds.
+fn mixed_request(i: usize) -> String {
+    let model = if i % 2 == 0 { "mock_a" } else { "mock_b" };
+    let method = if i % 3 == 0 { "fpi" } else { "zeros" };
+    let opt = match i % 3 {
+        1 => r#","stream":true"#,
+        2 => r#","frame":true"#,
+        _ => "",
+    };
+    format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":3,"seed":{i},"id":{i}{opt}}}"#)
+}
+
+/// Issue requests `0..n` pipelined on one connection and return the
+/// final samples in request order, skipping streamed events.
+fn run_mix(addr: &SocketAddr, n: usize) -> Vec<Vec<Vec<i32>>> {
+    let mut c = Client::connect(addr).unwrap();
+    for i in 0..n {
+        c.send_line(&mixed_request(i)).unwrap();
+    }
+    let mut by_id: BTreeMap<i64, Vec<Vec<i32>>> = BTreeMap::new();
+    while by_id.len() < n {
+        let m = c.read_message().unwrap();
+        if m.get("stream").as_bool() == Some(true) {
+            continue;
+        }
+        let id = m.get("id").as_i64().expect("finals echo their request id");
+        assert!(by_id.insert(id, samples_of(&m)).is_none(), "duplicate final for id {id}");
+    }
+    (0..n).map(|i| by_id.remove(&(i as i64)).unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn router_answers_locally_and_probes_the_fleet_healthy() {
+    let fleet = spawn_fleet("health", 3);
+    let mut c = Client::connect(&fleet.addr()).unwrap();
+    // Ping and metrics are the router's own (one-hop answers).
+    let pong = c.call(r#"{"op":"ping"}"#).unwrap();
+    assert_eq!(pong.get("pong").as_bool(), Some(true), "{pong}");
+    let m = c.call(r#"{"op":"metrics"}"#).unwrap();
+    let metrics = m.get("metrics");
+    assert!(metrics.get("edge").get("conn_threads").as_i64().is_some(), "the router has its own edge section: {m}");
+    let fleet_v = metrics.get("fleet");
+    assert_eq!(fleet_v.get("fleet_placement").as_str(), Some("replicate"), "{m}");
+    assert_eq!(fleet_v.get("backends").as_arr().unwrap().len(), 3, "{m}");
+    // The prober converges every backend to healthy.
+    let f = fleet_eventually(&fleet.addr(), |f| {
+        f.get("live_backends").as_i64() == Some(3)
+            && f.get("backends").as_arr().unwrap().iter().all(|b| b.get("health").as_str() == Some("healthy"))
+    });
+    assert_eq!(f.get("live_backends").as_i64(), Some(3), "probes must converge: {f}");
+    // info is forwarded to a backend: the answer is an engine answer.
+    let info = c.call(r#"{"op":"info"}"#).unwrap();
+    assert_eq!(info.get("engine_workers").as_i64(), Some(2), "info must come from a backend's pool: {info}");
+    fleet.stop();
+}
+
+#[test]
+fn fleet_of_three_matches_single_process_bitwise() {
+    // THE federation acceptance gate: the same mixed pipelined stream
+    // (both models, plain/streamed/framed) against a 3-process fleet
+    // and against one process must be bitwise-identical — placement
+    // across processes, re-striped ids, and proxied delivery are all
+    // invisible in the payload.
+    const N: usize = 12;
+    let reference = {
+        let server = single_process("ab-single");
+        let out = run_mix(&server.addr, N);
+        server.stop();
+        out
+    };
+    let fleet = spawn_fleet("ab-fleet", 3);
+    let federated = run_mix(&fleet.addr(), N);
+    assert_eq!(federated, reference, "a federated fleet must be bitwise-identical to a single process");
+    assert!(federated.iter().all(|s| s.len() == 3));
+    // The namespaces actually spread: with two models and rendezvous
+    // placement, every forward is accounted to some backend and the
+    // totals add up.
+    let mut c = Client::connect(&fleet.addr()).unwrap();
+    let f = c.call(r#"{"op":"metrics"}"#).unwrap().get("metrics").get("fleet").clone();
+    let per_backend: i64 = f.get("backends").as_arr().unwrap().iter().map(|b| b.get("forwarded").as_i64().unwrap()).sum();
+    assert_eq!(per_backend, f.get("forwards").as_i64().unwrap(), "per-backend forwards must sum to the total: {f}");
+    assert_eq!(f.get("forwards").as_i64(), Some(N as i64), "every request was forwarded exactly once: {f}");
+    fleet.stop();
+}
+
+#[test]
+fn fault_plan_kill_mid_stream_stays_bitwise_with_zero_client_failures() {
+    // The fault-injection gate: streamed requests are in flight when the
+    // owning backend is SIGKILLed. The router re-homes the namespace,
+    // re-submits the stored manifests on a survivor, deduplicates
+    // replayed events, and the client sees every job exactly once,
+    // bitwise-equal to a single process — zero visible failures.
+    const REQS: usize = 4;
+    const JOBS: usize = 4;
+    let req = |i: usize| format!(r#"{{"op":"sample","model":"mock_a","method":"fpi","n":{JOBS},"seed":{i},"id":{i},"stream":true}}"#);
+    let reference: Vec<Vec<Vec<i32>>> = {
+        let server = single_process("kill-single");
+        let mut c = Client::connect(&server.addr).unwrap();
+        let out = (0..REQS).map(|i| samples_of(&c.call(&req(i)).unwrap())).collect();
+        server.stop();
+        out
+    };
+    let mut fleet = spawn_fleet("kill-fleet", 3);
+    let plan = FaultPlan { kill_after_jobs: 3, restart: false };
+    let victim = owner_of(&fleet.addr(), "mock_a");
+    let mut c = Client::connect(&fleet.addr()).unwrap();
+    for i in 0..REQS {
+        c.send_line(&req(i)).unwrap();
+    }
+    let mut killed = false;
+    let mut streamed = 0usize;
+    let mut events: BTreeMap<i64, Vec<i64>> = BTreeMap::new();
+    let mut finals: BTreeMap<i64, Vec<Vec<i32>>> = BTreeMap::new();
+    while finals.len() < REQS {
+        let m = c.read_message().unwrap();
+        let id = m.get("id").as_i64().expect("every reply echoes its id");
+        if m.get("stream").as_bool() == Some(true) {
+            streamed += 1;
+            events.entry(id).or_default().push(m.get("job").as_i64().unwrap());
+            if streamed >= plan.kill_after_jobs && !killed {
+                fleet.kill(victim);
+                killed = true;
+            }
+            continue;
+        }
+        assert!(finals.insert(id, samples_of(&m)).is_none(), "duplicate final for id {id}");
+    }
+    assert!(killed, "the fault plan must have fired mid-stream");
+    // Zero client-visible failures and bitwise equality, kill or no kill.
+    for i in 0..REQS {
+        assert_eq!(finals[&(i as i64)], reference[i], "request {i} diverged after the mid-stream kill");
+    }
+    // Each job streamed exactly once: replayed events after the re-home
+    // are deduplicated by job index.
+    for (id, jobs) in &events {
+        let mut sorted = jobs.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), jobs.len(), "request {id} saw a duplicate streamed job: {jobs:?}");
+    }
+    // A post-kill request still routes: the dead backend's namespace
+    // re-homed to a survivor (conn-error detection, no probe needed).
+    let again = samples_of(&c.call(&req(0)).unwrap());
+    assert_eq!(again, reference[0], "the re-homed namespace must keep serving bitwise-identically");
+    let f = fleet_eventually(&fleet.addr(), |f| {
+        f.get("backends").as_arr().unwrap()[victim].get("health").as_str() == Some("dead")
+    });
+    assert_eq!(f.get("backends").as_arr().unwrap()[victim].get("health").as_str(), Some("dead"), "{f}");
+    assert_eq!(f.get("live_backends").as_i64(), Some(2), "{f}");
+    fleet.stop();
+}
+
+#[test]
+fn fault_plan_restart_readmits_the_backend() {
+    // The re-admission half of the fault plan: a killed backend brought
+    // back on its old port turns healthy again after one successful
+    // probe, and the fleet keeps serving bitwise-identically throughout.
+    // Its old namespaces do NOT move back (stability) — only fresh
+    // routing may use it.
+    let reference: Vec<Vec<Vec<i32>>> = {
+        let server = single_process("restart-single");
+        let mut c = Client::connect(&server.addr).unwrap();
+        let out = (0..4).map(|i| samples_of(&c.call(&mixed_request(3 * i)).unwrap())).collect();
+        server.stop();
+        out
+    };
+    let mut fleet = spawn_fleet("restart-fleet", 3);
+    let plan = FaultPlan { kill_after_jobs: 0, restart: true };
+    assert!(plan.restart);
+    let victim = owner_of(&fleet.addr(), "mock_b");
+    let victim_addr = fleet.children[victim].as_ref().unwrap().addr;
+    fleet.kill(victim);
+    // Down: the prober notices within probe_fails * probe_interval.
+    let f = fleet_eventually(&fleet.addr(), |f| f.get("live_backends").as_i64() == Some(2));
+    assert_eq!(f.get("live_backends").as_i64(), Some(2), "{f}");
+    // The fleet still serves the victim's namespace, bitwise-identically.
+    let mut c = Client::connect(&fleet.addr()).unwrap();
+    for (k, want) in reference.iter().enumerate() {
+        assert_eq!(&samples_of(&c.call(&mixed_request(3 * k)).unwrap()), want, "request {k} diverged while a backend was down");
+    }
+    // Back up on the same port: re-admitted by the next probe.
+    fleet.restart(victim, victim_addr);
+    let f = fleet_eventually(&fleet.addr(), |f| f.get("live_backends").as_i64() == Some(3));
+    assert_eq!(f.get("live_backends").as_i64(), Some(3), "restarted backend must be re-admitted: {f}");
+    for (k, want) in reference.iter().enumerate() {
+        assert_eq!(&samples_of(&c.call(&mixed_request(3 * k)).unwrap()), want, "request {k} diverged after re-admission");
+    }
+    let logs = fleet.children[victim].as_ref().unwrap().logs();
+    assert!(logs.iter().any(|l| l.contains("serving on")), "restarted child must have banner-logged: {logs:?}");
+    fleet.stop();
+}
+
+#[test]
+fn hop_limit_kills_forwarding_cycles_through_two_tiers() {
+    // Two stacked routers (client → outer → inner → process) serve
+    // normally — the hop count advances per tier and stays under the
+    // limit. With the inner tier's max_hops forced to 1, the outer
+    // tier's forward (hop 1) dies there with a hop-limit error instead
+    // of looping, and the error propagates back like any reply.
+    let dir = mock_dir("hops");
+    let child = ChildServer::spawn(&dir, "127.0.0.1:0").expect("child spawns");
+    let inner = spawn_router(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![child.addr.to_string()],
+        probe_interval: Duration::from_millis(50),
+        ..RouterConfig::default()
+    })
+    .expect("inner router spawns");
+    let outer = spawn_router(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![inner.addr.to_string()],
+        probe_interval: Duration::from_millis(50),
+        ..RouterConfig::default()
+    })
+    .expect("outer router spawns");
+    // Two hops, bitwise-identical to the direct path.
+    let req = r#"{"op":"sample","model":"mock_a","method":"fpi","n":2,"seed":6}"#;
+    let mut direct = Client::connect(&child.addr).unwrap();
+    let want = samples_of(&direct.call(req).unwrap());
+    let mut c = Client::connect(&outer.addr).unwrap();
+    assert_eq!(samples_of(&c.call(req).unwrap()), want, "two router tiers must be bitwise-invisible");
+    // A pre-inflated hop count (a cycle in flight) is refused at the
+    // first tier whose budget it exhausts.
+    let r = c.call(r#"{"op":"sample","model":"mock_a","method":"fpi","n":1,"seed":0,"hop":9}"#).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "{r}");
+    assert!(r.get("error").as_str().unwrap().contains("hop limit"), "{r}");
+    outer.stop();
+    inner.stop();
+    // An inner tier with a one-hop budget rejects the outer tier's
+    // forward: the cycle guard works across real processes, not just
+    // inside one.
+    let inner = spawn_router(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![child.addr.to_string()],
+        probe_interval: Duration::from_millis(50),
+        max_hops: 1,
+        ..RouterConfig::default()
+    })
+    .expect("strict inner router spawns");
+    let outer = spawn_router(RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![inner.addr.to_string()],
+        probe_interval: Duration::from_millis(50),
+        ..RouterConfig::default()
+    })
+    .expect("outer router spawns");
+    let mut c = Client::connect(&outer.addr).unwrap();
+    let r = c.call(req).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "a 1-hop inner budget must refuse the second tier: {r}");
+    assert!(r.get("error").as_str().unwrap().contains("hop limit"), "{r}");
+    // Direct clients of the strict tier are under budget and still served.
+    let mut c = Client::connect(&inner.addr).unwrap();
+    assert_eq!(samples_of(&c.call(req).unwrap()), want, "hop 0 is under a 1-hop budget");
+    outer.stop();
+    inner.stop();
+}
+
+#[test]
+fn pinned_fleet_placement_keeps_namespaces_on_their_backends() {
+    // Fleet-level pinning mirrors worker-level pinning one tier up:
+    // mock_a may only live on backend 0, mock_b only on backend 1, and
+    // the forwarding counters prove nothing leaked — while samples stay
+    // bitwise-identical to a single process.
+    use predsamp::coordinator::placement::PlacementKind;
+    let reference: Vec<Vec<Vec<i32>>> = {
+        let server = single_process("pin-single");
+        let mut c = Client::connect(&server.addr).unwrap();
+        let out = (0..4).map(|i| samples_of(&c.call(&mixed_request(i)).unwrap())).collect();
+        server.stop();
+        out
+    };
+    let fleet = spawn_fleet_cfg("pin-fleet", 3, |cfg| {
+        cfg.fleet_placement = PlacementKind::Pinned(vec![("mock_a".into(), vec![0]), ("mock_b".into(), vec![1])]);
+    });
+    let mut c = Client::connect(&fleet.addr()).unwrap();
+    for (i, want) in reference.iter().enumerate() {
+        assert_eq!(&samples_of(&c.call(&mixed_request(i)).unwrap()), want, "request {i} diverged under fleet pinning");
+    }
+    let f = c.call(r#"{"op":"metrics"}"#).unwrap().get("metrics").get("fleet").clone();
+    let backends = f.get("backends").as_arr().unwrap();
+    assert_eq!(f.get("fleet_placement").as_str(), Some("pinned"), "{f}");
+    assert!(backends[0].get("forwarded").as_i64().unwrap() >= 1, "mock_a must land on its pin: {f}");
+    assert!(backends[1].get("forwarded").as_i64().unwrap() >= 1, "mock_b must land on its pin: {f}");
+    assert_eq!(backends[2].get("forwarded").as_i64(), Some(0), "the unpinned backend must see nothing: {f}");
+    fleet.stop();
+}

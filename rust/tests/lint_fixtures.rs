@@ -210,6 +210,23 @@ fn panic_guard_flags_unwrap_expect_panic() {
 }
 
 #[test]
+fn panic_guard_covers_the_federation_router() {
+    // `coordinator/federation.rs` is a guarded module: a panic in the
+    // route loop takes the front tier's whole fleet state down.
+    let out = findings_for(panic_guard::run, "rust/src/coordinator/federation.rs", "fn f() { x.unwrap(); }");
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert_eq!(out[0].pass, "panic-guard");
+
+    // Test regions and the escape hatch behave exactly as in the
+    // connection plane.
+    let test_only = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { x.unwrap(); }\n}";
+    assert!(findings_for(panic_guard::run, "rust/src/coordinator/federation.rs", test_only).is_empty());
+
+    let escaped = "fn f() {\n    // lint:allow(panic-guard): fixture proving the escape hatch\n    x.unwrap();\n}";
+    assert!(findings_for(panic_guard::run, "rust/src/coordinator/federation.rs", escaped).is_empty());
+}
+
+#[test]
 fn panic_guard_permits_degraded_idioms_tests_and_allows() {
     // The degraded-handling idioms are exactly what the pass pushes
     // toward — they must never be flagged.
@@ -309,6 +326,28 @@ fn doc_parity_cross_checks_docs_cli_and_keys() {
     assert!(!msgs.iter().any(|m| m.contains("ServeConfig::port")), "documented+parsed field must be clean: {msgs:?}");
     assert!(!msgs.iter().any(|m| m.contains("\"requests\"")), "documented key must be clean: {msgs:?}");
     assert!(!msgs.iter().any(|m| m.contains("max_batch") && m.contains("CLI")), "parsed field must pass the CLI check: {msgs:?}");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn doc_parity_covers_the_federation_router() {
+    let root = docs_root("fed-parity", "knob table: `addr` and `max_hops` documented\n", "keys: \"forwards\" documented\n");
+    let files = vec![
+        SourceFile::from_source(
+            "rust/src/coordinator/federation.rs",
+            "pub struct RouterConfig {\n    pub addr: String,\n    pub max_hops: usize,\n}\nfn fleet_value() -> Value {\n    Value::obj(vec![(\"forwards\", Value::num(1.0)), (\"stray_gauge\", Value::num(2.0))])\n}\nfn router_metrics_response() -> Value {\n    Value::obj(vec![])\n}",
+        ),
+        // The CLI's `route` arm parses `addr` but forgot `max_hops` — so
+        // `max_hops` is only missing from the CLI, not the knob table.
+        SourceFile::from_source("rust/src/main.rs", "fn main() { let cfg = RouterConfig { addr: a }; }"),
+    ];
+    let mut out = Vec::new();
+    doc_parity::run(&Ctx { files: &files, root: &root }, &mut out);
+    let msgs: Vec<&str> = out.iter().map(|f| f.msg.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("RouterConfig::max_hops") && m.contains("CLI")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("stray_gauge") && m.contains("PROTOCOL")), "{msgs:?}");
+    assert!(!msgs.iter().any(|m| m.contains("RouterConfig::addr")), "documented+parsed field must be clean: {msgs:?}");
+    assert!(!msgs.iter().any(|m| m.contains("\"forwards\"")), "documented fleet key must be clean: {msgs:?}");
     let _ = std::fs::remove_dir_all(&root);
 }
 

@@ -4,6 +4,7 @@
 //! real-artifact path and skip when `make artifacts` hasn't run.
 
 use predsamp::coordinator::config::ServeConfig;
+use predsamp::coordinator::federation::{spawn_router, RouterConfig, RouterHandle};
 use predsamp::coordinator::placement::PlacementKind;
 use predsamp::coordinator::policy::{AdmissionKind, PolicyKind};
 use predsamp::coordinator::server::{spawn, Client, ServerHandle};
@@ -84,6 +85,25 @@ fn spawn_mock_policy(tag: &str, policy: PolicyKind, admission: AdmissionKind) ->
 fn samples_of(v: &Value) -> Vec<Vec<i32>> {
     assert_eq!(v.get("ok").as_bool(), Some(true), "{v}");
     predsamp::coordinator::protocol::parse_samples(v.get("samples")).expect("samples field")
+}
+
+/// Front `server` with a single-backend federation router. The routed
+/// tier re-stripes upstream ids and proxies streams and frames, and the
+/// edge-behavior tests below must not be able to tell the difference.
+fn via_router(server: &ServerHandle) -> RouterHandle {
+    via_router_cfg(server, |_| {})
+}
+
+/// As [`via_router`], letting the test adjust the router's edge knobs.
+fn via_router_cfg(server: &ServerHandle, tweak: impl FnOnce(&mut RouterConfig)) -> RouterHandle {
+    let mut cfg = RouterConfig {
+        addr: "127.0.0.1:0".into(),
+        backends: vec![server.addr.to_string()],
+        probe_interval: Duration::from_millis(50),
+        ..RouterConfig::default()
+    };
+    tweak(&mut cfg);
+    spawn_router(cfg).expect("router spawns")
 }
 
 #[test]
@@ -709,29 +729,36 @@ fn pipelined_requests_are_matched_by_id() {
     // Several requests on one connection before reading any reply:
     // replies may complete in any order (different models and engine
     // queues), and the `id` echo is what lets the client pair them up.
+    // The same contract holds one tier up, through a federation router —
+    // the router re-stripes its upstream ids and splices the client's
+    // back on, and pipelined out-of-order completion must survive that.
     let server = spawn_mock("pipeline", 2, true);
+    let router = via_router(&server);
     let req = |i: u64| {
         let model = if i % 2 == 0 { "mock_a" } else { "mock_b" };
         let method = if i % 3 == 0 { "fpi" } else { "zeros" };
         format!(r#"{{"op":"sample","model":"{model}","method":"{method}","n":2,"seed":{i},"id":{i}}}"#)
     };
-    let mut c = Client::connect(&server.addr).unwrap();
-    for i in 0..6 {
-        c.send_line(&req(i)).unwrap();
+    for (tier, addr) in [("direct", server.addr), ("routed", router.addr)] {
+        let mut c = Client::connect(&addr).unwrap();
+        for i in 0..6 {
+            c.send_line(&req(i)).unwrap();
+        }
+        let mut by_id = std::collections::HashMap::new();
+        for _ in 0..6 {
+            let r = c.read_message().unwrap();
+            let id = r.get("id").as_i64().expect("every pipelined reply must echo its request id");
+            assert!(by_id.insert(id, samples_of(&r)).is_none(), "{tier}: duplicate reply for id {id}");
+        }
+        // The same requests issued one at a time must agree bitwise: the
+        // pipelined path moves replies, never samples.
+        let mut seq = Client::connect(&server.addr).unwrap();
+        for i in 0..6u64 {
+            let reference = samples_of(&seq.call(&req(i)).unwrap());
+            assert_eq!(by_id[&(i as i64)], reference, "{tier}: pipelined reply {i} diverged from the sequential path");
+        }
     }
-    let mut by_id = std::collections::HashMap::new();
-    for _ in 0..6 {
-        let r = c.read_message().unwrap();
-        let id = r.get("id").as_i64().expect("every pipelined reply must echo its request id");
-        assert!(by_id.insert(id, samples_of(&r)).is_none(), "duplicate reply for id {id}");
-    }
-    // The same requests issued one at a time must agree bitwise: the
-    // pipelined path moves replies, never samples.
-    let mut seq = Client::connect(&server.addr).unwrap();
-    for i in 0..6u64 {
-        let reference = samples_of(&seq.call(&req(i)).unwrap());
-        assert_eq!(by_id[&(i as i64)], reference, "pipelined reply {i} diverged from the sequential path");
-    }
+    router.stop();
     server.stop();
 }
 
@@ -853,17 +880,22 @@ fn many_concurrent_connections_match_sequential_bitwise() {
 fn crlf_terminated_requests_are_served() {
     // Windows-style line endings: a `\r\n`-terminated request must parse
     // exactly like its `\n` twin — the edge strips the `\r` before the
-    // JSON parser ever sees it.
+    // JSON parser ever sees it. The router's edge is the same connection
+    // plane, so the routed tier gets the identical treatment.
     let server = spawn_mock("crlf", 1, true);
-    let mut s = std::net::TcpStream::connect(server.addr).unwrap();
-    std::io::Write::write_all(&mut s, b"{\"op\":\"ping\",\"id\":3}\r\n").unwrap();
-    let mut reader = std::io::BufReader::new(s);
-    let mut resp = String::new();
-    std::io::BufRead::read_line(&mut reader, &mut resp).unwrap();
-    let v = predsamp::substrate::json::parse(resp.trim()).unwrap();
-    assert_eq!(v.get("ok").as_bool(), Some(true), "CRLF request must be served: {v}");
-    assert_eq!(v.get("pong").as_bool(), Some(true), "{v}");
-    assert_eq!(v.get("id").as_i64(), Some(3), "{v}");
+    let router = via_router(&server);
+    for (tier, addr) in [("direct", server.addr), ("routed", router.addr)] {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        std::io::Write::write_all(&mut s, b"{\"op\":\"ping\",\"id\":3}\r\n").unwrap();
+        let mut reader = std::io::BufReader::new(s);
+        let mut resp = String::new();
+        std::io::BufRead::read_line(&mut reader, &mut resp).unwrap();
+        let v = predsamp::substrate::json::parse(resp.trim()).unwrap();
+        assert_eq!(v.get("ok").as_bool(), Some(true), "{tier}: CRLF request must be served: {v}");
+        assert_eq!(v.get("pong").as_bool(), Some(true), "{tier}: {v}");
+        assert_eq!(v.get("id").as_i64(), Some(3), "{tier}: {v}");
+    }
+    router.stop();
     server.stop();
 }
 
@@ -873,8 +905,8 @@ fn streaming_and_framing_are_bitwise_invisible_across_configs() {
     // streamed, framed, and streamed+framed replies must carry the same
     // bytes on the same seed — under elastic, rigid, sync, SLO-policy,
     // and capacity-capped placement configs alike.
-    fn run(tag: &str, server: ServerHandle) -> Vec<Vec<i32>> {
-        let mut c = Client::connect(&server.addr).unwrap();
+    fn run_at(tag: &str, addr: &std::net::SocketAddr) -> Vec<Vec<i32>> {
+        let mut c = Client::connect(addr).unwrap();
         let base = r#""op":"sample","model":"mock_a","method":"fpi","n":3,"seed":5"#;
         let plain = samples_of(&c.call(&format!("{{{base}}}")).unwrap());
         let mut events: Vec<(usize, Vec<i32>)> = Vec::new();
@@ -898,8 +930,12 @@ fn streaming_and_framing_are_bitwise_invisible_across_configs() {
         assert_eq!(samples_of(&fin), plain, "{tag}: streamed+framed final diverged");
         rows.sort_by_key(|(j, _)| *j);
         assert_eq!(rows.into_iter().map(|(_, row)| row).collect::<Vec<_>>(), plain, "{tag}: framed event rows diverged");
-        server.stop();
         plain
+    }
+    fn run(tag: &str, server: ServerHandle) -> Vec<Vec<i32>> {
+        let out = run_at(tag, &server.addr);
+        server.stop();
+        out
     }
     let wait = Duration::from_millis(5);
     let reference = run("elastic", spawn_mock_cfg("edge-elastic", 2, true, true, true, wait));
@@ -911,6 +947,14 @@ fn streaming_and_framing_are_bitwise_invisible_across_configs() {
     ] {
         assert_eq!(run(tag, server), reference, "{tag}: serving config changed the payload");
     }
+    // All four delivery modes through a federation router tier: streamed
+    // events and binary frames are proxied verbatim, so the routed
+    // payload is the same payload.
+    let server = spawn_mock_cfg("edge-routed", 2, true, true, true, wait);
+    let router = via_router(&server);
+    assert_eq!(run_at("routed", &router.addr), reference, "routed: the router tier changed the payload");
+    router.stop();
+    server.stop();
 }
 
 #[test]
@@ -946,6 +990,25 @@ fn oversized_request_rejected_before_buffering() {
     let mut c2 = Client::connect(&server.addr).unwrap();
     let m = c2.call(r#"{"op":"metrics"}"#).unwrap();
     assert!(m.get("metrics").get("edge").get("overlimit_rejections").as_i64().unwrap() >= 2, "{m}");
+    // A router tier enforces the same cap at its own edge — the flood
+    // never reaches the backend, and the router's metrics count it.
+    let router = via_router_cfg(&server, |cfg| cfg.max_line_len = 512);
+    let mut s = std::net::TcpStream::connect(router.addr).unwrap();
+    std::io::Write::write_all(&mut s, &[b'x'; 600]).unwrap();
+    let mut reader = std::io::BufReader::new(s);
+    let mut resp = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut resp).unwrap();
+    let v = predsamp::substrate::json::parse(resp.trim()).unwrap();
+    assert_eq!(v.get("ok").as_bool(), Some(false), "routed: {v}");
+    assert!(v.get("error").as_str().unwrap().contains("max_line_len"), "routed: {v}");
+    let mut c = Client::connect(&router.addr).unwrap();
+    let r = c.call(&format!(r#"{{"op":"ping","pad":"{}"}}"#, "y".repeat(600))).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false), "routed: {r}");
+    assert!(r.get("error").as_str().unwrap().contains("max_line_len"), "routed: {r}");
+    let mut c2 = Client::connect(&router.addr).unwrap();
+    let m = c2.call(r#"{"op":"metrics"}"#).unwrap();
+    assert!(m.get("metrics").get("edge").get("overlimit_rejections").as_i64().unwrap() >= 2, "routed: {m}");
+    router.stop();
     server.stop();
 }
 
