@@ -22,6 +22,17 @@
 //! aggregate `calls_per_job` must come out strictly lower (asserted, and
 //! both are bitwise identical to the batch-1 reference).
 //!
+//! The **compiled variants** scenario prices the shape-variant catalog:
+//! the same job mix through the pre-catalog compiled serving path (one
+//! fixed b=8 export paying `8 * (d + P*T)` per pass no matter what the
+//! plan allows) and through a [`VariantCatalog`] carrying the AOT
+//! exporter's span ladder (d/8, d/4, d/2 plus the full-shape anchors)
+//! at batches `{1, 2, 4, 8}`. Unlike the plan rows above, the catalog
+//! pays quantized *device* shapes — the cheapest exported variant
+//! covering the plan — so its gate (>= 2x fewer evaluated positions at
+//! bitwise-identical samples) is the compiled-backend win net of shape
+//! quantization.
+//!
 //! The **sparse-family policy** scenario runs 3-job groups on a `{1, 4}`
 //! export family under each sizing policy
 //! ([`predsamp::coordinator::policy`]): occupancy-first serializes the
@@ -35,13 +46,15 @@
 //!     cargo bench --bench sampler_hotpath [-- --jobs 32 --out BENCH_sampler_hotpath.json]
 //!
 //! [`PassPlan`]: predsamp::sampler::PassPlan
+//! [`VariantCatalog`]: predsamp::runtime::step::VariantCatalog
 
 use predsamp::coordinator::policy::{LatencyLean, OccupancyFirst, SizingPolicy, SloHybrid, SloTarget};
 use predsamp::coordinator::scheduler::{self, LiveJob, ScheduleReport};
+use predsamp::runtime::step::{CatalogStats, StepOutput, VariantCatalog};
 use predsamp::sampler::forecast;
 use predsamp::sampler::mock::MockArm;
 use predsamp::sampler::noise::JobNoise;
-use predsamp::sampler::{JobResult, StepModel};
+use predsamp::sampler::{JobResult, PassPlan, StepModel};
 use predsamp::substrate::cli::Args;
 use predsamp::substrate::json::Value;
 use predsamp::substrate::stats::percentile;
@@ -79,6 +92,66 @@ fn run_group(name: &str, method: &str, jobs: usize, seed: u64, plan: bool) -> an
     let noises: Vec<JobNoise> = (0..jobs).map(|id| JobNoise::new(seed, id as u64, d, k)).collect();
     let fc = forecast::by_name(method, 2).expect("known method");
     scheduler::run_continuous_family_mode(&refs, fc, noises, plan)
+}
+
+/// One batch-size *view* of a shape-variant catalog — what the engine's
+/// catalog-serving backend exposes per exported batch, reproduced over
+/// mock span backends so the bench runs without compiled artifacts.
+struct CatalogView<'a> {
+    cat: &'a VariantCatalog,
+    batch: usize,
+}
+
+impl StepModel for CatalogView<'_> {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn dim(&self) -> usize {
+        self.cat.dim
+    }
+    fn categories(&self) -> usize {
+        self.cat.categories
+    }
+    fn pixels(&self) -> usize {
+        self.cat.pixels
+    }
+    fn t_fore(&self) -> usize {
+        self.cat.t_fore
+    }
+    fn run_into(&self, x: &[i32], out: &mut StepOutput) -> anyhow::Result<()> {
+        self.cat.run_full(self.batch, true, x, out).map(|_| ())
+    }
+    fn run_plan(&self, x: &[i32], out: &mut StepOutput, plan: &PassPlan) -> anyhow::Result<usize> {
+        self.cat.run_plan(self.batch, true, x, out, plan)
+    }
+    fn exploits_plan(&self) -> bool {
+        true
+    }
+}
+
+/// Run one (model, method) group through a span-ladder catalog: the
+/// exporter's ladder (d/8, d/4, d/2) plus the full-shape anchors, both
+/// fore flavors, at batches `{1, 2, 4, 8}`. Every pass pays the device
+/// cost of the variant the catalog selected, not the plan's exact row
+/// count — the same accounting the compiled backend reports.
+fn run_catalog_group(name: &str, method: &str, jobs: usize, seed: u64) -> anyhow::Result<(ScheduleReport, CatalogStats)> {
+    let probe = model(name, 1);
+    let (d, k) = (probe.dim(), probe.categories());
+    let mut cat = VariantCatalog::new(name, d, k, probe.pixels(), probe.t_fore());
+    for b in [1usize, 2, 4, 8] {
+        for s in [d / 8, d / 4, d / 2, d] {
+            cat.push_backend(b, s, true, Box::new(model(name, b)))?;
+            cat.push_backend(b, s, false, Box::new(model(name, b)))?;
+        }
+    }
+    cat.validate()?;
+    let views: Vec<CatalogView> = [1usize, 2, 4, 8].iter().map(|&b| CatalogView { cat: &cat, batch: b }).collect();
+    let refs: Vec<&CatalogView> = views.iter().collect();
+    let noises: Vec<JobNoise> = (0..jobs).map(|id| JobNoise::new(seed, id as u64, d, k)).collect();
+    let fc = forecast::by_name(method, 2).expect("known method");
+    let rep = scheduler::run_continuous_family_mode(&refs, fc, noises, true)?;
+    let stats = cat.stats();
+    Ok((rep, stats))
 }
 
 /// One elastic-vs-baseline comparison (see [`run_elastic_scenario`]).
@@ -268,6 +341,52 @@ fn main() -> anyhow::Result<()> {
         fmt_duration(wall_plan)
     );
 
+    // Shape-variant catalog scenario: the same groups served through a
+    // span-ladder catalog vs the fixed b=8 full-shape export. The
+    // catalog pays quantized device shapes (the cheapest exported
+    // variant covering each plan), so this reduction is the compiled
+    // backend's win net of shape quantization.
+    println!("compiled variants: span-ladder catalog (d/8, d/4, d/2 + full anchors, b in {{1,2,4,8}}) vs fixed b=8 full-shape export");
+    let mut variant_groups = Vec::new();
+    let (mut vtot_full, mut vtot_cat) = (0usize, 0usize);
+    for (gi, (name, method)) in MIX.iter().enumerate() {
+        let seed = 1000 + gi as u64;
+        let full = run_group(name, method, jobs, seed, false)?;
+        let (cat, stats) = run_catalog_group(name, method, jobs, seed)?;
+        for i in 0..jobs {
+            assert_eq!(cat.results[i].x, full.results[i].x, "{name}/{method} job {i}: catalog serving changed the sample");
+        }
+        assert_eq!(
+            stats.positions_evaluated,
+            cat.positions_evaluated as u64,
+            "{name}/{method}: catalog telemetry disagrees with the schedule's device-cost accounting"
+        );
+        let d = model(name, 1).dim();
+        let reduction = full.positions_evaluated as f64 / cat.positions_evaluated.max(1) as f64;
+        println!(
+            "  {name:>6}/{method:<7} d={d:<3} positions/job {:>8.0} -> {:>7.0}  ({reduction:.2}x less)  variant hits {:>4}  fallbacks {:>3}",
+            full.positions_evaluated as f64 / jobs as f64,
+            cat.positions_evaluated as f64 / jobs as f64,
+            stats.variant_hits,
+            stats.full_shape_fallbacks,
+        );
+        vtot_full += full.positions_evaluated;
+        vtot_cat += cat.positions_evaluated;
+        variant_groups.push(Value::obj(vec![
+            ("model", Value::str(*name)),
+            ("method", Value::str(*method)),
+            ("jobs", Value::num(jobs as f64)),
+            ("dim", Value::num(d as f64)),
+            ("full", report_value(&full, jobs)),
+            ("catalog", report_value(&cat, jobs)),
+            ("variant_hits", Value::num(stats.variant_hits as f64)),
+            ("full_shape_fallbacks", Value::num(stats.full_shape_fallbacks as f64)),
+            ("positions_reduction", Value::num(reduction)),
+        ]));
+    }
+    let variants_reduction = vtot_full as f64 / vtot_cat.max(1) as f64;
+    println!("  total: {variants_reduction:.2}x fewer evaluated positions through the catalog");
+
     // Deep-queue elastic scenario: awkward bursts trickling into a live
     // schedule vs the down-shift-only scheduler running one schedule per
     // accumulation of arrivals.
@@ -396,6 +515,15 @@ fn main() -> anyhow::Result<()> {
         ("bench", Value::str("sampler_hotpath")),
         ("jobs_per_group", Value::num(jobs as f64)),
         ("groups", Value::Arr(groups)),
+        (
+            "compiled_variants",
+            Value::obj(vec![
+                ("groups", Value::Arr(variant_groups)),
+                ("full_positions", Value::num(vtot_full as f64)),
+                ("catalog_positions", Value::num(vtot_cat as f64)),
+                ("positions_reduction", Value::num(variants_reduction)),
+            ]),
+        ),
         ("elastic", Value::Arr(elastic_groups)),
         ("policies", Value::Arr(policy_groups)),
         (
@@ -412,6 +540,10 @@ fn main() -> anyhow::Result<()> {
     std::fs::write(&out_path, format!("{doc}\n"))?;
     println!("wrote {out_path}");
     assert!(reduction >= 2.0, "plan-based passes must at least halve positions/job (got {reduction:.2}x)");
+    assert!(
+        variants_reduction >= 2.0,
+        "the shape-variant catalog must at least halve evaluated positions vs the full-shape export (got {variants_reduction:.2}x)"
+    );
     assert!(elastic_ok, "elastic schedule must up-shift and beat the down-shift-only scheduler's calls_per_job on every group");
     assert!(
         policies_ok,

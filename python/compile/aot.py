@@ -7,6 +7,10 @@ parser reassigns ids (see /opt/xla-example/README.md).
 
 Per ARM config and batch size B in {1, 32} we export
     <cfg>_step_b<B>.hlo.txt : x i32[B,d] -> (logp f32[B,d,K], fore f32[B,P,T,K])
+plus logp-only flavors (steplp_b<B>) and trailing-window span variants
+    <cfg>_step_b<B>_s<S>.hlo.txt : x i32[B,d] -> (logp f32[B,S,K], fore ...)
+(S in span_ladder(d); logp restricted to the last S positions) that the
+rust VariantCatalog selects among per pass,
 plus, for the latent configs, the autoencoder
     ae_<name>_enc_b32.hlo.txt : img f32[32,3,16,16] -> z i32[32,256]
     ae_<name>_dec_b32.hlo.txt : z i32[32,256] -> img f32[32,3,16,16]
@@ -81,6 +85,17 @@ N_TRAIN = 512
 N_TEST = 64
 
 
+def span_ladder(dim: int):
+    """Trailing-window span lengths exported next to the full-shape pass.
+
+    A geometric d/8, d/4, d/2 ladder: continuous-batching schedules spend
+    most passes near the frontier, so short windows dominate selection
+    while the full-shape export stays the anchor/fallback. Values are
+    deduped and clamped to 1 <= s < d (tiny models may export fewer)."""
+    spans = sorted({max(1, dim // 8), max(1, dim // 4), max(1, dim // 2)})
+    return tuple(s for s in spans if s < dim)
+
+
 # ---------------------------------------------------------------------------
 # Lowering
 # ---------------------------------------------------------------------------
@@ -128,6 +143,26 @@ def export_arm(params, cfg: model.ArmConfig, out_dir: str, batch_sizes=BATCH_SIZ
                           os.path.join(out_dir, name_lp))
             print(f"  wrote {name_lp} ({n} chars)", flush=True)
             files[f"steplp{suffix}_b{b}"] = name_lp
+            # Trailing-window span variants, both flavors: full [B, d]
+            # input, logp sliced to the last S positions (XLA dead-code
+            # eliminates the untouched head computation). The rust
+            # VariantCatalog picks the cheapest exported shape covering
+            # each pass's frontier hull; the full-shape export above is
+            # its required anchor.
+            for s in span_ladder(cfg.dim):
+                def step_span(x, s=s):
+                    lp, fore = model.step(params, x, cfg)
+                    return lp[:, -s:, :], fore
+
+                name_s = f"{cfg.name}_step{suffix}_b{b}_s{s}.hlo.txt"
+                n = export_fn(step_span, (spec,), os.path.join(out_dir, name_s))
+                print(f"  wrote {name_s} ({n} chars)", flush=True)
+                files[f"step{suffix}_b{b}_s{s}"] = name_s
+                name_slp = f"{cfg.name}_steplp{suffix}_b{b}_s{s}.hlo.txt"
+                n = export_fn(lambda x, s=s: (model.step(params, x, cfg)[0][:, -s:, :],), (spec,),
+                              os.path.join(out_dir, name_slp))
+                print(f"  wrote {name_slp} ({n} chars)", flush=True)
+                files[f"steplp{suffix}_b{b}_s{s}"] = name_slp
     return files
 
 

@@ -15,7 +15,8 @@
 //! 3. Every `metrics`/`edge`/`fleet` key the server or router can emit
 //!    — string keys in `Metrics::snapshot`, `Metrics::worker_value`
 //!    (`metrics.rs`), `EdgeStats::value` (`conn.rs`),
-//!    `metrics_response` (`mod.rs`), and `fleet_value` /
+//!    `metrics_response` (`mod.rs`), `catalog_value` (`engine.rs`, the
+//!    shape-variant catalog telemetry object), and `fleet_value` /
 //!    `router_metrics_response` (`federation.rs`) — appears in
 //!    `docs/PROTOCOL.md`, quoted or backticked.
 //!
@@ -44,6 +45,7 @@ const KEY_SOURCES: &[(&str, &[&str])] = &[
     ("rust/src/coordinator/metrics.rs", &["snapshot", "worker_value"]),
     ("rust/src/coordinator/server/conn.rs", &["value"]),
     ("rust/src/coordinator/server/mod.rs", &["metrics_response"]),
+    ("rust/src/coordinator/engine.rs", &["catalog_value"]),
     ("rust/src/coordinator/federation.rs", &["fleet_value", "router_metrics_response"]),
 ];
 

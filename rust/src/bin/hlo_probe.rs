@@ -1,8 +1,27 @@
-// Debug tool: run an HLO-text artifact with i32 input from a .bin file,
-// dump the tuple outputs as f32 .bin files for python comparison.
-use anyhow::Result;
+// Debug tool, two modes:
+//
+//   hlo_probe HLO XBIN B D      run an HLO-text artifact with i32 input
+//                               from a .bin file, dump the tuple outputs
+//                               as f32 .bin files for python comparison
+//   hlo_probe --manifest DIR    print each model's exported step-shape
+//                               grid (batch x span x flavor) from the
+//                               manifest, failing if any model's batch
+//                               lacks the full-shape fore anchor the
+//                               variant catalog requires
+use anyhow::{bail, Result};
+use predsamp::runtime::artifact::Manifest;
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
+    if args.len() < 3 {
+        bail!("usage: hlo_probe HLO XBIN B D | hlo_probe --manifest DIR");
+    }
+    if args[1] == "--manifest" {
+        return manifest_grid(&args[2]);
+    }
+    if args.len() < 5 {
+        bail!("usage: hlo_probe HLO XBIN B D");
+    }
     let (hlo, xbin, b, d) = (&args[1], &args[2], args[3].parse::<i64>()?, args[4].parse::<i64>()?);
     let exe = predsamp::runtime::client::compile_hlo_text(hlo)?;
     let bytes = std::fs::read(xbin)?;
@@ -17,6 +36,60 @@ fn main() -> Result<()> {
         for f in &v { out.extend_from_slice(&f.to_le_bytes()); }
         std::fs::write(format!("{}.out{}.bin", xbin, i), out)?;
         println!("out{} len {}", i, v.len());
+    }
+    Ok(())
+}
+
+/// Print the `batch x span x flavor` step grid each model exports —
+/// the shapes a `VariantCatalog` would serve — and verify every batch
+/// has its full-shape fore anchor (the catalog's fallback invariant).
+fn manifest_grid(dir: &str) -> Result<()> {
+    let man = Manifest::load(std::path::Path::new(dir))?;
+    let mut missing = Vec::new();
+    for (name, info) in &man.models {
+        // (batch, span, has_fore) rows; mock models expose the grid the
+        // engine synthesizes from MockSpec {batches, spans}, compiled
+        // models the roles actually present in the file map.
+        let mut grid: Vec<(usize, usize, bool)> = match &info.mock {
+            Some(mock) => {
+                let mut g = Vec::new();
+                for &b in &info.step_batch_sizes() {
+                    g.push((b, info.dim, true));
+                    g.push((b, info.dim, false));
+                    for &s in &mock.spans {
+                        if s < info.dim {
+                            g.push((b, s, true));
+                            g.push((b, s, false));
+                        }
+                    }
+                }
+                g
+            }
+            None => info.step_variant_roles().into_iter().map(|(_, b, s, f)| (b, s, f)).collect(),
+        };
+        grid.sort_unstable();
+        grid.dedup();
+        let tag = if info.mock.is_some() { " (mock)" } else { "" };
+        println!("{name}{tag}: d={} k={} shapes={}", info.dim, info.categories, grid.len());
+        for &(b, s, fore) in &grid {
+            let flavor = if fore { "logp+fore" } else { "logp-only" };
+            let full = if s == info.dim { " [full]" } else { "" };
+            println!("  b{b} s{s} {flavor}{full}");
+        }
+        let mut batches: Vec<usize> = grid.iter().map(|&(b, _, _)| b).collect();
+        batches.sort_unstable();
+        batches.dedup();
+        for b in batches {
+            if !grid.iter().any(|&(gb, gs, gf)| gb == b && gs == info.dim && gf) {
+                missing.push(format!("{name}: batch {b} has no full-shape fore anchor"));
+            }
+        }
+    }
+    if !missing.is_empty() {
+        for m in &missing {
+            eprintln!("error: {m}");
+        }
+        bail!("{} batch grid(s) lack the full-shape anchor the variant catalog requires", missing.len());
     }
     Ok(())
 }

@@ -167,6 +167,12 @@ pub struct ServeConfig {
     /// of inline JSON arrays (`--no-frame` clears). Same bytes, cheaper
     /// wire format.
     pub framing: bool,
+    /// Serve planned passes through the shape-variant catalog: engines
+    /// collect every exported `{batch, span, flavor}` step shape and run
+    /// each pass on the cheapest covering variant (`--no-variants` falls
+    /// back to standalone full-shape executables — the kill switch if a
+    /// span export misbehaves). Shape selection never changes samples.
+    pub variants: bool,
 }
 
 impl Default for ServeConfig {
@@ -192,6 +198,7 @@ impl Default for ServeConfig {
             max_conns: 1024,
             streaming: true,
             framing: true,
+            variants: true,
         }
     }
 }
@@ -230,8 +237,9 @@ impl ServeConfig {
         ensure!(self.outbound_cap >= 4096, "serve config: outbound_cap below 4 KiB cannot hold a single response");
         ensure!(self.rate_limit <= 1_000_000, "serve config: rate_limit above 1M req/s is not a limit");
         ensure!(self.max_conns >= 1, "serve config: max_conns must be >= 1");
-        // `streaming` / `framing` are plain opt-in switches: every bool
-        // combination is valid, so there is nothing to range-check.
+        // `streaming` / `framing` / `variants` are plain opt-in switches:
+        // every bool combination is valid, so there is nothing to
+        // range-check.
         // Placement knobs (pin lists, engine cap) are validated by
         // `placement::placement_for` at spawn — it is the single
         // authority, since it also sees the manifest's own pins.

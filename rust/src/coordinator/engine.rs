@@ -12,30 +12,42 @@ use crate::coordinator::config::Method;
 use crate::coordinator::scheduler::{self, JobFeed, LiveJob, ScheduleReport};
 use crate::runtime::artifact::{Manifest, ModelInfo, ModelKind};
 use crate::runtime::autoenc::DecoderExe;
-use crate::runtime::step::{bpd_of, StepExecutable, StepOutput};
+use crate::runtime::step::{bpd_of, CatalogStats, StepExecutable, StepOutput, VariantCatalog};
 use crate::sampler::ancestral::ancestral_batch;
 use crate::sampler::forecast::{self, Forecaster};
 use crate::sampler::mock::MockArm;
 use crate::sampler::noise::JobNoise;
 use crate::sampler::predictive::PredictiveSampler;
 use crate::sampler::{BatchResult, PassPlan, StepModel};
+use crate::substrate::json::Value;
 use anyhow::{anyhow, bail, ensure, Result};
-use std::cell::Cell;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// One fixed-batch-size inference backend: a compiled PJRT step
-/// executable, or the deterministic pure-rust mock ARM.
+/// executable, the deterministic pure-rust mock ARM, or a fixed
+/// `(batch, fore)` view of a shared [`VariantCatalog`], which serves each
+/// planned pass on the cheapest exported `{batch, span, flavor}` shape
+/// (real partial inference for compiled models).
 pub enum StepBackend {
     Compiled(StepExecutable),
-    Mock { arm: MockArm, calls: Cell<u64> },
+    Mock { arm: MockArm, calls: AtomicU64 },
+    Catalog { cat: Arc<VariantCatalog>, batch: usize, has_fore: bool },
 }
 
 impl StepBackend {
-    /// Step invocations since load (telemetry).
+    /// Step invocations since load (telemetry). Catalog views report the
+    /// shared catalog's total passes — the quantity a capacity dashboard
+    /// wants, since the catalog is one device resource.
     pub fn calls(&self) -> u64 {
         match self {
             StepBackend::Compiled(exe) => exe.calls(),
-            StepBackend::Mock { calls, .. } => calls.get(),
+            StepBackend::Mock { calls, .. } => calls.load(Ordering::Relaxed),
+            StepBackend::Catalog { cat, .. } => {
+                let st = cat.stats();
+                st.variant_hits + st.full_shape_fallbacks
+            }
         }
     }
 }
@@ -45,30 +57,43 @@ impl StepModel for StepBackend {
         match self {
             StepBackend::Compiled(exe) => exe.batch,
             StepBackend::Mock { arm, .. } => arm.batch(),
+            StepBackend::Catalog { batch, .. } => *batch,
         }
     }
     fn dim(&self) -> usize {
         match self {
             StepBackend::Compiled(exe) => exe.dim,
             StepBackend::Mock { arm, .. } => arm.dim(),
+            StepBackend::Catalog { cat, .. } => cat.dim,
         }
     }
     fn categories(&self) -> usize {
         match self {
             StepBackend::Compiled(exe) => exe.categories,
             StepBackend::Mock { arm, .. } => arm.categories(),
+            StepBackend::Catalog { cat, .. } => cat.categories,
         }
     }
     fn pixels(&self) -> usize {
         match self {
             StepBackend::Compiled(exe) => exe.pixels,
             StepBackend::Mock { arm, .. } => arm.pixels(),
+            StepBackend::Catalog { cat, .. } => cat.pixels,
         }
     }
     fn t_fore(&self) -> usize {
         match self {
             StepBackend::Compiled(exe) => exe.t_fore,
             StepBackend::Mock { arm, .. } => arm.t_fore(),
+            // A logp-only view never surfaces heads, mirroring the
+            // compiled logp-only flavor's `t_fore = 0`.
+            StepBackend::Catalog { cat, has_fore, .. } => {
+                if *has_fore {
+                    cat.t_fore
+                } else {
+                    0
+                }
+            }
         }
     }
     fn run_into(&self, x: &[i32], out: &mut StepOutput) -> Result<()> {
@@ -76,26 +101,46 @@ impl StepModel for StepBackend {
             StepBackend::Compiled(exe) => exe.run_into(x, out),
             StepBackend::Mock { arm, calls } => {
                 arm.run_into(x, out)?;
-                calls.set(calls.get() + 1);
+                calls.fetch_add(1, Ordering::Relaxed);
                 Ok(())
             }
+            StepBackend::Catalog { cat, batch, has_fore } => cat.run_full(*batch, *has_fore, x, out).map(|_| ()),
         }
     }
-    fn run_plan(&self, x: &[i32], out: &mut StepOutput, plan: &PassPlan) -> Result<()> {
+    fn run_plan(&self, x: &[i32], out: &mut StepOutput, plan: &PassPlan) -> Result<usize> {
         match self {
-            // Shape-specialized: the compiled executable runs full passes
-            // (the plan's skip permissions go unused, which is allowed).
-            StepBackend::Compiled(exe) => exe.run_into(x, out),
-            StepBackend::Mock { arm, calls } => {
-                arm.run_plan(x, out, plan)?;
-                calls.set(calls.get() + 1);
-                Ok(())
+            // Shape-specialized: a lone compiled executable runs full
+            // passes (the plan's skip permissions go unused, which is
+            // allowed) and reports the full-shape device cost.
+            StepBackend::Compiled(exe) => {
+                exe.run_into(x, out)?;
+                Ok(exe.batch * (exe.dim + exe.pixels * exe.t_fore))
             }
+            StepBackend::Mock { arm, calls } => {
+                let n = arm.run_plan(x, out, plan)?;
+                calls.fetch_add(1, Ordering::Relaxed);
+                Ok(n)
+            }
+            StepBackend::Catalog { cat, batch, has_fore } => cat.run_plan(*batch, *has_fore, x, out, plan),
         }
     }
     fn exploits_plan(&self) -> bool {
-        matches!(self, StepBackend::Mock { .. })
+        !matches!(self, StepBackend::Compiled(_))
     }
+}
+
+/// JSON encoding of catalog telemetry (the `catalog` object of worker and
+/// fleet metrics; key names are machine-checked against PROTOCOL.md by
+/// the doc-parity lint).
+pub fn catalog_value(stats: &CatalogStats) -> Value {
+    let shapes: BTreeMap<String, Value> =
+        stats.shapes.iter().map(|(label, hits)| (label.clone(), Value::num(*hits as f64))).collect();
+    Value::obj(vec![
+        ("variant_hits", Value::num(stats.variant_hits as f64)),
+        ("full_shape_fallbacks", Value::num(stats.full_shape_fallbacks as f64)),
+        ("positions_evaluated", Value::num(stats.positions_evaluated as f64)),
+        ("shapes", Value::Obj(shapes)),
+    ])
 }
 
 pub struct Engine {
@@ -103,21 +148,62 @@ pub struct Engine {
     pub info: ModelInfo,
     /// Keyed by (batch size, with-forecast-heads).
     exes: BTreeMap<(usize, bool), StepBackend>,
+    /// The shared shape-variant catalog behind the `exes` views, when the
+    /// model exports one (compiled models with variants on; mock models
+    /// declaring `spans`).
+    catalog: Option<Arc<VariantCatalog>>,
     decoder: Option<DecoderExe>,
 }
 
 impl Engine {
-    /// Load the engine for `model`: the mock backend when the manifest
-    /// declares one, otherwise compiling the step executables (full and,
-    /// when exported, logp-only) for every batch size.
+    /// Load the engine for `model` with variant catalogs enabled — see
+    /// [`Engine::load_with`].
     pub fn load(manifest: &Manifest, model: &str) -> Result<Engine> {
+        Self::load_with(manifest, model, true)
+    }
+
+    /// Load the engine for `model`. With `variants` on (the default), every
+    /// exported `{batch, span, flavor}` step shape is collected into one
+    /// shared [`VariantCatalog`] and each batch size is served through a
+    /// catalog view, so planned passes run on the cheapest covering shape.
+    /// With `variants` off — or when a model exports no span variants to
+    /// speak of — batches load as standalone backends exactly as before
+    /// (`--no-variants` is the kill switch if a span export misbehaves).
+    pub fn load_with(manifest: &Manifest, model: &str, variants: bool) -> Result<Engine> {
         let info = manifest.model(model)?.clone();
         let mut exes = BTreeMap::new();
+        let mut catalog = None;
         if let Some(mock) = &info.mock {
-            for &b in &info.step_batch_sizes() {
-                let arm = MockArm::new(b, info.channels, info.pixels, info.categories, info.t_fore, mock.strength, mock.seed);
-                exes.insert((b, true), StepBackend::Mock { arm, calls: Cell::new(0) });
+            let arm_at = |b: usize| MockArm::new(b, info.channels, info.pixels, info.categories, info.t_fore, mock.strength, mock.seed);
+            let mut spans: Vec<usize> = mock.spans.iter().copied().filter(|&s| s < info.dim).collect();
+            spans.sort_unstable();
+            spans.dedup();
+            if variants && !spans.is_empty() {
+                let mut cat = VariantCatalog::new(&info.name, info.dim, info.categories, info.pixels, info.t_fore);
+                for &b in &info.step_batch_sizes() {
+                    // Full-shape anchor, logp-only flavor, and the span
+                    // ladder in both flavors — the same grid the compiled
+                    // exporter emits.
+                    cat.push_backend(b, info.dim, true, Box::new(arm_at(b)))?;
+                    cat.push_backend(b, info.dim, false, Box::new(arm_at(b)))?;
+                    for &s in &spans {
+                        cat.push_backend(b, s, true, Box::new(arm_at(b)))?;
+                        cat.push_backend(b, s, false, Box::new(arm_at(b)))?;
+                    }
+                }
+                catalog = Some(Arc::new(cat));
+            } else {
+                for &b in &info.step_batch_sizes() {
+                    exes.insert((b, true), StepBackend::Mock { arm: arm_at(b), calls: AtomicU64::new(0) });
+                }
             }
+        } else if variants {
+            let mut cat = VariantCatalog::new(&info.name, info.dim, info.categories, info.pixels, info.t_fore);
+            for (role, b, s, fore) in info.step_variant_roles() {
+                let file = info.file(&role)?;
+                cat.push_compiled(StepExecutable::load_span_variant(manifest.path(file), &info, b, fore, s)?)?;
+            }
+            catalog = Some(Arc::new(cat));
         } else {
             for b in info.step_batch_sizes() {
                 let file = info.file(&format!("step_b{b}"))?;
@@ -125,6 +211,15 @@ impl Engine {
                 if let Ok(lp) = info.file(&format!("steplp_b{b}")) {
                     exes.insert((b, false), StepBackend::Compiled(StepExecutable::load_variant(manifest.path(lp), &info, b, false)?));
                 }
+            }
+        }
+        if let Some(cat) = &catalog {
+            cat.validate()?;
+            // One view pair per anchored batch size; both flavors route to
+            // the same shared catalog, which picks the real device shape.
+            for b in cat.anchored_batches() {
+                exes.insert((b, true), StepBackend::Catalog { cat: cat.clone(), batch: b, has_fore: true });
+                exes.insert((b, false), StepBackend::Catalog { cat: cat.clone(), batch: b, has_fore: false });
             }
         }
         if exes.is_empty() {
@@ -138,7 +233,13 @@ impl Engine {
         } else {
             None
         };
-        Ok(Engine { manifest: manifest.clone(), info, exes, decoder })
+        Ok(Engine { manifest: manifest.clone(), info, exes, catalog, decoder })
+    }
+
+    /// Telemetry snapshot of the shared variant catalog, if this engine
+    /// serves one.
+    pub fn catalog_stats(&self) -> Option<CatalogStats> {
+        self.catalog.as_ref().map(|c| c.stats())
     }
 
     /// The full (logp + fore) step backend for an exact batch size.
@@ -321,13 +422,19 @@ mod tests {
         }
     }
 
-    fn mock_engine(tag: &str) -> Engine {
+    fn mock_engine_with(tag: &str, spans: &[usize], variants: bool) -> Engine {
         let dir = std::env::temp_dir().join(format!("predsamp-engine-{tag}-{}", std::process::id()));
-        write_mock_manifest(&dir, &[MockModelSpec::new("mock_m", 21)]).unwrap();
+        let mut spec = MockModelSpec::new("mock_m", 21);
+        spec.spans = spans.to_vec();
+        write_mock_manifest(&dir, &[spec]).unwrap();
         let man = Manifest::load(&dir).unwrap();
-        let eng = Engine::load(&man, "mock_m").unwrap();
+        let eng = Engine::load_with(&man, "mock_m", variants).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
         eng
+    }
+
+    fn mock_engine(tag: &str) -> Engine {
+        mock_engine_with(tag, &[], true)
     }
 
     #[test]
@@ -411,6 +518,63 @@ mod tests {
             assert_eq!(feed.results[id].as_ref().unwrap().x, job.x, "job {id}: elastic feed changed the sample");
         }
         assert!(rep.upshifts >= 1, "a 1-job start growing to 6 must up-shift onto the b=4 backend");
+    }
+
+    #[test]
+    fn catalog_engine_bitwise_matches_legacy_across_methods() {
+        // The exactness gate for the variant catalog at the Engine level:
+        // the same manifest served with variants on vs off must produce
+        // bitwise-identical samples (and pass counts) for every method.
+        let legacy = mock_engine_with("cat-leg", &[6, 12], false);
+        let cat = mock_engine_with("cat-on", &[6, 12], true);
+        assert!(legacy.catalog_stats().is_none(), "variants off must skip the catalog");
+        let st0 = cat.catalog_stats().expect("variants on over exported spans builds a catalog");
+        assert_eq!(st0.shapes.len(), 2 * 2 * 3, "2 batches x 2 flavors x (full + 2 spans)");
+        for method in [
+            Method::Baseline,
+            Method::Zeros,
+            Method::PredictLast,
+            Method::Fpi,
+            Method::Forecast { t_use: 1 },
+            Method::NoReparam,
+        ] {
+            let a = legacy.sample_batch(method, 4, 13).unwrap();
+            let b = cat.sample_batch(method, 4, 13).unwrap();
+            for s in 0..4 {
+                assert_eq!(b.jobs[s].x, a.jobs[s].x, "{method:?} slot {s}: catalog diverged from legacy");
+            }
+            assert_eq!(b.arm_calls, a.arm_calls, "{method:?}: shape selection must not change pass counts");
+        }
+        let st = cat.catalog_stats().unwrap();
+        assert!(st.variant_hits > 0, "frontier-aware plans must hit sub-full shapes");
+        assert!(st.positions_evaluated > 0);
+        assert!(st.shapes.iter().any(|(_, h)| *h > 0));
+    }
+
+    #[test]
+    fn catalog_engine_continuous_path_stays_exact() {
+        // The serving continuous path through catalog views: bitwise equal
+        // to the legacy backend family on the same queue.
+        let legacy = mock_engine_with("cont-leg", &[6, 12], false);
+        let cat = mock_engine_with("cont-on", &[6, 12], true);
+        let (d, k) = (cat.info.dim, cat.info.categories);
+        let mk = |seed: u64| (0..6).map(|id| JobNoise::new(seed, id, d, k)).collect::<Vec<_>>();
+        let a = legacy.sample_continuous(Method::Fpi, mk(19)).unwrap();
+        let b = cat.sample_continuous(Method::Fpi, mk(19)).unwrap();
+        for (id, job) in a.results.iter().enumerate() {
+            assert_eq!(b.results[id].x, job.x, "job {id}: catalog continuous path diverged");
+        }
+        assert_eq!(b.total_passes, a.total_passes, "shape selection must not change the schedule");
+        // Legacy mock backends are plan-exact; the catalog pays shape
+        // quantization on top but must stay far below the full-shape cost.
+        let full_pass = 4 * (d + cat.info.pixels * cat.info.t_fore);
+        assert!(b.positions_evaluated >= a.positions_evaluated);
+        assert!(
+            b.positions_evaluated < b.total_passes * full_pass,
+            "catalog ({} rows) should beat full-shape passes ({} rows)",
+            b.positions_evaluated,
+            b.total_passes * full_pass
+        );
     }
 
     #[test]

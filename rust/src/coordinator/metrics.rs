@@ -212,6 +212,9 @@ impl Metrics {
             ("engines_loaded", Value::num(g.engines_loaded as f64)),
             ("engine_loads", Value::num(g.engine_loads as f64)),
             ("evictions", Value::num(g.evictions as f64)),
+            ("variant_hits", Value::num(g.variant_hits as f64)),
+            ("full_shape_fallbacks", Value::num(g.full_shape_fallbacks as f64)),
+            ("variant_positions", Value::num(g.variant_positions as f64)),
             ("resident_models", Value::Arr(g.resident.iter().map(|m| Value::str(m.clone())).collect())),
             ("occupancy", Value::num(self.occupancy())),
             ("absorbed", Value::num(self.absorbed as f64)),
@@ -231,6 +234,13 @@ pub struct WorkerGauges {
     pub engines_loaded: usize,
     pub engine_loads: usize,
     pub evictions: usize,
+    /// Shape-variant catalog passes served by a partial variant (all of
+    /// this worker's engines, evicted ones included).
+    pub variant_hits: u64,
+    /// Catalog passes that fell back to the full-shape anchor.
+    pub full_shape_fallbacks: u64,
+    /// Positions actually evaluated through the catalogs (device cost).
+    pub variant_positions: u64,
     pub resident: Vec<String>,
 }
 
@@ -356,6 +366,9 @@ mod tests {
             engines_loaded: 2,
             engine_loads: 5,
             evictions: 3,
+            variant_hits: 11,
+            full_shape_fallbacks: 4,
+            variant_positions: 1234,
             resident: vec!["mock_a".into(), "mock_b".into()],
         };
         let w = m.worker_value(&g);
@@ -364,6 +377,9 @@ mod tests {
         assert_eq!(w.get("engines_loaded").as_i64(), Some(2));
         assert_eq!(w.get("engine_loads").as_i64(), Some(5));
         assert_eq!(w.get("evictions").as_i64(), Some(3));
+        assert_eq!(w.get("variant_hits").as_i64(), Some(11));
+        assert_eq!(w.get("full_shape_fallbacks").as_i64(), Some(4));
+        assert_eq!(w.get("variant_positions").as_i64(), Some(1234));
         let resident = w.get("resident_models").as_arr().unwrap();
         assert_eq!(resident.len(), 2);
         assert_eq!(resident[0].as_str(), Some("mock_a"));

@@ -17,6 +17,7 @@
 
 use crate::coordinator::engine::Engine;
 use crate::runtime::artifact::Manifest;
+use crate::runtime::step::CatalogStats;
 use anyhow::Result;
 use std::collections::BTreeMap;
 
@@ -29,11 +30,32 @@ pub struct Router {
     loads: u64,
     /// Cumulative LRU evictions since construction.
     evictions: u64,
+    /// Whether lazily-loaded engines build shape-variant catalogs
+    /// (`ServeConfig::variants` / `--no-variants`).
+    variants: bool,
+    /// Catalog telemetry of engines that have since been unloaded, folded
+    /// in at eviction time so [`Router::catalog_totals`] stays monotonic
+    /// across the LRU churn.
+    retired: CatalogStats,
 }
 
 impl Router {
     pub fn new(manifest: Manifest) -> Router {
-        Router { manifest, engines: BTreeMap::new(), recency: Vec::new(), loads: 0, evictions: 0 }
+        Self::with_variants(manifest, true)
+    }
+
+    /// As [`Router::new`], with the shape-variant catalog toggled
+    /// explicitly (the server threads `ServeConfig::variants` through).
+    pub fn with_variants(manifest: Manifest, variants: bool) -> Router {
+        Router {
+            manifest,
+            engines: BTreeMap::new(),
+            recency: Vec::new(),
+            loads: 0,
+            evictions: 0,
+            variants,
+            retired: CatalogStats::default(),
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -49,7 +71,7 @@ impl Router {
     /// eviction). Every call marks `model` most-recently-used.
     pub fn engine(&mut self, model: &str) -> Result<&Engine> {
         if !self.engines.contains_key(model) {
-            let eng = Engine::load(&self.manifest, model)?;
+            let eng = Engine::load_with(&self.manifest, model, self.variants)?;
             self.engines.insert(model.to_string(), eng);
             self.loads += 1;
         }
@@ -70,7 +92,30 @@ impl Router {
         if let Some(pos) = self.recency.iter().position(|m| m == model) {
             self.recency.remove(pos);
         }
-        self.engines.remove(model).is_some()
+        match self.engines.remove(model) {
+            Some(eng) => {
+                // Fold the departing engine's catalog telemetry into the
+                // retired totals so eviction never loses counted work.
+                if let Some(st) = eng.catalog_stats() {
+                    self.retired.merge(&st);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Catalog telemetry summed over every engine this router ever loaded:
+    /// resident engines' live counters plus the retired totals of evicted
+    /// ones. Empty stats when no engine serves a catalog.
+    pub fn catalog_totals(&self) -> CatalogStats {
+        let mut total = self.retired.clone();
+        for eng in self.engines.values() {
+            if let Some(st) = eng.catalog_stats() {
+                total.merge(&st);
+            }
+        }
+        total
     }
 
     /// Evict least-recently-used engines until at most `cap` stay
@@ -198,6 +243,31 @@ mod tests {
         r.engine("c").unwrap();
         assert_eq!(r.loaded(), 2);
         assert_eq!(r.evictions(), 1);
+    }
+
+    #[test]
+    fn catalog_totals_survive_eviction() {
+        use crate::coordinator::config::Method;
+        let dir = std::env::temp_dir().join(format!("predsamp-router-cat-{}", std::process::id()));
+        let mut spec = MockModelSpec::new("a", 1);
+        spec.spans = vec![6];
+        write_mock_manifest(&dir, &[spec]).unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut r = Router::new(man.clone());
+        r.engine("a").unwrap().sample_batch(Method::Fpi, 4, 3).unwrap();
+        let before = r.catalog_totals();
+        assert!(before.variant_hits + before.full_shape_fallbacks > 0, "catalog passes must be counted");
+        assert!(before.positions_evaluated > 0);
+        assert!(r.unload("a"));
+        let after = r.catalog_totals();
+        assert_eq!(after.variant_hits, before.variant_hits, "eviction must not lose counted work");
+        assert_eq!(after.positions_evaluated, before.positions_evaluated);
+        // With variants off the router serves no catalogs anywhere.
+        let mut off = Router::with_variants(man, false);
+        off.engine("a").unwrap().sample_batch(Method::Fpi, 4, 3).unwrap();
+        let none = off.catalog_totals();
+        assert_eq!((none.variant_hits, none.positions_evaluated), (0, 0));
     }
 
     #[test]

@@ -85,6 +85,7 @@ mod worker;
 pub use client::Client;
 
 use crate::coordinator::config::ServeConfig;
+use crate::coordinator::engine::catalog_value;
 use crate::coordinator::metrics::{Metrics, WorkerGauges};
 use crate::coordinator::placement::{placement_for, PlacementPolicy};
 use crate::coordinator::policy::ConvergenceBook;
@@ -94,6 +95,7 @@ use crate::coordinator::server::conn::EdgeStats;
 use crate::coordinator::server::pool::{GroupSlot, PendingSample, Pool, PoolState, Work, EVAL_LOAD};
 use crate::coordinator::server::worker::{worker_loop, WorkerHandle, WorkerShared};
 use crate::runtime::artifact::Manifest;
+use crate::runtime::step::CatalogStats;
 use crate::substrate::json::Value;
 use crate::substrate::readiness::Waker;
 use anyhow::{Context, Result};
@@ -185,6 +187,7 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
         let engine_loads = Arc::new(AtomicUsize::new(0));
         let evictions = Arc::new(AtomicUsize::new(0));
         let resident = Arc::new(Mutex::new(Vec::new()));
+        let catalog = Arc::new(Mutex::new(CatalogStats::default()));
         let shared = WorkerShared {
             load: Arc::clone(&loads[w]),
             metrics: Arc::clone(&metrics),
@@ -192,6 +195,7 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
             engine_loads: Arc::clone(&engine_loads),
             evictions: Arc::clone(&evictions),
             resident: Arc::clone(&resident),
+            catalog: Arc::clone(&catalog),
             book: Arc::clone(&book),
             placement: Arc::clone(&placement),
         };
@@ -200,8 +204,8 @@ pub fn spawn(manifest_dir: std::path::PathBuf, cfg: ServeConfig) -> Result<Serve
         let pool2 = Arc::clone(&pool);
         let join = std::thread::Builder::new()
             .name(format!("predsamp-engine-{w}"))
-            .spawn(move || worker_loop(Router::new(man), cfg2, w, pool2, shared))?;
-        workers.push(WorkerHandle { load: Arc::clone(&loads[w]), metrics, engines_loaded, engine_loads, evictions, resident, join });
+            .spawn(move || worker_loop(Router::with_variants(man, cfg2.variants), cfg2, w, pool2, shared))?;
+        workers.push(WorkerHandle { load: Arc::clone(&loads[w]), metrics, engines_loaded, engine_loads, evictions, resident, catalog, join });
     }
 
     // Dispatcher: owns the request channel and the group routing table.
@@ -421,17 +425,23 @@ fn metrics_response(disp: &Metrics, workers: &[WorkerHandle], uptime_s: f64, pla
     total.merge(disp);
     let mut warr = Vec::with_capacity(workers.len());
     let (mut engine_loads, mut evictions) = (0usize, 0usize);
+    let mut cat_total = CatalogStats::default();
     for (i, w) in workers.iter().enumerate() {
+        let cat = w.catalog_totals();
         let gauges = WorkerGauges {
             id: i,
             queue_depth: w.load.load(Ordering::SeqCst),
             engines_loaded: w.engines_loaded.load(Ordering::SeqCst),
             engine_loads: w.engine_loads.load(Ordering::SeqCst),
             evictions: w.evictions.load(Ordering::SeqCst),
+            variant_hits: cat.variant_hits,
+            full_shape_fallbacks: cat.full_shape_fallbacks,
+            variant_positions: cat.positions_evaluated,
             resident: w.resident_models(),
         };
         engine_loads += gauges.engine_loads;
         evictions += gauges.evictions;
+        cat_total.merge(&cat);
         let m = w.metrics.lock().unwrap_or_else(|e| e.into_inner());
         total.merge(&m);
         warr.push(m.worker_value(&gauges));
@@ -444,6 +454,7 @@ fn metrics_response(disp: &Metrics, workers: &[WorkerHandle], uptime_s: f64, pla
     obj.insert("placement".into(), Value::str(placement.name()));
     obj.insert("engine_loads".into(), Value::num(engine_loads as f64));
     obj.insert("evictions".into(), Value::num(evictions as f64));
+    obj.insert("variants".into(), catalog_value(&cat_total));
     let mut conv = BTreeMap::new();
     for (key, est, n) in book.entries() {
         conv.insert(

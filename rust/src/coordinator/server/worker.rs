@@ -15,6 +15,7 @@ use crate::coordinator::router::Router;
 use crate::coordinator::scheduler;
 use crate::coordinator::server::feed::execute_elastic_group;
 use crate::coordinator::server::pool::{abort_queue, fail_request, steal_group, take_group_arrivals, PendingSample, Pool, Reply, Work, EVAL_LOAD};
+use crate::runtime::step::CatalogStats;
 use crate::sampler::noise::JobNoise;
 use crate::sampler::JobResult;
 use crate::substrate::json::Value;
@@ -40,6 +41,10 @@ pub(crate) struct WorkerShared {
     pub(crate) evictions: Arc<AtomicUsize>,
     /// Names of the engines currently resident (warm-routing + gauges).
     pub(crate) resident: Arc<Mutex<Vec<String>>>,
+    /// Shape-variant catalog telemetry across every engine this worker's
+    /// router ever loaded (evicted engines included), refreshed by
+    /// [`sync_gauges`] after each turn.
+    pub(crate) catalog: Arc<Mutex<CatalogStats>>,
     /// Shared per-(model, method) convergence history.
     pub(crate) book: Arc<ConvergenceBook>,
     /// The placement policy the whole fleet runs under.
@@ -55,6 +60,7 @@ pub(crate) struct WorkerHandle {
     pub(crate) engine_loads: Arc<AtomicUsize>,
     pub(crate) evictions: Arc<AtomicUsize>,
     pub(crate) resident: Arc<Mutex<Vec<String>>>,
+    pub(crate) catalog: Arc<Mutex<CatalogStats>>,
     pub(crate) join: std::thread::JoinHandle<()>,
 }
 
@@ -62,6 +68,11 @@ impl WorkerHandle {
     /// Snapshot of the resident-model gauge (dispatcher side).
     pub(crate) fn resident_models(&self) -> Vec<String> {
         self.resident.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    /// Snapshot of the worker's shape-variant catalog telemetry.
+    pub(crate) fn catalog_totals(&self) -> CatalogStats {
+        self.catalog.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
     /// Whether `model`'s engine is currently resident on this worker —
@@ -93,6 +104,7 @@ fn sync_gauges(router: &mut Router, shared: &WorkerShared) {
     shared.engine_loads.store(router.loads() as usize, Ordering::SeqCst);
     shared.evictions.store(router.evictions() as usize, Ordering::SeqCst);
     *shared.resident.lock().unwrap_or_else(|e| e.into_inner()) = router.resident_models();
+    *shared.catalog.lock().unwrap_or_else(|e| e.into_inner()) = router.catalog_totals();
 }
 
 fn handle_eval(router: &mut Router, model: &str, reply: &Reply, metrics: &Mutex<Metrics>, load: &AtomicUsize) {

@@ -42,7 +42,7 @@ COMMANDS
            [--placement replicate|pinned|capped] [--pin model=0,2 ...]
            [--max-engines N] [--reply-timeout-ms 600000] [--max-line-len BYTES]
            [--outbound-cap BYTES] [--rate-limit REQ_PER_S] [--max-conns N]
-           [--no-stream] [--no-frame]
+           [--no-stream] [--no-frame] [--no-variants]
   route    --backend HOST:PORT [--backend ...] [--addr 127.0.0.1:7190]
            [--fleet-placement replicate|pinned|capped] [--fleet-pin model=0,2 ...]
            [--fleet-max-backends N] [--probe-interval-ms 200] [--probe-timeout-ms 1000]
@@ -216,6 +216,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
                 max_conns: args.num::<usize>("max-conns", d.max_conns),
                 streaming: !args.flag("no-stream"),
                 framing: !args.flag("no-frame"),
+                variants: !args.flag("no-variants"),
             };
             args.finish().map_err(|e| anyhow!(e))?;
             let (engine_threads, batching) = (cfg.engine_threads, if cfg.continuous { "continuous" } else { "sync" });

@@ -29,6 +29,10 @@ pub struct MockSpec {
     pub seed: u64,
     /// Batch sizes to expose (stands in for the step_b* artifact set).
     pub batches: Vec<usize>,
+    /// Trailing logp span lengths to expose in addition to the full-shape
+    /// pass (stands in for the step_b*_s* span-variant artifact set).
+    /// Empty means the model serves full-shape passes only.
+    pub spans: Vec<usize>,
 }
 
 /// Static description of one ARM, mirrored from `ArmConfig.to_manifest()`.
@@ -72,6 +76,33 @@ impl ModelInfo {
         };
         out.sort_unstable();
         out.dedup();
+        out
+    }
+
+    /// Every exported step-executable role as `(role, batch, span,
+    /// has_fore)`: `step_b{B}` / `steplp_b{B}` full-shape entries (span ==
+    /// `dim`) plus `step_b{B}_s{S}` / `steplp_b{B}_s{S}` span variants that
+    /// compute logp only for the trailing `S` positions. Malformed keys are
+    /// skipped, matching `step_batch_sizes`. Mock models have no files;
+    /// their variant grid comes from `MockSpec::{batches, spans}`.
+    pub fn step_variant_roles(&self) -> Vec<(String, usize, usize, bool)> {
+        let mut out = Vec::new();
+        for key in self.files.keys() {
+            let (rest, has_fore) = if let Some(r) = key.strip_prefix("steplp_b") {
+                (r, false)
+            } else if let Some(r) = key.strip_prefix("step_b") {
+                (r, true)
+            } else {
+                continue;
+            };
+            let parsed = match rest.split_once("_s") {
+                Some((b, s)) => b.parse().ok().zip(s.parse().ok()),
+                None => rest.parse().ok().map(|b| (b, self.dim)),
+            };
+            if let Some((batch, span)) = parsed {
+                out.push((key.clone(), batch, span, has_fore));
+            }
+        }
         out
     }
 
@@ -144,6 +175,11 @@ impl Manifest {
                 if batches.is_empty() {
                     bail!("model {name}: mock spec has no batch sizes");
                 }
+                let spans: Vec<usize> = mo
+                    .get("spans")
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                    .unwrap_or_default();
                 // Seed travels as a string: JSON numbers are f64 here and
                 // would silently corrupt u64 seeds above 2^53.
                 let seed = match mo.get("seed") {
@@ -154,6 +190,7 @@ impl Manifest {
                     strength: mo.get("strength").as_f64().unwrap_or(2.0) as f32,
                     seed,
                     batches,
+                    spans,
                 })
             } else {
                 None
@@ -195,6 +232,11 @@ impl Manifest {
             };
             if info.dim != info.channels * info.pixels {
                 bail!("model {name}: inconsistent dim");
+            }
+            if let Some(mock) = &info.mock {
+                if let Some(&bad) = mock.spans.iter().find(|&&s| s == 0 || s > info.dim) {
+                    bail!("model {name}: mock span {bad} outside 1..={}", info.dim);
+                }
             }
             models.insert(name.clone(), info);
         }
@@ -278,6 +320,9 @@ pub struct MockModelSpec {
     pub strength: f32,
     pub seed: u64,
     pub batches: Vec<usize>,
+    /// Trailing logp span lengths exported next to the full-shape pass;
+    /// empty means no span variants (full-shape serving only).
+    pub spans: Vec<usize>,
     /// Optional worker pin list, written as the manifest `"pin"` field.
     pub pin: Option<Vec<usize>>,
 }
@@ -294,6 +339,7 @@ impl MockModelSpec {
             strength: 2.5,
             seed,
             batches: vec![1, 4],
+            spans: Vec::new(),
             pin: None,
         }
     }
@@ -308,12 +354,14 @@ impl MockModelSpec {
         a.categories = 8;
         a.strength = 3.0;
         a.batches = vec![1, 8];
+        a.spans = vec![24, 48, 96]; // dim 192: span ladder for the catalog
         let mut b = MockModelSpec::new("mock_b", 17);
         b.channels = 1;
         b.pixels = 96;
         b.categories = 6;
         b.strength = 2.0;
         b.batches = vec![1, 8];
+        b.spans = vec![12, 24, 48]; // dim 96
         vec![a, b]
     }
 }
@@ -345,6 +393,7 @@ pub fn write_mock_manifest(dir: &Path, models: &[MockModelSpec]) -> Result<()> {
                     ("strength", Value::num(s.strength as f64)),
                     ("seed", Value::str(s.seed.to_string())),
                     ("batches", Value::Arr(s.batches.iter().map(|&b| Value::num(b as f64)).collect())),
+                    ("spans", Value::Arr(s.spans.iter().map(|&sp| Value::num(sp as f64)).collect())),
                 ]),
             ),
         ]);
@@ -375,7 +424,9 @@ mod tests {
                 "m1": {"kind": "explicit", "channels": 3, "height": 4, "width": 5,
                         "categories": 8, "t_fore": 2, "share_repr": true,
                         "dim": 60, "pixels": 20, "bpd": 2.5, "test_n": 4,
-                        "files": {"step_b1": "m1_step_b1.hlo.txt", "step_b32": "m1_step_b32.hlo.txt"}},
+                        "files": {"step_b1": "m1_step_b1.hlo.txt", "step_b32": "m1_step_b32.hlo.txt",
+                                  "step_b1_s16": "m1_step_b1_s16.hlo.txt",
+                                  "steplp_b32_s8": "m1_steplp_b32_s8.hlo.txt"}},
                 "m2": {"kind": "latent", "channels": 4, "height": 8, "width": 8,
                         "categories": 64, "t_fore": 5, "share_repr": true,
                         "dim": 256, "pixels": 64, "bpd": 1.1, "autoencoder": "ae1", "test_n": 32,
@@ -399,6 +450,46 @@ mod tests {
         assert_eq!(m2.autoencoder.as_deref(), Some("ae1"));
         assert_eq!(m.ae("ae1").unwrap().latent_dim, 256);
         assert!(m.quick);
+    }
+
+    #[test]
+    fn span_variant_roles_parse() {
+        let m = Manifest::from_value("/tmp".into(), &sample_manifest()).unwrap();
+        let m1 = m.model("m1").unwrap();
+        // Span-variant keys must not pollute the anchor batch list.
+        assert_eq!(m1.step_batch_sizes(), vec![1, 32]);
+        let mut roles = m1.step_variant_roles();
+        roles.sort();
+        assert_eq!(
+            roles,
+            vec![
+                ("step_b1".to_string(), 1, 60, true),
+                ("step_b1_s16".to_string(), 1, 16, true),
+                ("step_b32".to_string(), 32, 60, true),
+                ("steplp_b32_s8".to_string(), 32, 8, false),
+            ]
+        );
+    }
+
+    #[test]
+    fn mock_spans_roundtrip_and_validate() {
+        let dir = std::env::temp_dir().join(format!("predsamp-spanman-{}", std::process::id()));
+        let mut spec = MockModelSpec::new("span_m", 9);
+        spec.spans = vec![6, 12];
+        write_mock_manifest(&dir, &[spec]).unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let mock = man.model("span_m").unwrap().mock.as_ref().unwrap();
+        assert_eq!(mock.spans, vec![6, 12]);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // A span wider than dim must fail the load, not surface later as a
+        // catalog with an impossible variant.
+        let dir2 = std::env::temp_dir().join(format!("predsamp-badspan-{}", std::process::id()));
+        let mut bad = MockModelSpec::new("span_m", 9);
+        bad.spans = vec![bad.channels * bad.pixels + 1];
+        write_mock_manifest(&dir2, &[bad]).unwrap();
+        assert!(Manifest::load(&dir2).is_err(), "span > dim must be rejected");
+        let _ = std::fs::remove_dir_all(&dir2);
     }
 
     #[test]

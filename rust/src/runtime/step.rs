@@ -1,26 +1,37 @@
-//! Typed wrapper over an ARM step executable.
+//! Typed wrapper over an ARM step executable, and the shape-variant
+//! catalog that gives compiled backends real partial inference.
 //!
 //! Signature (the runtime↔coordinator contract, fixed by the python
 //! AOT export under `python/compile/`):
 //!
 //! ```text
-//! x i32[B, d]  ->  (logp f32[B, d, K],  fore f32[B, P, T, K])
+//! x i32[B, d]  ->  (logp f32[B, S, K],  fore f32[B, P, T, K])
 //! ```
+//!
+//! where `S` is the export's **logp span**: a full-shape export computes
+//! all `d` positions (`S = d`), a span export (`step_b{B}_s{S}` roles)
+//! takes the same full `[B, d]` input but computes and transfers log-probs
+//! only for the trailing window `[d - S, d)`. Autoregression makes the
+//! sliced output bitwise identical to the same window of a full pass.
 //!
 //! The executable is pure — all sampling (Gumbel-max over `logp + ε`)
 //! happens in the coordinator, which is what lets one artifact serve every
 //! forecaster policy and ablation with ε held fixed across iterations.
 //!
 //! Partial inference: the sampling loop offers every backend a
-//! `sampler::PassPlan` through `StepModel::run_plan`. Compiled executables
-//! are shape-specialized, so they take the trait's full-shape fallback —
-//! a plan is a permission to skip work, never an obligation — and instead
-//! save through batch selection: the logp-only flavor below, and the
-//! engine's batch down-shifting across exported batch sizes.
+//! `sampler::PassPlan` through `StepModel::run_plan`. A lone
+//! shape-specialized executable can only take the trait's full-shape
+//! fallback, but a [`VariantCatalog`] — a family of executables along the
+//! `{batch, span, fore-flavor}` axes — serves the plan by compacting live
+//! rows into the smallest covering exported batch, picking the cheapest
+//! variant whose span covers the hull of the plan's frontiers, and
+//! scattering the results back into the caller's full-shape buffers.
 
 use super::{artifact::ModelInfo, client};
-use anyhow::{bail, Context, Result};
+use crate::sampler::PassPlan;
+use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Output buffers of one step call. Reused across iterations (the hot loop
 /// does not allocate; see `StepExecutable::run_into`).
@@ -31,29 +42,35 @@ use std::path::Path;
 /// Consumers must read only what their plan asked for.
 #[derive(Clone, Debug, Default)]
 pub struct StepOutput {
-    /// `[B, d, K]` ARM log-probs.
+    /// `[B, d, K]` ARM log-probs (`[B, S, K]` for a span variant's raw
+    /// output before the catalog scatters it back to full shape).
     pub logp: Vec<f32>,
     /// `[B, P, T, K]` forecast-head log-probs.
     pub fore: Vec<f32>,
 }
 
-/// A compiled ARM step executable for one fixed batch size.
+/// A compiled ARM step executable for one fixed `(batch, span, fore)`
+/// shape.
 ///
-/// Two flavors exist per model (both exported by the python AOT
-/// path): the full step
-/// `(logp, fore)` and a logp-only variant (`has_fore = false`) that skips
-/// the forecast-head compute *and* its device→host transfer — the
-/// dominant per-pass cost at B=32 for the K=256 models.
+/// Per model the python AOT path exports the full step `(logp, fore)`, a
+/// logp-only flavor (`has_fore = false`) that skips the forecast-head
+/// compute *and* its device→host transfer — the dominant per-pass cost at
+/// B=32 for the K=256 models — and trailing-window span variants
+/// (`span < dim`) for both flavors, which a [`VariantCatalog`] selects
+/// among per pass.
 pub struct StepExecutable {
     exe: xla::PjRtLoadedExecutable,
     pub batch: usize,
     pub dim: usize,
+    /// Trailing logp positions this export computes (`dim` for full shape).
+    pub span: usize,
     pub categories: usize,
     pub pixels: usize,
     pub t_fore: usize,
     pub has_fore: bool,
-    /// Number of step invocations since load (telemetry).
-    calls: std::cell::Cell<u64>,
+    /// Number of step invocations since load (telemetry; atomic so a
+    /// catalog of executables is `Sync` and shareable across workers).
+    calls: AtomicU64,
 }
 
 impl StepExecutable {
@@ -64,32 +81,48 @@ impl StepExecutable {
 
     /// Compile either flavor; `has_fore = false` for logp-only artifacts.
     pub fn load_variant<P: AsRef<Path>>(path: P, info: &ModelInfo, batch: usize, has_fore: bool) -> Result<StepExecutable> {
+        Self::load_span_variant(path, info, batch, has_fore, info.dim)
+    }
+
+    /// Compile a trailing-window span variant (`step_b{B}_s{S}` exports):
+    /// full `[B, d]` input, logp output restricted to `[d - span, d)`.
+    pub fn load_span_variant<P: AsRef<Path>>(
+        path: P,
+        info: &ModelInfo,
+        batch: usize,
+        has_fore: bool,
+        span: usize,
+    ) -> Result<StepExecutable> {
+        ensure!(span >= 1 && span <= info.dim, "span {} out of range for {} (d={})", span, info.name, info.dim);
         let exe = client::compile_hlo_text(&path)
             .with_context(|| format!("loading step executable for {}", info.name))?;
         Ok(StepExecutable {
             exe,
             batch,
             dim: info.dim,
+            span,
             categories: info.categories,
             pixels: info.pixels,
             t_fore: if has_fore { info.t_fore } else { 0 },
             has_fore,
-            calls: std::cell::Cell::new(0),
+            calls: AtomicU64::new(0),
         })
     }
 
     pub fn logp_len(&self) -> usize {
-        self.batch * self.dim * self.categories
+        self.batch * self.span * self.categories
     }
     pub fn fore_len(&self) -> usize {
         self.batch * self.pixels * self.t_fore * self.categories
     }
     pub fn calls(&self) -> u64 {
-        self.calls.get()
+        self.calls.load(Ordering::Relaxed)
     }
 
     /// One parallel inference pass, writing into reusable output buffers.
-    /// `x` is `[B, d]` row-major i32 with values in `[0, K)`.
+    /// `x` is `[B, d]` row-major i32 with values in `[0, K)`; `out.logp`
+    /// receives `[B, span, K]` (the trailing window; full shape when
+    /// `span == dim`).
     pub fn run_into(&self, x: &[i32], out: &mut StepOutput) -> Result<()> {
         if x.len() != self.batch * self.dim {
             bail!("step input len {} != {}x{}", x.len(), self.batch, self.dim);
@@ -108,7 +141,7 @@ impl StepExecutable {
             out.fore.clear();
             lp.copy_raw_to(&mut out.logp)?;
         }
-        self.calls.set(self.calls.get() + 1);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
@@ -117,6 +150,325 @@ impl StepExecutable {
         let mut out = StepOutput::default();
         self.run_into(x, &mut out)?;
         Ok(out)
+    }
+}
+
+/// A pure-rust backend that can run one `(batch, span, fore)` device shape
+/// — the mock ARM implements this so variant catalogs (and everything
+/// built on them) run offline, bitwise identical to the compiled path's
+/// semantics.
+pub trait SpanBackend: Send + Sync {
+    /// One device-shape pass: full `[batch, dim]` input; write
+    /// `out.logp = [batch, span, K]` for the trailing positions
+    /// `[dim - span, dim)` and, when `has_fore`, the full forecast heads
+    /// `out.fore = [batch, P, T, K]` (cleared otherwise). Values must be
+    /// bitwise identical to the same window of a full pass.
+    fn run_span(&self, batch: usize, span: usize, has_fore: bool, x: &[i32], out: &mut StepOutput) -> Result<()>;
+}
+
+enum VariantBackend {
+    Compiled(StepExecutable),
+    Pure(Box<dyn SpanBackend>),
+}
+
+/// One exported shape in a [`VariantCatalog`].
+pub struct Variant {
+    pub batch: usize,
+    /// Trailing logp window length (`dim` = full shape).
+    pub span: usize,
+    pub has_fore: bool,
+    backend: VariantBackend,
+    hits: AtomicU64,
+}
+
+impl Variant {
+    /// Device cost of one pass on this variant, in K-length output rows
+    /// (the `positions_evaluated` unit): every batch row pays the span,
+    /// plus the forecast heads when the flavor computes them.
+    fn cost(&self, pixels: usize, t_fore: usize) -> usize {
+        self.batch * self.span + if self.has_fore { self.batch * pixels * t_fore } else { 0 }
+    }
+
+    /// Histogram label, e.g. `b8_s64` / `b8_s64_lp`.
+    pub fn label(&self) -> String {
+        if self.has_fore {
+            format!("b{}_s{}", self.batch, self.span)
+        } else {
+            format!("b{}_s{}_lp", self.batch, self.span)
+        }
+    }
+
+    fn run(&self, x: &[i32], out: &mut StepOutput) -> Result<()> {
+        match &self.backend {
+            VariantBackend::Compiled(exe) => exe.run_into(x, out),
+            VariantBackend::Pure(b) => b.run_span(self.batch, self.span, self.has_fore, x, out),
+        }
+    }
+}
+
+/// Point-in-time snapshot of one variant's selection count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VariantStat {
+    pub batch: usize,
+    pub span: usize,
+    pub has_fore: bool,
+    pub hits: u64,
+}
+
+/// Point-in-time snapshot of a catalog's telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct CatalogStats {
+    /// Passes served by a variant strictly smaller than full shape.
+    pub variant_hits: u64,
+    /// Passes where the cheapest covering variant *was* the full shape.
+    pub full_shape_fallbacks: u64,
+    /// Total K-length output rows computed on-device by this catalog.
+    pub positions_evaluated: u64,
+    /// Selected-shape histogram, one entry per variant (label, hits).
+    pub shapes: Vec<(String, u64)>,
+}
+
+impl CatalogStats {
+    /// Element-wise accumulate (for per-worker / fleet aggregation).
+    pub fn merge(&mut self, other: &CatalogStats) {
+        self.variant_hits += other.variant_hits;
+        self.full_shape_fallbacks += other.full_shape_fallbacks;
+        self.positions_evaluated += other.positions_evaluated;
+        for (label, hits) in &other.shapes {
+            match self.shapes.iter_mut().find(|(l, _)| l == label) {
+                Some((_, h)) => *h += hits,
+                None => self.shapes.push((label.clone(), *hits)),
+            }
+        }
+    }
+}
+
+// Per-thread compaction scratch (compacted input + variant-shaped raw
+// output). A catalog is shared (`Sync`) and `run_plan` takes `&self`, so
+// the scratch cannot live on the catalog; thread-locals keep the hot loop
+// allocation-free after the first pass per thread.
+thread_local! {
+    static SCRATCH: std::cell::RefCell<(Vec<i32>, StepOutput)> =
+        std::cell::RefCell::new((Vec::new(), StepOutput::default()));
+}
+
+/// A family of step executables for one model along the
+/// `{batch, span, fore-flavor}` axes, serving frontier-aware plans on
+/// compiled (or mock device-shape) backends.
+///
+/// `run_plan` (1) compacts live rows into the smallest covering exported
+/// batch, (2) picks the cheapest variant whose trailing span covers the
+/// hull of the plan's `{lo, hi}` frontiers and whose fore flavor matches
+/// `need_fore`, (3) scatters results back into the caller's full-shape
+/// [`StepOutput`]. Every position the plan promises is bitwise identical
+/// to a full-shape pass — spans slice an autoregressive output, batch
+/// rows are independent, and compaction/scatter is pure data movement.
+///
+/// All telemetry is atomic: one catalog is `Sync` and can be shared
+/// across engine workers instead of cloned per worker.
+pub struct VariantCatalog {
+    pub model: String,
+    pub dim: usize,
+    pub categories: usize,
+    pub pixels: usize,
+    pub t_fore: usize,
+    /// Sorted by `(batch, span, has_fore)` so minimal-cost selection
+    /// tie-breaks toward the smallest batch, then the shortest span.
+    variants: Vec<Variant>,
+    variant_hits: AtomicU64,
+    full_shape_fallbacks: AtomicU64,
+    positions_evaluated: AtomicU64,
+}
+
+impl VariantCatalog {
+    pub fn new(model: &str, dim: usize, categories: usize, pixels: usize, t_fore: usize) -> VariantCatalog {
+        VariantCatalog {
+            model: model.to_string(),
+            dim,
+            categories,
+            pixels,
+            t_fore,
+            variants: Vec::new(),
+            variant_hits: AtomicU64::new(0),
+            full_shape_fallbacks: AtomicU64::new(0),
+            positions_evaluated: AtomicU64::new(0),
+        }
+    }
+
+    /// Add a compiled executable (its own shape fields describe it).
+    pub fn push_compiled(&mut self, exe: StepExecutable) -> Result<()> {
+        ensure!(exe.dim == self.dim, "{}: variant dim {} != catalog dim {}", self.model, exe.dim, self.dim);
+        let v = Variant {
+            batch: exe.batch,
+            span: exe.span,
+            has_fore: exe.has_fore,
+            backend: VariantBackend::Compiled(exe),
+            hits: AtomicU64::new(0),
+        };
+        self.push(v)
+    }
+
+    /// Add a pure-rust device-shape backend (the mock path).
+    pub fn push_backend(&mut self, batch: usize, span: usize, has_fore: bool, backend: Box<dyn SpanBackend>) -> Result<()> {
+        ensure!(span >= 1 && span <= self.dim, "{}: span {} out of range (d={})", self.model, span, self.dim);
+        ensure!(batch >= 1, "{}: zero-batch variant", self.model);
+        self.push(Variant { batch, span, has_fore, backend: VariantBackend::Pure(backend), hits: AtomicU64::new(0) })
+    }
+
+    fn push(&mut self, v: Variant) -> Result<()> {
+        ensure!(
+            !self.variants.iter().any(|o| (o.batch, o.span, o.has_fore) == (v.batch, v.span, v.has_fore)),
+            "{}: duplicate variant {}",
+            self.model,
+            v.label()
+        );
+        let at = self
+            .variants
+            .partition_point(|o| (o.batch, o.span, o.has_fore) < (v.batch, v.span, v.has_fore));
+        self.variants.insert(at, v);
+        Ok(())
+    }
+
+    /// Exported batch sizes that have a full-shape fore variant — the
+    /// anchors every plan can fall back to.
+    pub fn anchored_batches(&self) -> Vec<usize> {
+        let mut out: Vec<usize> =
+            self.variants.iter().filter(|v| v.span == self.dim && v.has_fore).map(|v| v.batch).collect();
+        out.dedup();
+        out
+    }
+
+    /// A usable catalog needs, per exported batch size, a full-shape fore
+    /// variant (the fallback anchor `hlo_probe --manifest` also gates on);
+    /// otherwise some plan would have no covering variant.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.variants.is_empty(), "{}: empty variant catalog", self.model);
+        let anchors = self.anchored_batches();
+        for v in &self.variants {
+            ensure!(
+                anchors.contains(&v.batch),
+                "{}: variant {} has no full-shape anchor (step_b{} missing)",
+                self.model,
+                v.label(),
+                v.batch
+            );
+        }
+        Ok(())
+    }
+
+    pub fn variants(&self) -> &[Variant] {
+        &self.variants
+    }
+
+    /// Cheapest variant covering `live` rows whose frontiers reach down to
+    /// `need_lo`, with the fore flavor `need_fore` requires. Variants are
+    /// sorted, so the first strict cost improvement also tie-breaks toward
+    /// the smallest batch, then the shortest span, then the fore flavor.
+    fn select(&self, live: usize, need_lo: usize, need_fore: bool) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None;
+        for (i, v) in self.variants.iter().enumerate() {
+            if v.batch < live || self.dim - v.span > need_lo || (need_fore && !v.has_fore) {
+                continue;
+            }
+            let cost = v.cost(self.pixels, self.t_fore);
+            if best.map_or(true, |(c, _)| cost < c) {
+                best = Some((cost, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Serve one planned pass for a view of `view_batch` slots (see the
+    /// type-level docs for the three phases). Returns the device cost in
+    /// K-length output rows. `view_fore` gates whether the heads may be
+    /// produced at all (a logp-only engine view never reads them).
+    pub fn run_plan(&self, view_batch: usize, view_fore: bool, x: &[i32], out: &mut StepOutput, plan: &PassPlan) -> Result<usize> {
+        let d = self.dim;
+        let k = self.categories;
+        ensure!(x.len() == view_batch * d, "{}: plan input len {} != {}x{}", self.model, x.len(), view_batch, d);
+        ensure!(plan.slots.len() <= view_batch, "{}: plan has {} slots for a b={} view", self.model, plan.slots.len(), view_batch);
+        let need = plan.need_fore && view_fore && self.t_fore > 0;
+        let live: Vec<usize> = (0..plan.slots.len()).filter(|&i| plan.slots[i].active).collect();
+        if !need {
+            out.fore.clear();
+        }
+        if live.is_empty() {
+            return Ok(0);
+        }
+        // The frontier hull: the lowest position any live slot will read.
+        let need_lo = live
+            .iter()
+            .map(|&i| {
+                let s = &plan.slots[i];
+                s.lo.min(s.hi).min(d)
+            })
+            .min()
+            .unwrap_or(0);
+        let vi = match self.select(live.len(), need_lo, need) {
+            Some(vi) => vi,
+            None => bail!(
+                "{}: no exported variant covers {} live rows at frontier {} (need_fore={}) — full-shape anchor missing",
+                self.model,
+                live.len(),
+                need_lo,
+                need
+            ),
+        };
+        let v = &self.variants[vi];
+        let base = d - v.span;
+        SCRATCH.with(|s| -> Result<()> {
+            let (cx, tmp) = &mut *s.borrow_mut();
+            // (1) compact live rows into the variant's batch (padding rows
+            // keep whatever the scratch held — any in-range value is fine,
+            // their outputs are never scattered back).
+            cx.resize(v.batch * d, 0);
+            for (r, &slot) in live.iter().enumerate() {
+                cx[r * d..(r + 1) * d].copy_from_slice(&x[slot * d..(slot + 1) * d]);
+            }
+            // (2) run the selected shape.
+            v.run(cx, tmp)?;
+            // (3) scatter back into the caller's full-shape buffers.
+            out.logp.resize(view_batch * d * k, 0.0);
+            for (r, &slot) in live.iter().enumerate() {
+                let src = &tmp.logp[r * v.span * k..(r + 1) * v.span * k];
+                out.logp[(slot * d + base) * k..(slot + 1) * d * k].copy_from_slice(src);
+            }
+            if need {
+                let row = self.pixels * self.t_fore * k;
+                out.fore.resize(view_batch * row, 0.0);
+                for (r, &slot) in live.iter().enumerate() {
+                    out.fore[slot * row..(slot + 1) * row].copy_from_slice(&tmp.fore[r * row..(r + 1) * row]);
+                }
+            }
+            Ok(())
+        })?;
+        let cost = v.cost(self.pixels, self.t_fore);
+        v.hits.fetch_add(1, Ordering::Relaxed);
+        if v.span < d || v.batch < plan.slots.len() {
+            self.variant_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.full_shape_fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+        self.positions_evaluated.fetch_add(cost as u64, Ordering::Relaxed);
+        Ok(cost)
+    }
+
+    /// A full-shape pass for a view of `view_batch` slots (eval, ancestral
+    /// references, plan-mode off): every row live over the whole dim.
+    pub fn run_full(&self, view_batch: usize, view_fore: bool, x: &[i32], out: &mut StepOutput) -> Result<usize> {
+        let mut plan = PassPlan::full(view_batch, self.dim);
+        plan.need_fore = view_fore;
+        self.run_plan(view_batch, view_fore, x, out, &plan)
+    }
+
+    /// Telemetry snapshot.
+    pub fn stats(&self) -> CatalogStats {
+        CatalogStats {
+            variant_hits: self.variant_hits.load(Ordering::Relaxed),
+            full_shape_fallbacks: self.full_shape_fallbacks.load(Ordering::Relaxed),
+            positions_evaluated: self.positions_evaluated.load(Ordering::Relaxed),
+            shapes: self.variants.iter().map(|v| (v.label(), v.hits.load(Ordering::Relaxed))).collect(),
+        }
     }
 }
 
@@ -139,6 +491,7 @@ pub fn bpd_of(x: &[i32], out: &StepOutput, batch: usize, dim: usize, k: usize) -
 mod tests {
     use super::*;
     use crate::runtime::artifact::Manifest;
+    use crate::sampler::SlotSpan;
 
     fn with_model<F: FnOnce(&Manifest, &StepExecutable)>(name: &str, b: usize, f: F) {
         let dir = crate::artifacts_dir();
@@ -215,5 +568,190 @@ mod tests {
         with_model("mnist_bin", 1, |_, exe| {
             assert!(exe.run(&[0i32; 3]).is_err());
         });
+    }
+
+    // ---- variant-catalog unit tests (pure backend, no artifacts) -------
+
+    /// A deterministic span-consistent backend: logp at position j depends
+    /// only on (x[j-1], j), fore on (pixel, t), so any span window of any
+    /// batch compaction is bitwise identical to the full pass.
+    struct TestBackend {
+        dim: usize,
+        k: usize,
+        pixels: usize,
+        t_fore: usize,
+    }
+
+    impl SpanBackend for TestBackend {
+        fn run_span(&self, batch: usize, span: usize, has_fore: bool, x: &[i32], out: &mut StepOutput) -> Result<()> {
+            let (d, k) = (self.dim, self.k);
+            ensure!(x.len() == batch * d, "bad input");
+            out.logp.resize(batch * span * k, 0.0);
+            let base = d - span;
+            for b in 0..batch {
+                for j in base..d {
+                    let prev = if j == 0 { -1 } else { x[b * d + j - 1] };
+                    for c in 0..k {
+                        out.logp[(b * span + (j - base)) * k + c] = (prev * 31 + j as i32 * 7 + c as i32) as f32;
+                    }
+                }
+            }
+            if has_fore {
+                out.fore.resize(batch * self.pixels * self.t_fore * k, 0.0);
+                for (i, v) in out.fore.iter_mut().enumerate() {
+                    *v = (i % 97) as f32;
+                }
+            } else {
+                out.fore.clear();
+            }
+            Ok(())
+        }
+    }
+
+    fn test_catalog(dim: usize, k: usize, pixels: usize, t_fore: usize, shapes: &[(usize, usize, bool)]) -> VariantCatalog {
+        let mut cat = VariantCatalog::new("test", dim, k, pixels, t_fore);
+        for &(b, s, f) in shapes {
+            cat.push_backend(b, s, f, Box::new(TestBackend { dim, k, pixels, t_fore })).unwrap();
+        }
+        cat
+    }
+
+    fn plan_of(spans: &[(bool, usize, usize)], need_fore: bool) -> PassPlan {
+        PassPlan {
+            slots: spans.iter().map(|&(active, lo, hi)| SlotSpan { active, lo, hi }).collect(),
+            need_fore,
+            need_full_scan: true,
+        }
+    }
+
+    #[test]
+    fn catalog_requires_full_shape_anchor() {
+        let cat = test_catalog(8, 3, 4, 1, &[(2, 4, true), (2, 8, true)]);
+        cat.validate().unwrap();
+        // A batch with only a short span has no anchor.
+        let cat = test_catalog(8, 3, 4, 1, &[(1, 4, true), (2, 8, true)]);
+        assert!(cat.validate().unwrap_err().to_string().contains("full-shape anchor"));
+        // A logp-only full shape is not an anchor either (fore plans
+        // could not fall back to it).
+        let cat = test_catalog(8, 3, 4, 1, &[(2, 8, false)]);
+        assert!(cat.validate().is_err());
+    }
+
+    #[test]
+    fn catalog_selects_cheapest_covering_variant() {
+        let cat = test_catalog(16, 3, 8, 2, &[(1, 16, true), (4, 16, true), (4, 8, true), (4, 8, false), (4, 16, false)]);
+        cat.validate().unwrap();
+        // Frontier at 10 with one live row: span 8 covers (16-8 <= 10);
+        // without fore the lp flavor wins, but batch 1 full-fore is
+        // 16+8*2=32 vs b4 lp span8 = 32 — tie broken toward smaller batch.
+        assert_eq!(cat.select(1, 10, false).map(|i| cat.variants()[i].label()), Some("b1_s16".into()));
+        // Fore needed: b4 span-8 fore costs 4*8+4*16=96 > b1 full 48.
+        assert_eq!(cat.select(1, 10, true).map(|i| cat.variants()[i].label()), Some("b1_s16".into()));
+        // Two live rows at a deep frontier: lp span wins.
+        assert_eq!(cat.select(2, 12, false).map(|i| cat.variants()[i].label()), Some("b4_s8_lp".into()));
+        // Frontier 0 forces full span.
+        assert_eq!(cat.select(2, 0, true).map(|i| cat.variants()[i].label()), Some("b4_s16".into()));
+        // No variant covers 5 live rows.
+        assert_eq!(cat.select(5, 0, true), None);
+    }
+
+    #[test]
+    fn catalog_roundtrips_bitwise_and_counts_hits() {
+        let (d, k, px, t) = (12, 4, 6, 2);
+        let cat = test_catalog(d, k, px, t, &[(1, d, true), (4, d, true), (4, 6, true), (4, 6, false), (4, d, false), (1, d, false)]);
+        cat.validate().unwrap();
+        let backend = TestBackend { dim: d, k, pixels: px, t_fore: t };
+        let x: Vec<i32> = (0..4 * d as i32).map(|i| i % 3).collect();
+        // Full reference on the same 4 rows.
+        let mut full = StepOutput::default();
+        backend.run_span(4, d, true, &x, &mut full).unwrap();
+
+        // A plan with dead rows and a deep frontier hull.
+        let plan = plan_of(&[(true, 7, d), (false, 0, 0), (true, 9, d), (false, 0, 0)], true);
+        let mut out = StepOutput::default();
+        let cost = cat.run_plan(4, true, &x, &mut out, &plan).unwrap();
+        // 2 live rows, hull 7 → d - span <= 7 → span 6; fore needed.
+        assert_eq!(cost, 4 * 6 + 4 * px * t);
+        for &slot in &[0usize, 2] {
+            let lo = plan.slots[slot].lo;
+            assert_eq!(
+                &out.logp[(slot * d + lo) * k..(slot + 1) * d * k],
+                &full.logp[(slot * d + lo) * k..(slot + 1) * d * k],
+                "slot {slot} logp window"
+            );
+            let row = px * t * k;
+            assert_eq!(&out.fore[slot * row..(slot + 1) * row], &full.fore[slot * row..(slot + 1) * row], "slot {slot} fore");
+        }
+        let st = cat.stats();
+        assert_eq!((st.variant_hits, st.full_shape_fallbacks), (1, 0));
+        assert_eq!(st.positions_evaluated, cost as u64);
+        assert_eq!(st.shapes.iter().find(|(l, _)| l == "b4_s6").map(|(_, h)| *h), Some(1));
+
+        // need_fore=false must clear fore and pick an lp flavor — here
+        // compacting to batch 1 (b1_s12_lp, cost 12) beats b4_s6_lp (24).
+        let plan = plan_of(&[(true, 9, d), (false, 0, 0), (false, 0, 0), (false, 0, 0)], false);
+        let mut out2 = StepOutput::default();
+        let cost2 = cat.run_plan(4, true, &x, &mut out2, &plan).unwrap();
+        assert_eq!(cost2, d);
+        assert!(out2.fore.is_empty());
+        assert_eq!(&out2.logp[(0 * d + 9) * k..d * k], &full.logp[9 * k..d * k]);
+    }
+
+    #[test]
+    fn catalog_degenerate_plans() {
+        let (d, k, px, t) = (10, 3, 5, 1);
+        let cat = test_catalog(d, k, px, t, &[(1, d, true), (2, d, true), (4, d, true), (4, 5, true), (1, 2, true)]);
+        cat.validate().unwrap();
+        let x = vec![0i32; 4 * d];
+        let mut out = StepOutput::default();
+        // All-dead: no work, no telemetry.
+        let plan = plan_of(&[(false, 0, 0); 4], true);
+        assert_eq!(cat.run_plan(4, true, &x, &mut out, &plan).unwrap(), 0);
+        let st = cat.stats();
+        assert_eq!((st.variant_hits, st.full_shape_fallbacks, st.positions_evaluated), (0, 0, 0));
+        // Single trailing position (ancestral's last step): the shortest
+        // covering span at the smallest batch — this all-fore catalog has
+        // no lp flavor, so the heads ride along in the cost.
+        let plan = plan_of(&[(true, d - 1, d), (false, 0, 0), (false, 0, 0), (false, 0, 0)], false);
+        assert_eq!(cat.run_plan(4, true, &x, &mut out, &plan).unwrap(), 2 + px * t);
+        assert_eq!(cat.stats().shapes.iter().find(|(l, _)| l == "b1_s2").map(|(_, h)| *h), Some(1));
+        // Full batch at frontier 0: the full-shape anchor — counted as a
+        // fallback, not a variant hit.
+        let plan = plan_of(&[(true, 0, d); 4], true);
+        assert_eq!(cat.run_plan(4, true, &x, &mut out, &plan).unwrap(), 4 * d + 4 * px * t);
+        let st = cat.stats();
+        assert_eq!(st.full_shape_fallbacks, 1);
+    }
+
+    #[test]
+    fn catalog_is_sync_and_shareable() {
+        fn assert_sync<T: Sync + Send>() {}
+        assert_sync::<VariantCatalog>();
+        assert_sync::<StepExecutable>();
+        // Concurrent planned passes on one shared catalog stay exact.
+        let (d, k, px, t) = (8, 3, 4, 1);
+        let cat = std::sync::Arc::new(test_catalog(d, k, px, t, &[(1, d, true), (1, 4, true)]));
+        let backend = TestBackend { dim: d, k, pixels: px, t_fore: t };
+        let x: Vec<i32> = (0..d as i32).collect();
+        let mut full = StepOutput::default();
+        backend.run_span(1, d, true, &x, &mut full).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let cat = cat.clone();
+                let (x, full) = (x.clone(), full.logp.clone());
+                std::thread::spawn(move || {
+                    for _ in 0..50 {
+                        let plan = plan_of(&[(true, 5, d)], false);
+                        let mut out = StepOutput::default();
+                        cat.run_plan(1, true, &x, &mut out, &plan).unwrap();
+                        assert_eq!(&out.logp[5 * k..d * k], &full[5 * k..d * k]);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(cat.stats().variant_hits, 200);
     }
 }

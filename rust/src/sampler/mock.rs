@@ -145,7 +145,7 @@ impl StepModel for MockArm {
         true
     }
 
-    fn run_plan(&self, x: &[i32], out: &mut StepOutput, plan: &PassPlan) -> Result<()> {
+    fn run_plan(&self, x: &[i32], out: &mut StepOutput, plan: &PassPlan) -> Result<usize> {
         let d = self.dim();
         let k = self.k;
         ensure!(x.len() == self.batch * d, "mock input len");
@@ -201,6 +201,44 @@ impl StepModel for MockArm {
                 let (fo_lo, fo_hi) = ((b * self.pixels + fore_lo) * self.t_fore * k, (b + 1) * self.pixels * self.t_fore * k);
                 let fore = if plan.need_fore { &mut out.fore[fo_lo..fo_hi] } else { &mut [][..] };
                 self.fill_row(row, lo, hi, fore_lo, &mut out.logp[lp_lo..lp_hi], fore);
+            }
+        }
+        Ok(plan.rows(self.pixels, self.t_fore, self.channels))
+    }
+}
+
+/// The mock ARM can also pose as one `(batch, span, fore)` *device shape*
+/// for a [`crate::runtime::step::VariantCatalog`], so catalog-backed
+/// engines, benches, and A/B tests run offline. Per-position logits are
+/// pure functions of the input row, so a trailing-window pass is bitwise
+/// identical to the same window of a full pass — exactly the property the
+/// compiled span exports get from autoregression.
+impl crate::runtime::step::SpanBackend for MockArm {
+    fn run_span(&self, batch: usize, span: usize, has_fore: bool, x: &[i32], out: &mut StepOutput) -> Result<()> {
+        let d = self.dim();
+        let k = self.k;
+        ensure!(span >= 1 && span <= d, "mock span {span} out of range (d={d})");
+        ensure!(x.len() == batch * d, "mock span input len");
+        out.logp.resize(batch * span * k, 0.0);
+        let base = d - span;
+        if has_fore {
+            out.fore.resize(batch * self.pixels * self.t_fore * k, 0.0);
+        } else {
+            out.fore.clear();
+        }
+        for b in 0..batch {
+            let row = &x[b * d..(b + 1) * d];
+            for (i, j) in (base..d).enumerate() {
+                let o = (b * span + i) * k;
+                self.logp_row(row, j, &mut out.logp[o..o + k]);
+            }
+            if has_fore {
+                for p in 0..self.pixels {
+                    for t in 0..self.t_fore {
+                        let o = ((b * self.pixels + p) * self.t_fore + t) * k;
+                        self.fore_row(row, p, t, &mut out.fore[o..o + k]);
+                    }
+                }
             }
         }
         Ok(())
@@ -297,6 +335,33 @@ mod tests {
         m.run_plan(&x, &mut out, &plan).unwrap();
         assert!(out.fore.is_empty(), "skipped heads must read as absent");
         assert_eq!(out.logp, m.run_into_owned(&x).logp);
+    }
+
+    #[test]
+    fn span_backend_matches_full_pass_window() {
+        use crate::runtime::step::SpanBackend;
+        let m = MockArm::new(2, 2, 5, 4, 2, 2.0, 9);
+        let d = m.dim();
+        let k = m.k;
+        let x: Vec<i32> = (0..2 * d as i32).map(|i| i % 4).collect();
+        let full = m.run_into_owned(&x);
+        for span in [1, 3, d] {
+            let base = d - span;
+            let mut out = StepOutput::default();
+            m.run_span(2, span, true, &x, &mut out).unwrap();
+            for b in 0..2 {
+                assert_eq!(
+                    &out.logp[b * span * k..(b + 1) * span * k],
+                    &full.logp[(b * d + base) * k..(b + 1) * d * k],
+                    "span {span} row {b}"
+                );
+            }
+            assert_eq!(out.fore, full.fore, "span {span} heads");
+            let mut lp = StepOutput::default();
+            m.run_span(2, span, false, &x, &mut lp).unwrap();
+            assert_eq!(lp.logp, out.logp);
+            assert!(lp.fore.is_empty());
+        }
     }
 
     #[test]

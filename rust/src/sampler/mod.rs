@@ -17,9 +17,12 @@
 //! positions of each row will actually be read (everything below a slot's
 //! frontier is overwritten by the valid prefix, everything of a converged
 //! slot is ignored), and whether the forecast heads are consumed at all.
-//! Backends that can exploit the plan ([`mock::MockArm`]) skip the dead
-//! work; backends that cannot (the compiled executable, which is shape-
-//! specialized) fall back to the full pass. Either way the outputs the
+//! Backends that can exploit the plan skip the dead work: [`mock::MockArm`]
+//! computes exactly the promised spans, and compiled executables route
+//! through a [`crate::runtime::step::VariantCatalog`] that compacts live
+//! rows into the smallest exported batch and picks the shortest exported
+//! logp span covering the frontier hull. A lone shape-specialized
+//! executable falls back to the full pass. Either way the outputs the
 //! plan promises are bitwise identical, so the paper's exactness guarantee
 //! is untouched — that invariant is what makes partial inference safe.
 
@@ -134,13 +137,21 @@ pub trait StepModel {
     /// the staleness contract). Backends that cannot exploit partial
     /// inference fall back to the full-shape pass — results are bitwise
     /// identical either way on every position the plan promises.
-    fn run_plan(&self, x: &[i32], out: &mut StepOutput, _plan: &PassPlan) -> Result<()> {
-        self.run_into(x, out)
+    ///
+    /// Returns the number of K-length output rows the backend *actually
+    /// computed* — the same unit as [`PassPlan::rows`]. A full-shape
+    /// fallback reports `batch * (dim + pixels * t_fore)` regardless of the
+    /// plan; a plan-exploiting backend reports the plan's cost; a
+    /// shape-variant catalog reports the device cost of the variant it
+    /// selected. This is the ground truth `positions_evaluated` accounting
+    /// is built from, so it must never be aspirational.
+    fn run_plan(&self, x: &[i32], out: &mut StepOutput, _plan: &PassPlan) -> Result<usize> {
+        self.run_into(x, out)?;
+        Ok(self.batch() * (self.dim() + self.pixels() * self.t_fore()))
     }
-    /// Whether `run_plan` actually skips work the plan allows. Work
-    /// accounting (`positions_evaluated`) trusts this: full-shape
-    /// fallbacks must report false so metrics count what the backend
-    /// really computed, not what the plan permitted.
+    /// Whether `run_plan` can skip work the plan allows (informational —
+    /// work accounting uses `run_plan`'s return value, which is exact even
+    /// for backends that only partially exploit a plan).
     fn exploits_plan(&self) -> bool {
         false
     }

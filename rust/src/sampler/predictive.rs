@@ -287,14 +287,11 @@ impl<'m, M: StepModel> PredictiveSampler<'m, M> {
                     _ => SlotSpan::default(),
                 });
             }
-            self.model.run_plan(&self.x, &mut self.out, &self.plan)?;
-            // Credit the plan's savings only when the backend takes them;
-            // a full-shape fallback computed the whole tensor regardless.
-            self.positions_evaluated += if self.model.exploits_plan() {
-                self.plan.rows(pixels, t_fore, c)
-            } else {
-                self.model.batch() * (d + pixels * t_fore)
-            };
+            // `run_plan` reports what the backend really computed — the
+            // plan's rows for a fully plan-exploiting backend, the chosen
+            // variant's device cost for a shape catalog, the whole tensor
+            // for a full-shape fallback.
+            self.positions_evaluated += self.model.run_plan(&self.x, &mut self.out, &self.plan)?;
         } else {
             self.model.run_into(&self.x, &mut self.out)?;
             self.positions_evaluated += self.model.batch() * (d + pixels * t_fore);

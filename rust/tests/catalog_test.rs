@@ -1,0 +1,219 @@
+//! Shape-variant catalog properties over the mock ARM — no artifacts
+//! required, so these run everywhere.
+//!
+//! Two layers: randomized properties straight against `VariantCatalog`
+//! (selection covers the plan, compaction→scatter round-trips bitwise,
+//! telemetry counts every pass exactly once), and the engine-level A/B
+//! matrix (every `{span-mix} x {policy}` cell bitwise equal between a
+//! catalog-serving engine and the legacy full-shape engine).
+
+use predsamp::coordinator::config::Method;
+use predsamp::coordinator::engine::Engine;
+use predsamp::runtime::artifact::{write_mock_manifest, Manifest, MockModelSpec};
+use predsamp::runtime::step::{StepOutput, VariantCatalog};
+use predsamp::sampler::mock::MockArm;
+use predsamp::sampler::{PassPlan, SlotSpan};
+use predsamp::substrate::proptest_lite::check;
+use predsamp::{prop_assert, prop_assert_eq};
+
+#[test]
+fn catalog_selection_covers_and_roundtrips_bitwise() {
+    // Random variant grids x random plans: the selected variant must
+    // cover the plan's live rows and frontier hull, be minimal-cost among
+    // covering variants, and the scattered window must be bitwise equal
+    // to a full-shape pass over the same input.
+    check("catalog-roundtrip", 24, |g| {
+        let (c, px, k) = (g.usize_in(1, 3), g.usize_in(3, 8), g.usize_in(2, 6));
+        let t_fore = g.usize_in(0, 3);
+        let strength = g.f64_in(0.0, 4.0) as f32;
+        let mseed = g.rng.next_u64();
+        let d = c * px;
+        let arm = |b: usize| MockArm::new(b, c, px, k, t_fore, strength, mseed);
+        let mut batches = vec![1usize, 1 + g.usize_in(1, 3), 4 + g.usize_in(0, 4)];
+        batches.sort_unstable();
+        batches.dedup();
+        let mut spans: Vec<usize> = (0..g.usize_in(0, 3)).map(|_| g.usize_in(1, d - 1)).collect();
+        spans.sort_unstable();
+        spans.dedup();
+        let mut cat = VariantCatalog::new("prop", d, k, px, t_fore);
+        for &b in &batches {
+            cat.push_backend(b, d, true, Box::new(arm(b))).map_err(|e| e.to_string())?;
+            if g.usize_in(0, 1) == 1 {
+                cat.push_backend(b, d, false, Box::new(arm(b))).map_err(|e| e.to_string())?;
+            }
+            for &s in &spans {
+                cat.push_backend(b, s, true, Box::new(arm(b))).map_err(|e| e.to_string())?;
+                if g.usize_in(0, 1) == 1 {
+                    cat.push_backend(b, s, false, Box::new(arm(b))).map_err(|e| e.to_string())?;
+                }
+            }
+        }
+        cat.validate().map_err(|e| e.to_string())?;
+        let view = *batches.last().unwrap();
+        let x: Vec<i32> = (0..view * d).map(|_| (g.rng.next_u64() % k as u64) as i32).collect();
+        let slots: Vec<SlotSpan> = (0..view)
+            .map(|_| SlotSpan { active: g.usize_in(0, 3) > 0, lo: g.usize_in(0, d), hi: d })
+            .collect();
+        let plan = PassPlan { slots, need_fore: g.usize_in(0, 1) == 1, ..Default::default() };
+
+        // Full-shape reference over the same input, before the telemetry
+        // snapshot so only the planned pass is attributed below.
+        let mut full_out = StepOutput::default();
+        cat.run_full(view, true, &x, &mut full_out).map_err(|e| e.to_string())?;
+        let before = cat.stats();
+        let mut out = StepOutput::default();
+        let cost = cat.run_plan(view, true, &x, &mut out, &plan).map_err(|e| e.to_string())?;
+        let after = cat.stats();
+
+        let live: Vec<usize> = (0..view).filter(|&i| plan.slots[i].active).collect();
+        let passes = |s: &predsamp::runtime::step::CatalogStats| s.variant_hits + s.full_shape_fallbacks;
+        if live.is_empty() {
+            prop_assert_eq!(cost, 0, "all-dead plan must be free");
+            prop_assert_eq!(passes(&after), passes(&before), "all-dead plan must not count a pass");
+            return Ok(());
+        }
+        prop_assert_eq!(passes(&after), passes(&before) + 1, "exactly one pass counted");
+        prop_assert_eq!(after.positions_evaluated, before.positions_evaluated + cost as u64, "positions must equal the returned device cost");
+
+        // Which variant served the pass (shapes histogram is ordered like
+        // `variants()`), and does it cover + is it minimal?
+        let sel = (0..after.shapes.len())
+            .find(|&i| after.shapes[i].1 == before.shapes[i].1 + 1)
+            .ok_or("no variant hit counted")?;
+        let v = &cat.variants()[sel];
+        let need_lo = live.iter().map(|&i| plan.slots[i].lo.min(d)).min().unwrap_or(0);
+        let need = plan.need_fore && t_fore > 0;
+        prop_assert!(v.batch >= live.len(), "variant b{} cannot host {} live rows", v.batch, live.len());
+        prop_assert!(d - v.span <= need_lo, "span {} does not reach frontier {}", v.span, need_lo);
+        if need {
+            prop_assert!(v.has_fore, "fore-needing plan served by a logp-only variant");
+        }
+        for o in cat.variants() {
+            if o.batch >= live.len() && d - o.span <= need_lo && (!need || o.has_fore) {
+                let ocost = o.batch * o.span + if o.has_fore { o.batch * px * t_fore } else { 0 };
+                prop_assert!(ocost >= cost, "covering variant b{}_s{} cost {} beats selected {}", o.batch, o.span, ocost, cost);
+            }
+        }
+
+        // Compaction -> selected shape -> scatter must be bitwise equal to
+        // the full pass on every position the plan promised.
+        for &i in &live {
+            let lo = plan.slots[i].lo.min(d);
+            for j in lo..d {
+                for cc in 0..k {
+                    let at = (i * d + j) * k + cc;
+                    prop_assert!(
+                        out.logp[at].to_bits() == full_out.logp[at].to_bits(),
+                        "slot {} pos {} cat {}: plan {} != full {}",
+                        i,
+                        j,
+                        cc,
+                        out.logp[at],
+                        full_out.logp[at]
+                    );
+                }
+            }
+            if need {
+                let row = px * t_fore * k;
+                prop_assert_eq!(&out.fore[i * row..(i + 1) * row], &full_out.fore[i * row..(i + 1) * row], "slot {} fore row", i);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn degenerate_plans_hit_expected_shapes() {
+    // A trailing-position logp-only plan picks the shortest span in its
+    // cheapest flavor; a full-frontier plan falls back to the anchor.
+    let d = 24;
+    let arm = |b: usize| MockArm::new(b, 2, 12, 5, 1, 2.5, 9);
+    let mut cat = VariantCatalog::new("degen", d, 5, 12, 1);
+    for b in [1usize, 4] {
+        for s in [6usize, 12, 24] {
+            cat.push_backend(b, s, true, Box::new(arm(b))).unwrap();
+            cat.push_backend(b, s, false, Box::new(arm(b))).unwrap();
+        }
+    }
+    cat.validate().unwrap();
+    let x = vec![0i32; 4 * d];
+    let mut out = StepOutput::default();
+
+    // Single live slot at the last position, heads unread: b1_s6_lp.
+    let mut plan = PassPlan::full(4, d);
+    plan.need_fore = false;
+    for s in plan.slots.iter_mut().skip(1) {
+        s.active = false;
+    }
+    plan.slots[0].lo = d - 1;
+    let cost = cat.run_plan(4, true, &x, &mut out, &plan).unwrap();
+    assert_eq!(cost, 6, "b1_s6_lp costs span alone");
+    let st = cat.stats();
+    assert_eq!(st.shapes.iter().find(|(l, _)| l == "b1_s6_lp").map(|&(_, h)| h), Some(1));
+    assert_eq!((st.variant_hits, st.full_shape_fallbacks), (1, 0));
+
+    // All slots dead: free, uncounted.
+    let mut dead = PassPlan::full(4, d);
+    for s in dead.slots.iter_mut() {
+        s.active = false;
+    }
+    assert_eq!(cat.run_plan(4, true, &x, &mut out, &dead).unwrap(), 0);
+    assert_eq!(cat.stats().variant_hits + cat.stats().full_shape_fallbacks, 1);
+
+    // Full frontier with heads: the full-shape fore anchor, counted as a
+    // fallback, costing B*(d + P*T).
+    let full = PassPlan::full(4, d);
+    let cost = cat.run_plan(4, true, &x, &mut out, &full).unwrap();
+    assert_eq!(cost, 4 * (24 + 12), "full-shape anchor pays B*(d + P*T)");
+    let st = cat.stats();
+    assert_eq!(st.shapes.iter().find(|(l, _)| l == "b4_s24").map(|&(_, h)| h), Some(1));
+    assert_eq!(st.full_shape_fallbacks, 1);
+}
+
+#[test]
+fn catalog_vs_legacy_bitwise_matrix() {
+    // THE catalog acceptance gate: for every exported span mix — none,
+    // one short, a proper ladder, extremes, odd off-grid lengths — and
+    // every sampling policy, an engine serving through the variant
+    // catalog must produce bitwise-identical samples and pass counts to
+    // the legacy full-shape engine over the same manifest.
+    let mixes: &[&[usize]] = &[&[], &[3], &[6, 12], &[1, 23], &[5, 7, 11]];
+    for (mi, spans) in mixes.iter().enumerate() {
+        let dir = std::env::temp_dir().join(format!("predsamp-cat-matrix-{mi}-{}", std::process::id()));
+        let mut spec = MockModelSpec::new("m", 11 + mi as u64);
+        spec.spans = spans.to_vec();
+        write_mock_manifest(&dir, &[spec]).unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        let legacy = Engine::load_with(&man, "m", false).unwrap();
+        let cat = Engine::load_with(&man, "m", true).unwrap();
+        assert_eq!(
+            cat.catalog_stats().is_some(),
+            !spans.is_empty(),
+            "mix {mi}: catalog present iff span variants are exported"
+        );
+        let methods = [
+            Method::Baseline,
+            Method::Zeros,
+            Method::PredictLast,
+            Method::Fpi,
+            Method::Forecast { t_use: 1 },
+            Method::NoReparam,
+        ];
+        for method in methods {
+            for n in [1usize, 4] {
+                let a = legacy.sample_batch(method, n, 77).unwrap();
+                let b = cat.sample_batch(method, n, 77).unwrap();
+                assert_eq!(a.arm_calls, b.arm_calls, "mix {mi} {method:?} n={n}: pass count diverged");
+                for s in 0..n {
+                    assert_eq!(a.jobs[s].x, b.jobs[s].x, "mix {mi} {method:?} n={n} slot {s}: sample diverged");
+                }
+            }
+        }
+        if !spans.is_empty() {
+            let st = cat.catalog_stats().unwrap();
+            assert!(st.variant_hits > 0, "mix {mi}: span variants exported but never selected");
+            assert!(st.positions_evaluated > 0, "mix {mi}: device cost never recorded");
+        }
+    }
+}
